@@ -1,0 +1,51 @@
+//! Calibration check: run all six Table 2 design points at reduced scale
+//! and print measured accuracy + hardware cost next to the paper's numbers.
+//! Used to pin the synthetic-dataset difficulty and the timing model
+//! (DESIGN.md §1/§7); the full-scale regeneration lives in rust/benches/.
+
+use treelut::exp::table::{pct, Table};
+use treelut::exp::{design_points, prior::TABLE5_TREELUT_PAPER, run_design_point, RunOptions};
+
+fn main() -> anyhow::Result<()> {
+    let mut args = treelut::util::Args::from_env();
+    let rows_override = args.opt("rows").map(|r| r.parse::<usize>().unwrap());
+    let simulate = !args.flag("no-sim");
+    args.finish()?;
+
+    let mut table = Table::new(&[
+        "dataset", "variant", "acc(float)", "acc(quant)", "acc(paper)", "LUT", "LUT(paper)",
+        "FF", "Fmax", "Fmax(paper)", "lat ns", "AxD", "keys", "t_train",
+    ]);
+    for dp in design_points() {
+        let rows = rows_override.unwrap_or_else(|| treelut::exp::configs::default_rows(dp.dataset));
+        let r = run_design_point(&dp, &RunOptions { rows, seed: 7, bypass_keygen: false, simulate })?;
+        let paper = TABLE5_TREELUT_PAPER
+            .iter()
+            .find(|p| {
+                p.dataset == dp.dataset
+                    && p.method.contains(dp.label.trim_start_matches("TreeLUT "))
+            })
+            .unwrap();
+        if let Some(an) = r.acc_netlist {
+            assert!((an - r.acc_quant).abs() < 1e-12, "netlist sim != quant predictor");
+        }
+        table.row(&[
+            dp.dataset.into(),
+            dp.label.to_string(),
+            pct(r.acc_float),
+            pct(r.acc_quant),
+            pct(dp.paper_accuracy),
+            r.cost.luts.to_string(),
+            paper.luts.to_string(),
+            r.cost.ffs.to_string(),
+            format!("{:.0}", r.cost.fmax_mhz),
+            format!("{:.0}", paper.fmax_mhz),
+            format!("{:.2}", r.cost.latency_ns),
+            format!("{:.2e}", r.cost.area_delay),
+            r.n_keys.to_string(),
+            format!("{:.1}s", r.t_train),
+        ]);
+    }
+    println!("{}", table.render());
+    Ok(())
+}

@@ -1,0 +1,70 @@
+//! Domain example: network-intrusion detection with class imbalance.
+//!
+//! The paper's NID design points tune XGBoost's `scale_pos_weight` (Table 2:
+//! 0.3 / 0.2) because the UNSW-NB15-derived training set is attack-heavy.
+//! This example sweeps `scale_pos_weight` on the NID-like dataset and shows
+//! the precision/recall/accuracy trade-off plus the hardware cost of each
+//! resulting TreeLUT design — the kind of exploration the TreeLUT tool flow
+//! (paper §3, Fig. 7) is built for.
+//!
+//! Run: `cargo run --release --example nid_imbalance [-- --rows 20000]`
+
+use treelut::data::metrics::{balanced_accuracy, f1_binary};
+use treelut::data::{accuracy, synth};
+use treelut::exp::table::{pct, Table};
+use treelut::gbdt::{train, BoostParams};
+use treelut::netlist::{build_netlist, map_luts, CostReport, TimingModel};
+use treelut::quantize::{quantize_leaves, FeatureQuantizer};
+use treelut::rtl::{design_from_quant, Pipeline};
+use treelut::util::Args;
+
+fn main() -> anyhow::Result<()> {
+    let mut args = Args::from_env();
+    let rows = args.get_as::<usize>("rows", 20_000);
+    let seed = args.get_as::<u64>("seed", 7);
+    args.finish()?;
+
+    let ds = synth::nid_like(rows, seed);
+    let (train_ds, test_ds) = ds.split(0.2, seed ^ 1);
+    let counts = train_ds.class_counts();
+    println!(
+        "NID-like: {} train rows ({} benign / {} attack), 593 binary features",
+        train_ds.n_rows, counts[0], counts[1]
+    );
+
+    let fq = FeatureQuantizer::fit(&train_ds, 1);
+    let (btrain, btest) = (fq.transform(&train_ds), fq.transform(&test_ds));
+
+    let mut table = Table::new(&[
+        "spw", "accuracy", "balanced", "F1(attack)", "pred-pos", "LUT", "Fmax", "AxD",
+    ]);
+    for spw in [1.0f32, 0.5, 0.3, 0.2, 0.1] {
+        let params = BoostParams::default()
+            .n_estimators(10)
+            .max_depth(3)
+            .eta(0.8)
+            .scale_pos_weight(spw);
+        let model = train(&btrain, &train_ds.y, 2, &params, 1)?;
+        let (quant, _) = quantize_leaves(&model, 5);
+        let preds = quant.predict_batch(&btest.bins, btest.n_features);
+
+        let design = design_from_quant("nid_spw", &quant, Pipeline::new(0, 0, 1), true);
+        let built = build_netlist(&design);
+        let map = map_luts(&built.net);
+        let cost = CostReport::evaluate(&map, built.cuts, &TimingModel::default());
+
+        table.row(&[
+            format!("{spw}"),
+            pct(accuracy(&preds, &test_ds.y)),
+            pct(balanced_accuracy(&preds, &test_ds.y, 2)),
+            format!("{:.3}", f1_binary(&preds, &test_ds.y)),
+            pct(preds.iter().filter(|&&p| p == 1).count() as f64 / preds.len() as f64),
+            cost.luts.to_string(),
+            format!("{:.0}MHz", cost.fmax_mhz),
+            format!("{:.2e}", cost.area_delay),
+        ]);
+    }
+    println!("\n{}", table.render());
+    println!("paper operating points: spw=0.3 (TreeLUT I), spw=0.2 (TreeLUT II)");
+    Ok(())
+}

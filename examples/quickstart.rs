@@ -1,0 +1,57 @@
+//! Quickstart: the complete TreeLUT tool flow (paper Fig. 7) on a small
+//! synthetic binary task, in ~40 lines of API:
+//!
+//! data → feature quantization → GBDT training → leaf quantization →
+//! Verilog RTL → LUT-mapped cost report → gate-level-verified accuracy.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use treelut::data::{accuracy, synth};
+use treelut::gbdt::{train, BoostParams};
+use treelut::netlist::{build_netlist, map_luts, CostReport, Simulator, TimingModel};
+use treelut::quantize::{quantize_leaves, FeatureQuantizer};
+use treelut::rtl::{design_from_quant, verilog::emit_verilog, Pipeline};
+
+fn main() -> anyhow::Result<()> {
+    // 1. Data: 2,000 rows, 8 features, binary labels (75/25 split).
+    let ds = synth::tiny_binary(2_000, 8, 42);
+    let (train_ds, test_ds) = ds.split(0.25, 1);
+
+    // 2. Pre-training feature quantization to w_feature = 4 bits (§2.2.1).
+    let fq = FeatureQuantizer::fit(&train_ds, 4);
+    let (btrain, btest) = (fq.transform(&train_ds), fq.transform(&test_ds));
+
+    // 3. Train a 20-tree depth-4 GBDT (XGBoost math).
+    let params = BoostParams::default().n_estimators(20).max_depth(4).eta(0.4);
+    let model = train(&btrain, &train_ds.y, train_ds.n_classes, &params, 4)?;
+    let acc_float = accuracy(&model.predict_batch(&btest.bins, btest.n_features), &test_ds.y);
+
+    // 4. TreeLUT leaf quantization to w_tree = 3 bits (§2.2.2, Eq. 3-7).
+    let (qmodel, report) = quantize_leaves(&model, 3);
+    let acc_quant = accuracy(&qmodel.predict_batch(&btest.bins, btest.n_features), &test_ds.y);
+
+    // 5. Architecture IR with pipeline [p0,p1,p2] = [0,1,1] → Verilog RTL.
+    let design = design_from_quant("quickstart", &qmodel, Pipeline::new(0, 1, 1), true);
+    let verilog = emit_verilog(&design);
+    let out = std::env::temp_dir().join("treelut_quickstart.v");
+    std::fs::write(&out, &verilog)?;
+
+    // 6. FPGA substrate: netlist → 6-LUT mapping → timing/area.
+    let built = build_netlist(&design);
+    let map = map_luts(&built.net);
+    let cost = CostReport::evaluate(&map, built.cuts, &TimingModel::default());
+
+    // 7. Gate-level functional simulation == integer predictor, bit-exact.
+    let mut sim = Simulator::new(&built.net);
+    let rows = (0..btest.n_rows).map(|i| btest.row(i).to_vec());
+    let preds = sim.classify_dataset(&built, rows, 4);
+    let acc_gate = accuracy(&preds, &test_ds.y);
+    assert!((acc_gate - acc_quant).abs() < 1e-12, "circuit must match the predictor");
+
+    println!("quickstart: {} keys, {} trees", qmodel.unique_comparisons().len(), qmodel.trees.len());
+    println!("  accuracy   float={acc_float:.4}  quantized={acc_quant:.4}  gate-level={acc_gate:.4}");
+    println!("  quant      scale={:.3}  bias={:?}", report.scale, qmodel.biases);
+    println!("  hardware   {}", cost.render());
+    println!("  verilog    {} bytes -> {}", verilog.len(), out.display());
+    Ok(())
+}

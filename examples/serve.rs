@@ -1,0 +1,115 @@
+//! Serving driver: batched GBDT inference over the AOT-compiled PJRT
+//! artifact, driven by the Rust coordinator with a Poisson load generator.
+//!
+//! Python never runs here — the JSC model is trained in-process (fast), its
+//! tensors are padded into the `gbdt_jsc` artifact shapes, and requests flow
+//! client → dynamic batcher → PJRT executable. Reports throughput + latency
+//! percentiles.
+//!
+//! Requires `make artifacts`.
+//! Run: `cargo run --release --example serve [-- --requests 2000 --rps 4000]`
+
+use std::path::Path;
+use std::time::{Duration, Instant};
+
+use treelut::coordinator::{BatchPolicy, Server, ServingReport};
+use treelut::data::synth;
+use treelut::exp::configs::design_point;
+use treelut::gbdt::train;
+use treelut::quantize::{quantize_leaves, FeatureQuantizer};
+use treelut::runtime::{Engine, Manifest, ModelTensors};
+use treelut::util::{Args, Rng, Timer};
+
+fn main() -> anyhow::Result<()> {
+    let mut args = Args::from_env();
+    let n_requests = args.get_as::<usize>("requests", 2_000);
+    let offered_rps = args.get_as::<f64>("rps", 4_000.0);
+    let max_wait_us = args.get_as::<u64>("max-wait-us", 500);
+    let rows = args.get_as::<usize>("rows", 8_000);
+    args.finish()?;
+
+    let artifacts = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    anyhow::ensure!(
+        artifacts.join("manifest.txt").exists(),
+        "artifacts/ missing - run `make artifacts` first"
+    );
+    let manifest = Manifest::load(&artifacts)?;
+    let cfg = manifest.get("jsc")?.clone();
+
+    // Train the JSC TreeLUT (II) model in-process (sub-second).
+    let dp = design_point("jsc", "II").unwrap();
+    let ds = synth::jsc_like(rows, 7);
+    let (train_ds, test_ds) = ds.split(0.2, 1);
+    let fq = FeatureQuantizer::fit(&train_ds, dp.w_feature);
+    let btrain = fq.transform(&train_ds);
+    let model = train(&btrain, &train_ds.y, train_ds.n_classes, &dp.params, dp.w_feature)?;
+    let (quant, _) = quantize_leaves(&model, dp.w_tree);
+    println!(
+        "model: {} trees, {} keys, fits artifact `{}` (B={} K={} T={} D={})",
+        quant.trees.len(),
+        quant.unique_comparisons().len(),
+        cfg.name,
+        cfg.batch,
+        cfg.keys,
+        cfg.trees,
+        cfg.depth
+    );
+
+    // Coordinator: engine is built inside the worker (PJRT is not Send).
+    let quant_for_engine = quant.clone();
+    let cfg_for_engine = cfg.clone();
+    let artifacts_for_engine = artifacts.clone();
+    let server = Server::start_with(
+        move || {
+            let tensors = ModelTensors::from_quant(&quant_for_engine, &cfg_for_engine)?;
+            Engine::load(&artifacts_for_engine, &cfg_for_engine, tensors)
+        },
+        BatchPolicy { max_batch: cfg.batch, max_wait: Duration::from_micros(max_wait_us) },
+    )?;
+
+    // Poisson open-loop load over quantized test rows.
+    let btest = fq.transform(&test_ds);
+    let mut rng = Rng::new(99);
+    let t0 = Timer::start();
+    let mut inflight = Vec::with_capacity(n_requests);
+    let mut next_arrival = Instant::now();
+    for i in 0..n_requests {
+        next_arrival += Duration::from_secs_f64(rng.exp(offered_rps));
+        let now = Instant::now();
+        if next_arrival > now {
+            std::thread::sleep(next_arrival - now);
+        }
+        let row = btest.row(i % btest.n_rows).to_vec();
+        inflight.push((i, server.submit(row)?));
+    }
+    let mut latencies = Vec::with_capacity(n_requests);
+    let mut correct = 0usize;
+    for (i, rx) in inflight {
+        let reply = rx.recv()??;
+        latencies.push(reply.latency.as_secs_f64());
+        if reply.class == quant.predict_class(btest.row(i % btest.n_rows)) {
+            correct += 1;
+        }
+    }
+    let wall = t0.secs();
+    assert_eq!(correct, n_requests, "served predictions must be bit-exact");
+
+    let report = ServingReport::from_latencies(
+        &latencies,
+        wall,
+        server.stats().mean_batch(),
+        Some(offered_rps),
+    );
+    println!("serving: {}", report.render());
+    println!(
+        "         {} requests in {:.2}s, {} batches, all bit-exact vs integer predictor",
+        n_requests,
+        wall,
+        server
+            .stats()
+            .batches
+            .load(std::sync::atomic::Ordering::Relaxed)
+    );
+    server.shutdown();
+    Ok(())
+}

@@ -1,0 +1,84 @@
+"""AOT lowering: JAX model -> HLO text artifacts for the Rust runtime.
+
+HLO *text* (not serialized HloModuleProto) is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids that the `xla` crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly. Lowered with ``return_tuple=True``;
+the rust side unwraps with ``to_tuple1()``.
+
+Usage::
+
+    python -m compile.aot --out-dir ../artifacts [--configs tiny,mnist,...]
+
+Writes ``gbdt_<name>.hlo.txt`` per config plus ``manifest.txt`` describing
+the shapes (parsed by ``rust/src/runtime/artifact.rs``).
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .model import CONFIGS, GbdtConfig, forward_fn
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def example_args(cfg: GbdtConfig):
+    """Shape/dtype specs for lowering (no real data needed)."""
+    i32 = jnp.int32
+    return (
+        jax.ShapeDtypeStruct((cfg.batch, cfg.features), i32),   # x
+        jax.ShapeDtypeStruct((cfg.keys,), i32),                 # key_feat
+        jax.ShapeDtypeStruct((cfg.keys,), i32),                 # key_thresh
+        jax.ShapeDtypeStruct((cfg.trees, cfg.nodes), i32),      # node_key
+        jax.ShapeDtypeStruct((cfg.trees, cfg.leaves), i32),     # leaves
+        jax.ShapeDtypeStruct((cfg.groups,), i32),               # bias
+    )
+
+
+def lower_config(cfg: GbdtConfig) -> str:
+    lowered = jax.jit(forward_fn(cfg)).lower(*example_args(cfg))
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--configs",
+        default=",".join(c.name for c in CONFIGS),
+        help="comma-separated config names (default: all)",
+    )
+    args = ap.parse_args()
+
+    wanted = set(args.configs.split(","))
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest_lines = []
+    for cfg in CONFIGS:
+        if cfg.name not in wanted:
+            continue
+        text = lower_config(cfg)
+        path = os.path.join(args.out_dir, f"gbdt_{cfg.name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest_lines.append(cfg.manifest_line())
+        print(f"wrote {path} ({len(text)} chars)")
+    with open(os.path.join(args.out_dir, "manifest.txt"), "w") as f:
+        f.write("treelut-artifacts v1\n")
+        for line in manifest_lines:
+            f.write(line + "\n")
+    print(f"wrote {os.path.join(args.out_dir, 'manifest.txt')}")
+
+
+if __name__ == "__main__":
+    main()

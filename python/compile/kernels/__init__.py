@@ -1,0 +1,19 @@
+"""Layer-1 Pallas kernels for the TreeLUT inference pipeline.
+
+The three kernels mirror the paper's three hardware layers (Figs. 3-6):
+
+* :mod:`.keygen` — the key-generator comparator bank (paper 2.3.1),
+* :mod:`.tree_eval` — the decision-tree mux cascades (paper 2.3.2),
+* :mod:`.aggregate` — the per-class adder trees + bias (paper 2.3.3),
+
+plus :mod:`.ref`, a slow pure-numpy oracle that each kernel (and the fused
+L2 model) is tested against.
+
+All kernels run with ``interpret=True`` — real-TPU Pallas lowering emits a
+Mosaic custom-call the CPU PJRT plugin cannot execute. See DESIGN.md
+"Hardware-Adaptation" for the TPU mapping rationale (VMEM tiling over the
+batch, VPU integer reductions, no MXU — the analogue of the paper's
+"no DSPs").
+"""
+
+from . import keygen, tree_eval, aggregate, ref  # noqa: F401

@@ -1,0 +1,55 @@
+"""Adder-tree kernel (paper 2.3.3).
+
+Sums per-tree outputs within each score group and adds the quantized bias
+``qb_g`` — the paper's N parallel adder trees. Trees are round-major
+(``tree t`` belongs to group ``t % n_groups``), matching the Rust model
+layout, so the reduction is a reshape + sum over the rounds axis — a narrow
+integer reduction the TPU VPU executes natively (the "no DSPs/MXU" analogue).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _aggregate_kernel(pt_ref, bias_ref, o_ref, *, n_groups):
+    pt = pt_ref[...]                  # [tile, T] int32
+    bias = bias_ref[...]              # [NG] int32
+    tile, t = pt.shape
+    rounds = t // n_groups
+    s = pt.reshape(tile, rounds, n_groups).sum(axis=1, dtype=jnp.int32)
+    o_ref[...] = s + bias[None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("n_groups", "tile"))
+def aggregate(per_tree, bias, *, n_groups, tile=None):
+    """Reduce per-tree outputs to per-group scores ``QF_g`` (Eq. 6/11).
+
+    Args:
+      per_tree: ``[B, T]`` int32 tree outputs, round-major over groups.
+      bias: ``[NG]`` int32 quantized biases ``qb_g``.
+      n_groups: number of score groups (1 binary / N multiclass).
+
+    Returns:
+      ``[B, NG]`` int32 scores.
+    """
+    b, t = per_tree.shape
+    assert t % n_groups == 0, "tree count not a multiple of n_groups"
+    assert bias.shape == (n_groups,)
+    if tile is None:
+        tile = min(b, 64)
+    assert b % tile == 0
+    kernel = functools.partial(_aggregate_kernel, n_groups=n_groups)
+    return pl.pallas_call(
+        kernel,
+        grid=(b // tile,),
+        in_specs=[
+            pl.BlockSpec((tile, t), lambda i: (i, 0)),
+            pl.BlockSpec((n_groups,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tile, n_groups), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, n_groups), jnp.int32),
+        interpret=True,
+    )(per_tree, bias)

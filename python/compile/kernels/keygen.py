@@ -1,0 +1,56 @@
+"""Key-generator kernel (paper 2.3.1).
+
+Computes the unique comparison keys ``k_i = (x[feat_i] >= thresh_i)`` for a
+batch tile. In hardware this is a bank of fully-unrolled ``w_feature``-bit
+comparators; on TPU-like hardware it is a gather of each *unique* feature
+column (the dedup the paper does in its software tool) followed by a
+vectorized compare — one VMEM-resident ``[tile, K]`` block per grid step.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _keygen_kernel(x_ref, kf_ref, kt_ref, o_ref):
+    x = x_ref[...]                      # [tile, F] int32, quantized features
+    kf = kf_ref[...]                    # [K] int32, key feature index
+    kt = kt_ref[...]                    # [K] int32, key threshold
+    gathered = jnp.take(x, kf, axis=1)  # [tile, K]
+    o_ref[...] = (gathered >= kt[None, :]).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("tile",))
+def keygen(x, key_feat, key_thresh, *, tile=None):
+    """Compute the key bundle for a quantized batch.
+
+    Args:
+      x: ``[B, F]`` int32 quantized features.
+      key_feat: ``[K]`` int32 feature index of each unique comparison.
+      key_thresh: ``[K]`` int32 threshold of each unique comparison.
+        Padded keys use a threshold larger than any feature value so the
+        key is constant 0.
+      tile: batch tile size (defaults to ``min(B, 64)``).
+
+    Returns:
+      ``[B, K]`` int32 of 0/1 keys.
+    """
+    b, _ = x.shape
+    k = key_feat.shape[0]
+    if tile is None:
+        tile = min(b, 64)
+    assert b % tile == 0, f"batch {b} not divisible by tile {tile}"
+    return pl.pallas_call(
+        _keygen_kernel,
+        grid=(b // tile,),
+        in_specs=[
+            pl.BlockSpec((tile, x.shape[1]), lambda i: (i, 0)),
+            pl.BlockSpec((k,), lambda i: (0,)),
+            pl.BlockSpec((k,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tile, k), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, k), jnp.int32),
+        interpret=True,
+    )(x, key_feat, key_thresh)

@@ -1,0 +1,60 @@
+"""Pure-numpy oracle for the TreeLUT inference pipeline.
+
+Deliberately written as per-sample, per-tree loops — structurally identical
+to the Rust ``QuantModel`` integer predictor — so the vectorized Pallas
+kernels are checked against an independent implementation, not a rephrasing
+of themselves.
+"""
+
+import numpy as np
+
+
+def keygen_ref(x, key_feat, key_thresh):
+    """[B,F],[K],[K] -> [B,K] int32 0/1."""
+    b = x.shape[0]
+    k = key_feat.shape[0]
+    out = np.zeros((b, k), dtype=np.int32)
+    for i in range(b):
+        for j in range(k):
+            out[i, j] = 1 if x[i, key_feat[j]] >= key_thresh[j] else 0
+    return out
+
+
+def tree_eval_ref(keys, node_key, leaves, depth):
+    """[B,K],[T,2^D-1],[T,2^D] -> [B,T] int32 via explicit tree walks."""
+    b = keys.shape[0]
+    t = node_key.shape[0]
+    out = np.zeros((b, t), dtype=np.int32)
+    for i in range(b):
+        for tr in range(t):
+            n = 0
+            for _ in range(depth):
+                k = keys[i, node_key[tr, n]]
+                n = 2 * n + 1 + int(k)
+            out[i, tr] = leaves[tr, n - (2**depth - 1)]
+    return out
+
+
+def aggregate_ref(per_tree, bias, n_groups):
+    """[B,T],[NG] -> [B,NG] int32, trees round-major over groups."""
+    b, t = per_tree.shape
+    out = np.zeros((b, n_groups), dtype=np.int32)
+    for i in range(b):
+        for tr in range(t):
+            out[i, tr % n_groups] += per_tree[i, tr]
+        out[i] += bias
+    return out
+
+
+def gbdt_forward_ref(x, key_feat, key_thresh, node_key, leaves, bias, depth, n_groups):
+    """End-to-end oracle: quantized features -> integer scores QF_g."""
+    keys = keygen_ref(x, key_feat, key_thresh)
+    per_tree = tree_eval_ref(keys, node_key, leaves, depth)
+    return aggregate_ref(per_tree, bias, n_groups)
+
+
+def predict_class_ref(scores, n_groups):
+    """Scores -> class ids: sign for binary, argmax (ties low) otherwise."""
+    if n_groups == 1:
+        return (scores[:, 0] >= 0).astype(np.int32)
+    return np.argmax(scores, axis=1).astype(np.int32)

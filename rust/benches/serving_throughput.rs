@@ -1,0 +1,144 @@
+//! Serving-path benchmark: throughput/latency of the L3 coordinator over
+//! the AOT-compiled PJRT executable (the repo's "inference acceleration"
+//! runtime), swept over offered load and batching policy.
+//!
+//! Also reports the raw engine execute rate (batch=64) and the pure-Rust
+//! integer predictor as the software baseline — the analogue of the paper's
+//! throughput motivation.
+//!
+//! Requires `make artifacts`. Run: `cargo bench --bench serving_throughput`
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+use treelut::coordinator::{BatchPolicy, CpuExecutor, Server, ServingReport};
+use treelut::data::synth;
+use treelut::exp::configs::design_point;
+use treelut::exp::table::Table;
+use treelut::gbdt::train;
+use treelut::quantize::{quantize_leaves, FeatureQuantizer, QuantModel};
+use treelut::runtime::{ArtifactConfig, Engine, Manifest, ModelTensors};
+use treelut::util::{Args, Rng, Timer};
+
+fn poisson_run(
+    server: &Server,
+    rows: &treelut::gbdt::histogram::BinnedMatrix,
+    n_requests: usize,
+    rps: f64,
+) -> anyhow::Result<ServingReport> {
+    let mut rng = Rng::new(17);
+    let t0 = Timer::start();
+    let mut pending = Vec::with_capacity(n_requests);
+    let mut next = std::time::Instant::now();
+    for i in 0..n_requests {
+        next += Duration::from_secs_f64(rng.exp(rps));
+        let now = std::time::Instant::now();
+        if next > now {
+            std::thread::sleep(next - now);
+        }
+        pending.push(server.submit(rows.row(i % rows.n_rows).to_vec())?);
+    }
+    let mut lats = Vec::with_capacity(n_requests);
+    for rx in pending {
+        lats.push(rx.recv()??.latency.as_secs_f64());
+    }
+    Ok(ServingReport::from_latencies(&lats, t0.secs(), server.stats().mean_batch(), Some(rps)))
+}
+
+fn main() -> anyhow::Result<()> {
+    let mut args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
+    let n_requests = args.get_as::<usize>("requests", 3_000);
+    args.finish()?;
+
+    let artifacts = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !artifacts.join("manifest.txt").exists() {
+        println!("SKIP serving_throughput: artifacts/ missing (run `make artifacts`)");
+        return Ok(());
+    }
+    let manifest = Manifest::load(&artifacts)?;
+    let cfg = manifest.get("jsc")?.clone();
+
+    // Train the JSC (II) model once.
+    let dp = design_point("jsc", "II").unwrap();
+    let ds = synth::jsc_like(10_000, 7);
+    let (train_ds, test_ds) = ds.split(0.2, 1);
+    let fq = FeatureQuantizer::fit(&train_ds, dp.w_feature);
+    let btrain = fq.transform(&train_ds);
+    let model = train(&btrain, &train_ds.y, train_ds.n_classes, &dp.params, dp.w_feature)?;
+    let (quant, _) = quantize_leaves(&model, dp.w_tree);
+    let btest = fq.transform(&test_ds);
+
+    // Raw engine execute rate (no coordinator).
+    {
+        let tensors = ModelTensors::from_quant(&quant, &cfg)?;
+        let engine = Engine::load(&artifacts, &cfg, tensors)?;
+        let rows: Vec<&[u16]> = (0..cfg.batch).map(|i| btest.row(i)).collect();
+        let iters = 200;
+        let samples = treelut::util::timer::bench_loop(iters, || engine.predict(&rows).unwrap());
+        let s = treelut::util::Summary::of(&samples);
+        println!(
+            "raw engine (PJRT, batch={}): {:.0} exec/s -> {:.0} rows/s (p50 {:.0}us/batch)",
+            cfg.batch,
+            1.0 / s.p50,
+            cfg.batch as f64 / s.p50,
+            s.p50 * 1e6
+        );
+    }
+    // Software baseline: integer predictor.
+    {
+        let iters = 200;
+        let rows: Vec<&[u16]> = (0..cfg.batch).map(|i| btest.row(i)).collect();
+        let samples = treelut::util::timer::bench_loop(iters, || {
+            rows.iter().map(|r| quant.predict_class(r)).collect::<Vec<_>>()
+        });
+        let s = treelut::util::Summary::of(&samples);
+        println!(
+            "integer predictor (pure rust, batch={}): {:.0} rows/s",
+            cfg.batch,
+            cfg.batch as f64 / s.p50
+        );
+    }
+
+    // Coordinator sweep: offered load x max_wait.
+    println!("\n== coordinator sweep (PJRT engine, Poisson open-loop) ==");
+    let mut t = Table::new(&["rps", "max_wait", "throughput", "batch", "p50", "p99"]);
+    for rps in [1_000.0, 4_000.0, 16_000.0] {
+        for wait_us in [100u64, 500, 2_000] {
+            let (q2, c2, a2) = (quant.clone(), cfg.clone(), artifacts.clone());
+            let server = Server::start_with(
+                move || {
+                    let tensors = ModelTensors::from_quant(&q2, &c2)?;
+                    Engine::load(&a2, &c2, tensors)
+                },
+                BatchPolicy {
+                    max_batch: cfg.batch,
+                    max_wait: Duration::from_micros(wait_us),
+                },
+            )?;
+            let rep = poisson_run(&server, &btest, n_requests, rps)?;
+            t.row(&[
+                format!("{rps:.0}"),
+                format!("{wait_us}us"),
+                format!("{:.0}/s", rep.throughput),
+                format!("{:.1}", rep.mean_batch),
+                format!("{:.0}us", rep.latency.p50 * 1e6),
+                format!("{:.0}us", rep.latency.p99 * 1e6),
+            ]);
+            server.shutdown();
+        }
+    }
+    println!("{}", t.render());
+
+    // CPU-executor coordinator (no PJRT) as the L3-overhead control.
+    println!("== coordinator with pure-Rust executor (L3 overhead control) ==");
+    let qm: QuantModel = quant.clone();
+    let cfg2: ArtifactConfig = cfg.clone();
+    let server = Server::start(
+        CpuExecutor { model: qm, max_batch: cfg2.batch },
+        BatchPolicy { max_batch: cfg2.batch, max_wait: Duration::from_micros(100) },
+    );
+    let rep = poisson_run(&server, &btest, n_requests, 16_000.0)?;
+    println!("cpu executor @16k rps: {}", rep.render());
+    server.shutdown();
+    Ok(())
+}

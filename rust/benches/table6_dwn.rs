@@ -1,0 +1,69 @@
+//! Regenerates paper **Table 6**: the apples-to-apples comparison with DWN.
+//!
+//! DWN binarizes inputs offline (distributive thermometer encoding), so the
+//! paper bypasses TreeLUT's key-generator layer for this comparison — the
+//! circuit takes precomputed key bits as inputs. We measure TreeLUT (I)
+//! with `bypass_keygen`, and quote DWN's published numbers.
+//!
+//! Run: `cargo bench --bench table6_dwn [-- --rows N]`
+
+use treelut::exp::configs::{default_rows, design_point};
+use treelut::exp::prior::TABLE6_DWN;
+use treelut::exp::table::{pct, sci, Table};
+use treelut::exp::{run_design_point, RunOptions};
+use treelut::util::Args;
+
+fn main() -> anyhow::Result<()> {
+    let mut args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
+    let rows_override = args.opt("rows").map(|r| r.parse::<usize>().unwrap());
+    args.finish()?;
+
+    println!("== Table 6: TreeLUT (key generator bypassed) vs DWN ==\n");
+    let mut t = Table::new(&[
+        "Dataset", "Method", "Model", "Acc", "LUT", "FF", "Fmax(MHz)", "Lat(ns)", "AxD",
+        "AxD ratio", "source",
+    ]);
+    for dataset in ["mnist", "jsc"] {
+        let dp = design_point(dataset, "I").unwrap();
+        let rows = rows_override.unwrap_or_else(|| default_rows(dataset));
+        let r = run_design_point(
+            &dp,
+            &RunOptions { rows, seed: 7, bypass_keygen: true, simulate: false },
+        )?;
+        let dwn = TABLE6_DWN.iter().find(|p| p.dataset == dataset).unwrap();
+        let base = r.cost.area_delay;
+        t.row(&[
+            dataset.into(),
+            "TreeLUT".into(),
+            "DT".into(),
+            pct(r.acc_quant),
+            r.cost.luts.to_string(),
+            r.cost.ffs.to_string(),
+            format!("{:.0}", r.cost.fmax_mhz),
+            format!("{:.1}", r.cost.latency_ns),
+            sci(base),
+            "1.00".into(),
+            "measured".into(),
+        ]);
+        t.row(&[
+            dataset.into(),
+            "DWN".into(),
+            "NN".into(),
+            pct(dwn.accuracy),
+            dwn.luts.to_string(),
+            dwn.ffs.map(|f| f.to_string()).unwrap_or_default(),
+            format!("{:.0}", dwn.fmax_mhz),
+            format!("{:.1}", dwn.latency_ns),
+            sci(dwn.area_delay()),
+            format!("{:.2}", dwn.area_delay() / base),
+            "quoted".into(),
+        ]);
+        println!(
+            "shape check [{dataset}]: DWN/TreeLUT AxD ratio = {:.1}x (paper: {})",
+            dwn.area_delay() / base,
+            if dataset == "mnist" { "4.0x" } else { "7.6x" }
+        );
+    }
+    println!("\n{}", t.render());
+    Ok(())
+}

@@ -1,0 +1,70 @@
+//! Tool-flow wall-clock benchmark (paper §4.2: "the TreeLUT tool took a few
+//! seconds to quantize a given XGBoost model, test it for accuracy, and
+//! convert it into RTL code" — vs hours for some LUT-based NN tools).
+//!
+//! Also benchmarks the substrate hot paths (histogram training, LUT
+//! mapping, bit-parallel gate simulation) for the EXPERIMENTS.md perf
+//! section.
+//!
+//! Run: `cargo bench --bench toolflow_time [-- --rows N]`
+
+use treelut::exp::configs::{default_rows, design_points};
+use treelut::exp::table::Table;
+use treelut::exp::{run_design_point, RunOptions};
+use treelut::netlist::{build_netlist, map_luts, Simulator};
+use treelut::rtl::{design_from_quant, verilog::emit_verilog};
+use treelut::util::{Args, Timer};
+
+fn main() -> anyhow::Result<()> {
+    let mut args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
+    let rows_override = args.opt("rows").map(|r| r.parse::<usize>().unwrap());
+    args.finish()?;
+
+    let mut t = Table::new(&[
+        "design point", "train(s)", "quantize+IR(s)", "netlist+map(s)", "verilog(s)",
+        "sim rate (Msample-gate/s)", "gates",
+    ]);
+    for dp in design_points() {
+        let rows =
+            rows_override.unwrap_or_else(|| default_rows(dp.dataset));
+        let r = run_design_point(
+            &dp,
+            &RunOptions { rows, seed: 7, bypass_keygen: false, simulate: false },
+        )?;
+        let design = design_from_quant("t", &r.quant, dp.pipeline, true);
+
+        let tm = Timer::start();
+        let verilog = emit_verilog(&design);
+        let t_verilog = tm.secs();
+        std::hint::black_box(verilog.len());
+
+        // Gate-sim throughput: one 64-lane batch over the whole netlist.
+        let built = build_netlist(&design);
+        let _map = map_luts(&built.net);
+        let mut sim = Simulator::new(&built.net);
+        let mut batch = treelut::netlist::simulate::InputBatch::new(built.net.n_inputs);
+        for i in 0..64u16 {
+            let row: Vec<u16> = (0..design.n_features)
+                .map(|f| ((i as usize + f) % (1 << design.w_feature)) as u16)
+                .collect();
+            batch.push_features(&row, design.w_feature as usize);
+        }
+        let iters = 20;
+        let samples = treelut::util::timer::bench_loop(iters, || sim.run(&built.net, &batch));
+        let per_batch = treelut::util::Summary::of(&samples).p50;
+        let rate = 64.0 * built.net.len() as f64 / per_batch / 1e6;
+
+        t.row(&[
+            format!("{} {}", dp.dataset, dp.label),
+            format!("{:.2}", r.t_train),
+            format!("{:.3}", r.t_quantize),
+            format!("{:.3}", r.t_map),
+            format!("{t_verilog:.3}"),
+            format!("{rate:.0}"),
+            built.net.len().to_string(),
+        ]);
+    }
+    println!("== tool-flow wall clock (paper 4.2: 'a few seconds') ==");
+    println!("{}", t.render());
+    Ok(())
+}

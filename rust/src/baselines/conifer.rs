@@ -1,0 +1,176 @@
+//! Conifer-style post-training fixed-point leaf quantization.
+//!
+//! Conifer (hls4ml's BDT flow) quantizes trained leaf values to a signed
+//! fixed-point format `Q(total_bits, frac_bits)` with one global scale and
+//! **no per-tree shift**: `leaf_q = clamp(round(leaf · 2^frac))`. In
+//! hardware every tree then emits a full-width signed operand, so the adder
+//! datapath is `total_bits` wide regardless of each tree's actual range —
+//! the structural disadvantage TreeLUT's local-shift scheme removes
+//! (paper §2.2.2: "Had we used the global minimum value for shifting, that
+//! would have created offsets in each quantized decision tree").
+//!
+//! For an apples-to-apples hardware mapping through the same unsigned
+//! netlist substrate, the signed model is re-expressed exactly as offset
+//! unsigned integers: every tree's leaves get `−gmin` added (`gmin` = the
+//! *global* minimum quantized leaf) and the bias absorbs `M · gmin`. This
+//! is an integer-exact reparameterization of Conifer's fixed-point circuit
+//! and preserves its cost structure (non-zero per-tree minima ⇒ wider tree
+//! outputs and adders).
+
+use crate::gbdt::GbdtModel;
+use crate::quantize::{QuantModel, QuantNode, QuantTree};
+
+/// Quantize with a Conifer-style `Q(total_bits, frac_bits)` signed format.
+///
+/// Returns the offset-unsigned [`QuantModel`] equivalent (its `w_tree`
+/// records the effective *unsigned* operand width after the offset).
+/// Note: unlike TreeLUT models, per-tree minimum leaves are generally > 0;
+/// do not call [`QuantModel::validate`] on the result.
+pub fn quantize_leaves_conifer(
+    model: &GbdtModel,
+    total_bits: u8,
+    frac_bits: u8,
+) -> QuantModel {
+    assert!(total_bits >= 2 && total_bits <= 24);
+    assert!(frac_bits < total_bits);
+    let scale = (1i64 << frac_bits) as f64;
+    let max_q = (1i64 << (total_bits - 1)) - 1;
+    let min_q = -(1i64 << (total_bits - 1));
+    let clampq = |v: f32| -> i64 { ((v as f64 * scale).round() as i64).clamp(min_q, max_q) };
+
+    // Pass 1: quantize leaves, find the global minimum.
+    let mut gmin = 0i64;
+    let quantized: Vec<Vec<i64>> = model
+        .trees
+        .iter()
+        .map(|t| {
+            t.nodes
+                .iter()
+                .map(|n| match n {
+                    crate::gbdt::TreeNode::Leaf { value } => {
+                        let q = clampq(*value);
+                        gmin = gmin.min(q);
+                        q
+                    }
+                    _ => 0,
+                })
+                .collect()
+        })
+        .collect();
+
+    // Pass 2: offset re-expression (exact).
+    let rounds = model.trees.len() / model.n_groups;
+    let mut trees = Vec::with_capacity(model.trees.len());
+    let mut max_leaf_off = 0i64;
+    for (ti, t) in model.trees.iter().enumerate() {
+        let nodes = t
+            .nodes
+            .iter()
+            .enumerate()
+            .map(|(ni, n)| match n {
+                crate::gbdt::TreeNode::Split { feat, thresh, left, right } => QuantNode::Split {
+                    feat: *feat,
+                    thresh: *thresh,
+                    left: *left,
+                    right: *right,
+                },
+                crate::gbdt::TreeNode::Leaf { .. } => {
+                    let off = quantized[ti][ni] - gmin;
+                    max_leaf_off = max_leaf_off.max(off);
+                    QuantNode::Leaf { value: off as u32 }
+                }
+            })
+            .collect();
+        trees.push(QuantTree { nodes });
+    }
+
+    // bias_g = round(f0·2^frac) + M·gmin, so that
+    // bias + Σ offset-leaves == round(f0) + Σ signed quantized leaves.
+    let f0_q = clampq(model.base_score);
+    let biases = vec![f0_q + (rounds as i64) * gmin; model.n_groups];
+
+    let w_tree = (64 - (max_leaf_off.max(1) as u64).leading_zeros()) as u8;
+    QuantModel {
+        trees,
+        n_groups: model.n_groups,
+        biases,
+        n_features: model.n_features,
+        w_feature: model.w_feature,
+        w_tree,
+        scale,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{accuracy, synth};
+    use crate::gbdt::{train, BoostParams};
+    use crate::quantize::FeatureQuantizer;
+
+    fn trained() -> (GbdtModel, crate::gbdt::histogram::BinnedMatrix, Vec<u32>) {
+        let ds = synth::tiny_binary(500, 6, 9);
+        let fq = FeatureQuantizer::fit(&ds, 4);
+        let binned = fq.transform(&ds);
+        let p = BoostParams::default().n_estimators(10).max_depth(3).eta(0.4);
+        let m = train(&binned, &ds.y, 2, &p, 4).unwrap();
+        (m, binned, ds.y.clone())
+    }
+
+    #[test]
+    fn high_precision_matches_float_decisions() {
+        let (m, binned, _) = trained();
+        let qm = quantize_leaves_conifer(&m, 18, 12);
+        for i in 0..binned.n_rows {
+            assert_eq!(
+                qm.predict_class(binned.row(i)),
+                m.predict_class(binned.row(i)),
+                "row {i}"
+            );
+        }
+    }
+
+    #[test]
+    fn low_precision_loses_accuracy_vs_treelut() {
+        let (m, binned, y) = trained();
+        // 3 total bits, 1 fractional: Conifer representable range is tiny.
+        let conifer = quantize_leaves_conifer(&m, 3, 1);
+        let (treelut, _) = crate::quantize::quantize_leaves(&m, 3);
+        let acc_c = accuracy(&conifer.predict_batch(&binned.bins, binned.n_features), &y);
+        let acc_t = accuracy(&treelut.predict_batch(&binned.bins, binned.n_features), &y);
+        assert!(
+            acc_t >= acc_c,
+            "TreeLUT {acc_t} should not lose to Conifer PTQ {acc_c} at equal bits"
+        );
+    }
+
+    #[test]
+    fn per_tree_minima_nonzero() {
+        // The structural point: Conifer trees carry offsets.
+        let (m, _, _) = trained();
+        let qm = quantize_leaves_conifer(&m, 8, 4);
+        let with_offset = qm.trees.iter().filter(|t| t.min_leaf() > 0).count();
+        assert!(
+            with_offset > qm.trees.len() / 2,
+            "expected most trees to carry a non-zero offset, got {with_offset}/{}",
+            qm.trees.len()
+        );
+    }
+
+    #[test]
+    fn offset_reexpression_is_exact() {
+        // Signed sum computed directly == offset-unsigned scores.
+        let (m, binned, _) = trained();
+        let qm = quantize_leaves_conifer(&m, 10, 6);
+        let scale = 64.0f64;
+        for i in 0..20 {
+            let row = binned.row(i);
+            // Direct signed fixed-point evaluation.
+            let mut signed_sum = (m.base_score as f64 * scale).round() as i64;
+            for t in &m.trees {
+                signed_sum += (t.predict(row) as f64 * scale).round() as i64;
+            }
+            assert_eq!(qm.scores(row)[0], signed_sum, "row {i}");
+        }
+    }
+}

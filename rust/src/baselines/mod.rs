@@ -1,0 +1,16 @@
+//! Baseline methods the paper compares against.
+//!
+//! * [`conifer`] — a Conifer/hls4ml-style **post-training** fixed-point leaf
+//!   quantizer (Summers et al. 2020): signed fixed-point leaves with a
+//!   global scale, *no* per-tree shift-to-zero. Contrast with
+//!   [`crate::quantize`]'s TreeLUT scheme; reproduces the paper's claim that
+//!   PTQ needs wider datapaths and loses accuracy at low bitwidths
+//!   (§1, §4.3 and the Alsharari et al. discussion).
+//!
+//! The other Table 5/6 baselines (DWN, PolyLUT, NeuraLUT, FINN, …) are
+//! **quoted constants** in [`crate::exp::prior`], exactly as the paper
+//! quotes them from their original publications.
+
+pub mod conifer;
+
+pub use conifer::quantize_leaves_conifer;

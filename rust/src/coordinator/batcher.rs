@@ -1,0 +1,352 @@
+//! Dynamic batcher: coalesce single-row requests into engine-sized batches
+//! under a latency bound.
+//!
+//! Policy: the worker blocks for the first request, then drains the queue
+//! until either `max_batch` rows are collected or `max_wait` has elapsed
+//! since the first row of the batch — the classic dynamic-batching tradeoff
+//! (larger batches amortize the execute; the wait bound caps added latency).
+
+use super::BatchExecutor;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// A served answer: the class plus the queue+execute latency, measured by
+/// the worker at reply time (so callers can collect receivers lazily
+/// without inflating the measurement).
+#[derive(Clone, Copy, Debug)]
+pub struct Reply {
+    pub class: u32,
+    pub latency: Duration,
+}
+
+/// Batching policy knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPolicy {
+    /// Maximum rows per batch (clamped to the executor's `max_batch`).
+    pub max_batch: usize,
+    /// Maximum time to hold the first request of a batch.
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy { max_batch: usize::MAX, max_wait: Duration::from_micros(200) }
+    }
+}
+
+struct Job {
+    row: Vec<u16>,
+    enqueued: Instant,
+    resp: mpsc::Sender<anyhow::Result<Reply>>,
+}
+
+/// Aggregate serving counters (lock-free snapshot).
+#[derive(Default)]
+pub struct ServerStats {
+    pub requests: AtomicU64,
+    pub batches: AtomicU64,
+    pub rows_executed: AtomicU64,
+    pub exec_nanos: AtomicU64,
+}
+
+impl ServerStats {
+    /// Mean batch size so far.
+    pub fn mean_batch(&self) -> f64 {
+        let b = self.batches.load(Ordering::Relaxed);
+        if b == 0 {
+            0.0
+        } else {
+            self.rows_executed.load(Ordering::Relaxed) as f64 / b as f64
+        }
+    }
+}
+
+/// A running serving worker with a submission queue.
+pub struct Server {
+    tx: Option<mpsc::Sender<Job>>,
+    worker: Option<std::thread::JoinHandle<()>>,
+    stats: Arc<ServerStats>,
+    n_features: usize,
+}
+
+impl Server {
+    /// Spawn the worker thread owning an executor built by `factory`.
+    ///
+    /// The factory runs *inside* the worker thread because PJRT executables
+    /// are not `Send`; `start` blocks until construction finishes and
+    /// returns the factory's error if it fails.
+    pub fn start_with<E, F>(factory: F, policy: BatchPolicy) -> anyhow::Result<Server>
+    where
+        E: BatchExecutor,
+        F: FnOnce() -> anyhow::Result<E> + Send + 'static,
+    {
+        let (tx, rx) = mpsc::channel::<Job>();
+        let stats = Arc::new(ServerStats::default());
+        let stats_w = Arc::clone(&stats);
+        let (ready_tx, ready_rx) = mpsc::channel::<anyhow::Result<(usize, usize)>>();
+        let max_wait = policy.max_wait;
+        let policy_max = policy.max_batch;
+        let worker = std::thread::spawn(move || {
+            let executor = match factory() {
+                Ok(e) => {
+                    let _ = ready_tx.send(Ok((e.n_features(), e.max_batch())));
+                    e
+                }
+                Err(err) => {
+                    let _ = ready_tx.send(Err(err));
+                    return;
+                }
+            };
+            let max_batch = policy_max.min(executor.max_batch()).max(1);
+            worker_loop(executor, rx, max_batch, max_wait, stats_w);
+        });
+        let (n_features, _max_batch) = ready_rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("worker died during construction"))??;
+        Ok(Server { tx: Some(tx), worker: Some(worker), stats, n_features })
+    }
+
+    /// Spawn the worker thread owning an already-built (`Send`) executor.
+    pub fn start<E: BatchExecutor + Send>(executor: E, policy: BatchPolicy) -> Server {
+        Self::start_with(move || Ok(executor), policy)
+            .expect("infallible factory")
+    }
+
+    /// Submit one quantized row; returns a receiver for the reply.
+    pub fn submit(&self, row: Vec<u16>) -> anyhow::Result<mpsc::Receiver<anyhow::Result<Reply>>> {
+        anyhow::ensure!(
+            row.len() == self.n_features,
+            "row has {} features, server expects {}",
+            row.len(),
+            self.n_features
+        );
+        let (resp_tx, resp_rx) = mpsc::channel();
+        self.tx
+            .as_ref()
+            .expect("server already shut down")
+            .send(Job { row, enqueued: Instant::now(), resp: resp_tx })
+            .map_err(|_| anyhow::anyhow!("server worker terminated"))?;
+        self.stats.requests.fetch_add(1, Ordering::Relaxed);
+        Ok(resp_rx)
+    }
+
+    /// Convenience: submit and block for the class.
+    pub fn classify(&self, row: Vec<u16>) -> anyhow::Result<u32> {
+        Ok(self
+            .submit(row)?
+            .recv()
+            .map_err(|_| anyhow::anyhow!("response dropped"))??
+            .class)
+    }
+
+    /// Aggregate counters.
+    pub fn stats(&self) -> &ServerStats {
+        &self.stats
+    }
+
+    /// Drain and stop the worker.
+    pub fn shutdown(mut self) {
+        self.shutdown_inner();
+    }
+
+    fn shutdown_inner(&mut self) {
+        drop(self.tx.take());
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.shutdown_inner();
+    }
+}
+
+fn worker_loop<E: BatchExecutor>(
+    executor: E,
+    rx: mpsc::Receiver<Job>,
+    max_batch: usize,
+    max_wait: Duration,
+    stats: Arc<ServerStats>,
+) {
+    loop {
+        // Block for the head-of-batch request.
+        let first = match rx.recv() {
+            Ok(j) => j,
+            Err(_) => return, // all senders gone
+        };
+        let deadline = Instant::now() + max_wait;
+        let mut jobs = vec![first];
+        while jobs.len() < max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(j) => jobs.push(j),
+                Err(mpsc::RecvTimeoutError::Timeout) => break,
+                Err(mpsc::RecvTimeoutError::Disconnected) => break,
+            }
+        }
+
+        let rows: Vec<&[u16]> = jobs.iter().map(|j| j.row.as_slice()).collect();
+        let t0 = Instant::now();
+        let result = executor.execute(&rows);
+        stats.exec_nanos.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        stats.batches.fetch_add(1, Ordering::Relaxed);
+        stats.rows_executed.fetch_add(jobs.len() as u64, Ordering::Relaxed);
+
+        let done = Instant::now();
+        match result {
+            Ok(preds) => {
+                debug_assert_eq!(preds.len(), jobs.len());
+                for (job, pred) in jobs.into_iter().zip(preds) {
+                    let reply = Reply { class: pred, latency: done - job.enqueued };
+                    let _ = job.resp.send(Ok(reply)); // receiver may have gone
+                }
+            }
+            Err(e) => {
+                for job in jobs {
+                    let _ = job.resp.send(Err(anyhow::anyhow!("batch failed: {e}")));
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::BatchExecutor;
+    use std::sync::Mutex;
+
+    /// Mock executor: class = first feature mod 3; records batch sizes.
+    struct Mock {
+        batches: Arc<Mutex<Vec<usize>>>,
+        max: usize,
+        delay: Duration,
+    }
+
+    impl BatchExecutor for Mock {
+        fn max_batch(&self) -> usize {
+            self.max
+        }
+        fn n_features(&self) -> usize {
+            2
+        }
+        fn execute(&self, rows: &[&[u16]]) -> anyhow::Result<Vec<u32>> {
+            self.batches.lock().unwrap().push(rows.len());
+            if !self.delay.is_zero() {
+                std::thread::sleep(self.delay);
+            }
+            Ok(rows.iter().map(|r| (r[0] % 3) as u32).collect())
+        }
+    }
+
+    fn mock(max: usize) -> (Mock, Arc<Mutex<Vec<usize>>>) {
+        let batches = Arc::new(Mutex::new(Vec::new()));
+        (Mock { batches: Arc::clone(&batches), max, delay: Duration::ZERO }, batches)
+    }
+
+    #[test]
+    fn answers_are_correct_and_in_order() {
+        let (m, _) = mock(8);
+        let srv = Server::start(m, BatchPolicy::default());
+        for v in 0..20u16 {
+            assert_eq!(srv.classify(vec![v, 0]).unwrap(), (v % 3) as u32);
+        }
+        srv.shutdown();
+    }
+
+    #[test]
+    fn batches_never_exceed_max() {
+        let (m, batches) = mock(4);
+        let srv = Server::start(
+            m,
+            BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(20) },
+        );
+        // Flood 33 requests asynchronously, then collect.
+        let rxs: Vec<_> = (0..33u16).map(|v| srv.submit(vec![v, 1]).unwrap()).collect();
+        for (v, rx) in rxs.into_iter().enumerate() {
+            assert_eq!(rx.recv().unwrap().unwrap().class, (v % 3) as u32);
+        }
+        let sizes = batches.lock().unwrap().clone();
+        assert!(sizes.iter().all(|&s| s <= 4), "{sizes:?}");
+        assert_eq!(sizes.iter().sum::<usize>(), 33);
+        srv.shutdown();
+    }
+
+    #[test]
+    fn coalesces_under_load() {
+        let batches = Arc::new(Mutex::new(Vec::new()));
+        let m = Mock {
+            batches: Arc::clone(&batches),
+            max: 16,
+            delay: Duration::from_millis(5), // slow execute → queue builds
+        };
+        let srv = Server::start(
+            m,
+            BatchPolicy { max_batch: 16, max_wait: Duration::from_millis(1) },
+        );
+        let rxs: Vec<_> = (0..64u16).map(|v| srv.submit(vec![v, 0]).unwrap()).collect();
+        for rx in rxs {
+            rx.recv().unwrap().unwrap();
+        }
+        let sizes = batches.lock().unwrap().clone();
+        // With a 5 ms execute and instant submits, later batches must
+        // coalesce multiple rows.
+        assert!(sizes.iter().any(|&s| s > 1), "no coalescing: {sizes:?}");
+        srv.shutdown();
+    }
+
+    #[test]
+    fn rejects_wrong_width() {
+        let (m, _) = mock(4);
+        let srv = Server::start(m, BatchPolicy::default());
+        assert!(srv.submit(vec![1, 2, 3]).is_err());
+        srv.shutdown();
+    }
+
+    #[test]
+    fn stats_track_requests() {
+        let (m, _) = mock(8);
+        let srv = Server::start(m, BatchPolicy::default());
+        for v in 0..10u16 {
+            srv.classify(vec![v, 0]).unwrap();
+        }
+        let s = srv.stats();
+        assert_eq!(s.requests.load(Ordering::Relaxed), 10);
+        assert_eq!(s.rows_executed.load(Ordering::Relaxed), 10);
+        assert!(s.mean_batch() >= 1.0);
+        srv.shutdown();
+    }
+
+    #[test]
+    fn cpu_executor_serves_quant_model() {
+        use crate::coordinator::CpuExecutor;
+        use crate::quantize::{QuantModel, QuantNode, QuantTree};
+        let tree = QuantTree {
+            nodes: vec![
+                QuantNode::Split { feat: 0, thresh: 1, left: 1, right: 2 },
+                QuantNode::Leaf { value: 0 },
+                QuantNode::Leaf { value: 3 },
+            ],
+        };
+        let model = QuantModel {
+            trees: vec![tree],
+            n_groups: 1,
+            biases: vec![-2],
+            n_features: 1,
+            w_feature: 1,
+            w_tree: 2,
+            scale: 1.0,
+        };
+        let srv = Server::start(CpuExecutor { model, max_batch: 4 }, BatchPolicy::default());
+        assert_eq!(srv.classify(vec![0]).unwrap(), 0); // 0 - 2 < 0
+        assert_eq!(srv.classify(vec![1]).unwrap(), 1); // 3 - 2 >= 0
+        srv.shutdown();
+    }
+}

@@ -1,0 +1,71 @@
+//! Serving metrics: latency distribution + throughput report, produced by
+//! load generators (examples/serve.rs, benches/serving_throughput.rs).
+
+use crate::util::Summary;
+
+/// One load-test run's results.
+#[derive(Clone, Debug)]
+pub struct ServingReport {
+    /// Per-request end-to-end latency summary (seconds).
+    pub latency: Summary,
+    /// Requests completed per second.
+    pub throughput: f64,
+    /// Mean rows per executed batch.
+    pub mean_batch: f64,
+    /// Offered load (requests per second), if known.
+    pub offered_rps: Option<f64>,
+}
+
+impl ServingReport {
+    /// Build from raw per-request latencies and the wall-clock span.
+    pub fn from_latencies(
+        lat_secs: &[f64],
+        wall_secs: f64,
+        mean_batch: f64,
+        offered_rps: Option<f64>,
+    ) -> ServingReport {
+        ServingReport {
+            latency: Summary::of(lat_secs),
+            throughput: if wall_secs > 0.0 { lat_secs.len() as f64 / wall_secs } else { 0.0 },
+            mean_batch,
+            offered_rps,
+        }
+    }
+
+    /// One-line human-readable rendering (microsecond latencies).
+    pub fn render(&self) -> String {
+        let us = |s: f64| s * 1e6;
+        format!(
+            "thru={:.0} req/s{} batch={:.1} lat p50={:.0}us p90={:.0}us p99={:.0}us max={:.0}us",
+            self.throughput,
+            self.offered_rps.map(|r| format!(" (offered {r:.0})")).unwrap_or_default(),
+            self.mean_batch,
+            us(self.latency.p50),
+            us(self.latency.p90),
+            us(self.latency.p99),
+            us(self.latency.max),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_math() {
+        let lats = vec![0.001; 100];
+        let r = ServingReport::from_latencies(&lats, 0.5, 8.0, Some(250.0));
+        assert!((r.throughput - 200.0).abs() < 1e-9);
+        assert!((r.latency.p50 - 0.001).abs() < 1e-12);
+        let s = r.render();
+        assert!(s.contains("thru=200"));
+        assert!(s.contains("offered 250"));
+    }
+
+    #[test]
+    fn zero_wall_clock() {
+        let r = ServingReport::from_latencies(&[], 0.0, 0.0, None);
+        assert_eq!(r.throughput, 0.0);
+    }
+}

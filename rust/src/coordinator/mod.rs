@@ -1,0 +1,65 @@
+//! L3 coordinator: request routing and dynamic batching over a compiled
+//! inference engine.
+//!
+//! The paper motivates GBDT accelerators with ultra-low-latency / high-
+//! throughput serving; this module is the software-serving analogue around
+//! the AOT-compiled forward pass (the vLLM-router shape scaled to this
+//! paper): clients submit single rows, the [`batcher`] coalesces them into
+//! engine-sized batches under a latency bound (II = 1 equivalent: one batch
+//! in flight at a time per worker), and [`metrics`] reports p50/p99 and
+//! throughput.
+//!
+//! The coordinator is generic over [`BatchExecutor`] so unit tests run
+//! against a deterministic mock and the serving path runs against
+//! [`crate::runtime::Engine`].
+
+pub mod batcher;
+pub mod metrics;
+
+pub use batcher::{BatchPolicy, Reply, Server, ServerStats};
+pub use metrics::ServingReport;
+
+/// Anything that can classify a batch of quantized rows.
+///
+/// Not required to be `Send`: the PJRT executable holds raw pointers, so
+/// [`batcher::Server`] constructs the executor *inside* its worker thread
+/// from a `Send` factory closure.
+pub trait BatchExecutor: 'static {
+    /// Maximum rows per call.
+    fn max_batch(&self) -> usize;
+    /// Number of input features per row.
+    fn n_features(&self) -> usize;
+    /// Classify `rows` (each of length `n_features`).
+    fn execute(&self, rows: &[&[u16]]) -> anyhow::Result<Vec<u32>>;
+}
+
+impl BatchExecutor for crate::runtime::Engine {
+    fn max_batch(&self) -> usize {
+        self.cfg.batch
+    }
+    fn n_features(&self) -> usize {
+        self.cfg.features
+    }
+    fn execute(&self, rows: &[&[u16]]) -> anyhow::Result<Vec<u32>> {
+        self.predict(rows)
+    }
+}
+
+/// A [`BatchExecutor`] backed by the pure-Rust integer predictor — the
+/// no-PJRT fallback and the reference the engine is tested against.
+pub struct CpuExecutor {
+    pub model: crate::quantize::QuantModel,
+    pub max_batch: usize,
+}
+
+impl BatchExecutor for CpuExecutor {
+    fn max_batch(&self) -> usize {
+        self.max_batch
+    }
+    fn n_features(&self) -> usize {
+        self.model.n_features
+    }
+    fn execute(&self, rows: &[&[u16]]) -> anyhow::Result<Vec<u32>> {
+        Ok(rows.iter().map(|r| self.model.predict_class(r)).collect())
+    }
+}

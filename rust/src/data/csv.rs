@@ -1,0 +1,106 @@
+//! Minimal CSV persistence for datasets (last column = integer label).
+//!
+//! Lets users bring their own tabular data to the tool flow, mirroring the
+//! original TreeLUT Python library's pandas entry point.
+
+use super::Dataset;
+use anyhow::{bail, Context};
+use std::io::{BufRead, BufWriter, Write};
+use std::path::Path;
+
+/// Write `dataset` as CSV: `f0,f1,...,label` per row, no header.
+pub fn save(dataset: &Dataset, path: &Path) -> anyhow::Result<()> {
+    let file = std::fs::File::create(path)
+        .with_context(|| format!("creating {}", path.display()))?;
+    let mut w = BufWriter::new(file);
+    for i in 0..dataset.n_rows {
+        for v in dataset.row(i) {
+            write!(w, "{v},")?;
+        }
+        writeln!(w, "{}", dataset.y[i])?;
+    }
+    Ok(())
+}
+
+/// Load a CSV written by [`save`] (or any headerless numeric CSV whose last
+/// column is a non-negative integer class label).
+pub fn load(path: &Path, name: &str) -> anyhow::Result<Dataset> {
+    let file = std::fs::File::open(path)
+        .with_context(|| format!("opening {}", path.display()))?;
+    let reader = std::io::BufReader::new(file);
+    let mut x = Vec::new();
+    let mut y = Vec::new();
+    let mut n_features = None;
+    for (lineno, line) in reader.lines().enumerate() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let fields: Vec<&str> = line.split(',').collect();
+        if fields.len() < 2 {
+            bail!("{}:{}: need at least one feature + label", path.display(), lineno + 1);
+        }
+        let f = fields.len() - 1;
+        match n_features {
+            None => n_features = Some(f),
+            Some(expect) if expect != f => {
+                bail!("{}:{}: expected {} features, got {}", path.display(), lineno + 1, expect, f)
+            }
+            _ => {}
+        }
+        for v in &fields[..f] {
+            x.push(v.trim().parse::<f32>().with_context(|| {
+                format!("{}:{}: bad feature {v:?}", path.display(), lineno + 1)
+            })?);
+        }
+        y.push(fields[f].trim().parse::<u32>().with_context(|| {
+            format!("{}:{}: bad label {:?}", path.display(), lineno + 1, fields[f])
+        })?);
+    }
+    let n_features = n_features.context("empty CSV")?;
+    let n_classes = y.iter().copied().max().unwrap_or(0) as usize + 1;
+    Ok(Dataset::new(name, x, y, n_features, n_classes))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+
+    #[test]
+    fn roundtrip() {
+        let d = synth::tiny_binary(20, 5, 3);
+        let dir = std::env::temp_dir().join("treelut_csv_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("toy.csv");
+        save(&d, &path).unwrap();
+        let loaded = load(&path, "toy").unwrap();
+        assert_eq!(loaded.n_rows, d.n_rows);
+        assert_eq!(loaded.n_features, d.n_features);
+        assert_eq!(loaded.y, d.y);
+        for (a, b) in loaded.x.iter().zip(&d.x) {
+            assert!((a - b).abs() < 1e-5);
+        }
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn rejects_ragged_rows() {
+        let dir = std::env::temp_dir().join("treelut_csv_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("ragged.csv");
+        std::fs::write(&path, "1,2,0\n1,2,3,0\n").unwrap();
+        assert!(load(&path, "ragged").is_err());
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn rejects_empty() {
+        let dir = std::env::temp_dir().join("treelut_csv_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("empty.csv");
+        std::fs::write(&path, "").unwrap();
+        assert!(load(&path, "empty").is_err());
+        std::fs::remove_file(&path).unwrap();
+    }
+}

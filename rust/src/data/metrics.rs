@@ -1,0 +1,94 @@
+//! Classification metrics used across the experiment harness.
+
+/// Fraction of predictions equal to labels.
+pub fn accuracy(pred: &[u32], truth: &[u32]) -> f64 {
+    assert_eq!(pred.len(), truth.len());
+    if pred.is_empty() {
+        return 0.0;
+    }
+    let hits = pred.iter().zip(truth).filter(|(p, t)| p == t).count();
+    hits as f64 / pred.len() as f64
+}
+
+/// Row-major confusion matrix `[truth][pred]`.
+pub fn confusion_matrix(pred: &[u32], truth: &[u32], n_classes: usize) -> Vec<Vec<usize>> {
+    assert_eq!(pred.len(), truth.len());
+    let mut m = vec![vec![0usize; n_classes]; n_classes];
+    for (&p, &t) in pred.iter().zip(truth) {
+        m[t as usize][p as usize] += 1;
+    }
+    m
+}
+
+/// Balanced accuracy: mean per-class recall (useful on imbalanced NID).
+pub fn balanced_accuracy(pred: &[u32], truth: &[u32], n_classes: usize) -> f64 {
+    let m = confusion_matrix(pred, truth, n_classes);
+    let mut recalls = Vec::new();
+    for (t, row) in m.iter().enumerate() {
+        let total: usize = row.iter().sum();
+        if total > 0 {
+            recalls.push(row[t] as f64 / total as f64);
+        }
+    }
+    if recalls.is_empty() {
+        0.0
+    } else {
+        recalls.iter().sum::<f64>() / recalls.len() as f64
+    }
+}
+
+/// F1 score of the positive class (binary).
+pub fn f1_binary(pred: &[u32], truth: &[u32]) -> f64 {
+    let mut tp = 0usize;
+    let mut fp = 0usize;
+    let mut fn_ = 0usize;
+    for (&p, &t) in pred.iter().zip(truth) {
+        match (p, t) {
+            (1, 1) => tp += 1,
+            (1, 0) => fp += 1,
+            (0, 1) => fn_ += 1,
+            _ => {}
+        }
+    }
+    if tp == 0 {
+        return 0.0;
+    }
+    let prec = tp as f64 / (tp + fp) as f64;
+    let rec = tp as f64 / (tp + fn_) as f64;
+    2.0 * prec * rec / (prec + rec)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accuracy_basic() {
+        assert_eq!(accuracy(&[1, 0, 1], &[1, 1, 1]), 2.0 / 3.0);
+        assert_eq!(accuracy(&[], &[]), 0.0);
+    }
+
+    #[test]
+    fn confusion_counts() {
+        let m = confusion_matrix(&[0, 1, 1, 0], &[0, 1, 0, 1], 2);
+        assert_eq!(m[0][0], 1);
+        assert_eq!(m[1][1], 1);
+        assert_eq!(m[0][1], 1);
+        assert_eq!(m[1][0], 1);
+    }
+
+    #[test]
+    fn balanced_accuracy_imbalanced() {
+        // 9 of class 0 all correct, 1 of class 1 wrong: plain acc 0.9,
+        // balanced acc 0.5.
+        let truth = [0, 0, 0, 0, 0, 0, 0, 0, 0, 1];
+        let pred = [0, 0, 0, 0, 0, 0, 0, 0, 0, 0];
+        assert!((balanced_accuracy(&pred, &truth, 2) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn f1_perfect_and_zero() {
+        assert_eq!(f1_binary(&[1, 0], &[1, 0]), 1.0);
+        assert_eq!(f1_binary(&[0, 0], &[1, 1]), 0.0);
+    }
+}

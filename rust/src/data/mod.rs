@@ -1,0 +1,147 @@
+//! Datasets: containers, synthetic generators for the paper's three
+//! benchmarks (MNIST / JSC / NID equivalents), splits, CSV I/O, and metrics.
+//!
+//! The paper evaluates on MNIST (784 features, 10 classes), the hls4ml jet
+//! substructure classification dataset "JSC" (16 features, 5 classes), and a
+//! network-intrusion dataset "NID" (UNSW-NB15 derived, 593 features, binary,
+//! imbalanced) — paper Table 4. Those datasets are not available in this
+//! offline environment, so [`synth`] provides seeded generators with the same
+//! dimensionality, class structure and difficulty band (see DESIGN.md §1).
+
+pub mod synth;
+pub mod metrics;
+pub mod csv;
+
+pub use metrics::{accuracy, confusion_matrix};
+
+/// A dense, row-major dataset of float features plus integer class labels.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    /// Row-major feature matrix, `n_rows * n_features` entries.
+    pub x: Vec<f32>,
+    /// Class labels in `0..n_classes`.
+    pub y: Vec<u32>,
+    pub n_rows: usize,
+    pub n_features: usize,
+    pub n_classes: usize,
+    /// Human-readable name, e.g. `"mnist-like"`.
+    pub name: String,
+}
+
+impl Dataset {
+    /// Build from parts, validating dimensions.
+    pub fn new(
+        name: &str,
+        x: Vec<f32>,
+        y: Vec<u32>,
+        n_features: usize,
+        n_classes: usize,
+    ) -> Dataset {
+        assert!(n_features > 0, "n_features must be positive");
+        assert_eq!(x.len() % n_features, 0, "x length not divisible by n_features");
+        let n_rows = x.len() / n_features;
+        assert_eq!(y.len(), n_rows, "y length != row count");
+        assert!(
+            y.iter().all(|&c| (c as usize) < n_classes),
+            "label out of range"
+        );
+        Dataset { x, y, n_rows, n_features, n_classes, name: name.to_string() }
+    }
+
+    /// Feature row `i`.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.x[i * self.n_features..(i + 1) * self.n_features]
+    }
+
+    /// Split into (train, test) with `test_frac` of rows in the test set.
+    /// Rows are shuffled deterministically with `seed`.
+    pub fn split(&self, test_frac: f64, seed: u64) -> (Dataset, Dataset) {
+        assert!((0.0..1.0).contains(&test_frac));
+        let mut idx: Vec<usize> = (0..self.n_rows).collect();
+        let mut rng = crate::util::Rng::new(seed);
+        rng.shuffle(&mut idx);
+        let n_test = ((self.n_rows as f64) * test_frac).round() as usize;
+        let (test_idx, train_idx) = idx.split_at(n_test);
+        (self.subset(train_idx, "train"), self.subset(test_idx, "test"))
+    }
+
+    /// Materialize a row subset.
+    pub fn subset(&self, rows: &[usize], tag: &str) -> Dataset {
+        let mut x = Vec::with_capacity(rows.len() * self.n_features);
+        let mut y = Vec::with_capacity(rows.len());
+        for &r in rows {
+            x.extend_from_slice(self.row(r));
+            y.push(self.y[r]);
+        }
+        Dataset {
+            x,
+            y,
+            n_rows: rows.len(),
+            n_features: self.n_features,
+            n_classes: self.n_classes,
+            name: format!("{}/{}", self.name, tag),
+        }
+    }
+
+    /// Per-class row counts.
+    pub fn class_counts(&self) -> Vec<usize> {
+        let mut counts = vec![0usize; self.n_classes];
+        for &c in &self.y {
+            counts[c as usize] += 1;
+        }
+        counts
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> Dataset {
+        Dataset::new(
+            "toy",
+            vec![0.0, 1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0],
+            vec![0, 1, 0, 1],
+            2,
+            2,
+        )
+    }
+
+    #[test]
+    fn row_access() {
+        let d = toy();
+        assert_eq!(d.n_rows, 4);
+        assert_eq!(d.row(1), &[2.0, 3.0]);
+    }
+
+    #[test]
+    fn split_partitions_rows() {
+        let d = toy();
+        let (tr, te) = d.split(0.25, 1);
+        assert_eq!(tr.n_rows, 3);
+        assert_eq!(te.n_rows, 1);
+        assert_eq!(tr.n_features, 2);
+    }
+
+    #[test]
+    fn split_deterministic() {
+        let d = toy();
+        let (a, _) = d.split(0.5, 9);
+        let (b, _) = d.split(0.5, 9);
+        assert_eq!(a.x, b.x);
+        assert_eq!(a.y, b.y);
+    }
+
+    #[test]
+    fn class_counts_sum() {
+        let d = toy();
+        assert_eq!(d.class_counts(), vec![2, 2]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn bad_label_rejected() {
+        Dataset::new("bad", vec![0.0], vec![5], 1, 2);
+    }
+}

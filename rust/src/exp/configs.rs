@@ -1,0 +1,138 @@
+//! The paper's Table 2: boosting, quantization, and pipelining parameters
+//! for the six TreeLUT design points.
+
+use crate::gbdt::BoostParams;
+use crate::rtl::Pipeline;
+
+/// One row of Table 2.
+#[derive(Clone, Debug)]
+pub struct DesignPoint {
+    /// Dataset name understood by [`crate::data::synth::by_name`].
+    pub dataset: &'static str,
+    /// Paper label, e.g. `"TreeLUT (I)"`.
+    pub label: &'static str,
+    pub params: BoostParams,
+    pub w_feature: u8,
+    pub w_tree: u8,
+    pub pipeline: Pipeline,
+    /// Paper-reported accuracy after quantization (Table 2, for reference
+    /// printing only; our measured numbers come from the runner).
+    pub paper_accuracy: f64,
+}
+
+/// All six design points of Table 2.
+pub fn design_points() -> Vec<DesignPoint> {
+    vec![
+        DesignPoint {
+            dataset: "mnist",
+            label: "TreeLUT (I)",
+            params: BoostParams::default().n_estimators(30).max_depth(5).eta(0.8),
+            w_feature: 4,
+            w_tree: 3,
+            pipeline: Pipeline::new(0, 1, 1),
+            paper_accuracy: 0.966,
+        },
+        DesignPoint {
+            dataset: "mnist",
+            label: "TreeLUT (II)",
+            params: BoostParams::default().n_estimators(30).max_depth(4).eta(0.8),
+            w_feature: 4,
+            w_tree: 3,
+            pipeline: Pipeline::new(0, 1, 1),
+            paper_accuracy: 0.956,
+        },
+        DesignPoint {
+            dataset: "jsc",
+            label: "TreeLUT (I)",
+            params: BoostParams::default().n_estimators(13).max_depth(5).eta(0.8),
+            w_feature: 8,
+            w_tree: 4,
+            pipeline: Pipeline::new(0, 1, 1),
+            paper_accuracy: 0.756,
+        },
+        DesignPoint {
+            dataset: "jsc",
+            label: "TreeLUT (II)",
+            params: BoostParams::default().n_estimators(10).max_depth(5).eta(0.3),
+            w_feature: 8,
+            w_tree: 2,
+            pipeline: Pipeline::new(0, 1, 0),
+            paper_accuracy: 0.746,
+        },
+        DesignPoint {
+            dataset: "nid",
+            label: "TreeLUT (I)",
+            params: BoostParams::default()
+                .n_estimators(40)
+                .max_depth(3)
+                .eta(0.6)
+                .scale_pos_weight(0.3),
+            w_feature: 1,
+            w_tree: 5,
+            pipeline: Pipeline::new(0, 0, 1),
+            paper_accuracy: 0.927,
+        },
+        DesignPoint {
+            dataset: "nid",
+            label: "TreeLUT (II)",
+            params: BoostParams::default()
+                .n_estimators(10)
+                .max_depth(3)
+                .eta(0.8)
+                .scale_pos_weight(0.2),
+            w_feature: 1,
+            w_tree: 5,
+            pipeline: Pipeline::new(0, 0, 1),
+            paper_accuracy: 0.915,
+        },
+    ]
+}
+
+/// Look up a design point by dataset + roman label ("I"/"II").
+pub fn design_point(dataset: &str, variant: &str) -> Option<DesignPoint> {
+    let label = format!("TreeLUT ({variant})");
+    design_points().into_iter().find(|d| d.dataset == dataset && d.label == label)
+}
+
+/// Default experiment dataset sizes (train+test rows) — sized so the full
+/// Table 5 regenerates in minutes on one core; scale up with
+/// `--rows` on the CLI / bench args for closer-to-paper training sets.
+pub fn default_rows(dataset: &str) -> usize {
+    match dataset {
+        "mnist" => 15_000,
+        "jsc" => 50_000,
+        "nid" => 30_000,
+        _ => 5_000,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn six_points_matching_table2() {
+        let pts = design_points();
+        assert_eq!(pts.len(), 6);
+        assert_eq!(pts.iter().filter(|p| p.dataset == "mnist").count(), 2);
+        let nid1 = design_point("nid", "I").unwrap();
+        assert_eq!(nid1.params.n_estimators, 40);
+        assert_eq!(nid1.params.max_depth, 3);
+        assert_eq!(nid1.w_feature, 1);
+        assert_eq!(nid1.w_tree, 5);
+        assert_eq!(nid1.pipeline, Pipeline::new(0, 0, 1));
+    }
+
+    #[test]
+    fn all_params_valid() {
+        for p in design_points() {
+            p.params.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn lookup_misses() {
+        assert!(design_point("mnist", "III").is_none());
+        assert!(design_point("cifar", "I").is_none());
+    }
+}

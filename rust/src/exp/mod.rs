@@ -1,0 +1,20 @@
+//! Experiment harness shared by `rust/benches/` and `examples/`.
+//!
+//! * [`configs`] — the paper's Table 2 design points (TreeLUT (I)/(II) per
+//!   dataset: boosting, quantization and pipelining parameters).
+//! * [`prior`] — the prior-work rows of Tables 5 and 6, quoted from the
+//!   paper (which itself quotes them from the original publications).
+//! * [`runner`] — the full tool-flow pipeline (data → train → quantize →
+//!   design → netlist → map → cost → gate-level-sim accuracy) packaged as
+//!   one call so every bench reproduces its table from the same code path.
+//! * [`table`] — plain-text table rendering for bench output.
+
+pub mod configs;
+pub mod prior;
+pub mod runner;
+pub mod table;
+
+pub use configs::{design_points, DesignPoint};
+pub use prior::{PriorRow, TABLE5, TABLE6_DWN};
+pub use runner::{run_design_point, PointResult, RunOptions};
+pub use table::Table;

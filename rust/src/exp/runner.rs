@@ -1,0 +1,177 @@
+//! The complete TreeLUT tool flow (paper Fig. 7) as one reusable call.
+//!
+//! generate data → pre-training feature quantization → GBDT training →
+//! leaf quantization → architecture IR → netlist + pipeline → 6-LUT map →
+//! timing/area → gate-level-simulated test accuracy.
+//!
+//! Every bench and example reproduces its table through this function, so
+//! all numbers in EXPERIMENTS.md trace to one code path.
+
+use super::configs::DesignPoint;
+use crate::data::{accuracy, synth};
+use crate::netlist::{build_netlist, map_luts, CostReport, Simulator, TimingModel};
+use crate::quantize::{quantize_leaves, FeatureQuantizer, QuantModel};
+use crate::rtl::design_from_quant;
+use crate::util::Timer;
+
+/// Options for one run.
+#[derive(Clone, Copy, Debug)]
+pub struct RunOptions {
+    /// Total rows generated (80/20 train/test split).
+    pub rows: usize,
+    /// Dataset / split seed.
+    pub seed: u64,
+    /// Bypass the key generator (Table 6 DWN-comparison mode).
+    pub bypass_keygen: bool,
+    /// Run the gate-level simulation over the test set (slower; verifies
+    /// circuit == integer predictor and yields "post-implementation
+    /// functional simulation" accuracy).
+    pub simulate: bool,
+}
+
+impl Default for RunOptions {
+    fn default() -> Self {
+        RunOptions { rows: 10_000, seed: 7, bypass_keygen: false, simulate: true }
+    }
+}
+
+/// Results of one design-point run.
+#[derive(Clone, Debug)]
+pub struct PointResult {
+    pub label: String,
+    pub dataset: String,
+    /// Test accuracy of the float-leaf GBDT (Table 3 "Before Quantization").
+    pub acc_float: f64,
+    /// Test accuracy of the TreeLUT-quantized model (Table 3 "After").
+    pub acc_quant: f64,
+    /// Test accuracy measured by gate-level netlist simulation (Table 5's
+    /// "post-implementation functional simulation"); equals `acc_quant`
+    /// bit-exactly when `simulate` is on.
+    pub acc_netlist: Option<f64>,
+    /// Hardware cost via the substrate (Table 5 columns).
+    pub cost: CostReport,
+    /// Unique key count (key-generator comparators).
+    pub n_keys: usize,
+    /// Gate count of the netlist before mapping (substrate detail).
+    pub n_gates: usize,
+    /// Tool-flow wall-clock seconds: (train, quantize+design, map+timing).
+    pub t_train: f64,
+    pub t_quantize: f64,
+    pub t_map: f64,
+    /// The quantized model (for downstream use: RTL emission, serving).
+    pub quant: QuantModel,
+}
+
+/// Run the full tool flow for one design point.
+pub fn run_design_point(dp: &DesignPoint, opts: &RunOptions) -> anyhow::Result<PointResult> {
+    let ds = synth::by_name(dp.dataset, opts.rows, opts.seed)
+        .ok_or_else(|| anyhow::anyhow!("unknown dataset {}", dp.dataset))?;
+    let (train_ds, test_ds) = ds.split(0.2, opts.seed ^ 1);
+
+    // Pre-training feature quantization (paper §2.2.1).
+    let fq = FeatureQuantizer::fit(&train_ds, dp.w_feature);
+    let btrain = fq.transform(&train_ds);
+    let btest = fq.transform(&test_ds);
+
+    // Training (XGBoost math).
+    let t = Timer::start();
+    let model = crate::gbdt::train(&btrain, &train_ds.y, train_ds.n_classes, &dp.params, dp.w_feature)?;
+    let t_train = t.secs();
+
+    let acc_float = accuracy(&model.predict_batch(&btest.bins, btest.n_features), &test_ds.y);
+
+    // Leaf quantization (paper §2.2.2/2.2.3) + architecture IR.
+    let t = Timer::start();
+    let (quant, _report) = quantize_leaves(&model, dp.w_tree);
+    quant.validate()?;
+    let acc_quant = accuracy(&quant.predict_batch(&btest.bins, btest.n_features), &test_ds.y);
+    let design = design_from_quant(
+        &format!("{}_{}", dp.dataset, dp.label.replace(['(', ')', ' '], "")),
+        &quant,
+        dp.pipeline,
+        !opts.bypass_keygen,
+    );
+    let t_quantize = t.secs();
+
+    // Netlist + mapping + timing (the Vivado substitute).
+    let t = Timer::start();
+    let built = build_netlist(&design);
+    let map = map_luts(&built.net);
+    let cost = CostReport::evaluate(&map, built.cuts, &TimingModel::default());
+    let t_map = t.secs();
+
+    // Gate-level functional simulation over the test set.
+    let acc_netlist = if opts.simulate && !opts.bypass_keygen {
+        let mut sim = Simulator::new(&built.net);
+        let rows = (0..btest.n_rows).map(|i| btest.row(i).to_vec());
+        let preds = sim.classify_dataset(&built, rows, dp.w_feature as usize);
+        Some(accuracy(&preds, &test_ds.y))
+    } else {
+        None
+    };
+
+    Ok(PointResult {
+        label: dp.label.to_string(),
+        dataset: dp.dataset.to_string(),
+        acc_float,
+        acc_quant,
+        acc_netlist,
+        cost,
+        n_keys: quant.unique_comparisons().len(),
+        n_gates: built.net.len(),
+        t_train,
+        t_quantize,
+        t_map,
+        quant,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exp::configs::design_point;
+
+    /// A scaled-down NID run exercises the whole flow quickly (binary,
+    /// w_feature = 1 keeps the circuit small).
+    #[test]
+    fn full_flow_nid_small() {
+        let dp = design_point("nid", "II").unwrap();
+        let opts = RunOptions { rows: 2_000, seed: 3, bypass_keygen: false, simulate: true };
+        let r = run_design_point(&dp, &opts).unwrap();
+        assert!(r.acc_float > 0.8, "float acc {}", r.acc_float);
+        assert!(r.acc_quant > 0.8, "quant acc {}", r.acc_quant);
+        // The netlist IS the quantized model: accuracies identical.
+        assert_eq!(Some(r.acc_quant), r.acc_netlist);
+        assert!(r.cost.luts > 0);
+        assert!(r.cost.fmax_mhz > 100.0);
+        assert_eq!(r.cost.cycles, 1); // pipeline [0,0,1]
+    }
+
+    /// Multiclass flow on a scaled-down JSC run.
+    #[test]
+    fn full_flow_jsc_small() {
+        let dp = design_point("jsc", "II").unwrap();
+        let opts = RunOptions { rows: 3_000, seed: 5, bypass_keygen: false, simulate: true };
+        let r = run_design_point(&dp, &opts).unwrap();
+        assert!(r.acc_quant > 0.5, "quant acc {}", r.acc_quant);
+        assert_eq!(Some(r.acc_quant), r.acc_netlist);
+        assert_eq!(r.cost.cycles, 1); // pipeline [0,1,0]
+        assert!(r.n_keys > 0);
+    }
+
+    #[test]
+    fn bypass_keygen_reduces_area() {
+        let dp = design_point("nid", "II").unwrap();
+        let base = run_design_point(
+            &dp,
+            &RunOptions { rows: 2_000, seed: 3, bypass_keygen: false, simulate: false },
+        )
+        .unwrap();
+        let bypass = run_design_point(
+            &dp,
+            &RunOptions { rows: 2_000, seed: 3, bypass_keygen: true, simulate: false },
+        )
+        .unwrap();
+        assert!(bypass.cost.luts <= base.cost.luts);
+    }
+}

@@ -1,0 +1,162 @@
+//! Plain-text model persistence (no serde in this environment).
+//!
+//! Format (line-oriented, whitespace-separated):
+//!
+//! ```text
+//! treelut-gbdt v1
+//! meta <n_groups> <base_score> <n_features> <w_feature> <n_trees>
+//! tree <n_nodes>
+//! s <feat> <thresh> <left> <right>     # split node
+//! l <value>                            # leaf node
+//! ...
+//! ```
+
+use super::tree::{GbdtModel, Tree, TreeNode};
+use anyhow::{bail, Context};
+use std::io::{BufRead, BufWriter, Write};
+use std::path::Path;
+
+/// Serialize a model to a writer.
+pub fn write_model<W: Write>(model: &GbdtModel, w: &mut W) -> anyhow::Result<()> {
+    writeln!(w, "treelut-gbdt v1")?;
+    writeln!(
+        w,
+        "meta {} {} {} {} {}",
+        model.n_groups,
+        model.base_score,
+        model.n_features,
+        model.w_feature,
+        model.trees.len()
+    )?;
+    for tree in &model.trees {
+        writeln!(w, "tree {}", tree.nodes.len())?;
+        for node in &tree.nodes {
+            match node {
+                TreeNode::Split { feat, thresh, left, right } => {
+                    writeln!(w, "s {feat} {thresh} {left} {right}")?
+                }
+                TreeNode::Leaf { value } => writeln!(w, "l {value}")?,
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Save a model to a file.
+pub fn save(model: &GbdtModel, path: &Path) -> anyhow::Result<()> {
+    let f = std::fs::File::create(path)
+        .with_context(|| format!("creating {}", path.display()))?;
+    let mut w = BufWriter::new(f);
+    write_model(model, &mut w)
+}
+
+/// Load a model from a file.
+pub fn load(path: &Path) -> anyhow::Result<GbdtModel> {
+    let f = std::fs::File::open(path)
+        .with_context(|| format!("opening {}", path.display()))?;
+    let mut lines = std::io::BufReader::new(f).lines();
+    let mut next = || -> anyhow::Result<String> {
+        lines
+            .next()
+            .transpose()?
+            .context("unexpected end of model file")
+    };
+
+    let header = next()?;
+    if header.trim() != "treelut-gbdt v1" {
+        bail!("bad model header: {header:?}");
+    }
+    let meta = next()?;
+    let parts: Vec<&str> = meta.split_whitespace().collect();
+    if parts.len() != 6 || parts[0] != "meta" {
+        bail!("bad meta line: {meta:?}");
+    }
+    let n_groups: usize = parts[1].parse()?;
+    let base_score: f32 = parts[2].parse()?;
+    let n_features: usize = parts[3].parse()?;
+    let w_feature: u8 = parts[4].parse()?;
+    let n_trees: usize = parts[5].parse()?;
+
+    let mut trees = Vec::with_capacity(n_trees);
+    for ti in 0..n_trees {
+        let tl = next()?;
+        let tp: Vec<&str> = tl.split_whitespace().collect();
+        if tp.len() != 2 || tp[0] != "tree" {
+            bail!("tree {ti}: bad tree line {tl:?}");
+        }
+        let n_nodes: usize = tp[1].parse()?;
+        let mut nodes = Vec::with_capacity(n_nodes);
+        for ni in 0..n_nodes {
+            let nl = next()?;
+            let np: Vec<&str> = nl.split_whitespace().collect();
+            match np.as_slice() {
+                ["s", feat, thresh, left, right] => nodes.push(TreeNode::Split {
+                    feat: feat.parse()?,
+                    thresh: thresh.parse()?,
+                    left: left.parse()?,
+                    right: right.parse()?,
+                }),
+                ["l", value] => nodes.push(TreeNode::Leaf { value: value.parse()? }),
+                _ => bail!("tree {ti} node {ni}: bad node line {nl:?}"),
+            }
+        }
+        trees.push(Tree { nodes });
+    }
+
+    let model = GbdtModel { trees, n_groups, base_score, n_features, w_feature };
+    model.validate()?;
+    Ok(model)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::gbdt::{train, BoostParams};
+    use crate::quantize::FeatureQuantizer;
+
+    #[test]
+    fn roundtrip_preserves_predictions() {
+        let ds = synth::tiny_multiclass(150, 5, 3, 4);
+        let fq = FeatureQuantizer::fit(&ds, 4);
+        let binned = fq.transform(&ds);
+        let params = BoostParams::default().n_estimators(4).max_depth(3);
+        let model = train(&binned, &ds.y, ds.n_classes, &params, 4).unwrap();
+
+        let dir = std::env::temp_dir().join("treelut_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("model.txt");
+        save(&model, &path).unwrap();
+        let loaded = load(&path).unwrap();
+        std::fs::remove_file(&path).unwrap();
+
+        assert_eq!(loaded.n_groups, model.n_groups);
+        assert_eq!(loaded.trees.len(), model.trees.len());
+        for i in 0..binned.n_rows {
+            assert_eq!(
+                loaded.predict_class(binned.row(i)),
+                model.predict_class(binned.row(i))
+            );
+        }
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let dir = std::env::temp_dir().join("treelut_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("garbage.txt");
+        std::fs::write(&path, "not a model\n").unwrap();
+        assert!(load(&path).is_err());
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn rejects_truncated() {
+        let dir = std::env::temp_dir().join("treelut_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("trunc.txt");
+        std::fs::write(&path, "treelut-gbdt v1\nmeta 1 0 4 4 2\ntree 1\nl 0.5\n").unwrap();
+        assert!(load(&path).is_err()); // promises 2 trees, has 1
+        std::fs::remove_file(&path).unwrap();
+    }
+}

@@ -1,0 +1,28 @@
+//! Gradient-boosted decision trees with XGBoost-compatible math.
+//!
+//! The paper builds TreeLUT on top of XGBoost; XGBoost is not available in
+//! this environment, so this module implements the same second-order
+//! boosting procedure from scratch (DESIGN.md §1):
+//!
+//! * histogram-based split finding over **pre-quantized** integer features
+//!   (the paper quantizes features to `w_feature` bits *before* training, so
+//!   every candidate threshold is exactly enumerable — §2.2.1),
+//! * split gain `½[G_L²/(H_L+λ) + G_R²/(H_R+λ) − G²/(H+λ)]` and leaf weight
+//!   `−η·G/(H+λ)` (Chen & Guestrin 2016, Eq. 6/7),
+//! * binary logistic objective with `scale_pos_weight`, and softmax
+//!   multiclass with one tree per class per round (one-vs-all, §2.1.2).
+//!
+//! The resulting [`GbdtModel`] is exactly what the TreeLUT quantizer
+//! ([`crate::quantize`]) and RTL generator ([`crate::rtl`]) consume: a set of
+//! trees with integer thresholds and float leaves, plus a base score.
+
+pub mod params;
+pub mod tree;
+pub mod histogram;
+pub mod trainer;
+pub mod objective;
+pub mod io;
+
+pub use params::BoostParams;
+pub use tree::{GbdtModel, Tree, TreeNode};
+pub use trainer::train;

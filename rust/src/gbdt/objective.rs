@@ -1,0 +1,117 @@
+//! Training objectives: gradients/hessians of binary logistic loss and
+//! softmax cross-entropy, matching XGBoost's `binary:logistic` and
+//! `multi:softprob`.
+
+/// Numerically-stable sigmoid.
+#[inline]
+pub fn sigmoid(z: f32) -> f32 {
+    if z >= 0.0 {
+        let e = (-z).exp();
+        1.0 / (1.0 + e)
+    } else {
+        let e = z.exp();
+        e / (1.0 + e)
+    }
+}
+
+/// In-place softmax over `scores`.
+pub fn softmax(scores: &mut [f32]) {
+    let max = scores.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+    let mut sum = 0.0f32;
+    for s in scores.iter_mut() {
+        *s = (*s - max).exp();
+        sum += *s;
+    }
+    for s in scores.iter_mut() {
+        *s /= sum;
+    }
+}
+
+/// Gradient/hessian of binary logistic loss at margin `z` for label `y`,
+/// with `scale_pos_weight` applied to positive samples (XGBoost semantics:
+/// the sample weight of positives is multiplied by `spw`).
+#[inline]
+pub fn logistic_grad_hess(z: f32, y: u32, spw: f32) -> (f32, f32) {
+    let p = sigmoid(z);
+    let w = if y == 1 { spw } else { 1.0 };
+    let grad = w * (p - y as f32);
+    let hess = (w * p * (1.0 - p)).max(1e-16);
+    (grad, hess)
+}
+
+/// Gradient/hessian of softmax cross-entropy for class `c` given
+/// probability `p_c` and indicator `is_target`. XGBoost uses `h = 2p(1−p)`.
+#[inline]
+pub fn softmax_grad_hess(p_c: f32, is_target: bool) -> (f32, f32) {
+    let grad = p_c - is_target as u32 as f32;
+    let hess = (2.0 * p_c * (1.0 - p_c)).max(1e-16);
+    (grad, hess)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sigmoid_symmetry_and_range() {
+        assert!((sigmoid(0.0) - 0.5).abs() < 1e-7);
+        for z in [-30.0, -2.0, 0.3, 5.0, 40.0] {
+            let p = sigmoid(z);
+            assert!((0.0..=1.0).contains(&p));
+            assert!((p + sigmoid(-z) - 1.0).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn sigmoid_extremes_stable() {
+        assert!(sigmoid(1000.0) <= 1.0);
+        assert!(sigmoid(-1000.0) >= 0.0);
+        assert!(sigmoid(-1000.0).is_finite());
+    }
+
+    #[test]
+    fn softmax_normalizes() {
+        let mut s = vec![1.0, 2.0, 3.0];
+        softmax(&mut s);
+        assert!((s.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+        assert!(s[2] > s[1] && s[1] > s[0]);
+    }
+
+    #[test]
+    fn softmax_stable_large() {
+        let mut s = vec![1000.0, 1000.0];
+        softmax(&mut s);
+        assert!((s[0] - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn logistic_gradient_sign() {
+        // Positive sample with negative margin → negative gradient (push up).
+        let (g, h) = logistic_grad_hess(-1.0, 1, 1.0);
+        assert!(g < 0.0);
+        assert!(h > 0.0);
+        // Negative sample with positive margin → positive gradient.
+        let (g, _) = logistic_grad_hess(1.0, 0, 1.0);
+        assert!(g > 0.0);
+    }
+
+    #[test]
+    fn scale_pos_weight_scales_positives_only() {
+        let (g1, h1) = logistic_grad_hess(0.3, 1, 1.0);
+        let (g2, h2) = logistic_grad_hess(0.3, 1, 0.25);
+        assert!((g2 / g1 - 0.25).abs() < 1e-6);
+        assert!((h2 / h1 - 0.25).abs() < 1e-5);
+        let (g3, _) = logistic_grad_hess(0.3, 0, 0.25);
+        let (g4, _) = logistic_grad_hess(0.3, 0, 1.0);
+        assert_eq!(g3, g4);
+    }
+
+    #[test]
+    fn softmax_grad_at_target() {
+        let (g, h) = softmax_grad_hess(0.9, true);
+        assert!(g < 0.0 && g > -0.2);
+        assert!(h > 0.0);
+        let (g, _) = softmax_grad_hess(0.9, false);
+        assert!((g - 0.9).abs() < 1e-7);
+    }
+}

@@ -1,0 +1,96 @@
+//! Boosting hyperparameters (the subset of XGBoost the paper tunes, Table 2).
+
+/// Hyperparameters for [`crate::gbdt::train`].
+#[derive(Clone, Debug)]
+pub struct BoostParams {
+    /// Number of boosting rounds. Per the paper/XGBoost convention this is
+    /// trees-per-class in multiclass and total trees in binary tasks.
+    pub n_estimators: usize,
+    /// Maximum tree depth (root = depth 0).
+    pub max_depth: usize,
+    /// Learning rate (shrinkage), XGBoost `eta`.
+    pub eta: f32,
+    /// L2 regularization on leaf weights, XGBoost `lambda`.
+    pub lambda: f32,
+    /// Minimum split gain, XGBoost `gamma`.
+    pub gamma: f32,
+    /// Minimum sum of hessian per child, XGBoost `min_child_weight`.
+    pub min_child_weight: f32,
+    /// Gradient/hessian multiplier for positive samples in binary tasks,
+    /// XGBoost `scale_pos_weight` (1.0 = balanced).
+    pub scale_pos_weight: f32,
+}
+
+impl Default for BoostParams {
+    fn default() -> Self {
+        BoostParams {
+            n_estimators: 10,
+            max_depth: 3,
+            eta: 0.3,
+            lambda: 1.0,
+            gamma: 0.0,
+            min_child_weight: 1.0,
+            scale_pos_weight: 1.0,
+        }
+    }
+}
+
+impl BoostParams {
+    /// Builder-style setters for the commonly tuned parameters.
+    pub fn n_estimators(mut self, v: usize) -> Self {
+        self.n_estimators = v;
+        self
+    }
+    pub fn max_depth(mut self, v: usize) -> Self {
+        self.max_depth = v;
+        self
+    }
+    pub fn eta(mut self, v: f32) -> Self {
+        self.eta = v;
+        self
+    }
+    pub fn scale_pos_weight(mut self, v: f32) -> Self {
+        self.scale_pos_weight = v;
+        self
+    }
+    pub fn lambda(mut self, v: f32) -> Self {
+        self.lambda = v;
+        self
+    }
+
+    /// Validate ranges.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.n_estimators > 0, "n_estimators must be > 0");
+        anyhow::ensure!(self.max_depth >= 1 && self.max_depth <= 10, "max_depth in 1..=10");
+        anyhow::ensure!(self.eta > 0.0 && self.eta <= 1.0, "eta in (0,1]");
+        anyhow::ensure!(self.lambda >= 0.0, "lambda >= 0");
+        anyhow::ensure!(self.scale_pos_weight > 0.0, "scale_pos_weight > 0");
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_valid() {
+        BoostParams::default().validate().unwrap();
+    }
+
+    #[test]
+    fn builder_chains() {
+        let p = BoostParams::default().n_estimators(30).max_depth(5).eta(0.8);
+        assert_eq!(p.n_estimators, 30);
+        assert_eq!(p.max_depth, 5);
+        assert_eq!(p.eta, 0.8);
+        p.validate().unwrap();
+    }
+
+    #[test]
+    fn invalid_rejected() {
+        assert!(BoostParams::default().eta(0.0).validate().is_err());
+        assert!(BoostParams::default().n_estimators(0).validate().is_err());
+        assert!(BoostParams::default().max_depth(0).validate().is_err());
+    }
+}

@@ -1,0 +1,292 @@
+//! The boosting loop and tree grower.
+//!
+//! Depth-wise growth with exact histogram split search (see
+//! [`crate::gbdt::histogram`]); the histogram-subtraction trick computes the
+//! larger child of every split from its parent and sibling, which roughly
+//! halves histogram construction cost on balanced splits.
+
+use super::histogram::{best_split, BinnedMatrix, Histogram};
+use super::objective::{logistic_grad_hess, softmax, softmax_grad_hess};
+use super::params::BoostParams;
+use super::tree::{GbdtModel, Tree, TreeNode};
+
+/// Train a GBDT on pre-quantized (binned) features.
+///
+/// * `labels` are class ids in `0..n_classes`.
+/// * Binary tasks (`n_classes == 2`) train one tree per round with the
+///   logistic objective; multiclass trains `n_classes` one-vs-all trees per
+///   round with softmax (paper §2.1.2).
+/// * `w_feature` is recorded on the model for downstream tooling.
+pub fn train(
+    data: &BinnedMatrix,
+    labels: &[u32],
+    n_classes: usize,
+    params: &BoostParams,
+    w_feature: u8,
+) -> anyhow::Result<GbdtModel> {
+    params.validate()?;
+    anyhow::ensure!(n_classes >= 2, "need at least two classes");
+    anyhow::ensure!(labels.len() == data.n_rows, "label count != row count");
+    anyhow::ensure!(data.n_rows > 0, "empty training set");
+    anyhow::ensure!(
+        (data.n_bins as u64) <= (1 << 16),
+        "n_bins exceeds u16 bin domain"
+    );
+
+    let n_groups = if n_classes == 2 { 1 } else { n_classes };
+    let n = data.n_rows;
+    // Margin matrix, row-major [n, n_groups]; base_score = 0 in margin space
+    // (XGBoost's base_score=0.5 through the logistic link).
+    let base_score = 0.0f32;
+    let mut margins = vec![base_score; n * n_groups];
+
+    let mut trees = Vec::with_capacity(params.n_estimators * n_groups);
+    let mut grad = vec![0.0f32; n];
+    let mut hess = vec![0.0f32; n];
+    let mut probs = vec![0.0f32; n_groups];
+
+    // Per-round softmax probabilities (multiclass only), [n, n_groups].
+    let mut prob_matrix = if n_groups > 1 { vec![0.0f32; n * n_groups] } else { Vec::new() };
+
+    for _round in 0..params.n_estimators {
+        if n_groups > 1 {
+            for i in 0..n {
+                probs.copy_from_slice(&margins[i * n_groups..(i + 1) * n_groups]);
+                softmax(&mut probs);
+                prob_matrix[i * n_groups..(i + 1) * n_groups].copy_from_slice(&probs);
+            }
+        }
+        for g in 0..n_groups {
+            if n_groups == 1 {
+                for i in 0..n {
+                    let (gr, he) =
+                        logistic_grad_hess(margins[i], labels[i], params.scale_pos_weight);
+                    grad[i] = gr;
+                    hess[i] = he;
+                }
+            } else {
+                for i in 0..n {
+                    let p = prob_matrix[i * n_groups + g];
+                    let (gr, he) = softmax_grad_hess(p, labels[i] as usize == g);
+                    grad[i] = gr;
+                    hess[i] = he;
+                }
+            }
+            let tree = grow_tree(data, &grad, &hess, params);
+            // Update margins for this group.
+            for i in 0..n {
+                margins[i * n_groups + g] += tree.predict(data.row(i));
+            }
+            trees.push(tree);
+        }
+    }
+
+    // Reorder from round-major already (we push g inside round) — layout is
+    // trees[round * n_groups + g], matching GbdtModel's contract.
+    let model = GbdtModel {
+        trees,
+        n_groups,
+        base_score,
+        n_features: data.n_features,
+        w_feature,
+    };
+    model.validate()?;
+    Ok(model)
+}
+
+/// Grow a single regression tree on (grad, hess) with depth-wise recursion.
+fn grow_tree(data: &BinnedMatrix, grad: &[f32], hess: &[f32], params: &BoostParams) -> Tree {
+    let all_rows: Vec<u32> = (0..data.n_rows as u32).collect();
+    let mut hist = Histogram::zeros(data.n_features, data.n_bins as usize);
+    hist.accumulate(data, &all_rows, grad, hess);
+
+    let mut nodes: Vec<TreeNode> = Vec::new();
+    grow_node(data, grad, hess, params, all_rows, hist, 0, &mut nodes);
+    Tree { nodes }
+}
+
+/// Recursively grow the subtree rooted at a fresh node; returns its index.
+///
+/// Takes ownership of the node's `rows` and `hist` so the
+/// histogram-subtraction trick can reuse the parent histogram's memory
+/// shape (the larger child is derived by subtraction).
+#[allow(clippy::too_many_arguments)]
+fn grow_node(
+    data: &BinnedMatrix,
+    grad: &[f32],
+    hess: &[f32],
+    params: &BoostParams,
+    rows: Vec<u32>,
+    hist: Histogram,
+    depth: usize,
+    nodes: &mut Vec<TreeNode>,
+) -> u32 {
+    let idx = nodes.len() as u32;
+    let (g_total, h_total) = hist.totals();
+
+    let split = if depth < params.max_depth {
+        best_split(
+            &hist,
+            params.lambda as f64,
+            params.gamma as f64,
+            params.min_child_weight as f64,
+        )
+    } else {
+        None
+    };
+
+    let Some(split) = split else {
+        // Leaf: w = −η·G/(H+λ) (XGBoost Eq. 5 with shrinkage folded in).
+        let w = -params.eta as f64 * g_total / (h_total + params.lambda as f64);
+        nodes.push(TreeNode::Leaf { value: w as f32 });
+        return idx;
+    };
+
+    // Partition rows.
+    let mut left_rows = Vec::new();
+    let mut right_rows = Vec::new();
+    for &r in &rows {
+        let b = data.row(r as usize)[split.feat as usize] as u32;
+        if b < split.thresh {
+            left_rows.push(r);
+        } else {
+            right_rows.push(r);
+        }
+    }
+    debug_assert!(!left_rows.is_empty() && !right_rows.is_empty());
+    drop(rows);
+
+    // Histogram subtraction: accumulate the smaller child, derive the other.
+    let nb = data.n_bins as usize;
+    let (left_hist, right_hist) = if left_rows.len() <= right_rows.len() {
+        let mut lh = Histogram::zeros(data.n_features, nb);
+        lh.accumulate(data, &left_rows, grad, hess);
+        let mut rh = Histogram::zeros(data.n_features, nb);
+        rh.subtract_from(&hist, &lh);
+        (lh, rh)
+    } else {
+        let mut rh = Histogram::zeros(data.n_features, nb);
+        rh.accumulate(data, &right_rows, grad, hess);
+        let mut lh = Histogram::zeros(data.n_features, nb);
+        lh.subtract_from(&hist, &rh);
+        (lh, rh)
+    };
+    drop(hist);
+
+    nodes.push(TreeNode::Split {
+        feat: split.feat,
+        thresh: split.thresh,
+        left: 0,  // patched below
+        right: 0, // patched below
+    });
+    let left = grow_node(data, grad, hess, params, left_rows, left_hist, depth + 1, nodes);
+    let right = grow_node(data, grad, hess, params, right_rows, right_hist, depth + 1, nodes);
+    match &mut nodes[idx as usize] {
+        TreeNode::Split { left: l, right: r, .. } => {
+            *l = left;
+            *r = right;
+        }
+        _ => unreachable!(),
+    }
+    idx
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{accuracy, synth};
+    use crate::quantize::FeatureQuantizer;
+
+    fn train_on(ds: &crate::data::Dataset, params: &BoostParams, w: u8) -> (GbdtModel, BinnedMatrix) {
+        let fq = FeatureQuantizer::fit(ds, w);
+        let binned = fq.transform(ds);
+        let model = train(&binned, &ds.y, ds.n_classes, params, w).unwrap();
+        (model, binned)
+    }
+
+    #[test]
+    fn binary_task_learns() {
+        let ds = synth::tiny_binary(400, 8, 1);
+        let params = BoostParams::default().n_estimators(20).max_depth(3).eta(0.3);
+        let (model, binned) = train_on(&ds, &params, 4);
+        assert_eq!(model.n_groups, 1);
+        assert_eq!(model.trees.len(), 20);
+        let pred = model.predict_batch(&binned.bins, binned.n_features);
+        let acc = accuracy(&pred, &ds.y);
+        assert!(acc > 0.9, "train accuracy {acc}");
+    }
+
+    #[test]
+    fn multiclass_task_learns() {
+        let ds = synth::tiny_multiclass(300, 6, 3, 2);
+        let params = BoostParams::default().n_estimators(10).max_depth(3).eta(0.5);
+        let (model, binned) = train_on(&ds, &params, 4);
+        assert_eq!(model.n_groups, 3);
+        assert_eq!(model.trees.len(), 30);
+        let pred = model.predict_batch(&binned.bins, binned.n_features);
+        let acc = accuracy(&pred, &ds.y);
+        assert!(acc > 0.9, "train accuracy {acc}");
+    }
+
+    #[test]
+    fn max_depth_respected() {
+        let ds = synth::tiny_binary(300, 8, 3);
+        let params = BoostParams::default().n_estimators(5).max_depth(2);
+        let (model, _) = train_on(&ds, &params, 4);
+        for t in &model.trees {
+            assert!(t.depth() <= 2);
+        }
+    }
+
+    #[test]
+    fn thresholds_within_bin_domain() {
+        let ds = synth::tiny_binary(200, 4, 5);
+        let params = BoostParams::default().n_estimators(8).max_depth(4);
+        let (model, _) = train_on(&ds, &params, 3);
+        for (_, t) in model.unique_comparisons() {
+            assert!(t >= 1 && t <= 7, "threshold {t} outside 1..=2^3-1");
+        }
+    }
+
+    #[test]
+    fn eta_scales_leaves() {
+        let ds = synth::tiny_binary(200, 4, 7);
+        let p1 = BoostParams::default().n_estimators(1).max_depth(2).eta(1.0);
+        let p2 = BoostParams::default().n_estimators(1).max_depth(2).eta(0.5);
+        let (m1, _) = train_on(&ds, &p1, 4);
+        let (m2, _) = train_on(&ds, &p2, 4);
+        // First-round trees have identical structure; leaves scale by eta.
+        let l1: Vec<f32> = m1.trees[0].leaf_values().collect();
+        let l2: Vec<f32> = m2.trees[0].leaf_values().collect();
+        assert_eq!(l1.len(), l2.len());
+        for (a, b) in l1.iter().zip(&l2) {
+            assert!((a * 0.5 - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn scale_pos_weight_shifts_predictions_toward_negative() {
+        // Downweighting positives (spw < 1) should classify fewer rows as 1.
+        let ds = synth::nid_like(600, 11);
+        let p_bal = BoostParams::default().n_estimators(5).max_depth(3);
+        let p_down = BoostParams::default().n_estimators(5).max_depth(3).scale_pos_weight(0.1);
+        let (mb, binned) = train_on(&ds, &p_bal, 1);
+        let (md, _) = train_on(&ds, &p_down, 1);
+        let pos_bal: u32 = mb.predict_batch(&binned.bins, binned.n_features).iter().sum();
+        let pos_down: u32 = md.predict_batch(&binned.bins, binned.n_features).iter().sum();
+        assert!(pos_down < pos_bal, "spw=0.1 gave {pos_down} vs {pos_bal} positives");
+    }
+
+    #[test]
+    fn degenerate_single_class_feature_free() {
+        // All labels 0 → every tree is (nearly) a single negative leaf and
+        // prediction is class 0 everywhere.
+        let binned = BinnedMatrix::new(vec![0, 1, 2, 3], 1, 4);
+        let labels = vec![0, 0, 0, 0];
+        let params = BoostParams::default().n_estimators(3).max_depth(2);
+        let model = train(&binned, &labels, 2, &params, 2).unwrap();
+        for row in 0..4 {
+            assert_eq!(model.predict_class(binned.row(row)), 0);
+        }
+    }
+}

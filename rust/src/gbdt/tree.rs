@@ -1,0 +1,298 @@
+//! Tree and ensemble model types shared by the trainer, quantizer and RTL
+//! generator.
+
+/// A node of a trained decision tree.
+///
+/// Split semantics follow the quantized-feature convention used throughout
+/// the repo (and by the paper's key generator, §2.3.1): the comparison key is
+/// `k = (x[feat] >= thresh)`; `k = 0` takes `left`, `k = 1` takes `right`.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TreeNode {
+    Split {
+        /// Feature index.
+        feat: u32,
+        /// Integer threshold in the quantized feature domain
+        /// (`1..=2^w_feature − 1`; a threshold of 0 would be degenerate).
+        thresh: u32,
+        /// Child index when `x[feat] < thresh`.
+        left: u32,
+        /// Child index when `x[feat] >= thresh`.
+        right: u32,
+    },
+    Leaf {
+        /// Prediction score contribution (float until leaf quantization).
+        value: f32,
+    },
+}
+
+/// A single decision tree, node 0 = root.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Tree {
+    pub nodes: Vec<TreeNode>,
+}
+
+impl Tree {
+    /// Single-leaf tree.
+    pub fn leaf(value: f32) -> Tree {
+        Tree { nodes: vec![TreeNode::Leaf { value }] }
+    }
+
+    /// Evaluate on a quantized feature row.
+    pub fn predict(&self, x: &[u16]) -> f32 {
+        let mut i = 0usize;
+        loop {
+            match &self.nodes[i] {
+                TreeNode::Leaf { value } => return *value,
+                TreeNode::Split { feat, thresh, left, right } => {
+                    i = if (x[*feat as usize] as u32) >= *thresh { *right } else { *left } as usize;
+                }
+            }
+        }
+    }
+
+    /// Maximum depth (leaf-only tree has depth 0).
+    pub fn depth(&self) -> usize {
+        fn go(t: &Tree, i: usize) -> usize {
+            match &t.nodes[i] {
+                TreeNode::Leaf { .. } => 0,
+                TreeNode::Split { left, right, .. } => {
+                    1 + go(t, *left as usize).max(go(t, *right as usize))
+                }
+            }
+        }
+        go(self, 0)
+    }
+
+    /// Number of leaves.
+    pub fn n_leaves(&self) -> usize {
+        self.nodes.iter().filter(|n| matches!(n, TreeNode::Leaf { .. })).count()
+    }
+
+    /// Iterator over leaf values.
+    pub fn leaf_values(&self) -> impl Iterator<Item = f32> + '_ {
+        self.nodes.iter().filter_map(|n| match n {
+            TreeNode::Leaf { value } => Some(*value),
+            _ => None,
+        })
+    }
+
+    /// Minimum leaf value (`minLeaf_m` in paper Eq. 3). Panics on empty tree.
+    pub fn min_leaf(&self) -> f32 {
+        self.leaf_values().fold(f32::INFINITY, f32::min)
+    }
+
+    /// Maximum leaf value.
+    pub fn max_leaf(&self) -> f32 {
+        self.leaf_values().fold(f32::NEG_INFINITY, f32::max)
+    }
+
+    /// All `(feat, thresh)` pairs used by this tree's decision nodes.
+    pub fn comparisons(&self) -> Vec<(u32, u32)> {
+        self.nodes
+            .iter()
+            .filter_map(|n| match n {
+                TreeNode::Split { feat, thresh, .. } => Some((*feat, *thresh)),
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// Structural sanity check: children in range, exactly `splits + 1`
+    /// leaves reachable, no cycles (tree is an out-tree rooted at 0).
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(!self.nodes.is_empty(), "empty tree");
+        let mut seen = vec![false; self.nodes.len()];
+        let mut stack = vec![0usize];
+        let mut reachable = 0usize;
+        while let Some(i) = stack.pop() {
+            anyhow::ensure!(i < self.nodes.len(), "child index out of range");
+            anyhow::ensure!(!seen[i], "node {i} visited twice (cycle or DAG)");
+            seen[i] = true;
+            reachable += 1;
+            if let TreeNode::Split { left, right, .. } = &self.nodes[i] {
+                stack.push(*left as usize);
+                stack.push(*right as usize);
+            }
+        }
+        anyhow::ensure!(reachable == self.nodes.len(), "unreachable nodes present");
+        Ok(())
+    }
+}
+
+/// A trained GBDT ensemble.
+///
+/// Trees are stored round-major: `trees[round * n_groups + group]`. Binary
+/// tasks have `n_groups == 1`; multiclass has `n_groups == n_classes`
+/// (one-vs-all, paper §2.1.2).
+#[derive(Clone, Debug)]
+pub struct GbdtModel {
+    pub trees: Vec<Tree>,
+    /// Score groups (1 = binary, N = number of classes).
+    pub n_groups: usize,
+    /// Initial prediction score `f0` in margin space (paper Eq. 1).
+    pub base_score: f32,
+    pub n_features: usize,
+    /// Feature quantization bitwidth the model was trained on.
+    pub w_feature: u8,
+}
+
+impl GbdtModel {
+    /// Number of boosting rounds (`M` in the paper).
+    pub fn n_rounds(&self) -> usize {
+        self.trees.len() / self.n_groups
+    }
+
+    /// Trees belonging to one score group, in round order.
+    pub fn trees_of_group(&self, g: usize) -> impl Iterator<Item = &Tree> + '_ {
+        assert!(g < self.n_groups);
+        self.trees.iter().skip(g).step_by(self.n_groups)
+    }
+
+    /// Raw margin scores `F_g(X)` for one quantized row (paper Eq. 1/8).
+    pub fn predict_raw(&self, x: &[u16]) -> Vec<f32> {
+        let mut scores = vec![self.base_score; self.n_groups];
+        for (i, tree) in self.trees.iter().enumerate() {
+            scores[i % self.n_groups] += tree.predict(x);
+        }
+        scores
+    }
+
+    /// Class prediction (paper Eq. 2 binary / Eq. 8 multiclass;
+    /// ties break to the lowest class index).
+    pub fn predict_class(&self, x: &[u16]) -> u32 {
+        let scores = self.predict_raw(x);
+        if self.n_groups == 1 {
+            (scores[0] >= 0.0) as u32
+        } else {
+            argmax(&scores)
+        }
+    }
+
+    /// Batch class prediction over a quantized matrix (row-major).
+    pub fn predict_batch(&self, x: &[u16], n_features: usize) -> Vec<u32> {
+        assert_eq!(n_features, self.n_features);
+        x.chunks_exact(n_features).map(|row| self.predict_class(row)).collect()
+    }
+
+    /// All unique `(feat, thresh)` comparisons in the ensemble, sorted —
+    /// the paper's key-generator key set (§2.3.1).
+    pub fn unique_comparisons(&self) -> Vec<(u32, u32)> {
+        let mut keys: Vec<(u32, u32)> =
+            self.trees.iter().flat_map(|t| t.comparisons()).collect();
+        keys.sort_unstable();
+        keys.dedup();
+        keys
+    }
+
+    /// Validate every tree.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.n_groups >= 1, "n_groups >= 1");
+        anyhow::ensure!(
+            self.trees.len() % self.n_groups == 0,
+            "tree count not a multiple of n_groups"
+        );
+        for (i, t) in self.trees.iter().enumerate() {
+            t.validate().map_err(|e| anyhow::anyhow!("tree {i}: {e}"))?;
+        }
+        Ok(())
+    }
+}
+
+/// Index of the maximum score; ties break low (matches hardware argmax).
+pub fn argmax(scores: &[f32]) -> u32 {
+    let mut best = 0usize;
+    for (i, &s) in scores.iter().enumerate().skip(1) {
+        if s > scores[best] {
+            best = i;
+        }
+    }
+    best as u32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The left decision tree of paper Fig. 2 (thresholds made integer).
+    ///         x1 >= 8 ?
+    ///        /        \
+    ///   x0 >= 7?      x4 >= 3?
+    ///   /    \        /    \
+    /// 2.0   -0.1    0.5   -0.7
+    pub fn fig2_tree1() -> Tree {
+        Tree {
+            nodes: vec![
+                TreeNode::Split { feat: 1, thresh: 8, left: 1, right: 2 },
+                TreeNode::Split { feat: 0, thresh: 7, left: 3, right: 4 },
+                TreeNode::Split { feat: 4, thresh: 3, left: 5, right: 6 },
+                TreeNode::Leaf { value: 2.0 },
+                TreeNode::Leaf { value: -0.1 },
+                TreeNode::Leaf { value: 0.5 },
+                TreeNode::Leaf { value: -0.7 },
+            ],
+        }
+    }
+
+    #[test]
+    fn traversal_matches_paper_example() {
+        // X = [2, 15, 4, 1, 5]: x1=15 >= 8 → right; x4=5 >= 3 → right → -0.7
+        let t = fig2_tree1();
+        assert_eq!(t.predict(&[2, 15, 4, 1, 5]), -0.7);
+        // x1 < 8, x0 < 7 → 2.0
+        assert_eq!(t.predict(&[2, 3, 0, 0, 0]), 2.0);
+    }
+
+    #[test]
+    fn stats() {
+        let t = fig2_tree1();
+        assert_eq!(t.depth(), 2);
+        assert_eq!(t.n_leaves(), 4);
+        assert_eq!(t.min_leaf(), -0.7);
+        assert_eq!(t.max_leaf(), 2.0);
+        t.validate().unwrap();
+    }
+
+    #[test]
+    fn validate_rejects_cycle() {
+        let t = Tree {
+            nodes: vec![TreeNode::Split { feat: 0, thresh: 1, left: 0, right: 0 }],
+        };
+        assert!(t.validate().is_err());
+    }
+
+    #[test]
+    fn model_groups_and_keys() {
+        let m = GbdtModel {
+            trees: vec![fig2_tree1(), Tree::leaf(1.0), fig2_tree1(), Tree::leaf(-1.0)],
+            n_groups: 2,
+            base_score: 0.0,
+            n_features: 5,
+            w_feature: 4,
+        };
+        m.validate().unwrap();
+        assert_eq!(m.n_rounds(), 2);
+        let g0: Vec<_> = m.trees_of_group(0).collect();
+        assert_eq!(g0.len(), 2);
+        // Duplicate comparisons collapse to unique keys.
+        assert_eq!(m.unique_comparisons().len(), 3);
+    }
+
+    #[test]
+    fn binary_predict_sign() {
+        let m = GbdtModel {
+            trees: vec![Tree::leaf(0.4), Tree::leaf(-0.6)],
+            n_groups: 1,
+            base_score: 0.1,
+            n_features: 1,
+            w_feature: 1,
+        };
+        // 0.1 + 0.4 - 0.6 = -0.1 < 0 → class 0
+        assert_eq!(m.predict_class(&[0]), 0);
+    }
+
+    #[test]
+    fn argmax_tie_breaks_low() {
+        assert_eq!(argmax(&[1.0, 1.0, 0.5]), 0);
+        assert_eq!(argmax(&[0.0, 2.0, 2.0]), 1);
+    }
+}

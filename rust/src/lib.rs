@@ -1,0 +1,36 @@
+//! # TreeLUT
+//!
+//! A reproduction of *TreeLUT: An Efficient Alternative to Deep Neural
+//! Networks for Inference Acceleration Using Gradient Boosted Decision
+//! Trees* (Khataei & Bazargan, FPGA '25).
+//!
+//! The library is organized around the paper's tool flow (paper Fig. 7):
+//!
+//! ```text
+//! data ──► feature quantization (w_feature) ──► GBDT training (XGBoost math)
+//!      ──► leaf quantization (w_tree, Eq. 3-11) ──► RTL generation (Verilog)
+//!      ──► LUT mapping / timing / gate-level simulation   (FPGA substrate)
+//! ```
+//!
+//! plus a batched inference runtime in which the quantized-GBDT forward pass
+//! (key generator → decision trees → adder trees, paper Figs. 3-6) runs as an
+//! AOT-compiled XLA executable produced by the JAX/Pallas layers in
+//! `python/compile/` and driven by the Rust coordinator in [`coordinator`].
+//!
+//! See `DESIGN.md` for the substitution table (FPGA → netlist substrate,
+//! datasets → calibrated synthetic equivalents, XGBoost → [`gbdt`]) and the
+//! per-experiment index mapping every paper table/figure to a bench target.
+
+pub mod util;
+pub mod data;
+pub mod gbdt;
+pub mod quantize;
+pub mod rtl;
+pub mod netlist;
+pub mod baselines;
+pub mod runtime;
+pub mod coordinator;
+pub mod exp;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,184 @@
+//! `treelut` — command-line entry point for the TreeLUT reproduction.
+//!
+//! Subcommands mirror the original tool's workflow (paper §3, Fig. 7):
+//!
+//! ```text
+//! treelut flow --dataset mnist --variant I [--rows N] [--out DIR]
+//!     full tool flow: train → quantize → Verilog + hardware report
+//! treelut train --dataset jsc --out model.txt [--rows N]
+//!     train a float GBDT and save it
+//! treelut datasets
+//!     print the evaluation datasets (paper Table 4)
+//! treelut serve [--config jsc] [--requests N] [--rps R]
+//!     batched serving over the AOT PJRT artifact (needs `make artifacts`)
+//! ```
+
+use std::path::PathBuf;
+
+use treelut::coordinator::{BatchPolicy, Server, ServingReport};
+use treelut::data::synth;
+use treelut::exp::configs::{default_rows, design_point};
+use treelut::exp::{run_design_point, RunOptions};
+use treelut::gbdt::train;
+use treelut::quantize::{quantize_leaves, FeatureQuantizer};
+use treelut::rtl::{design_from_quant, verilog::emit_verilog};
+use treelut::runtime::{Engine, Manifest, ModelTensors};
+use treelut::util::{Args, Rng, Timer};
+
+const USAGE: &str = "usage: treelut <flow|train|datasets|serve> [options]
+  flow      --dataset <mnist|jsc|nid> [--variant I|II] [--rows N] [--seed S] [--out DIR] [--bypass-keygen]
+  train     --dataset <mnist|jsc|nid> [--variant I|II] [--rows N] [--seed S] --out FILE
+  datasets
+  serve     [--config jsc] [--requests N] [--rps R] [--rows N] [--max-wait-us U]";
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let cmd = args.positional().first().cloned().unwrap_or_default();
+    match cmd.as_str() {
+        "flow" => cmd_flow(args),
+        "train" => cmd_train(args),
+        "datasets" => cmd_datasets(args),
+        "serve" => cmd_serve(args),
+        _ => {
+            eprintln!("{USAGE}");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn cmd_flow(mut args: Args) -> anyhow::Result<()> {
+    let dataset = args.get("dataset", "nid");
+    let variant = args.get("variant", "I");
+    let rows = args.get_as::<usize>("rows", default_rows(&dataset));
+    let seed = args.get_as::<u64>("seed", 7);
+    let out_dir = PathBuf::from(args.get("out", "."));
+    let bypass = args.flag("bypass-keygen");
+    args.finish()?;
+
+    let dp = design_point(&dataset, &variant)
+        .ok_or_else(|| anyhow::anyhow!("no Table 2 config for {dataset} ({variant})"))?;
+    let t = Timer::start();
+    let r = run_design_point(
+        &dp,
+        &RunOptions { rows, seed, bypass_keygen: bypass, simulate: !bypass },
+    )?;
+
+    std::fs::create_dir_all(&out_dir)?;
+    let design = design_from_quant(
+        &format!("{dataset}_treelut_{}", variant.to_lowercase()),
+        &r.quant,
+        dp.pipeline,
+        !bypass,
+    );
+    let vpath = out_dir.join(format!("treelut_{dataset}_{}.v", variant.to_lowercase()));
+    std::fs::write(&vpath, emit_verilog(&design))?;
+
+    println!("dataset={dataset} variant={variant} rows={rows} seed={seed}");
+    println!("accuracy: float={:.4} quantized={:.4}", r.acc_float, r.acc_quant);
+    if let Some(a) = r.acc_netlist {
+        println!("gate-level simulation accuracy: {a:.4} (bit-exact vs predictor)");
+    }
+    println!("hardware: {}", r.cost.render());
+    println!("keys={} gates={} | flow {:.1}s -> {}", r.n_keys, r.n_gates, t.secs(), vpath.display());
+    Ok(())
+}
+
+fn cmd_train(mut args: Args) -> anyhow::Result<()> {
+    let dataset = args.get("dataset", "nid");
+    let variant = args.get("variant", "I");
+    let rows = args.get_as::<usize>("rows", default_rows(&dataset));
+    let seed = args.get_as::<u64>("seed", 7);
+    let out = PathBuf::from(args.get("out", "model.txt"));
+    args.finish()?;
+
+    let dp = design_point(&dataset, &variant)
+        .ok_or_else(|| anyhow::anyhow!("no Table 2 config for {dataset} ({variant})"))?;
+    let ds = synth::by_name(&dataset, rows, seed)
+        .ok_or_else(|| anyhow::anyhow!("unknown dataset {dataset}"))?;
+    let (train_ds, test_ds) = ds.split(0.2, seed ^ 1);
+    let fq = FeatureQuantizer::fit(&train_ds, dp.w_feature);
+    let btrain = fq.transform(&train_ds);
+    let model = train(&btrain, &train_ds.y, train_ds.n_classes, &dp.params, dp.w_feature)?;
+    let btest = fq.transform(&test_ds);
+    let acc = treelut::data::accuracy(
+        &model.predict_batch(&btest.bins, btest.n_features),
+        &test_ds.y,
+    );
+    treelut::gbdt::io::save(&model, &out)?;
+    println!("trained {} trees on {dataset} ({} rows), test acc {acc:.4} -> {}",
+        model.trees.len(), train_ds.n_rows, out.display());
+    Ok(())
+}
+
+fn cmd_datasets(args: Args) -> anyhow::Result<()> {
+    args.finish()?;
+    println!("Evaluation datasets (paper Table 4; synthetic stand-ins, DESIGN.md §1):");
+    for (name, rows) in [("mnist", 500), ("jsc", 500), ("nid", 500)] {
+        let ds = synth::by_name(name, rows, 7).unwrap();
+        println!(
+            "  {:<6} features={:<4} classes={:<2} ({})",
+            name, ds.n_features, ds.n_classes, ds.name
+        );
+    }
+    Ok(())
+}
+
+fn cmd_serve(mut args: Args) -> anyhow::Result<()> {
+    let config = args.get("config", "jsc");
+    let n_requests = args.get_as::<usize>("requests", 1_000);
+    let offered_rps = args.get_as::<f64>("rps", 4_000.0);
+    let rows = args.get_as::<usize>("rows", 8_000);
+    let max_wait_us = args.get_as::<u64>("max-wait-us", 500);
+    args.finish()?;
+
+    let artifacts = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let manifest = Manifest::load(&artifacts)?;
+    let cfg = manifest.get(&config)?.clone();
+    let variant = if config == "jsc" { "II" } else { "I" };
+    let dp = design_point(&config, variant)
+        .ok_or_else(|| anyhow::anyhow!("no Table 2 config for {config}"))?;
+
+    let ds = synth::by_name(&config, rows, 7)
+        .ok_or_else(|| anyhow::anyhow!("unknown dataset {config}"))?;
+    let (train_ds, test_ds) = ds.split(0.2, 1);
+    let fq = FeatureQuantizer::fit(&train_ds, dp.w_feature);
+    let btrain = fq.transform(&train_ds);
+    let model = train(&btrain, &train_ds.y, train_ds.n_classes, &dp.params, dp.w_feature)?;
+    let (quant, _) = quantize_leaves(&model, dp.w_tree);
+    let btest = fq.transform(&test_ds);
+
+    let q2 = quant.clone();
+    let cfg2 = cfg.clone();
+    let art2 = artifacts.clone();
+    let server = Server::start_with(
+        move || {
+            let tensors = ModelTensors::from_quant(&q2, &cfg2)?;
+            Engine::load(&art2, &cfg2, tensors)
+        },
+        BatchPolicy {
+            max_batch: cfg.batch,
+            max_wait: std::time::Duration::from_micros(max_wait_us),
+        },
+    )?;
+
+    let mut rng = Rng::new(3);
+    let t0 = Timer::start();
+    let mut pending = Vec::with_capacity(n_requests);
+    for i in 0..n_requests {
+        std::thread::sleep(std::time::Duration::from_secs_f64(rng.exp(offered_rps)));
+        pending.push(server.submit(btest.row(i % btest.n_rows).to_vec())?);
+    }
+    let mut lats = Vec::with_capacity(n_requests);
+    for rx in pending {
+        lats.push(rx.recv()??.latency.as_secs_f64());
+    }
+    let report = ServingReport::from_latencies(
+        &lats,
+        t0.secs(),
+        server.stats().mean_batch(),
+        Some(offered_rps),
+    );
+    println!("{}", report.render());
+    server.shutdown();
+    Ok(())
+}

@@ -1,0 +1,334 @@
+//! Lower the architecture IR into a gate netlist with pipeline registers.
+//!
+//! Layer structure (paper Figs. 3/4):
+//!
+//! ```text
+//! x bits ──► key generator (comparators) ──[p0]──► tree path logic ──[p1]──►
+//!        adder trees (p2 stages inside) ──► decision (compare / argmax) ──► y
+//! ```
+//!
+//! Input bit order: with the key generator, bit `f*w + j` is bit `j` of
+//! quantized feature `f`; in bypass mode (Table 6) input bit `k` is key `k`.
+
+use super::gate::{Netlist, NodeId};
+use crate::rtl::ir::{DecisionMode, Design};
+
+/// The built netlist plus bookkeeping the cost model and simulator need.
+#[derive(Clone, Debug)]
+pub struct BuiltDesign {
+    pub net: Netlist,
+    /// Pipeline cuts actually inserted (= latency in cycles; ≥ p0+p1+p2).
+    pub cuts: usize,
+    /// Output encoding: binary designs emit one decision bit; multiclass
+    /// designs emit the N group sums concatenated (the paper's TreeLUT has
+    /// **no argmax layer** — Table 6 discussion — so the class is read off
+    /// the sums downstream). `group_widths[g]` = bits of group `g`'s sum.
+    pub group_widths: Vec<usize>,
+}
+
+impl BuiltDesign {
+    /// Decode the class of `lane` from an output batch: the decision bit
+    /// for binary designs, software argmax (ties low) over sums otherwise.
+    pub fn class_of(&self, out: &super::simulate::OutputBatch, lane: usize) -> u32 {
+        if self.group_widths.len() == 1 && self.group_widths[0] == 1 {
+            return out.bit(lane, 0) as u32;
+        }
+        let mut best = 0usize;
+        let mut best_val = 0u64;
+        let mut offset = 0usize;
+        for (g, &w) in self.group_widths.iter().enumerate() {
+            let mut v = 0u64;
+            for j in 0..w {
+                v |= (out.bit(lane, offset + j) as u64) << j;
+            }
+            if g == 0 || v > best_val {
+                best = g;
+                best_val = v;
+            }
+            offset += w;
+        }
+        best as u32
+    }
+}
+
+/// Build the netlist for `design`.
+pub fn build_netlist(design: &Design) -> BuiltDesign {
+    design.validate().expect("invalid design");
+    let w = design.w_feature as usize;
+    let n_inputs = if design.keygen { design.n_features * w } else { design.n_key_inputs };
+    let mut net = Netlist::new(n_inputs);
+
+    // --- Layer 1: key generator (or direct key inputs). -------------------
+    let mut keys: Vec<NodeId> = if design.keygen {
+        design
+            .keys
+            .iter()
+            .map(|&(feat, thresh)| {
+                let bits: Vec<NodeId> =
+                    (0..w).map(|j| net.input((feat as usize * w + j) as u32)).collect();
+                net.ge_const(&bits, thresh as u64)
+            })
+            .collect()
+    } else {
+        (0..design.n_key_inputs as u32).map(|k| net.input(k)).collect()
+    };
+    if design.pipeline.p0 == 1 {
+        keys = net.reg_bits(&keys);
+    }
+
+    // --- Layer 2: decision trees as unique-leaf selectors (Fig. 6). -------
+    let mut tree_bits: Vec<Vec<NodeId>> = Vec::with_capacity(design.trees.len());
+    for tree in &design.trees {
+        let mut selectors: Vec<(u32, NodeId)> = Vec::with_capacity(tree.cases.len());
+        for (value, paths) in &tree.cases {
+            let ands: Vec<NodeId> = paths
+                .iter()
+                .map(|p| {
+                    // Left-deep fold in root→leaf order: sibling paths share
+                    // their prefix conjunctions through the strash — the
+                    // netlist analogue of BDD node sharing (and what lets
+                    // the cut mapper see the tree as a shallow shared
+                    // structure rather than #paths independent cones).
+                    let mut acc = net.constant(true);
+                    for &(k, pos) in &p.lits {
+                        let sig = keys[k as usize];
+                        let lit = if pos { sig } else { net.not(sig) };
+                        acc = net.and2(acc, lit);
+                    }
+                    acc
+                })
+                .collect();
+            selectors.push((*value, net.or_many(&ands)));
+        }
+        let bits: Vec<NodeId> = (0..tree.out_bits)
+            .map(|j| {
+                let sels: Vec<NodeId> = selectors
+                    .iter()
+                    .filter(|(v, _)| (v >> j) & 1 == 1)
+                    .map(|&(_, s)| s)
+                    .collect();
+                net.or_many(&sels)
+            })
+            .collect();
+        tree_bits.push(bits);
+    }
+    if design.pipeline.p1 == 1 {
+        for bits in tree_bits.iter_mut() {
+            *bits = net.reg_bits(bits);
+        }
+    }
+
+    // --- Layer 3: per-group adder trees with p2 internal stages. -----------
+    let mut group_sums: Vec<Vec<NodeId>> = Vec::with_capacity(design.n_groups);
+    let mut max_inserted_p2 = 0usize;
+    for g in 0..design.n_groups {
+        let mut operands: Vec<Vec<NodeId>> = design
+            .trees_of_group(g)
+            .map(|(ti, _)| tree_bits[ti].clone())
+            .filter(|b| !b.is_empty())
+            .collect();
+        if let DecisionMode::Multiclass { biases } = &design.decision {
+            let b = biases[g];
+            if b > 0 {
+                let width = (64 - b.leading_zeros()) as usize;
+                operands.push(net.const_bits(b, width));
+            }
+        }
+        if operands.is_empty() {
+            operands.push(net.const_bits(0, 1));
+        }
+
+        // Balanced reduction; register after the levels chosen by p2.
+        let n_ops = operands.len();
+        let levels = usize::BITS as usize - (n_ops - 1).leading_zeros() as usize; // ceil(log2)
+        let p2 = design.pipeline.p2;
+        let in_tree_cuts: Vec<usize> = (1..=p2.min(levels))
+            .map(|i| ((i * levels) as f64 / (p2.min(levels) + 1) as f64).round() as usize)
+            .map(|l| l.clamp(1, levels))
+            .collect();
+
+        let mut layer = operands;
+        let mut level = 0usize;
+        while layer.len() > 1 {
+            level += 1;
+            let mut next = Vec::with_capacity(layer.len().div_ceil(2));
+            let mut it = layer.chunks(2);
+            for pair in &mut it {
+                next.push(if pair.len() == 2 {
+                    net.add(&pair[0], &pair[1])
+                } else {
+                    pair[0].clone()
+                });
+            }
+            if in_tree_cuts.contains(&level) {
+                for bits in next.iter_mut() {
+                    *bits = net.reg_bits(bits);
+                }
+            }
+            layer = next;
+        }
+        let mut sum = layer.pop().unwrap();
+        // Leftover p2 stages (p2 > adder depth): register the final sum.
+        let leftover = p2.saturating_sub(levels);
+        for _ in 0..leftover {
+            sum = net.reg_bits(&sum);
+        }
+        max_inserted_p2 = max_inserted_p2.max(in_tree_cuts.len() + leftover);
+        group_sums.push(sum);
+    }
+
+    // --- Decision stage (rides in the final pipeline segment). -------------
+    // Binary: compare against the threshold (the bias moved there, §2.3.3).
+    // Multiclass: emit the N sums directly — the paper's TreeLUT has no
+    // argmax layer (Table 6 discussion); class is read off downstream.
+    let (outputs, group_widths): (Vec<NodeId>, Vec<usize>) = match &design.decision {
+        DecisionMode::Binary { threshold } => {
+            let y = if *threshold <= 0 {
+                // Paper §2.2.2: positive bias ⇒ classifier is constant 1.
+                net.constant(true)
+            } else {
+                net.ge_const(&group_sums[0], *threshold as u64)
+            };
+            (vec![y], vec![1])
+        }
+        DecisionMode::Multiclass { .. } => {
+            let widths: Vec<usize> = group_sums.iter().map(|s| s.len()).collect();
+            (group_sums.into_iter().flatten().collect(), widths)
+        }
+    };
+    net.outputs = outputs;
+
+    let cuts = design.pipeline.p0 + design.pipeline.p1 + max_inserted_p2;
+    BuiltDesign { net, cuts, group_widths }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quantize::{QuantModel, QuantNode as N, QuantTree};
+    use crate::rtl::{design_from_quant, Pipeline};
+
+    fn tree(feat: u32, thresh: u32, lo: u32, hi: u32) -> QuantTree {
+        QuantTree {
+            nodes: vec![
+                N::Split { feat, thresh, left: 1, right: 2 },
+                N::Leaf { value: lo },
+                N::Leaf { value: hi },
+            ],
+        }
+    }
+
+    fn binary_model() -> QuantModel {
+        QuantModel {
+            trees: vec![tree(0, 2, 0, 3), tree(1, 1, 0, 5)],
+            n_groups: 1,
+            biases: vec![-4],
+            n_features: 2,
+            w_feature: 2,
+            w_tree: 3,
+            scale: 1.0,
+        }
+    }
+
+    /// Scalar evaluation helper over feature values.
+    fn run_binary(design: &crate::rtl::Design, x: &[u16]) -> u32 {
+        let built = build_netlist(design);
+        let mut sim = crate::netlist::simulate::Simulator::new(&built.net);
+        let mut batch = crate::netlist::simulate::InputBatch::new(built.net.n_inputs);
+        batch.push_features(x, design.w_feature as usize);
+        let out = sim.run(&built.net, &batch);
+        built.class_of(&out, 0)
+    }
+
+    #[test]
+    fn binary_design_matches_quant_model() {
+        let m = binary_model();
+        let d = design_from_quant("t", &m, Pipeline::new(0, 0, 0), true);
+        for a in 0..4u16 {
+            for b in 0..4u16 {
+                let x = [a, b];
+                assert_eq!(run_binary(&d, &x), m.predict_class(&x), "x={x:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn pipelined_variants_are_functionally_identical() {
+        let m = binary_model();
+        for (p0, p1, p2) in [(1, 0, 0), (0, 1, 1), (1, 1, 2), (0, 0, 3)] {
+            let d = design_from_quant("t", &m, Pipeline::new(p0, p1, p2), true);
+            for a in 0..4u16 {
+                for b in 0..4u16 {
+                    let x = [a, b];
+                    assert_eq!(run_binary(&d, &x), m.predict_class(&x), "p=[{p0},{p1},{p2}]");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn cuts_counts_pipeline_registers() {
+        let m = binary_model();
+        let d = design_from_quant("t", &m, Pipeline::new(1, 1, 1), true);
+        let built = build_netlist(&d);
+        assert_eq!(built.cuts, 3);
+        assert!(built.net.n_regs() > 0);
+        // p2 beyond the adder depth still materializes as cuts.
+        let d2 = design_from_quant("t", &m, Pipeline::new(0, 0, 4), true);
+        let built2 = build_netlist(&d2);
+        assert_eq!(built2.cuts, 4);
+    }
+
+    #[test]
+    fn positive_bias_constant_one() {
+        let mut m = binary_model();
+        m.biases = vec![1]; // threshold = -1 ≤ 0 → always class 1
+        let d = design_from_quant("t", &m, Pipeline::new(0, 0, 0), true);
+        for a in 0..4u16 {
+            for b in 0..4u16 {
+                assert_eq!(run_binary(&d, &[a, b]), 1);
+            }
+        }
+    }
+
+    fn multiclass_model() -> QuantModel {
+        QuantModel {
+            trees: vec![
+                tree(0, 1, 0, 6), // class 0, round 0
+                tree(0, 2, 0, 3), // class 1, round 0
+                tree(1, 1, 0, 2), // class 2, round 0
+                tree(1, 2, 0, 1), // class 0, round 1
+                tree(0, 3, 0, 4), // class 1, round 1
+                tree(1, 3, 0, 7), // class 2, round 1
+            ],
+            n_groups: 3,
+            biases: vec![-3, 0, -5],
+            n_features: 2,
+            w_feature: 2,
+            w_tree: 3,
+            scale: 1.0,
+        }
+    }
+
+    #[test]
+    fn multiclass_design_matches_quant_model() {
+        let m = multiclass_model();
+        for p in [Pipeline::new(0, 0, 0), Pipeline::new(1, 1, 1)] {
+            let d = design_from_quant("mc", &m, p, true);
+            for a in 0..4u16 {
+                for b in 0..4u16 {
+                    let x = [a, b];
+                    assert_eq!(run_binary(&d, &x), m.predict_class(&x), "x={x:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn bypass_mode_takes_keys_directly() {
+        let m = binary_model();
+        let d = design_from_quant("dwn", &m, Pipeline::new(0, 0, 0), false);
+        let built = build_netlist(&d);
+        assert_eq!(built.net.n_inputs, d.n_keys());
+    }
+}

@@ -1,0 +1,200 @@
+//! Cycle-accurate pipelined simulation.
+//!
+//! The bit-parallel [`super::simulate::Simulator`] treats registers as
+//! wires (functional view). This module models them as clocked state,
+//! verifying the *temporal* pipeline claims of paper §2.4:
+//!
+//! * initiation interval II = 1 — a new input can be applied every cycle;
+//! * latency in cycles = number of register cuts on the input→output path;
+//! * in-flight inputs do not interfere (no structural hazards — the
+//!   pipeline is feed-forward).
+//!
+//! One u64 word per net, 64 independent streams per run.
+
+use super::gate::{Gate, Netlist};
+
+/// Clocked simulator: registers hold state across [`CycleSimulator::step`].
+pub struct CycleSimulator<'a> {
+    net: &'a Netlist,
+    /// Combinational values of the current cycle.
+    values: Vec<u64>,
+    /// Register outputs (state), indexed by gate id.
+    state: Vec<u64>,
+}
+
+impl<'a> CycleSimulator<'a> {
+    pub fn new(net: &'a Netlist) -> CycleSimulator<'a> {
+        CycleSimulator {
+            net,
+            values: vec![0; net.gates.len()],
+            state: vec![0; net.gates.len()],
+        }
+    }
+
+    /// Reset all register state to 0.
+    pub fn reset(&mut self) {
+        self.state.iter_mut().for_each(|v| *v = 0);
+    }
+
+    /// Apply one input vector (one u64 word per input bit) and advance one
+    /// clock: combinational logic settles from inputs + current register
+    /// outputs, then every register captures its D input. Returns the
+    /// primary output words *before* the clock edge (registered-output
+    /// designs therefore show a result `cuts` cycles after its input).
+    pub fn step(&mut self, input_words: &[u64]) -> Vec<u64> {
+        assert_eq!(input_words.len(), self.net.n_inputs);
+        let v = &mut self.values;
+        for (i, g) in self.net.gates.iter().enumerate() {
+            v[i] = match *g {
+                Gate::Input(k) => input_words[k as usize],
+                Gate::Const(c) => {
+                    if c {
+                        !0u64
+                    } else {
+                        0
+                    }
+                }
+                Gate::Not(a) => !v[a as usize],
+                Gate::And(a, b) => v[a as usize] & v[b as usize],
+                Gate::Or(a, b) => v[a as usize] | v[b as usize],
+                Gate::Xor(a, b) => v[a as usize] ^ v[b as usize],
+                // A register contributes its *current* state this cycle.
+                Gate::Reg(_) => self.state[i],
+            };
+        }
+        let out = self.net.outputs.iter().map(|&o| v[o as usize]).collect();
+        // Clock edge: capture D inputs.
+        for (i, g) in self.net.gates.iter().enumerate() {
+            if let Gate::Reg(a) = *g {
+                self.state[i] = v[a as usize];
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netlist::build::build_netlist;
+    use crate::netlist::simulate::{InputBatch, Simulator};
+    use crate::quantize::{QuantModel, QuantNode as N, QuantTree};
+    use crate::rtl::{design_from_quant, Pipeline};
+    use crate::util::Rng;
+
+    fn model() -> QuantModel {
+        QuantModel {
+            trees: vec![
+                QuantTree {
+                    nodes: vec![
+                        N::Split { feat: 0, thresh: 2, left: 1, right: 2 },
+                        N::Leaf { value: 0 },
+                        N::Leaf { value: 3 },
+                    ],
+                },
+                QuantTree {
+                    nodes: vec![
+                        N::Split { feat: 1, thresh: 1, left: 1, right: 2 },
+                        N::Leaf { value: 0 },
+                        N::Leaf { value: 5 },
+                    ],
+                },
+            ],
+            n_groups: 1,
+            biases: vec![-4],
+            n_features: 2,
+            w_feature: 2,
+            w_tree: 3,
+            scale: 1.0,
+        }
+    }
+
+    /// Pack one quantized row into input words (all 64 lanes identical).
+    fn words_for(x: &[u16], w: usize, n_inputs: usize) -> Vec<u64> {
+        let mut batch = InputBatch::new(n_inputs);
+        batch.push_features(x, w);
+        batch.words.iter().map(|&b| if b & 1 == 1 { !0u64 } else { 0 }).collect()
+    }
+
+    /// II = 1 + latency = cuts: feed a new random input every cycle; the
+    /// output at cycle `t` must be the decision for the input of cycle
+    /// `t - cuts`.
+    #[test]
+    fn pipeline_latency_is_cuts_and_ii_is_one() {
+        let m = model();
+        for (p0, p1, p2) in [(0, 1, 1), (1, 1, 2), (1, 0, 0)] {
+            let design = design_from_quant("cyc", &m, Pipeline::new(p0, p1, p2), true);
+            let built = build_netlist(&design);
+            let cuts = built.cuts;
+            let mut sim = CycleSimulator::new(&built.net);
+            sim.reset();
+
+            let mut rng = Rng::new(42 + p0 as u64 + p2 as u64);
+            let inputs: Vec<Vec<u16>> = (0..32)
+                .map(|_| vec![rng.below(4) as u16, rng.below(4) as u16])
+                .collect();
+            let mut outputs = Vec::new();
+            for x in &inputs {
+                let words = words_for(x, 2, built.net.n_inputs);
+                outputs.push(sim.step(&words)[0] & 1);
+            }
+            // Flush the pipeline with extra cycles.
+            let flushes: Vec<u64> = (0..cuts)
+                .map(|_| {
+                    let words = words_for(&[0, 0], 2, built.net.n_inputs);
+                    sim.step(&words)[0] & 1
+                })
+                .collect();
+            outputs.extend(flushes);
+
+            for (t, x) in inputs.iter().enumerate() {
+                let expect = m.predict_class(x) as u64;
+                let got = outputs[t + cuts];
+                assert_eq!(
+                    got, expect,
+                    "pipeline [{p0},{p1},{p2}] (cuts={cuts}): input {t} wrong at cycle {}",
+                    t + cuts
+                );
+            }
+        }
+    }
+
+    /// After `cuts` cycles of a constant input the clocked output equals
+    /// the functional (registers-transparent) simulation.
+    #[test]
+    fn steady_state_matches_functional_sim() {
+        let m = model();
+        let design = design_from_quant("cyc", &m, Pipeline::new(1, 1, 1), true);
+        let built = build_netlist(&design);
+        let mut cyc = CycleSimulator::new(&built.net);
+        let mut fun = Simulator::new(&built.net);
+        for a in 0..4u16 {
+            for b in 0..4u16 {
+                cyc.reset();
+                let words = words_for(&[a, b], 2, built.net.n_inputs);
+                let mut last = 0u64;
+                for _ in 0..=built.cuts {
+                    last = cyc.step(&words)[0];
+                }
+                let mut batch = InputBatch::new(built.net.n_inputs);
+                batch.push_features(&[a, b], 2);
+                let expect = fun.run(&built.net, &batch).words[0] & 1;
+                assert_eq!(last & 1, expect, "x=[{a},{b}]");
+            }
+        }
+    }
+
+    /// Combinational designs (cuts = 0) answer in the same cycle.
+    #[test]
+    fn combinational_zero_latency() {
+        let m = model();
+        let design = design_from_quant("cyc", &m, Pipeline::new(0, 0, 0), true);
+        let built = build_netlist(&design);
+        assert_eq!(built.cuts, 0);
+        let mut sim = CycleSimulator::new(&built.net);
+        for a in 0..4u16 {
+            let out = sim.step(&words_for(&[a, 3], 2, built.net.n_inputs))[0] & 1;
+            assert_eq!(out, m.predict_class(&[a, 3]) as u64);
+        }
+    }
+}

@@ -1,0 +1,551 @@
+//! Gate-level netlist with structural hashing, constant folding, and
+//! word-level arithmetic builders.
+//!
+//! Nodes are append-only and reference earlier ids, so node order is a
+//! topological order — simulation and mapping are single forward passes.
+
+use std::collections::HashMap;
+
+/// Index of a node in the netlist.
+pub type NodeId = u32;
+
+/// A netlist node.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Gate {
+    /// External input bit (index into the input vector).
+    Input(u32),
+    /// Constant.
+    Const(bool),
+    Not(NodeId),
+    And(NodeId, NodeId),
+    Or(NodeId, NodeId),
+    Xor(NodeId, NodeId),
+    /// Pipeline register (D flip-flop). Functionally transparent; cuts the
+    /// combinational graph for mapping/timing.
+    Reg(NodeId),
+}
+
+/// A carry-chain annotation: a group of gates that synthesis would map to
+/// the FPGA's dedicated fast-carry logic (CARRY8 on UltraScale+) instead of
+/// generic LUT levels. The gates still exist (simulation is unchanged);
+/// [`crate::netlist::lutmap`] prices the whole chain as `area_luts` LUTs
+/// and one LUT level of delay (carry propagation is ~0.05 ns/8 bits, far
+/// below a LUT+route hop, so one level is the honest approximation).
+#[derive(Clone, Copy, Debug)]
+pub struct ChainInfo {
+    /// LUT cost of the chain (≈ 1/bit for adders, 1/2 bits for compares).
+    pub area_luts: u32,
+}
+
+/// A gate netlist under construction / analysis.
+#[derive(Clone, Debug, Default)]
+pub struct Netlist {
+    pub gates: Vec<Gate>,
+    /// Primary outputs.
+    pub outputs: Vec<NodeId>,
+    /// Number of external input bits.
+    pub n_inputs: usize,
+    /// Carry-chain annotations (see [`ChainInfo`]).
+    pub chains: Vec<ChainInfo>,
+    /// Chain id per gate (`u32::MAX` = not in a chain), aligned to `gates`.
+    pub chain_of: Vec<u32>,
+    strash: HashMap<Gate, NodeId>,
+    /// While true (inside chain builders), gates are neither looked up nor
+    /// recorded in the strash: sharing logic *across* carry chains would
+    /// make one chain's output an input of another, charging spurious
+    /// chain-hop levels — each chain must own its gates (its LUT cost is
+    /// the chain's `area_luts`, so duplication costs nothing).
+    strash_off: bool,
+}
+
+/// Sentinel for "not in a carry chain".
+pub const NO_CHAIN: u32 = u32::MAX;
+
+impl Netlist {
+    pub fn new(n_inputs: usize) -> Netlist {
+        Netlist { n_inputs, ..Default::default() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.gates.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.gates.is_empty()
+    }
+
+    fn push(&mut self, g: Gate) -> NodeId {
+        if !self.strash_off {
+            if let Some(&id) = self.strash.get(&g) {
+                return id;
+            }
+        }
+        let id = self.gates.len() as NodeId;
+        self.gates.push(g);
+        self.chain_of.push(NO_CHAIN);
+        if !self.strash_off {
+            self.strash.insert(g, id);
+        }
+        id
+    }
+
+    /// Annotate all gates created after `mark` (see [`Self::mark`]) as one
+    /// carry chain with the given LUT cost. Gates that pre-existed (strash
+    /// hits) keep their original classification.
+    fn seal_chain(&mut self, mark: usize, area_luts: u32) {
+        if mark == self.gates.len() {
+            return; // fully constant-folded: no chain materialized
+        }
+        let chain_id = self.chains.len() as u32;
+        self.chains.push(ChainInfo { area_luts });
+        for id in mark..self.gates.len() {
+            self.chain_of[id] = chain_id;
+        }
+    }
+
+    /// Current gate count, used as the start marker for [`Self::seal_chain`].
+    fn mark(&self) -> usize {
+        self.gates.len()
+    }
+
+    /// External input bit `i`.
+    pub fn input(&mut self, i: u32) -> NodeId {
+        debug_assert!((i as usize) < self.n_inputs);
+        self.push(Gate::Input(i))
+    }
+
+    pub fn constant(&mut self, v: bool) -> NodeId {
+        self.push(Gate::Const(v))
+    }
+
+    fn const_of(&self, id: NodeId) -> Option<bool> {
+        match self.gates[id as usize] {
+            Gate::Const(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    pub fn not(&mut self, a: NodeId) -> NodeId {
+        if let Some(v) = self.const_of(a) {
+            return self.constant(!v);
+        }
+        if let Gate::Not(inner) = self.gates[a as usize] {
+            return inner; // ¬¬x = x
+        }
+        self.push(Gate::Not(a))
+    }
+
+    pub fn and2(&mut self, a: NodeId, b: NodeId) -> NodeId {
+        match (self.const_of(a), self.const_of(b)) {
+            (Some(false), _) | (_, Some(false)) => return self.constant(false),
+            (Some(true), _) => return b,
+            (_, Some(true)) => return a,
+            _ => {}
+        }
+        if a == b {
+            return a;
+        }
+        let (a, b) = if a <= b { (a, b) } else { (b, a) };
+        self.push(Gate::And(a, b))
+    }
+
+    pub fn or2(&mut self, a: NodeId, b: NodeId) -> NodeId {
+        match (self.const_of(a), self.const_of(b)) {
+            (Some(true), _) | (_, Some(true)) => return self.constant(true),
+            (Some(false), _) => return b,
+            (_, Some(false)) => return a,
+            _ => {}
+        }
+        if a == b {
+            return a;
+        }
+        let (a, b) = if a <= b { (a, b) } else { (b, a) };
+        self.push(Gate::Or(a, b))
+    }
+
+    pub fn xor2(&mut self, a: NodeId, b: NodeId) -> NodeId {
+        match (self.const_of(a), self.const_of(b)) {
+            (Some(false), _) => return b,
+            (_, Some(false)) => return a,
+            (Some(true), _) => return self.not(b),
+            (_, Some(true)) => return self.not(a),
+            _ => {}
+        }
+        if a == b {
+            return self.constant(false);
+        }
+        let (a, b) = if a <= b { (a, b) } else { (b, a) };
+        self.push(Gate::Xor(a, b))
+    }
+
+    /// Pipeline register. Constants pass through (a registered constant is
+    /// still constant; keeps padding-free designs clean).
+    pub fn reg(&mut self, a: NodeId) -> NodeId {
+        if self.const_of(a).is_some() {
+            return a;
+        }
+        // Registers are NOT structurally hashed away across call sites with
+        // the same driver — sharing one FF for identical fanins is exactly
+        // what a synthesis tool does, so dedup is correct and is what the
+        // strash gives us.
+        self.push(Gate::Reg(a))
+    }
+
+    /// Balanced AND over a slice (empty → const 1).
+    pub fn and_many(&mut self, xs: &[NodeId]) -> NodeId {
+        self.reduce(xs, true)
+    }
+
+    /// Balanced OR over a slice (empty → const 0).
+    pub fn or_many(&mut self, xs: &[NodeId]) -> NodeId {
+        self.reduce(xs, false)
+    }
+
+    /// K-aligned reduction (the netlist analogue of LUT balancing): reduce
+    /// in chunks of 6 so every chunk's cone has ≤ 6 inputs and maps into a
+    /// single 6-LUT, then recurse on the chunk roots.
+    fn reduce(&mut self, xs: &[NodeId], is_and: bool) -> NodeId {
+        match xs.len() {
+            0 => self.constant(is_and),
+            1 => xs[0],
+            _ => {
+                let mut layer = xs.to_vec();
+                while layer.len() > 1 {
+                    let mut next = Vec::with_capacity(layer.len().div_ceil(6));
+                    for chunk in layer.chunks(6) {
+                        // Balanced 2-input tree within the ≤6-wide chunk.
+                        let mut sub = chunk.to_vec();
+                        while sub.len() > 1 {
+                            let mut nxt = Vec::with_capacity(sub.len().div_ceil(2));
+                            for pair in sub.chunks(2) {
+                                nxt.push(if pair.len() == 2 {
+                                    if is_and {
+                                        self.and2(pair[0], pair[1])
+                                    } else {
+                                        self.or2(pair[0], pair[1])
+                                    }
+                                } else {
+                                    pair[0]
+                                });
+                            }
+                            sub = nxt;
+                        }
+                        next.push(sub[0]);
+                    }
+                    layer = next;
+                }
+                layer[0]
+            }
+        }
+    }
+
+    /// Constant as an LSB-first bit vector of exactly `width` bits.
+    pub fn const_bits(&mut self, value: u64, width: usize) -> Vec<NodeId> {
+        (0..width).map(|i| self.constant((value >> i) & 1 == 1)).collect()
+    }
+
+    /// Unsigned addition; result has `max(w_a, w_b) + 1` bits. Built as a
+    /// ripple-carry gate structure, annotated as a carry chain: the FPGA
+    /// maps it onto CARRY8 at ~1 LUT/bit and one LUT level of delay.
+    pub fn add(&mut self, a: &[NodeId], b: &[NodeId]) -> Vec<NodeId> {
+        let mark = self.mark();
+        self.strash_off = true;
+        let w = a.len().max(b.len());
+        let f = self.constant(false);
+        let mut out = Vec::with_capacity(w + 1);
+        let mut carry = f;
+        for i in 0..w {
+            let ai = *a.get(i).unwrap_or(&f);
+            let bi = *b.get(i).unwrap_or(&f);
+            let axb = self.xor2(ai, bi);
+            let sum = self.xor2(axb, carry);
+            // carry_out = (a & b) | (carry & (a ^ b))
+            let ab = self.and2(ai, bi);
+            let ca = self.and2(carry, axb);
+            carry = self.or2(ab, ca);
+            out.push(sum);
+        }
+        out.push(carry);
+        self.strash_off = false;
+        self.seal_chain(mark, (w + 1) as u32);
+        out
+    }
+
+    /// `x >= c` for an unsigned LSB-first `x` and constant `c`.
+    ///
+    /// Narrow compares (≤ 6 input bits) stay generic logic — they fit one
+    /// LUT. Wider ones are annotated as carry chains (~1 LUT / 2 bits).
+    pub fn ge_const(&mut self, x: &[NodeId], c: u64) -> NodeId {
+        if c == 0 {
+            return self.constant(true);
+        }
+        if x.len() < 64 && c >= (1u64 << x.len()) {
+            return self.constant(false);
+        }
+        let mark = self.mark();
+        let as_chain = x.len() > 6;
+        self.strash_off = as_chain;
+        // MSB-first scan: ge = Σ_i (x_i=1, c_i=0, all higher equal) + all-equal.
+        let mut terms = Vec::new();
+        let mut eq_prefix = self.constant(true);
+        for i in (0..x.len()).rev() {
+            let ci = (c >> i) & 1 == 1;
+            if !ci {
+                let t = self.and2(eq_prefix, x[i]);
+                terms.push(t);
+                let nx = self.not(x[i]);
+                eq_prefix = self.and2(eq_prefix, nx);
+            } else {
+                eq_prefix = self.and2(eq_prefix, x[i]);
+            }
+        }
+        terms.push(eq_prefix); // x == c
+        let out = self.or_many(&terms);
+        self.strash_off = false;
+        if as_chain {
+            self.seal_chain(mark, x.len().div_ceil(2) as u32);
+        }
+        out
+    }
+
+    /// `a > b` for unsigned LSB-first vectors (widths may differ).
+    /// Chain-annotated when more than 6 input bits are involved.
+    pub fn gt(&mut self, a: &[NodeId], b: &[NodeId]) -> NodeId {
+        let mark = self.mark();
+        let as_chain = a.len() + b.len() > 6;
+        self.strash_off = as_chain;
+        let w = a.len().max(b.len());
+        let f = self.constant(false);
+        let mut gt = f;
+        let mut eq = self.constant(true);
+        for i in (0..w).rev() {
+            let ai = *a.get(i).unwrap_or(&f);
+            let bi = *b.get(i).unwrap_or(&f);
+            let nbi = self.not(bi);
+            let a_gt_b = self.and2(ai, nbi);
+            let t = self.and2(eq, a_gt_b);
+            gt = self.or2(gt, t);
+            let x = self.xor2(ai, bi);
+            let nx = self.not(x);
+            eq = self.and2(eq, nx);
+        }
+        self.strash_off = false;
+        if as_chain {
+            self.seal_chain(mark, w.div_ceil(2).max(1) as u32);
+        }
+        gt
+    }
+
+    /// Per-bit 2:1 mux: `sel ? a : b` (widths may differ; zero-extended).
+    pub fn mux_bits(&mut self, sel: NodeId, a: &[NodeId], b: &[NodeId]) -> Vec<NodeId> {
+        let w = a.len().max(b.len());
+        let f = self.constant(false);
+        (0..w)
+            .map(|i| {
+                let ai = *a.get(i).unwrap_or(&f);
+                let bi = *b.get(i).unwrap_or(&f);
+                let ns = self.not(sel);
+                let ta = self.and2(sel, ai);
+                let tb = self.and2(ns, bi);
+                self.or2(ta, tb)
+            })
+            .collect()
+    }
+
+    /// Register every bit of a word.
+    pub fn reg_bits(&mut self, xs: &[NodeId]) -> Vec<NodeId> {
+        xs.iter().map(|&x| self.reg(x)).collect()
+    }
+
+    /// Count of register (FF) nodes.
+    pub fn n_regs(&self) -> usize {
+        self.gates.iter().filter(|g| matches!(g, Gate::Reg(_))).count()
+    }
+
+    /// Pipeline stage of every node (Input/Const = 0; Reg increments).
+    pub fn stages(&self) -> Vec<u32> {
+        let mut s = vec![0u32; self.gates.len()];
+        for (i, g) in self.gates.iter().enumerate() {
+            s[i] = match *g {
+                Gate::Input(_) | Gate::Const(_) => 0,
+                Gate::Not(a) => s[a as usize],
+                Gate::And(a, b) | Gate::Or(a, b) | Gate::Xor(a, b) => {
+                    s[a as usize].max(s[b as usize])
+                }
+                Gate::Reg(a) => s[a as usize] + 1,
+            };
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Evaluate scalar inputs (test helper; the real simulator is
+    /// bit-parallel in `simulate.rs`).
+    fn eval(net: &Netlist, inputs: &[bool]) -> Vec<bool> {
+        let mut v = vec![false; net.gates.len()];
+        for (i, g) in net.gates.iter().enumerate() {
+            v[i] = match *g {
+                Gate::Input(k) => inputs[k as usize],
+                Gate::Const(c) => c,
+                Gate::Not(a) => !v[a as usize],
+                Gate::And(a, b) => v[a as usize] & v[b as usize],
+                Gate::Or(a, b) => v[a as usize] | v[b as usize],
+                Gate::Xor(a, b) => v[a as usize] ^ v[b as usize],
+                Gate::Reg(a) => v[a as usize],
+            };
+        }
+        net.outputs.iter().map(|&o| v[o as usize]).collect()
+    }
+
+    fn bits_val(bits: &[bool]) -> u64 {
+        bits.iter().enumerate().map(|(i, &b)| (b as u64) << i).sum()
+    }
+
+    #[test]
+    fn strash_dedups() {
+        let mut n = Netlist::new(2);
+        let a = n.input(0);
+        let b = n.input(1);
+        let x = n.and2(a, b);
+        let y = n.and2(b, a); // commuted
+        assert_eq!(x, y);
+    }
+
+    #[test]
+    fn const_folding() {
+        let mut n = Netlist::new(1);
+        let a = n.input(0);
+        let t = n.constant(true);
+        let f = n.constant(false);
+        assert_eq!(n.and2(a, t), a);
+        assert_eq!(n.and2(a, f), f);
+        assert_eq!(n.or2(a, f), a);
+        let na = n.not(a);
+        assert_eq!(n.not(na), a);
+        let x = n.xor2(a, a);
+        assert_eq!(n.const_of(x), Some(false));
+    }
+
+    #[test]
+    fn adder_exhaustive_4bit() {
+        let mut n = Netlist::new(8);
+        let a: Vec<_> = (0..4).map(|i| n.input(i)).collect();
+        let b: Vec<_> = (4..8).map(|i| n.input(i)).collect();
+        let sum = n.add(&a, &b);
+        n.outputs = sum;
+        for x in 0..16u64 {
+            for y in 0..16u64 {
+                let mut inp = vec![false; 8];
+                for i in 0..4 {
+                    inp[i] = (x >> i) & 1 == 1;
+                    inp[4 + i] = (y >> i) & 1 == 1;
+                }
+                assert_eq!(bits_val(&eval(&n, &inp)), x + y, "{x}+{y}");
+            }
+        }
+    }
+
+    #[test]
+    fn ge_const_exhaustive() {
+        for c in 0..=16u64 {
+            let mut n = Netlist::new(4);
+            let x: Vec<_> = (0..4).map(|i| n.input(i)).collect();
+            let ge = n.ge_const(&x, c);
+            n.outputs = vec![ge];
+            for v in 0..16u64 {
+                let inp: Vec<bool> = (0..4).map(|i| (v >> i) & 1 == 1).collect();
+                assert_eq!(eval(&n, &inp)[0], v >= c, "v={v} c={c}");
+            }
+        }
+    }
+
+    #[test]
+    fn gt_exhaustive_mixed_width() {
+        let mut n = Netlist::new(7);
+        let a: Vec<_> = (0..4).map(|i| n.input(i)).collect();
+        let b: Vec<_> = (4..7).map(|i| n.input(i)).collect();
+        let gt = n.gt(&a, &b);
+        n.outputs = vec![gt];
+        for x in 0..16u64 {
+            for y in 0..8u64 {
+                let mut inp = vec![false; 7];
+                for i in 0..4 {
+                    inp[i] = (x >> i) & 1 == 1;
+                }
+                for i in 0..3 {
+                    inp[4 + i] = (y >> i) & 1 == 1;
+                }
+                assert_eq!(eval(&n, &inp)[0], x > y, "{x}>{y}");
+            }
+        }
+    }
+
+    #[test]
+    fn mux_selects() {
+        let mut n = Netlist::new(3);
+        let s = n.input(0);
+        let a = n.input(1);
+        let b = n.input(2);
+        let m = n.mux_bits(s, &[a], &[b]);
+        n.outputs = m;
+        assert!(eval(&n, &[true, true, false])[0]);
+        assert!(!eval(&n, &[true, false, true])[0]);
+        assert!(eval(&n, &[false, false, true])[0]);
+    }
+
+    #[test]
+    fn and_or_many_balanced() {
+        let mut n = Netlist::new(5);
+        let xs: Vec<_> = (0..5).map(|i| n.input(i)).collect();
+        let a = n.and_many(&xs);
+        let o = n.or_many(&xs);
+        n.outputs = vec![a, o];
+        assert_eq!(eval(&n, &[true; 5]), vec![true, true]);
+        assert_eq!(eval(&n, &[false; 5]), vec![false, false]);
+        let mut one = vec![false; 5];
+        one[3] = true;
+        assert_eq!(eval(&n, &one), vec![false, true]);
+    }
+
+    #[test]
+    fn empty_reductions() {
+        let mut n = Netlist::new(0);
+        let a = n.and_many(&[]);
+        let o = n.or_many(&[]);
+        assert_eq!(n.const_of(a), Some(true));
+        assert_eq!(n.const_of(o), Some(false));
+    }
+
+    #[test]
+    fn stages_follow_regs() {
+        let mut n = Netlist::new(2);
+        let a = n.input(0);
+        let b = n.input(1);
+        let x = n.and2(a, b);
+        let r = n.reg(x);
+        let nb = n.not(b);
+        let rb = n.reg(nb);
+        let y = n.or2(r, rb);
+        let r2 = n.reg(y);
+        let stages = n.stages();
+        assert_eq!(stages[x as usize], 0);
+        assert_eq!(stages[r as usize], 1);
+        assert_eq!(stages[y as usize], 1);
+        assert_eq!(stages[r2 as usize], 2);
+        assert_eq!(n.n_regs(), 3);
+    }
+
+    #[test]
+    fn ge_const_zero_and_overflow() {
+        let mut n = Netlist::new(2);
+        let x: Vec<_> = (0..2).map(|i| n.input(i)).collect();
+        let t = n.ge_const(&x, 0);
+        let f = n.ge_const(&x, 4);
+        assert_eq!(n.const_of(t), Some(true));
+        assert_eq!(n.const_of(f), Some(false));
+    }
+}

@@ -1,0 +1,344 @@
+//! Technology mapping onto K-input LUTs via priority cuts.
+//!
+//! Depth-oriented priority-cuts mapping (Mishchenko et al., "Combinational
+//! and sequential mapping with priority cuts", ICCAD'07, simplified):
+//!
+//! * every gate keeps up to `C` cuts (leaf sets of ≤ `K` nodes), merged
+//!   pairwise from its fanins' cuts (+ the fanins' trivial cuts), ranked by
+//!   (arrival, size);
+//! * `label(v)` = best arrival = LUT depth of `v` in the mapped network;
+//! * covering walks from the outputs/register fanins choosing each node's
+//!   best cut, counting one LUT per chosen root.
+//!
+//! Inputs, constants and registers are cut leaves (label 0) — cuts never
+//! cross pipeline registers, so per-stage depths fall out of the labels.
+//!
+//! This is a real structural mapper over the real netlist; it is the
+//! substrate's replacement for Vivado synthesis (DESIGN.md §1/§7). K = 6
+//! matches the xcvu9p CLB LUT.
+
+use super::gate::{Gate, Netlist};
+use std::collections::VecDeque;
+
+/// LUT input capacity (xcvu9p: 6).
+pub const K: usize = 6;
+/// Priority cuts kept per node.
+const C: usize = 6;
+
+/// A cut: up to K leaf node-ids, sorted.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+struct Cut {
+    leaves: [u32; K],
+    len: u8,
+    arrival: u32,
+}
+
+impl Cut {
+    fn singleton(leaf: u32, leaf_label: u32) -> Cut {
+        let mut leaves = [0u32; K];
+        leaves[0] = leaf;
+        Cut { leaves, len: 1, arrival: leaf_label + 1 }
+    }
+
+    fn leaves(&self) -> &[u32] {
+        &self.leaves[..self.len as usize]
+    }
+
+    /// Merge two sorted leaf sets; None if > K leaves.
+    fn merge(a: &Cut, b: &Cut, labels: &[u32]) -> Option<Cut> {
+        let (la, lb) = (a.leaves(), b.leaves());
+        let mut leaves = [0u32; K];
+        let mut n = 0usize;
+        let (mut i, mut j) = (0usize, 0usize);
+        while i < la.len() || j < lb.len() {
+            let v = if i < la.len() && (j >= lb.len() || la[i] <= lb[j]) {
+                let v = la[i];
+                if j < lb.len() && lb[j] == v {
+                    j += 1;
+                }
+                i += 1;
+                v
+            } else {
+                let v = lb[j];
+                j += 1;
+                v
+            };
+            if n == K {
+                return None;
+            }
+            leaves[n] = v;
+            n += 1;
+        }
+        let arrival = 1 + leaves[..n].iter().map(|&l| labels[l as usize]).max().unwrap_or(0);
+        Some(Cut { leaves, len: n as u8, arrival })
+    }
+}
+
+/// Result of mapping.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct MapResult {
+    /// Number of LUTs in the cover.
+    pub luts: usize,
+    /// Number of flip-flops (register nodes).
+    pub ffs: usize,
+    /// LUT depth of the deepest combinational segment, per pipeline stage
+    /// (index = stage id; length = cuts + 1).
+    pub stage_depths: Vec<u32>,
+}
+
+impl MapResult {
+    /// Depth of the critical stage.
+    pub fn max_stage_depth(&self) -> u32 {
+        self.stage_depths.iter().copied().max().unwrap_or(0)
+    }
+}
+
+/// Map `net` onto K-input LUTs.
+///
+/// Carry-chain gates (see [`crate::netlist::gate::ChainInfo`]) are priced
+/// separately: one LUT level of delay per chain traversal and the chain's
+/// `area_luts`, mirroring CARRY8 mapping; generic logic goes through
+/// priority cuts.
+pub fn map_luts(net: &Netlist) -> MapResult {
+    use crate::netlist::gate::NO_CHAIN;
+    let n = net.gates.len();
+    let mut labels = vec![0u32; n];
+    let mut best_cut: Vec<Option<Cut>> = vec![None; n];
+    let mut cuts: Vec<Vec<Cut>> = vec![Vec::new(); n];
+
+    let is_leaf = |g: &Gate| matches!(g, Gate::Input(_) | Gate::Const(_) | Gate::Reg(_));
+    let chain = |i: u32| net.chain_of[i as usize];
+
+    // Forward pass: compute priority cuts and labels.
+    for (i, g) in net.gates.iter().enumerate() {
+        if is_leaf(g) {
+            continue; // label 0, no cuts needed (consumers use singletons)
+        }
+        if chain(i as u32) != NO_CHAIN {
+            // Carry-chain gate: entering the chain from outside costs one
+            // LUT level (the LUT feeding/computing with the carry element);
+            // rippling within the chain is free.
+            let fanins: Vec<u32> = match *g {
+                Gate::Not(a) => vec![a],
+                Gate::And(a, b) | Gate::Or(a, b) | Gate::Xor(a, b) => vec![a, b],
+                _ => unreachable!(),
+            };
+            labels[i] = fanins
+                .iter()
+                .map(|&f| {
+                    if chain(f) == chain(i as u32) {
+                        labels[f as usize]
+                    } else {
+                        labels[f as usize] + 1
+                    }
+                })
+                .max()
+                .unwrap_or(1);
+            continue; // no cuts: consumers use the singleton leaf
+        }
+        let fanins: [Option<u32>; 2] = match *g {
+            Gate::Not(a) => [Some(a), None],
+            Gate::And(a, b) | Gate::Or(a, b) | Gate::Xor(a, b) => [Some(a), Some(b)],
+            _ => unreachable!(),
+        };
+        let mut cand: Vec<Cut> = Vec::with_capacity(C * C + 1);
+        let fanin_cuts = |f: u32, cuts: &Vec<Vec<Cut>>, labels: &Vec<u32>| -> Vec<Cut> {
+            let mut v = Vec::with_capacity(C + 1);
+            v.push(Cut::singleton(f, labels[f as usize]));
+            v.extend(cuts[f as usize].iter().copied());
+            v
+        };
+        match fanins {
+            [Some(a), None] => {
+                // 1-input gate: a LUT absorbing the NOT has the same cuts.
+                for ca in fanin_cuts(a, &cuts, &labels) {
+                    cand.push(ca);
+                }
+            }
+            [Some(a), Some(b)] => {
+                let ca = fanin_cuts(a, &cuts, &labels);
+                let cb = fanin_cuts(b, &cuts, &labels);
+                for x in &ca {
+                    for y in &cb {
+                        if let Some(m) = Cut::merge(x, y, &labels) {
+                            cand.push(m);
+                        }
+                    }
+                }
+            }
+            _ => unreachable!(),
+        }
+        cand.sort_by_key(|c| (c.arrival, c.len));
+        cand.dedup_by(|a, b| a.leaves() == b.leaves());
+        cand.truncate(C);
+        debug_assert!(!cand.is_empty(), "2-fanin merge always fits K>=2");
+        labels[i] = cand[0].arrival;
+        best_cut[i] = Some(cand[0]);
+        cuts[i] = cand;
+    }
+
+    // Covering pass: choose LUT roots from outputs and register fanins.
+    // Chain gates are not LUT roots (their area is the chain's); reaching
+    // one requires covering the chain's external fanins instead.
+    let mut required: VecDeque<u32> = VecDeque::new();
+    let mut seen = vec![false; n];
+    let push = |id: u32, seen: &mut Vec<bool>, q: &mut VecDeque<u32>| {
+        if !seen[id as usize] && !is_leaf(&net.gates[id as usize]) {
+            seen[id as usize] = true;
+            q.push_back(id);
+        }
+    };
+    for &o in &net.outputs {
+        push(o, &mut seen, &mut required);
+    }
+    for g in &net.gates {
+        if let Gate::Reg(a) = g {
+            push(*a, &mut seen, &mut required);
+        }
+    }
+    let mut luts = 0usize;
+    let mut chain_needed = vec![false; net.chains.len()];
+    while let Some(v) = required.pop_front() {
+        if chain(v) != NO_CHAIN {
+            chain_needed[chain(v) as usize] = true;
+            // Walk to the chain's external fanins.
+            let fanins: Vec<u32> = match net.gates[v as usize] {
+                Gate::Not(a) => vec![a],
+                Gate::And(a, b) | Gate::Or(a, b) | Gate::Xor(a, b) => vec![a, b],
+                _ => vec![],
+            };
+            for f in fanins {
+                push(f, &mut seen, &mut required);
+            }
+            continue;
+        }
+        luts += 1;
+        let cut = best_cut[v as usize].expect("gate node has a cut");
+        for &leaf in cut.leaves() {
+            push(leaf, &mut seen, &mut required);
+        }
+    }
+    luts += net
+        .chains
+        .iter()
+        .zip(&chain_needed)
+        .filter(|(_, &needed)| needed)
+        .map(|(c, _)| c.area_luts as usize)
+        .sum::<usize>();
+
+    // Per-stage depths.
+    let stages = net.stages();
+    let n_stages = stages.iter().copied().max().unwrap_or(0) as usize + 1;
+    let mut stage_depths = vec![0u32; n_stages];
+    for i in 0..n {
+        let s = stages[i] as usize;
+        stage_depths[s] = stage_depths[s].max(labels[i]);
+    }
+
+    MapResult { luts, ffs: net.n_regs(), stage_depths }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netlist::gate::Netlist;
+
+    #[test]
+    fn single_gate_is_one_lut() {
+        let mut n = Netlist::new(2);
+        let a = n.input(0);
+        let b = n.input(1);
+        let y = n.and2(a, b);
+        n.outputs = vec![y];
+        let m = map_luts(&n);
+        assert_eq!(m.luts, 1);
+        assert_eq!(m.max_stage_depth(), 1);
+        assert_eq!(m.ffs, 0);
+    }
+
+    #[test]
+    fn six_input_cone_fits_one_lut() {
+        // AND of 6 inputs = balanced tree of 5 and2 gates → 1 LUT.
+        let mut n = Netlist::new(6);
+        let xs: Vec<_> = (0..6).map(|i| n.input(i)).collect();
+        let y = n.and_many(&xs);
+        n.outputs = vec![y];
+        let m = map_luts(&n);
+        assert_eq!(m.luts, 1, "6-input cone must collapse into one 6-LUT");
+        assert_eq!(m.max_stage_depth(), 1);
+    }
+
+    #[test]
+    fn seven_inputs_need_two_levels() {
+        let mut n = Netlist::new(7);
+        let xs: Vec<_> = (0..7).map(|i| n.input(i)).collect();
+        let y = n.and_many(&xs);
+        n.outputs = vec![y];
+        let m = map_luts(&n);
+        assert!(m.luts >= 2);
+        assert_eq!(m.max_stage_depth(), 2);
+    }
+
+    #[test]
+    fn thirtysix_inputs_two_levels() {
+        // 36 inputs: 6 LUTs of 6 + 1 root = depth 2, 7 LUTs.
+        let mut n = Netlist::new(36);
+        let xs: Vec<_> = (0..36).map(|i| n.input(i)).collect();
+        let y = n.and_many(&xs);
+        n.outputs = vec![y];
+        let m = map_luts(&n);
+        assert_eq!(m.max_stage_depth(), 2);
+        assert!(m.luts <= 9, "luts={}", m.luts); // ideal 7; allow slight slack
+    }
+
+    #[test]
+    fn not_gates_are_free() {
+        let mut n = Netlist::new(2);
+        let a = n.input(0);
+        let b = n.input(1);
+        let na = n.not(a);
+        let nb = n.not(b);
+        let y = n.and2(na, nb);
+        n.outputs = vec![y];
+        let m = map_luts(&n);
+        assert_eq!(m.luts, 1);
+        assert_eq!(m.max_stage_depth(), 1);
+    }
+
+    #[test]
+    fn registers_cut_stages() {
+        // in → and → REG → or → out: two stages of depth 1 each.
+        let mut n = Netlist::new(3);
+        let a = n.input(0);
+        let b = n.input(1);
+        let c = n.input(2);
+        let x = n.and2(a, b);
+        let r = n.reg(x);
+        let y = n.or2(r, c);
+        n.outputs = vec![y];
+        let m = map_luts(&n);
+        assert_eq!(m.ffs, 1);
+        assert_eq!(m.stage_depths, vec![1, 1]);
+        assert_eq!(m.luts, 2); // one per stage
+    }
+
+    #[test]
+    fn shared_logic_counted_once() {
+        // Two outputs reusing one deep cone: cover counts shared LUTs once.
+        let mut n = Netlist::new(8);
+        let xs: Vec<_> = (0..8).map(|i| n.input(i)).collect();
+        let shared = n.and_many(&xs);
+        let o1 = n.or2(shared, xs[0]);
+        let o2 = n.or2(shared, xs[1]);
+        n.outputs = vec![o1, o2];
+        let m1 = map_luts(&n);
+        let mut n2 = Netlist::new(8);
+        let xs2: Vec<_> = (0..8).map(|i| n2.input(i)).collect();
+        let shared2 = n2.and_many(&xs2);
+        let o = n2.or2(shared2, xs2[0]);
+        n2.outputs = vec![o];
+        let m2 = map_luts(&n2);
+        // Adding the second output costs at most ~2 extra LUTs.
+        assert!(m1.luts <= m2.luts + 2, "m1={} m2={}", m1.luts, m2.luts);
+    }
+}

@@ -1,0 +1,29 @@
+//! FPGA substrate: the stand-in for Vivado synthesis / place & route
+//! (DESIGN.md §1 substitution table).
+//!
+//! * [`gate`] — gate-level netlist (AND/OR/XOR/NOT/REG) with structural
+//!   hashing and constant folding, plus word-level builders (comparators,
+//!   ripple-carry adders, argmax tournaments).
+//! * [`build`] — lowering the architecture IR ([`crate::rtl::ir::Design`])
+//!   into a netlist, inserting the `[p0, p1, p2]` pipeline registers.
+//! * [`lutmap`] — depth-oriented priority-cuts technology mapping onto
+//!   `K = 6`-input LUTs (the xcvu9p's CLB LUT size).
+//! * [`timing`] — the calibrated delay/area model: per-stage LUT depth →
+//!   Fmax, latency, and the paper's Area × Delay metric.
+//! * [`simulate`] — 64-way bit-parallel functional simulation; the
+//!   substrate's analogue of Vivado's post-implementation functional
+//!   simulation, used to verify the circuit bit-exact against
+//!   [`crate::quantize::QuantModel`].
+
+pub mod gate;
+pub mod build;
+pub mod lutmap;
+pub mod timing;
+pub mod simulate;
+pub mod cyclesim;
+
+pub use build::{build_netlist, BuiltDesign};
+pub use gate::{Gate, Netlist, NodeId};
+pub use lutmap::{map_luts, MapResult};
+pub use timing::{CostReport, TimingModel};
+pub use simulate::Simulator;

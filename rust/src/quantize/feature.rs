@@ -1,0 +1,140 @@
+//! Pre-training feature quantization (paper §2.2.1).
+//!
+//! `X_norm = (X − min) / (max − min)`, then
+//! `X_q = round(X_norm · (2^w − 1))`, per feature, with min/max estimated on
+//! the training set. Unseen values are clamped into `[min, max]` at
+//! transform time (the hardware sees only `w`-bit inputs).
+
+use crate::data::Dataset;
+use crate::gbdt::histogram::BinnedMatrix;
+
+/// Per-feature min-max quantizer to `w` bits.
+#[derive(Clone, Debug)]
+pub struct FeatureQuantizer {
+    pub mins: Vec<f32>,
+    pub maxs: Vec<f32>,
+    pub w: u8,
+}
+
+impl FeatureQuantizer {
+    /// Estimate per-feature ranges on `ds`.
+    pub fn fit(ds: &Dataset, w: u8) -> FeatureQuantizer {
+        assert!((1..=16).contains(&w), "w_feature in 1..=16");
+        let mut mins = vec![f32::INFINITY; ds.n_features];
+        let mut maxs = vec![f32::NEG_INFINITY; ds.n_features];
+        for i in 0..ds.n_rows {
+            for (j, &v) in ds.row(i).iter().enumerate() {
+                mins[j] = mins[j].min(v);
+                maxs[j] = maxs[j].max(v);
+            }
+        }
+        // Constant (or empty) features quantize to 0.
+        for j in 0..ds.n_features {
+            if !mins[j].is_finite() {
+                mins[j] = 0.0;
+                maxs[j] = 0.0;
+            }
+        }
+        FeatureQuantizer { mins, maxs, w }
+    }
+
+    /// Number of quantized levels (`2^w`).
+    pub fn n_bins(&self) -> u32 {
+        1u32 << self.w
+    }
+
+    /// Quantize one value of feature `j`.
+    #[inline]
+    pub fn quantize_value(&self, j: usize, v: f32) -> u16 {
+        let (lo, hi) = (self.mins[j], self.maxs[j]);
+        if hi <= lo {
+            return 0;
+        }
+        let norm = ((v - lo) / (hi - lo)).clamp(0.0, 1.0);
+        let levels = (self.n_bins() - 1) as f32;
+        (norm * levels).round() as u16
+    }
+
+    /// Quantize a full dataset into a [`BinnedMatrix`].
+    pub fn transform(&self, ds: &Dataset) -> BinnedMatrix {
+        assert_eq!(ds.n_features, self.mins.len(), "feature count mismatch");
+        let mut bins = Vec::with_capacity(ds.x.len());
+        for i in 0..ds.n_rows {
+            for (j, &v) in ds.row(i).iter().enumerate() {
+                bins.push(self.quantize_value(j, v));
+            }
+        }
+        BinnedMatrix::new(bins, ds.n_features, self.n_bins())
+    }
+
+    /// Quantize a raw float row (serving path).
+    pub fn transform_row(&self, row: &[f32]) -> Vec<u16> {
+        assert_eq!(row.len(), self.mins.len());
+        row.iter().enumerate().map(|(j, &v)| self.quantize_value(j, v)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ds(x: Vec<f32>, f: usize) -> Dataset {
+        let n = x.len() / f;
+        Dataset::new("t", x, vec![0; n], f, 2)
+    }
+
+    #[test]
+    fn minmax_endpoints_hit_extremes() {
+        let d = ds(vec![0.0, 0.5, 1.0, 2.0], 1);
+        let q = FeatureQuantizer::fit(&d, 4);
+        assert_eq!(q.quantize_value(0, 0.0), 0);
+        assert_eq!(q.quantize_value(0, 2.0), 15);
+        // midpoint: (1.0-0)/2 * 15 = 7.5 → rounds to 8 (half away from zero)
+        assert_eq!(q.quantize_value(0, 1.0), 8);
+    }
+
+    #[test]
+    fn one_bit_binarizes_at_midpoint() {
+        let d = ds(vec![0.0, 1.0], 1);
+        let q = FeatureQuantizer::fit(&d, 1);
+        assert_eq!(q.quantize_value(0, 0.49), 0);
+        assert_eq!(q.quantize_value(0, 0.51), 1);
+    }
+
+    #[test]
+    fn constant_feature_is_zero() {
+        let d = ds(vec![3.0, 3.0, 3.0], 1);
+        let q = FeatureQuantizer::fit(&d, 4);
+        assert_eq!(q.quantize_value(0, 3.0), 0);
+        assert_eq!(q.quantize_value(0, 100.0), 0);
+    }
+
+    #[test]
+    fn out_of_range_clamped() {
+        let d = ds(vec![0.0, 1.0], 1);
+        let q = FeatureQuantizer::fit(&d, 2);
+        assert_eq!(q.quantize_value(0, -5.0), 0);
+        assert_eq!(q.quantize_value(0, 9.0), 3);
+    }
+
+    #[test]
+    fn transform_shapes_and_domain() {
+        let d = ds(vec![0.0, 10.0, 5.0, 2.0, 7.0, 1.0], 2);
+        let q = FeatureQuantizer::fit(&d, 3);
+        let m = q.transform(&d);
+        assert_eq!(m.n_rows, 3);
+        assert_eq!(m.n_features, 2);
+        assert_eq!(m.n_bins, 8);
+        assert!(m.bins.iter().all(|&b| b < 8));
+    }
+
+    #[test]
+    fn transform_row_matches_transform() {
+        let d = ds(vec![0.0, 10.0, 5.0, 2.0, 7.0, 1.0], 2);
+        let q = FeatureQuantizer::fit(&d, 5);
+        let m = q.transform(&d);
+        for i in 0..d.n_rows {
+            assert_eq!(q.transform_row(d.row(i)), m.row(i));
+        }
+    }
+}

@@ -1,0 +1,280 @@
+//! Leaf quantization — paper §2.2.2 (binary, Eq. 3-7) and §2.2.3
+//! (multiclass, Eq. 9-11).
+//!
+//! The scheme, for each score group `g` with trees `f_{g,1..M}` and initial
+//! score `f0`:
+//!
+//! 1. **Local shift** (Eq. 3/9): subtract each tree's own minimum leaf,
+//!    `f'_{g,m} = f_{g,m} − minLeaf_{g,m}`, folding `f0 + Σ_m minLeaf_{g,m}`
+//!    into a per-group bias `b_g`. Using *local* minima guarantees every
+//!    quantized tree's minimum is exactly 0 — no offsets, narrower muxes.
+//! 2. **Global scale** (Eq. 4/10): one positive factor
+//!    `scale = (2^w_tree − 1) / max_{g,m,X} f'` across *all* trees, so
+//!    relative magnitudes (and hence the sign / argmax decision) are
+//!    preserved; many trees then use fewer than `w_tree` bits (footnote 5).
+//! 3. **Round** (Eq. 6): `qf = round(f'·scale)`, `qb = round(b·scale)` —
+//!    the only approximation step.
+
+use crate::gbdt::{GbdtModel, Tree, TreeNode};
+use super::model::{QuantModel, QuantNode, QuantTree};
+
+/// Intermediate record of one group's shift (for reporting/tests; mirrors
+/// the rows of paper Table 1).
+#[derive(Clone, Debug)]
+pub struct LeafQuantReport {
+    /// `b_g` before scaling (Eq. 3/9).
+    pub bias_shifted: Vec<f64>,
+    /// The global maximum shifted leaf (`max f'`).
+    pub max_shifted_leaf: f64,
+    /// `binaryScale` / `multiScale` (Eq. 4/10).
+    pub scale: f64,
+}
+
+/// Quantize an ensemble's leaves to `w_tree` bits. Returns the integer model
+/// and a report with the intermediate quantities of Table 1.
+pub fn quantize_leaves(model: &GbdtModel, w_tree: u8) -> (QuantModel, LeafQuantReport) {
+    assert!((1..=16).contains(&w_tree), "w_tree in 1..=16");
+    let n_groups = model.n_groups;
+    let m_rounds = model.n_rounds();
+
+    // Eq. 3/9: per-tree local minima and per-group biases.
+    let min_leaves: Vec<f64> = model.trees.iter().map(|t| t.min_leaf() as f64).collect();
+    let mut biases = vec![model.base_score as f64; n_groups];
+    for (i, &ml) in min_leaves.iter().enumerate() {
+        biases[i % n_groups] += ml;
+    }
+
+    // Global maximum of shifted leaves across all trees of all groups.
+    let mut max_shifted = 0.0f64;
+    for (i, t) in model.trees.iter().enumerate() {
+        let shifted_max = t.max_leaf() as f64 - min_leaves[i];
+        max_shifted = max_shifted.max(shifted_max);
+    }
+
+    // Eq. 4/10: single positive scale. A degenerate ensemble (every tree
+    // constant) has max_shifted == 0; scale 1.0 keeps the math exact.
+    let scale = if max_shifted > 0.0 {
+        ((1u32 << w_tree) - 1) as f64 / max_shifted
+    } else {
+        1.0
+    };
+
+    // Eq. 6: round leaves and biases.
+    let trees: Vec<QuantTree> = model
+        .trees
+        .iter()
+        .enumerate()
+        .map(|(i, t)| quantize_tree(t, min_leaves[i], scale))
+        .collect();
+    let q_biases: Vec<i64> = biases.iter().map(|b| (b * scale).round() as i64).collect();
+
+    let qm = QuantModel {
+        trees,
+        n_groups,
+        biases: q_biases,
+        n_features: model.n_features,
+        w_feature: model.w_feature,
+        w_tree,
+        scale,
+    };
+    debug_assert_eq!(qm.n_rounds(), m_rounds);
+    let report = LeafQuantReport { bias_shifted: biases, max_shifted_leaf: max_shifted, scale };
+    (qm, report)
+}
+
+/// Quantize a single tree: shift by `min_leaf`, scale, round.
+fn quantize_tree(tree: &Tree, min_leaf: f64, scale: f64) -> QuantTree {
+    let nodes = tree
+        .nodes
+        .iter()
+        .map(|n| match n {
+            TreeNode::Split { feat, thresh, left, right } => QuantNode::Split {
+                feat: *feat,
+                thresh: *thresh,
+                left: *left,
+                right: *right,
+            },
+            TreeNode::Leaf { value } => {
+                let shifted = *value as f64 - min_leaf;
+                QuantNode::Leaf { value: (shifted * scale).round() as u32 }
+            }
+        })
+        .collect();
+    QuantTree { nodes }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gbdt::{GbdtModel, Tree, TreeNode};
+
+    /// Build a depth-2 tree with the four given leaf values.
+    fn tree4(leaves: [f32; 4]) -> Tree {
+        Tree {
+            nodes: vec![
+                TreeNode::Split { feat: 0, thresh: 1, left: 1, right: 2 },
+                TreeNode::Split { feat: 1, thresh: 1, left: 3, right: 4 },
+                TreeNode::Split { feat: 2, thresh: 1, left: 5, right: 6 },
+                TreeNode::Leaf { value: leaves[0] },
+                TreeNode::Leaf { value: leaves[1] },
+                TreeNode::Leaf { value: leaves[2] },
+                TreeNode::Leaf { value: leaves[3] },
+            ],
+        }
+    }
+
+    /// Paper Fig. 2 / Table 1: tree1 leaves [2.0, -0.1, 0.5, -0.7],
+    /// tree2 leaves [-0.4, 0.8, -1.4, 0.0], f0 = 0, w_tree = 3.
+    fn fig2_model() -> GbdtModel {
+        GbdtModel {
+            trees: vec![
+                tree4([2.0, -0.1, 0.5, -0.7]),
+                tree4([-0.4, 0.8, -1.4, 0.0]),
+            ],
+            n_groups: 1,
+            base_score: 0.0,
+            n_features: 3,
+            w_feature: 4,
+        }
+    }
+
+    /// Reproduces paper Table 1 exactly ("Numeric example of equations 3-6").
+    #[test]
+    fn table1_numeric_example() {
+        let (qm, report) = quantize_leaves(&fig2_model(), 3);
+
+        // Row "After Eq. 3": bias −2.10; shifted leaves
+        // t1 [2.70, 0.60, 1.20, 0.00], t2 [1.00, 2.20, 0.00, 1.40].
+        assert!((report.bias_shifted[0] - (-2.10)).abs() < 1e-6);
+        assert!((report.max_shifted_leaf - 2.70).abs() < 1e-6);
+
+        // Row "After Eq. 4": binaryScale = 7 / 2.7 ≈ 2.59.
+        assert!((report.scale - 7.0 / 2.7).abs() < 1e-6);
+
+        // Row "After Eq. 6": bias −5; t1 [7, 2, 3, 0]; t2 [3, 6, 0, 4].
+        assert_eq!(qm.biases, vec![-5]);
+        let t1: Vec<u32> = leaf_values(&qm.trees[0]);
+        let t2: Vec<u32> = leaf_values(&qm.trees[1]);
+        assert_eq!(t1, vec![7, 2, 3, 0]);
+        assert_eq!(t2, vec![3, 6, 0, 4]);
+
+        qm.validate().unwrap();
+    }
+
+    fn leaf_values(t: &QuantTree) -> Vec<u32> {
+        t.nodes
+            .iter()
+            .filter_map(|n| match n {
+                QuantNode::Leaf { value } => Some(*value),
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// Paper Fig. 2 end-to-end: X = [2,15,4,...] routes to f1 = −0.7 and
+    /// f2 = −0.4 → F = −1.1 < 0 → class 0; the quantized model must agree.
+    #[test]
+    fn fig2_inference_agreement() {
+        let model = fig2_model();
+        let (qm, _) = quantize_leaves(&model, 3);
+        // Route both trees to their minimum leaves: feat0>=1, feat1<1 … use
+        // explicit rows covering all four paths of each tree.
+        for x in [
+            [0u16, 0, 0],
+            [0, 1, 0],
+            [1, 0, 0],
+            [1, 0, 1],
+            [1, 1, 1],
+            [0, 1, 1],
+        ] {
+            let float_class = model.predict_class(&x);
+            let quant_class = qm.predict_class(&x);
+            assert_eq!(float_class, quant_class, "x={x:?}");
+        }
+    }
+
+    #[test]
+    fn every_tree_min_is_zero() {
+        let (qm, _) = quantize_leaves(&fig2_model(), 5);
+        for t in &qm.trees {
+            assert_eq!(t.min_leaf(), 0);
+        }
+    }
+
+    #[test]
+    fn global_max_hits_full_scale() {
+        let (qm, _) = quantize_leaves(&fig2_model(), 4);
+        let global_max = qm.trees.iter().map(|t| t.max_leaf()).max().unwrap();
+        assert_eq!(global_max, 15); // 2^4 − 1
+    }
+
+    #[test]
+    fn many_trees_use_fewer_bits() {
+        // Footnote 5: trees whose range is half the global range lose a bit.
+        let (qm, _) = quantize_leaves(&fig2_model(), 3);
+        assert_eq!(qm.trees[0].out_bits(), 3); // max 7
+        assert_eq!(qm.trees[1].out_bits(), 3); // max 6
+        let model = GbdtModel {
+            trees: vec![tree4([0.0, 2.0, 1.0, 0.5]), tree4([0.0, 0.4, 0.2, 0.1])],
+            ..fig2_model()
+        };
+        let (qm2, _) = quantize_leaves(&model, 4);
+        assert_eq!(qm2.trees[0].max_leaf(), 15);
+        assert!(qm2.trees[1].max_leaf() <= 3); // quarter range → ≤ 2 bits
+    }
+
+    #[test]
+    fn degenerate_constant_trees() {
+        let model = GbdtModel {
+            trees: vec![Tree::leaf(0.5), Tree::leaf(-0.5)],
+            n_groups: 1,
+            base_score: 0.0,
+            n_features: 1,
+            w_feature: 1,
+        };
+        let (qm, rep) = quantize_leaves(&model, 3);
+        assert_eq!(rep.max_shifted_leaf, 0.0);
+        assert_eq!(rep.scale, 1.0);
+        // Constant sum 0.5 − 0.5 = 0 → bias 0, all leaves 0 → class 1 (≥ 0).
+        assert_eq!(qm.predict_class(&[0]), 1);
+        qm.validate().unwrap();
+    }
+
+    #[test]
+    fn multiclass_biases_per_group() {
+        let model = GbdtModel {
+            trees: vec![
+                tree4([1.0, 0.5, 0.0, 0.25]),   // class 0, round 0
+                tree4([-1.0, -0.5, 0.0, -0.25]), // class 1, round 0
+                tree4([0.1, 0.2, 0.3, 0.4]),    // class 0, round 1
+                tree4([0.0, -2.0, -1.0, -1.5]), // class 1, round 1
+            ],
+            n_groups: 2,
+            base_score: 0.5,
+            n_features: 3,
+            w_feature: 4,
+        };
+        let (qm, rep) = quantize_leaves(&model, 4);
+        assert_eq!(qm.biases.len(), 2);
+        // bias_0 = 0.5 + 0.0 + 0.1 = 0.6; bias_1 = 0.5 − 1.0 − 2.0 = −2.5.
+        assert!((rep.bias_shifted[0] - 0.6).abs() < 1e-6);
+        assert!((rep.bias_shifted[1] + 2.5).abs() < 1e-6);
+        qm.validate().unwrap();
+    }
+
+    /// Scaling invariance (Eq. 5): with a *fine enough* w_tree the quantized
+    /// decision matches the float decision on every input of a small grid.
+    #[test]
+    fn high_resolution_quantization_preserves_decisions() {
+        let model = fig2_model();
+        let (qm, _) = quantize_leaves(&model, 12);
+        for a in 0..2u16 {
+            for b in 0..2u16 {
+                for c in 0..2u16 {
+                    let x = [a, b, c];
+                    assert_eq!(model.predict_class(&x), qm.predict_class(&x), "x={x:?}");
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,29 @@
+//! TreeLUT quantization (paper §2.2) — the paper's primary algorithmic
+//! contribution.
+//!
+//! Two halves:
+//!
+//! 1. **Pre-training feature quantization** ([`feature`], §2.2.1): min-max
+//!    normalize each feature to `[0,1]` and round to `w_feature` bits
+//!    *before* training, so the booster picks optimal quantized thresholds
+//!    itself — no quantization-aware training needed.
+//! 2. **Post-training leaf quantization** ([`leaf`], §2.2.2-2.2.3): shift
+//!    every tree by its *local* minimum leaf (making each tree's minimum 0,
+//!    with no per-tree offsets in hardware), scale all trees by a single
+//!    *global* factor `(2^w_tree − 1)/max f'`, and round. The shift/scale
+//!    residue folds into one bias `qb` per score group, which in binary
+//!    classification moves to the comparison threshold and costs nothing
+//!    (§2.3.3).
+//!
+//! [`model::QuantModel`] is the integer-exact predictor the paper describes
+//! in §3 ("models the exact behavior of hardware implementations in terms of
+//! accuracy") — the RTL generator, the gate-level simulator, and the PJRT
+//! runtime are all verified bit-identical against it.
+
+pub mod feature;
+pub mod leaf;
+pub mod model;
+
+pub use feature::FeatureQuantizer;
+pub use leaf::quantize_leaves;
+pub use model::{QuantModel, QuantNode, QuantTree};

@@ -1,0 +1,308 @@
+//! The quantized model: integer-exact trees, biases, key table, and the
+//! bit-exact prediction function (paper §3: "models the exact behavior of
+//! hardware implementations in terms of accuracy").
+
+/// A node of a quantized decision tree. Same split semantics as
+/// [`crate::gbdt::TreeNode`]; leaves are non-negative `w_tree`-bit integers
+/// (the paper's `qf`, Eq. 6).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum QuantNode {
+    Split { feat: u32, thresh: u32, left: u32, right: u32 },
+    Leaf { value: u32 },
+}
+
+/// A quantized decision tree.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct QuantTree {
+    pub nodes: Vec<QuantNode>,
+}
+
+impl QuantTree {
+    /// Evaluate on a quantized feature row.
+    pub fn predict(&self, x: &[u16]) -> u32 {
+        let mut i = 0usize;
+        loop {
+            match &self.nodes[i] {
+                QuantNode::Leaf { value } => return *value,
+                QuantNode::Split { feat, thresh, left, right } => {
+                    i = if (x[*feat as usize] as u32) >= *thresh { *right } else { *left }
+                        as usize;
+                }
+            }
+        }
+    }
+
+    /// Maximum leaf value — determines this tree's output bitwidth
+    /// (paper §2.2.2 footnote 5: many trees fit in fewer than `w_tree` bits
+    /// because the *global* maximum sets the scale).
+    pub fn max_leaf(&self) -> u32 {
+        self.nodes
+            .iter()
+            .filter_map(|n| match n {
+                QuantNode::Leaf { value } => Some(*value),
+                _ => None,
+            })
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Minimum leaf value (always 0 by construction, checked in tests).
+    pub fn min_leaf(&self) -> u32 {
+        self.nodes
+            .iter()
+            .filter_map(|n| match n {
+                QuantNode::Leaf { value } => Some(*value),
+                _ => None,
+            })
+            .min()
+            .unwrap_or(0)
+    }
+
+    /// Output bitwidth: bits needed for `max_leaf`.
+    pub fn out_bits(&self) -> u32 {
+        bits_for(self.max_leaf())
+    }
+
+    /// Tree depth (0 for single leaf).
+    pub fn depth(&self) -> usize {
+        fn go(t: &QuantTree, i: usize) -> usize {
+            match &t.nodes[i] {
+                QuantNode::Leaf { .. } => 0,
+                QuantNode::Split { left, right, .. } => {
+                    1 + go(t, *left as usize).max(go(t, *right as usize))
+                }
+            }
+        }
+        go(self, 0)
+    }
+
+    /// `(feat, thresh)` pairs used by this tree.
+    pub fn comparisons(&self) -> Vec<(u32, u32)> {
+        self.nodes
+            .iter()
+            .filter_map(|n| match n {
+                QuantNode::Split { feat, thresh, .. } => Some((*feat, *thresh)),
+                _ => None,
+            })
+            .collect()
+    }
+}
+
+/// Bits needed to represent `v` (0 → 1 bit).
+pub fn bits_for(v: u32) -> u32 {
+    (32 - v.leading_zeros()).max(1)
+}
+
+/// A fully quantized TreeLUT model (paper Eq. 7 / Eq. 11).
+#[derive(Clone, Debug)]
+pub struct QuantModel {
+    /// Round-major like [`crate::gbdt::GbdtModel`]: `trees[round*n_groups+g]`.
+    pub trees: Vec<QuantTree>,
+    /// Score groups: 1 (binary) or number of classes.
+    pub n_groups: usize,
+    /// Quantized biases `qb_g` (typically negative in binary tasks).
+    pub biases: Vec<i64>,
+    pub n_features: usize,
+    pub w_feature: u8,
+    pub w_tree: u8,
+    /// The scale factor applied before rounding (for reporting).
+    pub scale: f64,
+}
+
+impl QuantModel {
+    /// Number of boosting rounds (`M`).
+    pub fn n_rounds(&self) -> usize {
+        self.trees.len() / self.n_groups
+    }
+
+    /// Trees of one score group, round order.
+    pub fn trees_of_group(&self, g: usize) -> impl Iterator<Item = &QuantTree> + '_ {
+        assert!(g < self.n_groups);
+        self.trees.iter().skip(g).step_by(self.n_groups)
+    }
+
+    /// Integer scores `QF_g(X)` (paper Eq. 6/11).
+    pub fn scores(&self, x: &[u16]) -> Vec<i64> {
+        let mut s: Vec<i64> = self.biases.clone();
+        for (i, t) in self.trees.iter().enumerate() {
+            s[i % self.n_groups] += t.predict(x) as i64;
+        }
+        s
+    }
+
+    /// Class prediction (Eq. 7 binary / Eq. 11 multiclass; argmax ties break
+    /// low, matching the hardware comparator chain).
+    pub fn predict_class(&self, x: &[u16]) -> u32 {
+        let s = self.scores(x);
+        if self.n_groups == 1 {
+            (s[0] >= 0) as u32
+        } else {
+            let mut best = 0usize;
+            for i in 1..s.len() {
+                if s[i] > s[best] {
+                    best = i;
+                }
+            }
+            best as u32
+        }
+    }
+
+    /// Batch prediction over a binned matrix (row-major).
+    pub fn predict_batch(&self, bins: &[u16], n_features: usize) -> Vec<u32> {
+        assert_eq!(n_features, self.n_features);
+        bins.chunks_exact(n_features).map(|r| self.predict_class(r)).collect()
+    }
+
+    /// The key-generator key set: sorted unique `(feat, thresh)` comparisons
+    /// across the whole ensemble (paper §2.3.1).
+    pub fn unique_comparisons(&self) -> Vec<(u32, u32)> {
+        let mut keys: Vec<(u32, u32)> =
+            self.trees.iter().flat_map(|t| t.comparisons()).collect();
+        keys.sort_unstable();
+        keys.dedup();
+        keys
+    }
+
+    /// Biases shifted non-negative for hardware (multiclass argmax is
+    /// invariant to a common offset, §2.2.3); returns `(shifted, offset)`
+    /// with `shifted[g] = biases[g] + offset ≥ 0`.
+    pub fn nonneg_biases(&self) -> (Vec<u64>, i64) {
+        let offset = -self.biases.iter().copied().min().unwrap_or(0).min(0);
+        (self.biases.iter().map(|&b| (b + offset) as u64).collect(), offset)
+    }
+
+    /// Upper bound of any group score *before* bias: `Σ_m max_leaf` — the
+    /// adder-tree output width driver (§2.3.3).
+    pub fn max_group_sum(&self) -> u64 {
+        (0..self.n_groups)
+            .map(|g| self.trees_of_group(g).map(|t| t.max_leaf() as u64).sum())
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Structural validation: every tree min-leaf is 0 *or* the tree is a
+    /// degenerate constant, leaves fit `w_tree` bits, bias count matches.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.biases.len() == self.n_groups, "bias count");
+        anyhow::ensure!(self.trees.len() % self.n_groups == 0, "tree count");
+        let cap = (1u32 << self.w_tree) - 1;
+        for (i, t) in self.trees.iter().enumerate() {
+            anyhow::ensure!(!t.nodes.is_empty(), "tree {i} empty");
+            anyhow::ensure!(
+                t.min_leaf() == 0,
+                "tree {i}: min leaf {} != 0 (local-shift invariant)",
+                t.min_leaf()
+            );
+            anyhow::ensure!(
+                t.max_leaf() <= cap,
+                "tree {i}: max leaf {} exceeds w_tree={} cap {}",
+                t.max_leaf(),
+                self.w_tree,
+                cap
+            );
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn leaf(v: u32) -> QuantTree {
+        QuantTree { nodes: vec![QuantNode::Leaf { value: v }] }
+    }
+
+    #[test]
+    fn bits_for_values() {
+        assert_eq!(bits_for(0), 1);
+        assert_eq!(bits_for(1), 1);
+        assert_eq!(bits_for(2), 2);
+        assert_eq!(bits_for(7), 3);
+        assert_eq!(bits_for(8), 4);
+    }
+
+    #[test]
+    fn binary_decision_threshold() {
+        let m = QuantModel {
+            trees: vec![leaf(3), leaf(0)],
+            n_groups: 1,
+            biases: vec![-3],
+            n_features: 1,
+            w_feature: 1,
+            w_tree: 2,
+            scale: 1.0,
+        };
+        // 3 + 0 - 3 = 0 >= 0 → class 1
+        assert_eq!(m.predict_class(&[0]), 1);
+        let m2 = QuantModel { biases: vec![-4], ..m };
+        assert_eq!(m2.predict_class(&[0]), 0);
+    }
+
+    #[test]
+    fn multiclass_argmax_and_offset_invariance() {
+        let m = QuantModel {
+            trees: vec![leaf(1), leaf(5), leaf(2)],
+            n_groups: 3,
+            biases: vec![-1, -2, -1],
+            n_features: 1,
+            w_feature: 1,
+            w_tree: 3,
+            scale: 1.0,
+        };
+        // scores: [0, 3, 1] → class 1
+        assert_eq!(m.predict_class(&[0]), 1);
+        let (nn, off) = m.nonneg_biases();
+        assert_eq!(off, 2);
+        assert_eq!(nn, vec![1, 0, 1]);
+    }
+
+    #[test]
+    fn validate_catches_nonzero_min() {
+        let bad = QuantModel {
+            trees: vec![leaf(2)],
+            n_groups: 1,
+            biases: vec![0],
+            n_features: 1,
+            w_feature: 1,
+            w_tree: 3,
+            scale: 1.0,
+        };
+        assert!(bad.validate().is_err()); // min leaf 2 != 0
+    }
+
+    #[test]
+    fn validate_catches_overflow_leaf() {
+        let t = QuantTree {
+            nodes: vec![
+                QuantNode::Split { feat: 0, thresh: 1, left: 1, right: 2 },
+                QuantNode::Leaf { value: 0 },
+                QuantNode::Leaf { value: 9 },
+            ],
+        };
+        let bad = QuantModel {
+            trees: vec![t],
+            n_groups: 1,
+            biases: vec![0],
+            n_features: 1,
+            w_feature: 1,
+            w_tree: 3, // cap 7 < 9
+            scale: 1.0,
+        };
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn max_group_sum_over_groups() {
+        let m = QuantModel {
+            trees: vec![leaf(0), leaf(5), leaf(0), leaf(7)],
+            n_groups: 2,
+            biases: vec![0, 0],
+            n_features: 1,
+            w_feature: 1,
+            w_tree: 3,
+            scale: 1.0,
+        };
+        assert_eq!(m.max_group_sum(), 12); // group 1: 5 + 7
+    }
+}

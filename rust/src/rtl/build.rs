@@ -1,0 +1,203 @@
+//! Lower a [`QuantModel`] into the architecture IR.
+//!
+//! This is the software half of the paper's tool (§3): traverse all trees,
+//! extract the unique key set, express each tree as per-unique-leaf path
+//! selectors (Fig. 6), move the binary bias to the comparison threshold
+//! (§2.3.3), and shift multiclass biases non-negative (§2.2.3).
+
+use super::ir::{DecisionMode, Design, Path, Pipeline, TreeLogic};
+use crate::quantize::{QuantModel, QuantNode, QuantTree};
+use std::collections::BTreeMap;
+
+/// Build a [`Design`] from a quantized model.
+///
+/// `keygen = false` produces the Table 6 "DWN comparison" variant: the key
+/// generator layer is bypassed and the circuit takes the key bits directly
+/// as inputs (the comparisons are assumed performed offline, as DWN's
+/// thermometer encoding is).
+pub fn design_from_quant(
+    name: &str,
+    model: &QuantModel,
+    pipeline: Pipeline,
+    keygen: bool,
+) -> Design {
+    let keys = model.unique_comparisons();
+    let key_index: BTreeMap<(u32, u32), u32> =
+        keys.iter().enumerate().map(|(i, &k)| (k, i as u32)).collect();
+
+    let trees: Vec<TreeLogic> = model.trees.iter().map(|t| tree_logic(t, &key_index)).collect();
+
+    let decision = if model.n_groups == 1 {
+        DecisionMode::Binary { threshold: -model.biases[0] }
+    } else {
+        let (biases, _offset) = model.nonneg_biases();
+        DecisionMode::Multiclass { biases }
+    };
+
+    let d = Design {
+        name: name.to_string(),
+        n_features: model.n_features,
+        w_feature: model.w_feature,
+        n_key_inputs: keys.len(),
+        keys,
+        keygen,
+        trees,
+        n_groups: model.n_groups,
+        decision,
+        pipeline,
+    };
+    debug_assert!(d.validate().is_ok());
+    d
+}
+
+/// Enumerate root-to-leaf paths grouped by unique non-zero leaf value.
+fn tree_logic(tree: &QuantTree, key_index: &BTreeMap<(u32, u32), u32>) -> TreeLogic {
+    let mut by_value: BTreeMap<u32, Vec<Path>> = BTreeMap::new();
+    let mut stack: Vec<(u32, bool)> = Vec::new();
+    walk(tree, 0, &mut stack, &mut by_value, key_index);
+    let cases: Vec<(u32, Vec<Path>)> = by_value.into_iter().collect();
+    let max = cases.last().map(|(v, _)| *v).unwrap_or(0);
+    TreeLogic { cases, out_bits: crate::quantize::model::bits_for(max) }
+}
+
+fn walk(
+    tree: &QuantTree,
+    node: usize,
+    stack: &mut Vec<(u32, bool)>,
+    out: &mut BTreeMap<u32, Vec<Path>>,
+    key_index: &BTreeMap<(u32, u32), u32>,
+) {
+    match &tree.nodes[node] {
+        QuantNode::Leaf { value } => {
+            if *value > 0 {
+                out.entry(*value).or_default().push(Path { lits: stack.clone() });
+            }
+        }
+        QuantNode::Split { feat, thresh, left, right } => {
+            let k = key_index[&(*feat, *thresh)];
+            stack.push((k, false)); // key = 0 → left (x < thresh)
+            walk(tree, *left as usize, stack, out, key_index);
+            stack.pop();
+            stack.push((k, true)); // key = 1 → right
+            walk(tree, *right as usize, stack, out, key_index);
+            stack.pop();
+        }
+    }
+}
+
+/// Reference evaluator of a [`TreeLogic`] given key bits — used by tests to
+/// check path extraction against [`QuantTree::predict`] semantics.
+pub fn eval_tree_logic(t: &TreeLogic, keys: &[bool]) -> u32 {
+    for (v, paths) in &t.cases {
+        for p in paths {
+            if p.lits.iter().all(|&(k, pos)| keys[k as usize] == pos) {
+                return *v;
+            }
+        }
+    }
+    0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quantize::QuantNode as N;
+
+    /// Paper Fig. 6a: root k5; left child k12 (1/3), right child k24 (1/0).
+    /// Leaves: k5=0,k12=0 → 1; k5=0,k12=1 → 3; k5=1,k24=0 → 1 … build with
+    /// 3 distinct keys: (5,1),(12,1),(24,1) become key ids 0,1,2.
+    fn fig6_tree() -> QuantTree {
+        QuantTree {
+            nodes: vec![
+                N::Split { feat: 5, thresh: 1, left: 1, right: 2 },
+                N::Split { feat: 12, thresh: 1, left: 3, right: 4 },
+                N::Split { feat: 24, thresh: 1, left: 5, right: 6 },
+                N::Leaf { value: 1 },
+                N::Leaf { value: 3 },
+                N::Leaf { value: 1 },
+                N::Leaf { value: 0 },
+            ],
+        }
+    }
+
+    fn fig6_model() -> QuantModel {
+        QuantModel {
+            trees: vec![fig6_tree()],
+            n_groups: 1,
+            biases: vec![-2],
+            n_features: 32,
+            w_feature: 1,
+            w_tree: 2,
+            scale: 1.0,
+        }
+    }
+
+    #[test]
+    fn fig6_paths_grouped_by_unique_leaf() {
+        let d = design_from_quant("fig6", &fig6_model(), Pipeline::default(), true);
+        let t = &d.trees[0];
+        // Unique non-zero values: 1 (two paths — Fig. 6b's OR of two ANDs)
+        // and 3 (one path).
+        assert_eq!(t.cases.len(), 2);
+        assert_eq!(t.cases[0].0, 1);
+        assert_eq!(t.cases[0].1.len(), 2);
+        assert_eq!(t.cases[1].0, 3);
+        assert_eq!(t.cases[1].1.len(), 1);
+        assert_eq!(t.out_bits, 2);
+    }
+
+    #[test]
+    fn tree_logic_matches_tree_predict_exhaustively() {
+        let model = fig6_model();
+        let d = design_from_quant("fig6", &model, Pipeline::default(), true);
+        // Keys: (5,1)=k0, (12,1)=k1, (24,1)=k2 (sorted by (feat,thresh)).
+        for bits in 0..8u32 {
+            let keys = [(bits & 1) != 0, (bits & 2) != 0, (bits & 4) != 0];
+            let mut x = vec![0u16; 32];
+            x[5] = keys[0] as u16;
+            x[12] = keys[1] as u16;
+            x[24] = keys[2] as u16;
+            assert_eq!(
+                eval_tree_logic(&d.trees[0], &keys),
+                model.trees[0].predict(&x),
+                "bits={bits:03b}"
+            );
+        }
+    }
+
+    #[test]
+    fn binary_threshold_is_negated_bias() {
+        let d = design_from_quant("b", &fig6_model(), Pipeline::default(), true);
+        assert_eq!(d.decision, DecisionMode::Binary { threshold: 2 });
+    }
+
+    #[test]
+    fn multiclass_biases_nonnegative() {
+        let mut m = fig6_model();
+        m.n_groups = 2;
+        m.trees = vec![fig6_tree(), fig6_tree()];
+        m.biases = vec![-7, -3];
+        let d = design_from_quant("mc", &m, Pipeline::default(), true);
+        match d.decision {
+            DecisionMode::Multiclass { ref biases } => assert_eq!(biases, &vec![0, 4]),
+            _ => panic!("expected multiclass"),
+        }
+    }
+
+    #[test]
+    fn bypass_mode_has_no_keygen() {
+        let d = design_from_quant("dwn", &fig6_model(), Pipeline::default(), false);
+        assert!(!d.keygen);
+        assert_eq!(d.n_keys(), 3);
+        d.validate().unwrap();
+    }
+
+    #[test]
+    fn shared_keys_deduplicate() {
+        // Two trees using the same comparison produce one key.
+        let mut m = fig6_model();
+        m.trees = vec![fig6_tree(), fig6_tree()];
+        let d = design_from_quant("dup", &m, Pipeline::default(), true);
+        assert_eq!(d.keys.len(), 3);
+    }
+}

@@ -1,0 +1,205 @@
+//! Architecture-level IR of a TreeLUT design (paper Figs. 3-6).
+
+/// One root-to-leaf path: a conjunction of key literals
+/// (`(key_index, positive)`; positive = key must be 1 = "went right").
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Path {
+    pub lits: Vec<(u32, bool)>,
+}
+
+impl Path {
+    /// True when the path has no conditions (single-leaf tree).
+    pub fn is_unconditional(&self) -> bool {
+        self.lits.is_empty()
+    }
+}
+
+/// The boolean-level structure of one quantized tree (paper Fig. 6):
+/// for every *unique non-zero* leaf value, the set of paths selecting it.
+/// A value's selector is the OR of its path ANDs; output bit `j` is the OR
+/// of selectors of values with bit `j` set.
+#[derive(Clone, Debug, Default)]
+pub struct TreeLogic {
+    /// `(leaf value, paths)` sorted by value; value 0 omitted (contributes
+    /// nothing to the adder — the quantizer guarantees min leaf = 0).
+    pub cases: Vec<(u32, Vec<Path>)>,
+    /// Output bitwidth (bits of the max leaf; §2.2.2 footnote 5).
+    pub out_bits: u32,
+}
+
+impl TreeLogic {
+    /// Max leaf value this logic can emit.
+    pub fn max_value(&self) -> u32 {
+        self.cases.last().map(|(v, _)| *v).unwrap_or(0)
+    }
+}
+
+/// Final decision stage.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum DecisionMode {
+    /// Binary: `y = (sum >= -qb)` — the bias moves to the comparison
+    /// threshold (§2.3.3). `threshold = -qb` (may be ≤ 0 ⇒ constant 1).
+    Binary { threshold: i64 },
+    /// Multiclass: per-group non-negative biases (common offset already
+    /// applied, §2.2.3) + argmax with ties breaking to the lower index.
+    Multiclass { biases: Vec<u64> },
+}
+
+/// Pipeline configuration `[p0, p1, p2]` (§2.4): registers after the key
+/// generator (`p0` ∈ {0,1}), after the tree layer (`p1` ∈ {0,1}), and `p2`
+/// evenly-spaced register stages inside each adder tree.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Pipeline {
+    pub p0: usize,
+    pub p1: usize,
+    pub p2: usize,
+}
+
+impl Pipeline {
+    pub fn new(p0: usize, p1: usize, p2: usize) -> Pipeline {
+        assert!(p0 <= 1 && p1 <= 1, "p0/p1 are 0/1 flags");
+        Pipeline { p0, p1, p2 }
+    }
+
+    /// Total register cuts = pipeline latency in cycles (II = 1).
+    pub fn cuts(&self) -> usize {
+        self.p0 + self.p1 + self.p2
+    }
+}
+
+impl Default for Pipeline {
+    fn default() -> Self {
+        Pipeline { p0: 0, p1: 1, p2: 1 }
+    }
+}
+
+/// A complete TreeLUT design.
+#[derive(Clone, Debug)]
+pub struct Design {
+    pub name: String,
+    /// Input feature count (quantized, each `w_feature` bits wide).
+    pub n_features: usize,
+    pub w_feature: u8,
+    /// Key generator: sorted unique `(feature, threshold)` comparators.
+    /// Empty when the key layer is bypassed (Table 6 DWN comparison mode —
+    /// keys become direct circuit inputs).
+    pub keys: Vec<(u32, u32)>,
+    /// Number of key inputs when bypassed (otherwise `keys.len()`).
+    pub n_key_inputs: usize,
+    /// Whether the key generator layer is instantiated.
+    pub keygen: bool,
+    /// Tree logic, round-major over groups (tree `t` → group `t % groups`).
+    pub trees: Vec<TreeLogic>,
+    pub n_groups: usize,
+    pub decision: DecisionMode,
+    pub pipeline: Pipeline,
+}
+
+impl Design {
+    /// Number of key signals (comparator outputs or direct inputs).
+    pub fn n_keys(&self) -> usize {
+        if self.keygen { self.keys.len() } else { self.n_key_inputs }
+    }
+
+    /// Trees of one group.
+    pub fn trees_of_group(&self, g: usize) -> impl Iterator<Item = (usize, &TreeLogic)> + '_ {
+        self.trees
+            .iter()
+            .enumerate()
+            .filter(move |(i, _)| i % self.n_groups == g)
+    }
+
+    /// Output width in bits (1 for binary, `ceil(log2 N)` for multiclass).
+    pub fn out_bits(&self) -> u32 {
+        match &self.decision {
+            DecisionMode::Binary { .. } => 1,
+            DecisionMode::Multiclass { biases } => {
+                (usize::BITS - (biases.len() - 1).leading_zeros()).max(1)
+            }
+        }
+    }
+
+    /// Structural sanity checks.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        let nk = self.n_keys() as u32;
+        for (ti, t) in self.trees.iter().enumerate() {
+            let mut prev = 0u32;
+            for (v, paths) in &t.cases {
+                anyhow::ensure!(*v > 0, "tree {ti}: case for value 0");
+                anyhow::ensure!(*v >= prev, "tree {ti}: cases not sorted");
+                prev = *v;
+                anyhow::ensure!(!paths.is_empty(), "tree {ti}: value {v} has no paths");
+                for p in paths {
+                    for (k, _) in &p.lits {
+                        anyhow::ensure!(*k < nk, "tree {ti}: key {k} out of range {nk}");
+                    }
+                }
+            }
+        }
+        anyhow::ensure!(self.trees.len() % self.n_groups == 0, "tree/group mismatch");
+        if let DecisionMode::Multiclass { biases } = &self.decision {
+            anyhow::ensure!(biases.len() == self.n_groups, "bias/group mismatch");
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_design() -> Design {
+        Design {
+            name: "toy".into(),
+            n_features: 2,
+            w_feature: 2,
+            keys: vec![(0, 1), (1, 2)],
+            n_key_inputs: 2,
+            keygen: true,
+            trees: vec![TreeLogic {
+                cases: vec![
+                    (1, vec![Path { lits: vec![(0, false), (1, true)] }]),
+                    (3, vec![Path { lits: vec![(0, true)] }]),
+                ],
+                out_bits: 2,
+            }],
+            n_groups: 1,
+            decision: DecisionMode::Binary { threshold: 2 },
+            pipeline: Pipeline::default(),
+        }
+    }
+
+    #[test]
+    fn validate_ok() {
+        toy_design().validate().unwrap();
+    }
+
+    #[test]
+    fn validate_rejects_bad_key() {
+        let mut d = toy_design();
+        d.trees[0].cases[0].1[0].lits[0].0 = 9;
+        assert!(d.validate().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_zero_case() {
+        let mut d = toy_design();
+        d.trees[0].cases[0].0 = 0;
+        assert!(d.validate().is_err());
+    }
+
+    #[test]
+    fn out_bits_multiclass() {
+        let mut d = toy_design();
+        d.decision = DecisionMode::Multiclass { biases: vec![0; 5] };
+        d.n_groups = 5;
+        d.trees = (0..5).map(|_| d.trees[0].clone()).collect();
+        assert_eq!(d.out_bits(), 3); // ceil(log2 5)
+    }
+
+    #[test]
+    fn pipeline_cuts() {
+        assert_eq!(Pipeline::new(0, 1, 1).cuts(), 2);
+        assert_eq!(Pipeline::new(1, 1, 3).cuts(), 5);
+    }
+}

@@ -1,0 +1,22 @@
+//! RTL layer: the TreeLUT hardware architecture (paper §2.3) as a
+//! synthesizable design.
+//!
+//! * [`ir`] — the architecture-level intermediate representation: key
+//!   generator comparisons, per-tree path logic (unique-leaf selectors, the
+//!   mux-cascade of Fig. 6b expressed as sum-of-paths boolean functions),
+//!   per-group adder trees, the decision stage, and the pipeline cut
+//!   configuration `[p0, p1, p2]` (§2.4).
+//! * [`build`] — lowering a [`crate::quantize::QuantModel`] into the IR.
+//! * [`verilog`] — the Verilog emitter (the original tool's output format).
+//!
+//! The same IR also drives [`crate::netlist`], the FPGA substrate that
+//! stands in for Vivado (gate netlist → 6-LUT mapping → timing/area →
+//! gate-level simulation), so the emitted Verilog and the simulated netlist
+//! are two views of one structure.
+
+pub mod ir;
+pub mod build;
+pub mod verilog;
+
+pub use build::design_from_quant;
+pub use ir::{Design, DecisionMode, Path, Pipeline, TreeLogic};

@@ -1,0 +1,169 @@
+//! Artifact manifest: the shape contract between `python/compile/aot.py`
+//! and the Rust runtime.
+//!
+//! `artifacts/manifest.txt` has one line per compiled config:
+//!
+//! ```text
+//! treelut-artifacts v1
+//! tiny batch=8 features=8 keys=16 trees=8 depth=3 groups=1
+//! ...
+//! ```
+
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// Static shapes of one AOT artifact (mirror of python `GbdtConfig`).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ArtifactConfig {
+    pub name: String,
+    /// Batch rows per execute (B).
+    pub batch: usize,
+    /// Quantized input features (F).
+    pub features: usize,
+    /// Padded unique-comparison count (K).
+    pub keys: usize,
+    /// Padded tree count (T = rounds × groups).
+    pub trees: usize,
+    /// Perfect-tree depth (D).
+    pub depth: usize,
+    /// Score groups (NG).
+    pub groups: usize,
+}
+
+impl ArtifactConfig {
+    /// Internal nodes per perfect tree (`2^D − 1`).
+    pub fn nodes(&self) -> usize {
+        (1 << self.depth) - 1
+    }
+
+    /// Leaves per perfect tree (`2^D`).
+    pub fn leaves(&self) -> usize {
+        1 << self.depth
+    }
+
+    /// Padded rounds (`T / NG`).
+    pub fn rounds(&self) -> usize {
+        self.trees / self.groups
+    }
+
+    /// Parse one manifest line.
+    pub fn parse_line(line: &str) -> Result<ArtifactConfig> {
+        let mut it = line.split_whitespace();
+        let name = it.next().context("empty manifest line")?.to_string();
+        let mut cfg = ArtifactConfig {
+            name,
+            batch: 0,
+            features: 0,
+            keys: 0,
+            trees: 0,
+            depth: 0,
+            groups: 0,
+        };
+        for kv in it {
+            let (k, v) = kv.split_once('=').with_context(|| format!("bad field {kv:?}"))?;
+            let v: usize = v.parse().with_context(|| format!("bad value in {kv:?}"))?;
+            match k {
+                "batch" => cfg.batch = v,
+                "features" => cfg.features = v,
+                "keys" => cfg.keys = v,
+                "trees" => cfg.trees = v,
+                "depth" => cfg.depth = v,
+                "groups" => cfg.groups = v,
+                _ => bail!("unknown manifest field {k:?}"),
+            }
+        }
+        anyhow::ensure!(
+            cfg.batch > 0 && cfg.features > 0 && cfg.keys > 0 && cfg.trees > 0
+                && cfg.depth > 0 && cfg.groups > 0,
+            "incomplete manifest line for {:?}",
+            cfg.name
+        );
+        anyhow::ensure!(cfg.trees % cfg.groups == 0, "trees not a multiple of groups");
+        Ok(cfg)
+    }
+}
+
+/// The parsed artifact manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub configs: Vec<ArtifactConfig>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.txt`.
+    pub fn load(artifacts_dir: &Path) -> Result<Manifest> {
+        let path = artifacts_dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts`)", path.display()))?;
+        Self::parse(&text)
+    }
+
+    /// Parse manifest text.
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let mut lines = text.lines();
+        let header = lines.next().context("empty manifest")?;
+        if header.trim() != "treelut-artifacts v1" {
+            bail!("bad manifest header {header:?}");
+        }
+        let configs = lines
+            .filter(|l| !l.trim().is_empty())
+            .map(ArtifactConfig::parse_line)
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Manifest { configs })
+    }
+
+    /// Look up a config by name.
+    pub fn get(&self, name: &str) -> Result<&ArtifactConfig> {
+        self.configs
+            .iter()
+            .find(|c| c.name == name)
+            .with_context(|| {
+                format!(
+                    "config {name:?} not in manifest (have: {})",
+                    self.configs.iter().map(|c| c.name.as_str()).collect::<Vec<_>>().join(", ")
+                )
+            })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "treelut-artifacts v1\n\
+        tiny batch=8 features=8 keys=16 trees=8 depth=3 groups=1\n\
+        mnist batch=64 features=784 keys=4096 trees=300 depth=5 groups=10\n";
+
+    #[test]
+    fn parse_manifest() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.configs.len(), 2);
+        let mnist = m.get("mnist").unwrap();
+        assert_eq!(mnist.batch, 64);
+        assert_eq!(mnist.nodes(), 31);
+        assert_eq!(mnist.leaves(), 32);
+        assert_eq!(mnist.rounds(), 30);
+    }
+
+    #[test]
+    fn unknown_config_errors() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert!(m.get("nope").is_err());
+    }
+
+    #[test]
+    fn bad_header_rejected() {
+        assert!(Manifest::parse("something else\n").is_err());
+    }
+
+    #[test]
+    fn incomplete_line_rejected() {
+        assert!(Manifest::parse("treelut-artifacts v1\nfoo batch=8\n").is_err());
+    }
+
+    #[test]
+    fn trees_groups_divisibility_enforced() {
+        let line = "x batch=1 features=1 keys=1 trees=7 depth=1 groups=2";
+        assert!(ArtifactConfig::parse_line(line).is_err());
+    }
+}

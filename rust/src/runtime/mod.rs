@@ -1,0 +1,136 @@
+//! PJRT runtime: load AOT-compiled HLO artifacts and execute them from Rust.
+//!
+//! The flow (see /opt/xla-example/load_hlo and DESIGN.md §2):
+//! `PjRtClient::cpu()` → `HloModuleProto::from_text_file` → `compile` →
+//! `execute`. Artifacts are produced once by `make artifacts`
+//! (python/compile/aot.py); Python never runs on the request path.
+//!
+//! [`Engine`] owns one compiled executable plus the model tensors
+//! (key table / node tables / leaves / biases) converted from a
+//! [`crate::quantize::QuantModel`] by [`tensors::ModelTensors`]. Executing a
+//! batch uploads only the activation tensor `x` — the model is a set of
+//! cached literals, mirroring the paper's "model absorbed into the circuit,
+//! only activations move" property.
+
+pub mod artifact;
+pub mod tensors;
+
+pub use artifact::{ArtifactConfig, Manifest};
+pub use tensors::ModelTensors;
+
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// A compiled GBDT inference executable bound to one model's tensors.
+pub struct Engine {
+    exe: xla::PjRtLoadedExecutable,
+    pub cfg: ArtifactConfig,
+    model: ModelTensors,
+    model_literals: Vec<xla::Literal>,
+}
+
+impl Engine {
+    /// Load `artifacts/gbdt_<cfg.name>.hlo.txt`, compile it on the PJRT CPU
+    /// client, and bind `model`'s tensors.
+    pub fn load(artifacts_dir: &Path, cfg: &ArtifactConfig, model: ModelTensors) -> Result<Engine> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Self::load_with_client(&client, artifacts_dir, cfg, model)
+    }
+
+    /// As [`Engine::load`] but reusing an existing client (several engines
+    /// can share one CPU client).
+    pub fn load_with_client(
+        client: &xla::PjRtClient,
+        artifacts_dir: &Path,
+        cfg: &ArtifactConfig,
+        model: ModelTensors,
+    ) -> Result<Engine> {
+        anyhow::ensure!(
+            model.cfg == *cfg,
+            "model tensors built for config {:?}, engine loading {:?}",
+            model.cfg.name,
+            cfg.name
+        );
+        let path = artifacts_dir.join(format!("gbdt_{}.hlo.txt", cfg.name));
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp).context("PJRT compile")?;
+        let model_literals = model.to_literals()?;
+        Ok(Engine { exe, cfg: cfg.clone(), model, model_literals })
+    }
+
+    /// Raw scores `QF_g` for up to `cfg.batch` quantized rows. Rows beyond
+    /// `rows.len()` are zero-padded; only the first `rows.len()` results are
+    /// returned.
+    pub fn scores(&self, rows: &[&[u16]]) -> Result<Vec<Vec<i64>>> {
+        let b = self.cfg.batch;
+        anyhow::ensure!(rows.len() <= b, "batch of {} exceeds artifact batch {b}", rows.len());
+        let f = self.cfg.features;
+        let mut x = vec![0i32; b * f];
+        for (i, row) in rows.iter().enumerate() {
+            anyhow::ensure!(row.len() == f, "row {i}: {} features, expected {f}", row.len());
+            for (j, &v) in row.iter().enumerate() {
+                x[i * f + j] = v as i32;
+            }
+        }
+        let x_lit = xla::Literal::vec1(&x).reshape(&[b as i64, f as i64])?;
+
+        let mut args: Vec<&xla::Literal> = Vec::with_capacity(6);
+        args.push(&x_lit);
+        for l in &self.model_literals {
+            args.push(l);
+        }
+        let result = self.exe.execute::<&xla::Literal>(&args)?[0][0].to_literal_sync()?;
+        let scores = result.to_tuple1()?;
+        let flat = scores.to_vec::<i32>()?;
+        let ng = self.cfg.groups;
+        Ok(rows
+            .iter()
+            .enumerate()
+            .map(|(i, _)| flat[i * ng..(i + 1) * ng].iter().map(|&s| s as i64).collect())
+            .collect())
+    }
+
+    /// Class predictions for up to `cfg.batch` rows (sign for binary,
+    /// argmax ties-low for multiclass — identical to
+    /// [`crate::quantize::QuantModel::predict_class`]).
+    pub fn predict(&self, rows: &[&[u16]]) -> Result<Vec<u32>> {
+        let scores = self.scores(rows)?;
+        Ok(scores.iter().map(|s| decide(s, self.cfg.groups)).collect())
+    }
+
+    /// The bound model tensors (for tests/inspection).
+    pub fn model(&self) -> &ModelTensors {
+        &self.model
+    }
+}
+
+/// Decision rule shared with the quantized predictor.
+pub fn decide(scores: &[i64], n_groups: usize) -> u32 {
+    if n_groups == 1 {
+        (scores[0] >= 0) as u32
+    } else {
+        let mut best = 0usize;
+        for i in 1..scores.len() {
+            if scores[i] > scores[best] {
+                best = i;
+            }
+        }
+        best as u32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn decide_binary_and_multiclass() {
+        assert_eq!(decide(&[0], 1), 1);
+        assert_eq!(decide(&[-1], 1), 0);
+        assert_eq!(decide(&[3, 7, 7], 3), 1); // ties break low
+    }
+}

@@ -1,0 +1,294 @@
+//! Conversion of a [`QuantModel`] into the padded tensor form the AOT
+//! artifact expects (the DESIGN.md §2 padding contract):
+//!
+//! * keys: the model's sorted unique `(feat, thresh)` comparisons, padded
+//!   with `(feat 0, thresh i32::MAX)` — a key that never fires;
+//! * trees: every tree completed to *perfect* depth-`D` heap form (early
+//!   leaves replicated downward); padded trees are all-zero leaves;
+//! * biases: `qb_g` as i32.
+//!
+//! All padding is additive-identity: padded execution is bit-identical to
+//! the unpadded integer predictor (property-tested in rust/tests/).
+
+use super::artifact::ArtifactConfig;
+use crate::quantize::{QuantModel, QuantNode, QuantTree};
+use anyhow::{Context, Result};
+
+/// Padded model tensors ready for literal upload.
+#[derive(Clone, Debug)]
+pub struct ModelTensors {
+    pub cfg: ArtifactConfig,
+    /// `[K]` feature index per key.
+    pub key_feat: Vec<i32>,
+    /// `[K]` threshold per key (padded: i32::MAX).
+    pub key_thresh: Vec<i32>,
+    /// `[T, 2^D−1]` row-major key index per internal node.
+    pub node_key: Vec<i32>,
+    /// `[T, 2^D]` row-major leaf values.
+    pub leaves: Vec<i32>,
+    /// `[NG]` quantized biases.
+    pub bias: Vec<i32>,
+}
+
+impl ModelTensors {
+    /// Build padded tensors for `model` targeting artifact `cfg`.
+    ///
+    /// Errors if the model does not fit the artifact (too many keys/trees,
+    /// too deep, wrong feature count or group count).
+    pub fn from_quant(model: &QuantModel, cfg: &ArtifactConfig) -> Result<ModelTensors> {
+        anyhow::ensure!(
+            model.n_features == cfg.features,
+            "model has {} features, artifact {} expects {}",
+            model.n_features,
+            cfg.name,
+            cfg.features
+        );
+        anyhow::ensure!(
+            model.n_groups == cfg.groups,
+            "model has {} groups, artifact {} expects {}",
+            model.n_groups,
+            cfg.name,
+            cfg.groups
+        );
+        anyhow::ensure!(
+            model.trees.len() <= cfg.trees,
+            "model has {} trees, artifact {} holds {}",
+            model.trees.len(),
+            cfg.name,
+            cfg.trees
+        );
+        // Round-major tree layout must stay aligned with group = t % NG, so
+        // the model's round count must not exceed the padded round count and
+        // trees are placed at their original round-major index.
+        anyhow::ensure!(
+            model.trees.len() % model.n_groups == 0,
+            "model tree count not a multiple of groups"
+        );
+
+        let comparisons = model.unique_comparisons();
+        anyhow::ensure!(
+            comparisons.len() <= cfg.keys,
+            "model uses {} unique keys, artifact {} holds {}",
+            comparisons.len(),
+            cfg.name,
+            cfg.keys
+        );
+        let mut key_feat = vec![0i32; cfg.keys];
+        let mut key_thresh = vec![i32::MAX; cfg.keys];
+        for (i, &(f, t)) in comparisons.iter().enumerate() {
+            key_feat[i] = f as i32;
+            key_thresh[i] = t as i32;
+        }
+        let key_index = |f: u32, t: u32| -> Result<i32> {
+            comparisons
+                .binary_search(&(f, t))
+                .map(|i| i as i32)
+                .map_err(|_| anyhow::anyhow!("comparison ({f},{t}) missing from key table"))
+        };
+
+        let nodes = cfg.nodes();
+        let n_leaves = cfg.leaves();
+        let mut node_key = vec![0i32; cfg.trees * nodes];
+        let mut leaves = vec![0i32; cfg.trees * n_leaves];
+        for (ti, tree) in model.trees.iter().enumerate() {
+            let nk = &mut node_key[ti * nodes..(ti + 1) * nodes];
+            let lv = &mut leaves[ti * n_leaves..(ti + 1) * n_leaves];
+            fill_perfect(tree, 0, 0, 0, cfg.depth, nk, lv, &key_index)
+                .with_context(|| format!("tree {ti} does not fit depth {}", cfg.depth))?;
+        }
+
+        let bias: Vec<i32> = model
+            .biases
+            .iter()
+            .map(|&b| i32::try_from(b).context("bias exceeds i32"))
+            .collect::<Result<_>>()?;
+
+        Ok(ModelTensors { cfg: cfg.clone(), key_feat, key_thresh, node_key, leaves, bias })
+    }
+
+    /// Convert to XLA literals in artifact argument order
+    /// (key_feat, key_thresh, node_key, leaves, bias) — `x` comes first at
+    /// execute time.
+    pub fn to_literals(&self) -> Result<Vec<xla::Literal>> {
+        let cfg = &self.cfg;
+        Ok(vec![
+            xla::Literal::vec1(&self.key_feat),
+            xla::Literal::vec1(&self.key_thresh),
+            xla::Literal::vec1(&self.node_key)
+                .reshape(&[cfg.trees as i64, cfg.nodes() as i64])?,
+            xla::Literal::vec1(&self.leaves)
+                .reshape(&[cfg.trees as i64, cfg.leaves() as i64])?,
+            xla::Literal::vec1(&self.bias),
+        ])
+    }
+}
+
+/// Recursively fill perfect-tree tables from an arbitrary (≤ depth) tree.
+///
+/// `tnode` = current source node, `heap` = current heap position at `d`;
+/// early leaves replicate downward (key 0, both children the same), which
+/// is semantics-preserving because both paths reach the same leaf value.
+#[allow(clippy::too_many_arguments)]
+fn fill_perfect(
+    tree: &QuantTree,
+    tnode: usize,
+    heap: usize,
+    d: usize,
+    depth: usize,
+    nk: &mut [i32],
+    lv: &mut [i32],
+    key_index: &dyn Fn(u32, u32) -> Result<i32>,
+) -> Result<()> {
+    if d == depth {
+        // Must be a leaf by now.
+        match &tree.nodes[tnode] {
+            QuantNode::Leaf { value } => {
+                lv[heap - ((1 << depth) - 1)] = *value as i32;
+                Ok(())
+            }
+            QuantNode::Split { .. } => anyhow::bail!("tree deeper than {depth}"),
+        }
+    } else {
+        match &tree.nodes[tnode] {
+            QuantNode::Split { feat, thresh, left, right } => {
+                nk[heap] = key_index(*feat, *thresh)?;
+                fill_perfect(tree, *left as usize, 2 * heap + 1, d + 1, depth, nk, lv, key_index)?;
+                fill_perfect(tree, *right as usize, 2 * heap + 2, d + 1, depth, nk, lv, key_index)
+            }
+            QuantNode::Leaf { .. } => {
+                nk[heap] = 0;
+                fill_perfect(tree, tnode, 2 * heap + 1, d + 1, depth, nk, lv, key_index)?;
+                fill_perfect(tree, tnode, 2 * heap + 2, d + 1, depth, nk, lv, key_index)
+            }
+        }
+    }
+}
+
+/// Evaluate the perfect-form tables directly (used by property tests to
+/// check `fill_perfect` against [`QuantTree::predict`], and by the
+/// coordinator's CPU fallback path).
+pub fn eval_perfect(
+    node_key: &[i32],
+    leaves: &[i32],
+    keys: &[u8],
+    depth: usize,
+) -> i32 {
+    let mut idx = 0usize;
+    for _ in 0..depth {
+        let k = keys[node_key[idx] as usize] as usize;
+        idx = 2 * idx + 1 + k;
+    }
+    leaves[idx - ((1 << depth) - 1)]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quantize::QuantNode as N;
+
+    fn cfg(keys: usize, trees: usize, depth: usize, groups: usize) -> ArtifactConfig {
+        ArtifactConfig {
+            name: "test".into(),
+            batch: 4,
+            features: 4,
+            keys,
+            trees,
+            depth,
+            groups,
+        }
+    }
+
+    fn shallow_tree() -> QuantTree {
+        // depth 1: x0 >= 2 ? 5 : 0
+        QuantTree {
+            nodes: vec![
+                N::Split { feat: 0, thresh: 2, left: 1, right: 2 },
+                N::Leaf { value: 0 },
+                N::Leaf { value: 5 },
+            ],
+        }
+    }
+
+    fn model_with(trees: Vec<QuantTree>, groups: usize, biases: Vec<i64>) -> QuantModel {
+        QuantModel {
+            trees,
+            n_groups: groups,
+            biases,
+            n_features: 4,
+            w_feature: 4,
+            w_tree: 3,
+            scale: 1.0,
+        }
+    }
+
+    #[test]
+    fn shallow_tree_replicates_leaves() {
+        let m = model_with(vec![shallow_tree()], 1, vec![-3]);
+        let t = ModelTensors::from_quant(&m, &cfg(8, 4, 3, 1)).unwrap();
+        // Padded to depth 3: walking with key=0 everywhere gives leaf 0,
+        // key=1 at root gives 5 regardless of deeper keys.
+        let keys_all0 = vec![0u8; 8];
+        let mut keys_k0 = vec![0u8; 8];
+        // key index of (0,2) is 0 (only comparison).
+        keys_k0[0] = 1;
+        assert_eq!(eval_perfect(&t.node_key[..7], &t.leaves[..8], &keys_all0, 3), 0);
+        assert_eq!(eval_perfect(&t.node_key[..7], &t.leaves[..8], &keys_k0, 3), 5);
+    }
+
+    #[test]
+    fn padded_trees_are_zero() {
+        let m = model_with(vec![shallow_tree()], 1, vec![0]);
+        let t = ModelTensors::from_quant(&m, &cfg(8, 4, 2, 1)).unwrap();
+        assert!(t.leaves[4..].iter().all(|&v| v == 0));
+        assert!(t.node_key[3..].iter().all(|&v| v == 0));
+    }
+
+    #[test]
+    fn padded_keys_never_fire() {
+        let m = model_with(vec![shallow_tree()], 1, vec![0]);
+        let t = ModelTensors::from_quant(&m, &cfg(8, 1, 1, 1)).unwrap();
+        assert_eq!(t.key_thresh[0], 2);
+        assert!(t.key_thresh[1..].iter().all(|&v| v == i32::MAX));
+    }
+
+    #[test]
+    fn too_deep_rejected() {
+        let deep = QuantTree {
+            nodes: vec![
+                N::Split { feat: 0, thresh: 1, left: 1, right: 2 },
+                N::Split { feat: 1, thresh: 1, left: 3, right: 4 },
+                N::Leaf { value: 0 },
+                N::Leaf { value: 1 },
+                N::Leaf { value: 2 },
+            ],
+        };
+        let m = model_with(vec![deep], 1, vec![0]);
+        assert!(ModelTensors::from_quant(&m, &cfg(8, 1, 1, 1)).is_err());
+    }
+
+    #[test]
+    fn too_many_keys_rejected() {
+        let t1 = QuantTree {
+            nodes: vec![
+                N::Split { feat: 0, thresh: 1, left: 1, right: 2 },
+                N::Leaf { value: 0 },
+                N::Leaf { value: 1 },
+            ],
+        };
+        let t2 = QuantTree {
+            nodes: vec![
+                N::Split { feat: 1, thresh: 2, left: 1, right: 2 },
+                N::Leaf { value: 0 },
+                N::Leaf { value: 1 },
+            ],
+        };
+        let m = model_with(vec![t1, t2], 1, vec![0]);
+        assert!(ModelTensors::from_quant(&m, &cfg(1, 4, 2, 1)).is_err());
+    }
+
+    #[test]
+    fn group_mismatch_rejected() {
+        let m = model_with(vec![shallow_tree()], 1, vec![0]);
+        assert!(ModelTensors::from_quant(&m, &cfg(8, 4, 2, 2)).is_err());
+    }
+}

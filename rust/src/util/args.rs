@@ -1,0 +1,141 @@
+//! Minimal CLI argument parser (`clap` is not vendored in this image).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, and positional arguments.
+//! Unknown keys are reported by [`Args::finish`] so typos fail loudly.
+
+use std::collections::BTreeMap;
+
+/// Parsed command-line arguments.
+pub struct Args {
+    kv: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+    consumed: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Args {
+        let mut kv = BTreeMap::new();
+        let mut flags = Vec::new();
+        let mut positional = Vec::new();
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    kv.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    kv.insert(rest.to_string(), v);
+                } else {
+                    flags.push(rest.to_string());
+                }
+            } else {
+                positional.push(a);
+            }
+        }
+        Args { kv, flags, positional, consumed: Vec::new() }
+    }
+
+    /// Parse from the process environment (skips argv[0]).
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    /// Positional arguments.
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    /// String option with default.
+    pub fn get(&mut self, key: &str, default: &str) -> String {
+        self.consumed.push(key.to_string());
+        self.kv.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    /// Optional string option.
+    pub fn opt(&mut self, key: &str) -> Option<String> {
+        self.consumed.push(key.to_string());
+        self.kv.get(key).cloned()
+    }
+
+    /// Typed option with default; panics with a clear message on parse error.
+    pub fn get_as<T: std::str::FromStr>(&mut self, key: &str, default: T) -> T
+    where
+        T::Err: std::fmt::Display,
+    {
+        self.consumed.push(key.to_string());
+        match self.kv.get(key) {
+            None => default,
+            Some(v) => v
+                .parse::<T>()
+                .unwrap_or_else(|e| panic!("--{key}={v}: {e}")),
+        }
+    }
+
+    /// Boolean flag (present or `--key true/false`).
+    pub fn flag(&mut self, key: &str) -> bool {
+        self.consumed.push(key.to_string());
+        if self.flags.iter().any(|f| f == key) {
+            return true;
+        }
+        matches!(self.kv.get(key).map(|s| s.as_str()), Some("true") | Some("1"))
+    }
+
+    /// Error on any unconsumed `--key`; call after all lookups.
+    pub fn finish(&self) -> anyhow::Result<()> {
+        for k in self.kv.keys().chain(self.flags.iter()) {
+            if !self.consumed.iter().any(|c| c == k) {
+                anyhow::bail!("unknown argument --{k}");
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &[&str]) -> Args {
+        Args::parse(s.iter().map(|x| x.to_string()))
+    }
+
+    #[test]
+    fn key_value_pairs() {
+        let mut a = args(&["--seed", "42", "--name=mnist", "train"]);
+        assert_eq!(a.get_as::<u64>("seed", 0), 42);
+        assert_eq!(a.get("name", ""), "mnist");
+        assert_eq!(a.positional(), &["train".to_string()]);
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn flags_and_defaults() {
+        let mut a = args(&["--verbose", "--depth", "5"]);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+        assert_eq!(a.get_as::<usize>("depth", 3), 5);
+        assert_eq!(a.get_as::<usize>("trees", 10), 10);
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn unknown_arg_rejected() {
+        let mut a = args(&["--oops", "1"]);
+        let _ = a.get("seed", "0");
+        assert!(a.finish().is_err());
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let mut a = args(&["--a", "--b", "x"]);
+        assert!(a.flag("a"));
+        assert_eq!(a.get("b", ""), "x");
+        a.finish().unwrap();
+    }
+}

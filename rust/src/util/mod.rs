@@ -1,0 +1,16 @@
+//! Small self-contained utilities: deterministic PRNG, timing, statistics,
+//! and a tiny CLI argument parser.
+//!
+//! The environment vendors no `rand`/`clap`/`criterion`, so these are
+//! hand-rolled; they are deliberately minimal and fully deterministic, which
+//! the reproduction relies on (every experiment is seeded).
+
+pub mod rng;
+pub mod stats;
+pub mod timer;
+pub mod args;
+
+pub use rng::Rng;
+pub use stats::Summary;
+pub use timer::Timer;
+pub use args::Args;

@@ -1,0 +1,104 @@
+//! Summary statistics for benchmark reporting (mean, stddev, percentiles).
+
+/// Summary of a sample of measurements (e.g. latencies in seconds).
+#[derive(Clone, Debug, Default)]
+pub struct Summary {
+    pub count: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+    pub p50: f64,
+    pub p90: f64,
+    pub p99: f64,
+}
+
+impl Summary {
+    /// Compute a summary; sorts a copy of the data.
+    pub fn of(data: &[f64]) -> Summary {
+        if data.is_empty() {
+            return Summary::default();
+        }
+        let mut v = data.to_vec();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = v.len();
+        let mean = v.iter().sum::<f64>() / n as f64;
+        let var = v.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        Summary {
+            count: n,
+            mean,
+            std: var.sqrt(),
+            min: v[0],
+            max: v[n - 1],
+            p50: percentile_sorted(&v, 0.50),
+            p90: percentile_sorted(&v, 0.90),
+            p99: percentile_sorted(&v, 0.99),
+        }
+    }
+
+    /// Render with a unit suffix, e.g. `fmt("us")`.
+    pub fn fmt(&self, unit: &str) -> String {
+        format!(
+            "n={} mean={:.3}{u} p50={:.3}{u} p90={:.3}{u} p99={:.3}{u} max={:.3}{u}",
+            self.count,
+            self.mean,
+            self.p50,
+            self.p90,
+            self.p99,
+            self.max,
+            u = unit
+        )
+    }
+}
+
+/// Nearest-rank percentile on pre-sorted data, `q` in `[0, 1]`.
+pub fn percentile_sorted(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() as f64 - 1.0) * q).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+/// Geometric mean of positive values (used for area-delay ratio summaries).
+pub fn geomean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    (xs.iter().map(|x| x.ln()).sum::<f64>() / xs.len() as f64).exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basic() {
+        let data: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        let s = Summary::of(&data);
+        assert_eq!(s.count, 100);
+        assert!((s.mean - 50.5).abs() < 1e-9);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 100.0);
+        assert!((s.p50 - 50.0).abs() <= 1.0);
+        assert!((s.p99 - 99.0).abs() <= 1.0);
+    }
+
+    #[test]
+    fn summary_empty() {
+        let s = Summary::of(&[]);
+        assert_eq!(s.count, 0);
+        assert_eq!(s.mean, 0.0);
+    }
+
+    #[test]
+    fn geomean_powers() {
+        let g = geomean(&[1.0, 100.0]);
+        assert!((g - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn percentile_single() {
+        assert_eq!(percentile_sorted(&[7.0], 0.99), 7.0);
+    }
+}

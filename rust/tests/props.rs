@@ -1,0 +1,292 @@
+//! Property-based tests over randomly generated models and inputs
+//! (hand-rolled generators on the crate's deterministic PRNG; 30-80 cases
+//! per property, fixed seeds so failures reproduce).
+//!
+//! The central invariant chain of the reproduction:
+//!
+//! ```text
+//! float GBDT ── quantize ──► QuantModel (integer-exact predictor)
+//!      │                         │ == (bit-exact)
+//!      │                   netlist simulation (any pipeline config)
+//!      │                         │ == (bit-exact)
+//!      │                   perfect-tree tensors (runtime padding)
+//! ```
+
+use treelut::gbdt::{GbdtModel, Tree, TreeNode};
+use treelut::netlist::simulate::{InputBatch, Simulator};
+use treelut::netlist::{build_netlist, map_luts};
+use treelut::quantize::quantize_leaves;
+use treelut::rtl::{design_from_quant, Pipeline};
+use treelut::runtime::tensors::eval_perfect;
+use treelut::runtime::{ArtifactConfig, ModelTensors};
+use treelut::util::Rng;
+
+/// Generate a random tree of depth ≤ `depth` over `n_features` features
+/// with `n_bins` quantized levels.
+fn random_tree(rng: &mut Rng, n_features: usize, n_bins: u32, depth: usize) -> Tree {
+    fn grow(
+        rng: &mut Rng,
+        n_features: usize,
+        n_bins: u32,
+        depth: usize,
+        nodes: &mut Vec<TreeNode>,
+    ) -> u32 {
+        let idx = nodes.len() as u32;
+        if depth == 0 || rng.bool(0.3) {
+            let value = (rng.f64() * 4.0 - 2.0) as f32;
+            nodes.push(TreeNode::Leaf { value });
+            return idx;
+        }
+        nodes.push(TreeNode::Leaf { value: 0.0 }); // placeholder
+        let feat = rng.below(n_features) as u32;
+        let thresh = 1 + rng.below((n_bins - 1) as usize) as u32;
+        let left = grow(rng, n_features, n_bins, depth - 1, nodes);
+        let right = grow(rng, n_features, n_bins, depth - 1, nodes);
+        nodes[idx as usize] = TreeNode::Split { feat, thresh, left, right };
+        idx
+    }
+    let mut nodes = Vec::new();
+    grow(rng, n_features, n_bins, depth, &mut nodes);
+    Tree { nodes }
+}
+
+/// Random ensemble: `(model, n_bins)`.
+fn random_model(rng: &mut Rng, multiclass: bool) -> (GbdtModel, u32) {
+    let n_features = 2 + rng.below(6);
+    let w_feature = 1 + rng.below(4) as u8;
+    let n_bins = 1u32 << w_feature;
+    let n_groups = if multiclass { 2 + rng.below(4) } else { 1 };
+    let rounds = 1 + rng.below(4);
+    let depth = 1 + rng.below(4);
+    let trees: Vec<Tree> = (0..rounds * n_groups)
+        .map(|_| random_tree(rng, n_features, n_bins, depth))
+        .collect();
+    let model = GbdtModel {
+        trees,
+        n_groups,
+        base_score: (rng.f64() - 0.5) as f32,
+        n_features,
+        w_feature,
+    };
+    (model, n_bins)
+}
+
+fn random_row(rng: &mut Rng, n_features: usize, n_bins: u32) -> Vec<u16> {
+    (0..n_features).map(|_| rng.below(n_bins as usize) as u16).collect()
+}
+
+/// Netlist simulation equals the integer predictor, over random models,
+/// random pipeline configs, and random inputs.
+#[test]
+fn prop_netlist_equals_quant_predictor() {
+    let mut rng = Rng::new(0xA11CE);
+    for case in 0..60 {
+        let (model, n_bins) = random_model(&mut rng, case % 2 == 0);
+        model.validate().unwrap();
+        let w_tree = 1 + rng.below(5) as u8;
+        let (qm, _) = quantize_leaves(&model, w_tree);
+        qm.validate().unwrap();
+        let pipeline = Pipeline::new(rng.below(2), rng.below(2), rng.below(3));
+        let design = design_from_quant("prop", &qm, pipeline, true);
+        let built = build_netlist(&design);
+        let mut sim = Simulator::new(&built.net);
+
+        let mut batch = InputBatch::new(built.net.n_inputs);
+        let mut expected = Vec::new();
+        for _ in 0..32 {
+            let row = random_row(&mut rng, model.n_features, n_bins);
+            batch.push_features(&row, model.w_feature as usize);
+            expected.push(qm.predict_class(&row));
+        }
+        let out = sim.run(&built.net, &batch);
+        for (lane, &want) in expected.iter().enumerate() {
+            let got = built.class_of(&out, lane);
+            assert_eq!(got, want, "case {case} lane {lane} pipeline {pipeline:?}");
+        }
+    }
+}
+
+/// Perfect-tree tensor padding preserves every tree's function.
+#[test]
+fn prop_perfect_tensors_preserve_tree_semantics() {
+    let mut rng = Rng::new(0xBEEF);
+    for case in 0..60 {
+        let (model, n_bins) = random_model(&mut rng, case % 3 == 0);
+        let (qm, _) = quantize_leaves(&model, 3);
+        let max_depth = qm.trees.iter().map(|t| t.depth()).max().unwrap_or(1).max(1);
+        let comparisons = qm.unique_comparisons();
+        let cfg = ArtifactConfig {
+            name: "prop".into(),
+            batch: 4,
+            features: qm.n_features,
+            keys: comparisons.len().max(1) + rng.below(4),
+            trees: qm.trees.len() + rng.below(3) * qm.n_groups,
+            depth: max_depth + rng.below(2),
+            groups: qm.n_groups,
+        };
+        let tensors = ModelTensors::from_quant(&qm, &cfg).unwrap();
+        let nodes = cfg.nodes();
+        let leaves = cfg.leaves();
+        for _ in 0..16 {
+            let row = random_row(&mut rng, qm.n_features, n_bins);
+            // Key bits per the tensor key table.
+            let keys: Vec<u8> = (0..cfg.keys)
+                .map(|k| {
+                    let f = tensors.key_feat[k] as usize;
+                    (row[f] as i64 >= tensors.key_thresh[k] as i64) as u8
+                })
+                .collect();
+            // Every real tree must evaluate identically in perfect form.
+            for (ti, tree) in qm.trees.iter().enumerate() {
+                let got = eval_perfect(
+                    &tensors.node_key[ti * nodes..(ti + 1) * nodes],
+                    &tensors.leaves[ti * leaves..(ti + 1) * leaves],
+                    &keys,
+                    cfg.depth,
+                );
+                assert_eq!(got, tree.predict(&row) as i32, "case {case} tree {ti}");
+            }
+            // Padded trees must contribute zero.
+            for ti in qm.trees.len()..cfg.trees {
+                let got = eval_perfect(
+                    &tensors.node_key[ti * nodes..(ti + 1) * nodes],
+                    &tensors.leaves[ti * leaves..(ti + 1) * leaves],
+                    &keys,
+                    cfg.depth,
+                );
+                assert_eq!(got, 0, "padded tree {ti} leaked value");
+            }
+        }
+    }
+}
+
+/// Quantization invariants (paper §2.2.2): every tree's min quantized leaf
+/// is 0; the global max hits full scale; high-resolution quantization
+/// preserves every decision.
+#[test]
+fn prop_quantization_invariants() {
+    let mut rng = Rng::new(0xC0FFEE);
+    for case in 0..80 {
+        let (model, n_bins) = random_model(&mut rng, case % 2 == 1);
+        let w_tree = 1 + rng.below(6) as u8;
+        let (qm, report) = quantize_leaves(&model, w_tree);
+        for t in &qm.trees {
+            assert_eq!(t.min_leaf(), 0, "case {case}: local-shift violated");
+        }
+        let global_max = qm.trees.iter().map(|t| t.max_leaf()).max().unwrap();
+        if report.max_shifted_leaf > 0.0 {
+            assert_eq!(global_max, (1u32 << w_tree) - 1, "case {case}: scale not saturated");
+        }
+        // High-resolution quantization preserves every decision whose float
+        // margin exceeds the worst-case rounding error (each of the M
+        // leaves + bias is rounded by ≤ 0.5 after scaling — Eq. 6; a row
+        // sitting closer to the boundary than that can legitimately flip).
+        let (qm_hi, rep) = quantize_leaves(&model, 14);
+        let rounding_budget = 0.5 * (model.n_rounds() + 1) as f64;
+        for _ in 0..16 {
+            let row = random_row(&mut rng, model.n_features, n_bins);
+            let raw = model.predict_raw(&row);
+            let margin_scaled = if model.n_groups == 1 {
+                (raw[0] as f64 * rep.scale).abs()
+            } else {
+                let mut s: Vec<f64> = raw.iter().map(|&v| v as f64 * rep.scale).collect();
+                s.sort_by(|a, b| b.partial_cmp(a).unwrap());
+                s[0] - s[1]
+            };
+            if margin_scaled <= rounding_budget {
+                continue;
+            }
+            assert_eq!(
+                qm_hi.predict_class(&row),
+                model.predict_class(&row),
+                "case {case}: decision flipped outside the rounding budget"
+            );
+        }
+    }
+}
+
+/// LUT mapping invariants: FF count equals pipeline register count and
+/// stage count = cuts + 1.
+#[test]
+fn prop_mapping_stage_structure() {
+    let mut rng = Rng::new(0xD00D);
+    for case in 0..40 {
+        let (model, _) = random_model(&mut rng, case % 2 == 0);
+        let (qm, _) = quantize_leaves(&model, 3);
+        let pipeline = Pipeline::new(rng.below(2), rng.below(2), rng.below(3));
+        let design = design_from_quant("prop", &qm, pipeline, true);
+        let built = build_netlist(&design);
+        let map = map_luts(&built.net);
+        assert_eq!(map.ffs, built.net.n_regs(), "case {case}");
+        // Stage count is at most cuts+1; it can be lower when a whole
+        // pipeline cut lands on constant signals (degenerate models) and
+        // the registers fold away.
+        assert!(
+            map.stage_depths.len() <= built.cuts + 1,
+            "case {case}: {} stages > cuts+1 (cuts={})",
+            map.stage_depths.len(),
+            built.cuts
+        );
+    }
+}
+
+/// The decision output is invariant to pipeline configuration (registers
+/// are functionally transparent at II = 1).
+#[test]
+fn prop_pipeline_functional_invariance() {
+    let mut rng = Rng::new(0xFEED);
+    for case in 0..30 {
+        let (model, n_bins) = random_model(&mut rng, case % 2 == 0);
+        let (qm, _) = quantize_leaves(&model, 4);
+        let rows: Vec<Vec<u16>> =
+            (0..16).map(|_| random_row(&mut rng, qm.n_features, n_bins)).collect();
+        let mut reference: Option<Vec<u32>> = None;
+        for pipeline in [
+            Pipeline::new(0, 0, 0),
+            Pipeline::new(1, 0, 0),
+            Pipeline::new(0, 1, 1),
+            Pipeline::new(1, 1, 2),
+        ] {
+            let design = design_from_quant("prop", &qm, pipeline, true);
+            let built = build_netlist(&design);
+            let mut sim = Simulator::new(&built.net);
+            let mut batch = InputBatch::new(built.net.n_inputs);
+            for row in &rows {
+                batch.push_features(row, qm.w_feature as usize);
+            }
+            let out = sim.run(&built.net, &batch);
+            let preds: Vec<u32> =
+                (0..rows.len()).map(|l| built.class_of(&out, l)).collect();
+            match &reference {
+                None => reference = Some(preds),
+                Some(r) => assert_eq!(&preds, r, "case {case} pipeline {pipeline:?}"),
+            }
+        }
+    }
+}
+
+/// Conifer PTQ baseline: offset re-expression always yields trees whose
+/// netlist matches its own integer predictor too (the baseline rides the
+/// same substrate).
+#[test]
+fn prop_conifer_baseline_netlist_consistent() {
+    let mut rng = Rng::new(0x5EED);
+    for case in 0..30 {
+        let (model, n_bins) = random_model(&mut rng, case % 2 == 0);
+        let qm = treelut::baselines::quantize_leaves_conifer(&model, 8, 4);
+        let design = design_from_quant("conifer", &qm, Pipeline::new(0, 1, 1), true);
+        let built = build_netlist(&design);
+        let mut sim = Simulator::new(&built.net);
+        let mut batch = InputBatch::new(built.net.n_inputs);
+        let mut expected = Vec::new();
+        for _ in 0..16 {
+            let row = random_row(&mut rng, qm.n_features, n_bins);
+            batch.push_features(&row, qm.w_feature as usize);
+            expected.push(qm.predict_class(&row));
+        }
+        let out = sim.run(&built.net, &batch);
+        for (lane, &want) in expected.iter().enumerate() {
+            assert_eq!(built.class_of(&out, lane), want, "case {case}");
+        }
+    }
+}

@@ -1,0 +1,146 @@
+//! End-to-end artifact tests: train → quantize → pad tensors → load HLO via
+//! PJRT → execute, asserting bit-exactness against the pure-Rust integer
+//! predictor on every row.
+//!
+//! Requires `make artifacts` (skips with a clear message otherwise).
+
+use std::path::{Path, PathBuf};
+
+use treelut::coordinator::{BatchPolicy, Server};
+use treelut::data::synth;
+use treelut::gbdt::{train, BoostParams};
+use treelut::quantize::{quantize_leaves, FeatureQuantizer, QuantModel};
+use treelut::runtime::{ArtifactConfig, Engine, Manifest, ModelTensors};
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.txt").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts/ missing — run `make artifacts`");
+        None
+    }
+}
+
+/// Train a model that fits the `tiny` artifact (8 feats, ≤16 keys, ≤8
+/// trees, depth ≤3, binary).
+fn tiny_model() -> (QuantModel, Vec<Vec<u16>>) {
+    let ds = synth::tiny_binary(300, 8, 11);
+    let fq = FeatureQuantizer::fit(&ds, 2); // small bin domain bounds keys
+    let binned = fq.transform(&ds);
+    let params = BoostParams::default().n_estimators(6).max_depth(3).eta(0.5);
+    let model = train(&binned, &ds.y, 2, &params, 2).unwrap();
+    let (qm, _) = quantize_leaves(&model, 3);
+    assert!(qm.unique_comparisons().len() <= 16, "keys overflow tiny config");
+    let rows: Vec<Vec<u16>> = (0..binned.n_rows).map(|i| binned.row(i).to_vec()).collect();
+    (qm, rows)
+}
+
+/// Multiclass model fitting `tiny_mc` (8 feats, ≤24 keys, ≤12 trees = 4
+/// rounds × 3 groups, depth ≤3).
+fn tiny_mc_model() -> (QuantModel, Vec<Vec<u16>>) {
+    let ds = synth::tiny_multiclass(240, 8, 3, 5);
+    let fq = FeatureQuantizer::fit(&ds, 2);
+    let binned = fq.transform(&ds);
+    let params = BoostParams::default().n_estimators(4).max_depth(3).eta(0.5);
+    let model = train(&binned, &ds.y, 3, &params, 2).unwrap();
+    let (qm, _) = quantize_leaves(&model, 3);
+    assert!(qm.unique_comparisons().len() <= 24, "keys overflow tiny_mc config");
+    let rows: Vec<Vec<u16>> = (0..binned.n_rows).map(|i| binned.row(i).to_vec()).collect();
+    (qm, rows)
+}
+
+fn check_engine_matches_quant(
+    dir: &Path,
+    cfg: &ArtifactConfig,
+    qm: &QuantModel,
+    rows: &[Vec<u16>],
+) {
+    let tensors = ModelTensors::from_quant(qm, cfg).unwrap();
+    let engine = Engine::load(dir, cfg, tensors).unwrap();
+    for chunk in rows.chunks(cfg.batch) {
+        let refs: Vec<&[u16]> = chunk.iter().map(|r| r.as_slice()).collect();
+        let got = engine.predict(&refs).unwrap();
+        let scores = engine.scores(&refs).unwrap();
+        for (i, row) in chunk.iter().enumerate() {
+            let want_scores = qm.scores(row);
+            assert_eq!(scores[i], want_scores, "scores diverge on row {i}");
+            assert_eq!(got[i], qm.predict_class(row), "class diverges on row {i}");
+        }
+    }
+}
+
+#[test]
+fn tiny_binary_roundtrip_bit_exact() {
+    let Some(dir) = artifacts_dir() else { return };
+    let manifest = Manifest::load(&dir).unwrap();
+    let cfg = manifest.get("tiny").unwrap();
+    let (qm, rows) = tiny_model();
+    check_engine_matches_quant(&dir, cfg, &qm, &rows);
+}
+
+#[test]
+fn tiny_multiclass_roundtrip_bit_exact() {
+    let Some(dir) = artifacts_dir() else { return };
+    let manifest = Manifest::load(&dir).unwrap();
+    let cfg = manifest.get("tiny_mc").unwrap();
+    let (qm, rows) = tiny_mc_model();
+    check_engine_matches_quant(&dir, cfg, &qm, &rows);
+}
+
+#[test]
+fn partial_batches_match_full_batches() {
+    let Some(dir) = artifacts_dir() else { return };
+    let manifest = Manifest::load(&dir).unwrap();
+    let cfg = manifest.get("tiny").unwrap();
+    let (qm, rows) = tiny_model();
+    let tensors = ModelTensors::from_quant(&qm, cfg).unwrap();
+    let engine = Engine::load(&dir, cfg, tensors).unwrap();
+
+    let refs: Vec<&[u16]> = rows[..cfg.batch].iter().map(|r| r.as_slice()).collect();
+    let full = engine.predict(&refs).unwrap();
+    for take in [1, 3, cfg.batch - 1] {
+        let part = engine.predict(&refs[..take]).unwrap();
+        assert_eq!(part, full[..take], "padding changed results at take={take}");
+    }
+}
+
+#[test]
+fn oversized_batch_rejected() {
+    let Some(dir) = artifacts_dir() else { return };
+    let manifest = Manifest::load(&dir).unwrap();
+    let cfg = manifest.get("tiny").unwrap();
+    let (qm, rows) = tiny_model();
+    let tensors = ModelTensors::from_quant(&qm, cfg).unwrap();
+    let engine = Engine::load(&dir, cfg, tensors).unwrap();
+    let refs: Vec<&[u16]> = rows[..cfg.batch + 1].iter().map(|r| r.as_slice()).collect();
+    assert!(engine.scores(&refs).is_err());
+}
+
+#[test]
+fn served_predictions_match_quant_model() {
+    let Some(dir) = artifacts_dir() else { return };
+    let manifest = Manifest::load(&dir).unwrap();
+    let cfg = manifest.get("tiny").unwrap().clone();
+    let (qm, rows) = tiny_model();
+    let qm_check = qm.clone();
+    let dir2 = dir.clone();
+    let srv = Server::start_with(
+        move || {
+            let tensors = ModelTensors::from_quant(&qm, &cfg)?;
+            Engine::load(&dir2, &cfg, tensors)
+        },
+        BatchPolicy { max_batch: 8, max_wait: std::time::Duration::from_millis(1) },
+    )
+    .unwrap();
+    let rxs: Vec<_> = rows[..64]
+        .iter()
+        .map(|r| srv.submit(r.clone()).unwrap())
+        .collect();
+    for (row, rx) in rows[..64].iter().zip(rxs) {
+        let got = rx.recv().unwrap().unwrap();
+        assert_eq!(got.class, qm_check.predict_class(row));
+    }
+    assert!(srv.stats().mean_batch() >= 1.0);
+    srv.shutdown();
+}
