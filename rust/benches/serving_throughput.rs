@@ -1,31 +1,67 @@
-//! Serving-path benchmark: throughput/latency of the L3 coordinator over
-//! the AOT-compiled PJRT executable (the repo's "inference acceleration"
-//! runtime), swept over offered load and batching policy.
+//! Serving-path benchmark: throughput/latency of the L3 coordinator,
+//! swept over executor kind (enum-walking `CpuExecutor` vs flat-forest
+//! `FlatExecutor`), shard count, and batching policy — the software analogue
+//! of the paper's throughput motivation (II = 1, one prediction per cycle).
 //!
-//! Also reports the raw engine execute rate (batch=64) and the pure-Rust
-//! integer predictor as the software baseline — the analogue of the paper's
-//! throughput motivation.
+//! Two load shapes per configuration:
+//! * **firehose** — submit every request as fast as possible and measure
+//!   completion rows/sec (capacity);
+//! * **Poisson open loop** — measure p50/p99 latency at a fixed offered
+//!   load.
 //!
-//! Requires `make artifacts`. Run: `cargo bench --bench serving_throughput`
+//! The headline check: an N-shard `FlatForest` pool must beat the
+//! single-worker `CpuExecutor` baseline on rows/sec at the same batch
+//! policy.
+//!
+//! The PJRT section (AOT artifact engine) additionally runs when
+//! `artifacts/manifest.txt` exists (`make artifacts`).
+//!
+//! Run: `cargo bench --bench serving_throughput [-- --requests N --rps R]`
 
 use std::path::PathBuf;
+use std::sync::atomic::Ordering;
 use std::time::Duration;
 
-use treelut::coordinator::{BatchPolicy, CpuExecutor, Server, ServingReport};
+use treelut::coordinator::{
+    BatchPolicy, CpuExecutor, FlatExecutor, Server, ServingReport,
+};
 use treelut::data::synth;
 use treelut::exp::configs::design_point;
 use treelut::exp::table::Table;
+use treelut::gbdt::histogram::BinnedMatrix;
 use treelut::gbdt::train;
-use treelut::quantize::{quantize_leaves, FeatureQuantizer, QuantModel};
-use treelut::runtime::{ArtifactConfig, Engine, Manifest, ModelTensors};
-use treelut::util::{Args, Rng, Timer};
+use treelut::quantize::{quantize_leaves, FeatureQuantizer, FlatForest, QuantModel};
+use treelut::runtime::{Engine, Manifest, ModelTensors};
+use treelut::util::{Args, Rng, Summary, Timer};
 
+/// Snapshot of the batch counters, for per-run mean-batch deltas (the same
+/// server serves several runs; lifetime means would mix them).
+struct BatchSnapshot {
+    batches: u64,
+    rows: u64,
+}
+
+fn snapshot(server: &Server) -> BatchSnapshot {
+    BatchSnapshot {
+        batches: server.stats().batches.load(Ordering::Relaxed),
+        rows: server.stats().rows_executed.load(Ordering::Relaxed),
+    }
+}
+
+fn mean_batch_since(server: &Server, before: &BatchSnapshot) -> f64 {
+    let after = snapshot(server);
+    let batches = after.batches - before.batches;
+    if batches == 0 { 0.0 } else { (after.rows - before.rows) as f64 / batches as f64 }
+}
+
+/// Open-loop Poisson arrivals at `rps`; returns the latency report.
 fn poisson_run(
     server: &Server,
-    rows: &treelut::gbdt::histogram::BinnedMatrix,
+    rows: &BinnedMatrix,
     n_requests: usize,
     rps: f64,
 ) -> anyhow::Result<ServingReport> {
+    let before = snapshot(server);
     let mut rng = Rng::new(17);
     let t0 = Timer::start();
     let mut pending = Vec::with_capacity(n_requests);
@@ -42,69 +78,189 @@ fn poisson_run(
     for rx in pending {
         lats.push(rx.recv()??.latency.as_secs_f64());
     }
-    Ok(ServingReport::from_latencies(&lats, t0.secs(), server.stats().mean_batch(), Some(rps)))
+    let mean_batch = mean_batch_since(server, &before);
+    Ok(ServingReport::from_latencies(&lats, t0.secs(), mean_batch, Some(rps))
+        .with_shards(server.n_shards()))
+}
+
+/// Closed-loop firehose: submit everything immediately, measure capacity.
+fn firehose_run(
+    server: &Server,
+    rows: &BinnedMatrix,
+    n_requests: usize,
+) -> anyhow::Result<ServingReport> {
+    let before = snapshot(server);
+    let t0 = Timer::start();
+    let mut pending = Vec::with_capacity(n_requests);
+    for i in 0..n_requests {
+        pending.push(server.submit(rows.row(i % rows.n_rows).to_vec())?);
+    }
+    let mut lats = Vec::with_capacity(n_requests);
+    for rx in pending {
+        lats.push(rx.recv()??.latency.as_secs_f64());
+    }
+    let mean_batch = mean_batch_since(server, &before);
+    Ok(ServingReport::from_latencies(&lats, t0.secs(), mean_batch, None)
+        .with_shards(server.n_shards()))
 }
 
 fn main() -> anyhow::Result<()> {
     let mut args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
-    let n_requests = args.get_as::<usize>("requests", 3_000);
+    let n_requests = args.get_as::<usize>("requests", 20_000);
+    let rps = args.get_as::<f64>("rps", 20_000.0);
+    let rows = args.get_as::<usize>("rows", 4_000);
     args.finish()?;
 
+    // A deliberately heavy model (MNIST (I): 300 trees of depth <= 5 over
+    // 784 features) so serving is executor-bound, not submission-bound.
+    let dp = design_point("mnist", "I").unwrap();
+    let ds = synth::mnist_like(rows, 7);
+    let (train_ds, test_ds) = ds.split(0.2, 1);
+    let fq = FeatureQuantizer::fit(&train_ds, dp.w_feature);
+    let btrain = fq.transform(&train_ds);
+    println!("training mnist (I) model ({} rows)...", train_ds.n_rows);
+    let model = train(&btrain, &train_ds.y, train_ds.n_classes, &dp.params, dp.w_feature)?;
+    let (quant, _) = quantize_leaves(&model, dp.w_tree);
+    let btest = fq.transform(&test_ds);
+    const MAX_BATCH: usize = 64;
+
+    // --- Raw (coordinator-free) predictor rates --------------------------
+    let forest = FlatForest::compile(&quant)?;
+    let batch_rows: Vec<&[u16]> = (0..MAX_BATCH).map(|i| btest.row(i % btest.n_rows)).collect();
+    let iters = 50;
+    let enum_rate = {
+        let samples = treelut::util::timer::bench_loop(iters, || {
+            batch_rows.iter().map(|r| quant.predict_class(r)).collect::<Vec<_>>()
+        });
+        MAX_BATCH as f64 / Summary::of(&samples).p50
+    };
+    let flat_rate = {
+        let samples =
+            treelut::util::timer::bench_loop(iters, || forest.predict_batch(&batch_rows));
+        MAX_BATCH as f64 / Summary::of(&samples).p50
+    };
+    println!(
+        "raw predictor (batch={MAX_BATCH}): enum-tree {enum_rate:.0} rows/s, \
+         flat-forest {flat_rate:.0} rows/s ({:.2}x)",
+        flat_rate / enum_rate
+    );
+
+    // --- Coordinator sweep: executor x shards x batch policy --------------
+    println!("\n== coordinator sweep (firehose capacity + Poisson @ {rps:.0} rps) ==");
+    let mut t = Table::new(&[
+        "executor", "shards", "max_wait", "rows/s", "batch", "p50", "p99",
+    ]);
+    let mut cpu1_capacity = 0.0f64; // single-worker CpuExecutor baseline
+    let mut flat_sharded_capacity = 0.0f64; // best sharded FlatForest
+    for &shards in &[1usize, 2, 4] {
+        for &wait_us in &[100u64, 1_000] {
+            for kind in ["cpu", "flat"] {
+                let policy = BatchPolicy {
+                    max_batch: MAX_BATCH,
+                    max_wait: Duration::from_micros(wait_us),
+                };
+                let server = if kind == "cpu" {
+                    let q = quant.clone();
+                    Server::start_pool_with(
+                        move |_shard| {
+                            Ok(CpuExecutor { model: q.clone(), max_batch: MAX_BATCH })
+                        },
+                        policy,
+                        shards,
+                    )?
+                } else {
+                    // Compile once (done above), clone the tables per shard.
+                    let fo = forest.clone();
+                    Server::start_pool_with(
+                        move |_shard| {
+                            Ok(FlatExecutor { forest: fo.clone(), max_batch: MAX_BATCH })
+                        },
+                        policy,
+                        shards,
+                    )?
+                };
+                let cap = firehose_run(&server, &btest, n_requests)?;
+                let lat = poisson_run(&server, &btest, n_requests.min(2_000), rps)?;
+                if kind == "cpu" && shards == 1 && wait_us == 100 {
+                    cpu1_capacity = cap.throughput;
+                }
+                if kind == "flat" && shards > 1 && wait_us == 100 {
+                    flat_sharded_capacity = flat_sharded_capacity.max(cap.throughput);
+                }
+                t.row(&[
+                    kind.into(),
+                    shards.to_string(),
+                    format!("{wait_us}us"),
+                    format!("{:.0}", cap.throughput),
+                    format!("{:.1}", cap.mean_batch),
+                    format!("{:.0}us", lat.latency.p50 * 1e6),
+                    format!("{:.0}us", lat.latency.p99 * 1e6),
+                ]);
+                server.shutdown();
+            }
+        }
+    }
+    println!("{}", t.render());
+    println!(
+        "headline: sharded FlatForest {flat_sharded_capacity:.0} rows/s vs single-worker \
+         CpuExecutor {cpu1_capacity:.0} rows/s at equal policy -> {:.2}x {}",
+        flat_sharded_capacity / cpu1_capacity,
+        if flat_sharded_capacity > cpu1_capacity { "(sharded flat wins)" } else { "(REGRESSION)" }
+    );
+
+    // --- PJRT engine section (artifact-gated) -----------------------------
     let artifacts = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     if !artifacts.join("manifest.txt").exists() {
-        println!("SKIP serving_throughput: artifacts/ missing (run `make artifacts`)");
+        println!("\nSKIP PJRT section: artifacts/ missing (run `make artifacts`)");
         return Ok(());
     }
-    let manifest = Manifest::load(&artifacts)?;
+    pjrt_section(&artifacts, n_requests.min(3_000))
+}
+
+/// The original PJRT serving sweep over the `jsc` artifact.
+fn pjrt_section(artifacts: &std::path::Path, n_requests: usize) -> anyhow::Result<()> {
+    let manifest = Manifest::load(artifacts)?;
     let cfg = manifest.get("jsc")?.clone();
 
-    // Train the JSC (II) model once.
     let dp = design_point("jsc", "II").unwrap();
     let ds = synth::jsc_like(10_000, 7);
     let (train_ds, test_ds) = ds.split(0.2, 1);
     let fq = FeatureQuantizer::fit(&train_ds, dp.w_feature);
     let btrain = fq.transform(&train_ds);
     let model = train(&btrain, &train_ds.y, train_ds.n_classes, &dp.params, dp.w_feature)?;
-    let (quant, _) = quantize_leaves(&model, dp.w_tree);
+    let (quant, _): (QuantModel, _) = quantize_leaves(&model, dp.w_tree);
     let btest = fq.transform(&test_ds);
 
     // Raw engine execute rate (no coordinator).
     {
         let tensors = ModelTensors::from_quant(&quant, &cfg)?;
-        let engine = Engine::load(&artifacts, &cfg, tensors)?;
+        let engine = match Engine::load(artifacts, &cfg, tensors) {
+            Ok(e) => e,
+            Err(e) if treelut::runtime::pjrt_unavailable(&e) => {
+                println!("\nSKIP PJRT section: {e:#}");
+                return Ok(());
+            }
+            Err(e) => return Err(e),
+        };
         let rows: Vec<&[u16]> = (0..cfg.batch).map(|i| btest.row(i)).collect();
         let iters = 200;
         let samples = treelut::util::timer::bench_loop(iters, || engine.predict(&rows).unwrap());
-        let s = treelut::util::Summary::of(&samples);
+        let s = Summary::of(&samples);
         println!(
-            "raw engine (PJRT, batch={}): {:.0} exec/s -> {:.0} rows/s (p50 {:.0}us/batch)",
+            "\nraw engine (PJRT, batch={}): {:.0} exec/s -> {:.0} rows/s (p50 {:.0}us/batch)",
             cfg.batch,
             1.0 / s.p50,
             cfg.batch as f64 / s.p50,
             s.p50 * 1e6
         );
     }
-    // Software baseline: integer predictor.
-    {
-        let iters = 200;
-        let rows: Vec<&[u16]> = (0..cfg.batch).map(|i| btest.row(i)).collect();
-        let samples = treelut::util::timer::bench_loop(iters, || {
-            rows.iter().map(|r| quant.predict_class(r)).collect::<Vec<_>>()
-        });
-        let s = treelut::util::Summary::of(&samples);
-        println!(
-            "integer predictor (pure rust, batch={}): {:.0} rows/s",
-            cfg.batch,
-            cfg.batch as f64 / s.p50
-        );
-    }
 
-    // Coordinator sweep: offered load x max_wait.
+    // Coordinator sweep over the PJRT engine: offered load x max_wait.
     println!("\n== coordinator sweep (PJRT engine, Poisson open-loop) ==");
     let mut t = Table::new(&["rps", "max_wait", "throughput", "batch", "p50", "p99"]);
     for rps in [1_000.0, 4_000.0, 16_000.0] {
         for wait_us in [100u64, 500, 2_000] {
-            let (q2, c2, a2) = (quant.clone(), cfg.clone(), artifacts.clone());
+            let (q2, c2, a2) = (quant.clone(), cfg.clone(), artifacts.to_path_buf());
             let server = Server::start_with(
                 move || {
                     let tensors = ModelTensors::from_quant(&q2, &c2)?;
@@ -128,17 +284,5 @@ fn main() -> anyhow::Result<()> {
         }
     }
     println!("{}", t.render());
-
-    // CPU-executor coordinator (no PJRT) as the L3-overhead control.
-    println!("== coordinator with pure-Rust executor (L3 overhead control) ==");
-    let qm: QuantModel = quant.clone();
-    let cfg2: ArtifactConfig = cfg.clone();
-    let server = Server::start(
-        CpuExecutor { model: qm, max_batch: cfg2.batch },
-        BatchPolicy { max_batch: cfg2.batch, max_wait: Duration::from_micros(100) },
-    );
-    let rep = poisson_run(&server, &btest, n_requests, 16_000.0)?;
-    println!("cpu executor @16k rps: {}", rep.render());
-    server.shutdown();
     Ok(())
 }

@@ -31,7 +31,7 @@ pub fn quantize_leaves_conifer(
     total_bits: u8,
     frac_bits: u8,
 ) -> QuantModel {
-    assert!(total_bits >= 2 && total_bits <= 24);
+    assert!((2..=24).contains(&total_bits));
     assert!(frac_bits < total_bits);
     let scale = (1i64 << frac_bits) as f64;
     let max_q = (1i64 << (total_bits - 1)) - 1;

@@ -1,13 +1,20 @@
 //! Dynamic batcher: coalesce single-row requests into engine-sized batches
-//! under a latency bound.
+//! under a latency bound, across an N-shard worker pool.
 //!
-//! Policy: the worker blocks for the first request, then drains the queue
-//! until either `max_batch` rows are collected or `max_wait` has elapsed
-//! since the first row of the batch — the classic dynamic-batching tradeoff
-//! (larger batches amortize the execute; the wait bound caps added latency).
+//! Per-shard policy: a worker blocks for the first request on its queue,
+//! then drains it until either `max_batch` rows are collected or `max_wait`
+//! has elapsed since the first row of the batch — the classic
+//! dynamic-batching tradeoff (larger batches amortize the execute; the wait
+//! bound caps added latency).
+//!
+//! Sharding: [`Server`] owns one executor + queue + worker thread per shard
+//! and round-robins submissions across them (the software analogue of
+//! replicating the paper's II = 1 pipeline: each shard keeps one batch in
+//! flight, so N shards sustain N batches concurrently). Stats are kept both
+//! per shard and rolled up into one aggregate [`ServerStats`].
 
 use super::BatchExecutor;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -21,7 +28,7 @@ pub struct Reply {
     pub latency: Duration,
 }
 
-/// Batching policy knobs.
+/// Batching policy knobs (applied independently by every shard).
 #[derive(Clone, Copy, Debug)]
 pub struct BatchPolicy {
     /// Maximum rows per batch (clamped to the executor's `max_batch`).
@@ -42,10 +49,17 @@ struct Job {
     resp: mpsc::Sender<anyhow::Result<Reply>>,
 }
 
-/// Aggregate serving counters (lock-free snapshot).
+/// Serving counters (lock-free snapshot). The server keeps one aggregate
+/// instance plus one per shard; work dispatched to a shard is counted in
+/// both. Width-mismatch rejections happen *before* dispatch and therefore
+/// appear only in the aggregate counters.
 #[derive(Default)]
 pub struct ServerStats {
+    /// Accepted submissions.
     pub requests: AtomicU64,
+    /// Rejected submissions (width mismatch or dead worker) — these never
+    /// reach a queue, so `requests` alone would silently undercount load.
+    pub rejected: AtomicU64,
     pub batches: AtomicU64,
     pub rows_executed: AtomicU64,
     pub exec_nanos: AtomicU64,
@@ -63,73 +77,134 @@ impl ServerStats {
     }
 }
 
-/// A running serving worker with a submission queue.
+/// One shard: its submission queue, worker thread, and counters.
+struct ShardHandle {
+    tx: mpsc::Sender<Job>,
+    worker: std::thread::JoinHandle<()>,
+    stats: Arc<ServerStats>,
+}
+
+/// A running serving pool with per-shard submission queues.
 pub struct Server {
-    tx: Option<mpsc::Sender<Job>>,
-    worker: Option<std::thread::JoinHandle<()>>,
+    shards: Vec<ShardHandle>,
+    /// Round-robin dispatch cursor.
+    next: AtomicUsize,
+    /// Aggregate counters across all shards.
     stats: Arc<ServerStats>,
     n_features: usize,
 }
 
 impl Server {
-    /// Spawn the worker thread owning an executor built by `factory`.
+    /// Spawn a single worker thread owning an executor built by `factory`.
     ///
     /// The factory runs *inside* the worker thread because PJRT executables
-    /// are not `Send`; `start` blocks until construction finishes and
+    /// are not `Send`; `start_with` blocks until construction finishes and
     /// returns the factory's error if it fails.
     pub fn start_with<E, F>(factory: F, policy: BatchPolicy) -> anyhow::Result<Server>
     where
         E: BatchExecutor,
         F: FnOnce() -> anyhow::Result<E> + Send + 'static,
     {
-        let (tx, rx) = mpsc::channel::<Job>();
         let stats = Arc::new(ServerStats::default());
-        let stats_w = Arc::clone(&stats);
-        let (ready_tx, ready_rx) = mpsc::channel::<anyhow::Result<(usize, usize)>>();
-        let max_wait = policy.max_wait;
-        let policy_max = policy.max_batch;
-        let worker = std::thread::spawn(move || {
-            let executor = match factory() {
-                Ok(e) => {
-                    let _ = ready_tx.send(Ok((e.n_features(), e.max_batch())));
-                    e
-                }
-                Err(err) => {
-                    let _ = ready_tx.send(Err(err));
-                    return;
-                }
-            };
-            let max_batch = policy_max.min(executor.max_batch()).max(1);
-            worker_loop(executor, rx, max_batch, max_wait, stats_w);
-        });
-        let (n_features, _max_batch) = ready_rx
-            .recv()
-            .map_err(|_| anyhow::anyhow!("worker died during construction"))??;
-        Ok(Server { tx: Some(tx), worker: Some(worker), stats, n_features })
+        let (shard, n_features) =
+            spawn_shard::<E>(Box::new(factory), policy, Arc::clone(&stats))?;
+        Ok(Server { shards: vec![shard], next: AtomicUsize::new(0), stats, n_features })
     }
 
-    /// Spawn the worker thread owning an already-built (`Send`) executor.
+    /// Spawn a single worker thread owning an already-built (`Send`)
+    /// executor.
     pub fn start<E: BatchExecutor + Send>(executor: E, policy: BatchPolicy) -> Server {
-        Self::start_with(move || Ok(executor), policy)
-            .expect("infallible factory")
+        Self::start_with(move || Ok(executor), policy).expect("infallible factory")
+    }
+
+    /// Spawn an `n_shards`-worker pool; `factory(shard_id)` runs inside each
+    /// worker thread to build that shard's executor. All shards must agree
+    /// on `n_features`. Construction is sequential; the first failure tears
+    /// down the shards already started and returns the error.
+    pub fn start_pool_with<E, F>(
+        factory: F,
+        policy: BatchPolicy,
+        n_shards: usize,
+    ) -> anyhow::Result<Server>
+    where
+        E: BatchExecutor,
+        F: Fn(usize) -> anyhow::Result<E> + Send + Sync + 'static,
+    {
+        anyhow::ensure!(n_shards >= 1, "need at least one shard");
+        let factory = Arc::new(factory);
+        let stats = Arc::new(ServerStats::default());
+        let mut shards: Vec<ShardHandle> = Vec::with_capacity(n_shards);
+        let mut n_features = 0usize;
+        for s in 0..n_shards {
+            let f = Arc::clone(&factory);
+            match spawn_shard::<E>(Box::new(move || (&*f)(s)), policy, Arc::clone(&stats)) {
+                Ok((shard, nf)) => {
+                    if s > 0 && nf != n_features {
+                        teardown(shards);
+                        drop(shard.tx);
+                        let _ = shard.worker.join();
+                        anyhow::bail!(
+                            "shard {s} expects {nf} features, shard 0 expects {n_features}"
+                        );
+                    }
+                    n_features = nf;
+                    shards.push(shard);
+                }
+                Err(e) => {
+                    teardown(shards);
+                    return Err(e.context(format!("starting shard {s}")));
+                }
+            }
+        }
+        Ok(Server { shards, next: AtomicUsize::new(0), stats, n_features })
+    }
+
+    /// Pool over infallibly-constructed executors (`make(shard_id)`).
+    pub fn start_pool<E, F>(
+        make: F,
+        policy: BatchPolicy,
+        n_shards: usize,
+    ) -> anyhow::Result<Server>
+    where
+        E: BatchExecutor,
+        F: Fn(usize) -> E + Send + Sync + 'static,
+    {
+        Self::start_pool_with(move |s| Ok(make(s)), policy, n_shards)
     }
 
     /// Submit one quantized row; returns a receiver for the reply.
+    /// Round-robins over the shard queues, failing over past dead shards (a
+    /// worker that panicked mid-batch) so one crashed worker degrades
+    /// capacity instead of failing every Nth request. Rejections (wrong
+    /// width, every worker dead) are counted in [`ServerStats::rejected`].
     pub fn submit(&self, row: Vec<u16>) -> anyhow::Result<mpsc::Receiver<anyhow::Result<Reply>>> {
-        anyhow::ensure!(
-            row.len() == self.n_features,
-            "row has {} features, server expects {}",
-            row.len(),
-            self.n_features
-        );
+        assert!(!self.shards.is_empty(), "server already shut down");
+        // Validate before touching the dispatch cursor so rejected rows
+        // neither skew round-robin balance nor get charged to a shard they
+        // never reached (width rejections are aggregate-only by design).
+        if row.len() != self.n_features {
+            self.stats.rejected.fetch_add(1, Ordering::Relaxed);
+            anyhow::bail!("row has {} features, server expects {}", row.len(), self.n_features);
+        }
+        let n = self.shards.len();
+        let start = self.next.fetch_add(1, Ordering::Relaxed);
         let (resp_tx, resp_rx) = mpsc::channel();
-        self.tx
-            .as_ref()
-            .expect("server already shut down")
-            .send(Job { row, enqueued: Instant::now(), resp: resp_tx })
-            .map_err(|_| anyhow::anyhow!("server worker terminated"))?;
-        self.stats.requests.fetch_add(1, Ordering::Relaxed);
-        Ok(resp_rx)
+        let mut job = Job { row, enqueued: Instant::now(), resp: resp_tx };
+        for k in 0..n {
+            let shard = &self.shards[(start + k) % n];
+            match shard.tx.send(job) {
+                Ok(()) => {
+                    self.stats.requests.fetch_add(1, Ordering::Relaxed);
+                    shard.stats.requests.fetch_add(1, Ordering::Relaxed);
+                    return Ok(resp_rx);
+                }
+                // The shard's worker is gone; take the job back and try the
+                // next shard.
+                Err(mpsc::SendError(j)) => job = j,
+            }
+        }
+        self.stats.rejected.fetch_add(1, Ordering::Relaxed);
+        anyhow::bail!("all server workers terminated");
     }
 
     /// Convenience: submit and block for the class.
@@ -141,21 +216,29 @@ impl Server {
             .class)
     }
 
-    /// Aggregate counters.
+    /// Aggregate counters across all shards.
     pub fn stats(&self) -> &ServerStats {
         &self.stats
     }
 
-    /// Drain and stop the worker.
+    /// Number of shards in the pool.
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Per-shard counters, in shard order.
+    pub fn shard_stats(&self) -> impl Iterator<Item = &ServerStats> + '_ {
+        self.shards.iter().map(|s| &*s.stats)
+    }
+
+    /// Drain and stop every worker. Queued jobs are still executed and
+    /// their replies delivered before the workers exit.
     pub fn shutdown(mut self) {
         self.shutdown_inner();
     }
 
     fn shutdown_inner(&mut self) {
-        drop(self.tx.take());
-        if let Some(w) = self.worker.take() {
-            let _ = w.join();
-        }
+        teardown(std::mem::take(&mut self.shards));
     }
 }
 
@@ -165,18 +248,73 @@ impl Drop for Server {
     }
 }
 
+/// Drop the senders (ending the workers once their queues drain) and join.
+fn teardown(shards: Vec<ShardHandle>) {
+    // Drop all senders first so every worker sees disconnection promptly,
+    // then join; each worker drains its remaining queue before exiting.
+    let mut workers = Vec::with_capacity(shards.len());
+    for s in shards {
+        drop(s.tx);
+        workers.push(s.worker);
+    }
+    for w in workers {
+        let _ = w.join();
+    }
+}
+
+/// Spawn one shard worker; blocks until its executor is constructed and
+/// returns the shard handle plus the executor's feature count.
+fn spawn_shard<E: BatchExecutor>(
+    factory: Box<dyn FnOnce() -> anyhow::Result<E> + Send>,
+    policy: BatchPolicy,
+    aggregate: Arc<ServerStats>,
+) -> anyhow::Result<(ShardHandle, usize)> {
+    let (tx, rx) = mpsc::channel::<Job>();
+    let stats = Arc::new(ServerStats::default());
+    let stats_w = Arc::clone(&stats);
+    let (ready_tx, ready_rx) = mpsc::channel::<anyhow::Result<(usize, usize)>>();
+    let max_wait = policy.max_wait;
+    let policy_max = policy.max_batch;
+    let worker = std::thread::spawn(move || {
+        let executor = match factory() {
+            Ok(e) => {
+                let _ = ready_tx.send(Ok((e.n_features(), e.max_batch())));
+                e
+            }
+            Err(err) => {
+                let _ = ready_tx.send(Err(err));
+                return;
+            }
+        };
+        let max_batch = policy_max.min(executor.max_batch()).max(1);
+        worker_loop(executor, rx, max_batch, max_wait, aggregate, stats_w);
+    });
+    let ready = ready_rx
+        .recv()
+        .map_err(|_| anyhow::anyhow!("worker died during construction"))
+        .and_then(|r| r);
+    match ready {
+        Ok((n_features, _max_batch)) => Ok((ShardHandle { tx, worker, stats }, n_features)),
+        Err(e) => {
+            let _ = worker.join();
+            Err(e)
+        }
+    }
+}
+
 fn worker_loop<E: BatchExecutor>(
     executor: E,
     rx: mpsc::Receiver<Job>,
     max_batch: usize,
     max_wait: Duration,
-    stats: Arc<ServerStats>,
+    aggregate: Arc<ServerStats>,
+    shard: Arc<ServerStats>,
 ) {
     loop {
         // Block for the head-of-batch request.
         let first = match rx.recv() {
             Ok(j) => j,
-            Err(_) => return, // all senders gone
+            Err(_) => return, // all senders gone and queue drained
         };
         let deadline = Instant::now() + max_wait;
         let mut jobs = vec![first];
@@ -195,9 +333,12 @@ fn worker_loop<E: BatchExecutor>(
         let rows: Vec<&[u16]> = jobs.iter().map(|j| j.row.as_slice()).collect();
         let t0 = Instant::now();
         let result = executor.execute(&rows);
-        stats.exec_nanos.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
-        stats.batches.fetch_add(1, Ordering::Relaxed);
-        stats.rows_executed.fetch_add(jobs.len() as u64, Ordering::Relaxed);
+        let exec_nanos = t0.elapsed().as_nanos() as u64;
+        for stats in [&aggregate, &shard] {
+            stats.exec_nanos.fetch_add(exec_nanos, Ordering::Relaxed);
+            stats.batches.fetch_add(1, Ordering::Relaxed);
+            stats.rows_executed.fetch_add(jobs.len() as u64, Ordering::Relaxed);
+        }
 
         let done = Instant::now();
         match result {
@@ -209,6 +350,7 @@ fn worker_loop<E: BatchExecutor>(
                 }
             }
             Err(e) => {
+                // Fan the batch error out to every job in the batch.
                 for job in jobs {
                     let _ = job.resp.send(Err(anyhow::anyhow!("batch failed: {e}")));
                 }
@@ -224,10 +366,13 @@ mod tests {
     use std::sync::Mutex;
 
     /// Mock executor: class = first feature mod 3; records batch sizes.
+    /// A row with first feature 99 panics the worker when `poison` is set
+    /// (before the lock, so the recorder Mutex never poisons).
     struct Mock {
         batches: Arc<Mutex<Vec<usize>>>,
         max: usize,
         delay: Duration,
+        poison: bool,
     }
 
     impl BatchExecutor for Mock {
@@ -238,6 +383,9 @@ mod tests {
             2
         }
         fn execute(&self, rows: &[&[u16]]) -> anyhow::Result<Vec<u32>> {
+            if self.poison && rows.iter().any(|r| r[0] == 99) {
+                panic!("poison row: simulated executor crash");
+            }
             self.batches.lock().unwrap().push(rows.len());
             if !self.delay.is_zero() {
                 std::thread::sleep(self.delay);
@@ -248,7 +396,8 @@ mod tests {
 
     fn mock(max: usize) -> (Mock, Arc<Mutex<Vec<usize>>>) {
         let batches = Arc::new(Mutex::new(Vec::new()));
-        (Mock { batches: Arc::clone(&batches), max, delay: Duration::ZERO }, batches)
+        let m = Mock { batches: Arc::clone(&batches), max, delay: Duration::ZERO, poison: false };
+        (m, batches)
     }
 
     #[test]
@@ -286,6 +435,7 @@ mod tests {
             batches: Arc::clone(&batches),
             max: 16,
             delay: Duration::from_millis(5), // slow execute → queue builds
+            poison: false,
         };
         let srv = Server::start(
             m,
@@ -303,10 +453,13 @@ mod tests {
     }
 
     #[test]
-    fn rejects_wrong_width() {
+    fn rejects_wrong_width_and_counts_it() {
         let (m, _) = mock(4);
         let srv = Server::start(m, BatchPolicy::default());
         assert!(srv.submit(vec![1, 2, 3]).is_err());
+        assert!(srv.submit(vec![7]).is_err());
+        assert_eq!(srv.stats().rejected.load(Ordering::Relaxed), 2);
+        assert_eq!(srv.stats().requests.load(Ordering::Relaxed), 0);
         srv.shutdown();
     }
 
@@ -320,8 +473,84 @@ mod tests {
         let s = srv.stats();
         assert_eq!(s.requests.load(Ordering::Relaxed), 10);
         assert_eq!(s.rows_executed.load(Ordering::Relaxed), 10);
+        assert_eq!(s.rejected.load(Ordering::Relaxed), 0);
         assert!(s.mean_batch() >= 1.0);
         srv.shutdown();
+    }
+
+    #[test]
+    fn pool_round_robins_and_rolls_up_stats() {
+        let srv = Server::start_pool(
+            |_shard| Mock {
+                batches: Arc::new(Mutex::new(Vec::new())),
+                max: 8,
+                delay: Duration::ZERO,
+                poison: false,
+            },
+            BatchPolicy::default(),
+            4,
+        )
+        .unwrap();
+        assert_eq!(srv.n_shards(), 4);
+        let rxs: Vec<_> = (0..40u16).map(|v| srv.submit(vec![v, 0]).unwrap()).collect();
+        for (v, rx) in rxs.into_iter().enumerate() {
+            assert_eq!(rx.recv().unwrap().unwrap().class, (v % 3) as u32);
+        }
+        // Round-robin: every shard saw exactly 10 accepted requests.
+        for shard in srv.shard_stats() {
+            assert_eq!(shard.requests.load(Ordering::Relaxed), 10);
+        }
+        assert_eq!(srv.stats().requests.load(Ordering::Relaxed), 40);
+        assert_eq!(srv.stats().rows_executed.load(Ordering::Relaxed), 40);
+        srv.shutdown();
+    }
+
+    #[test]
+    fn failover_routes_around_dead_shard() {
+        let srv = Server::start_pool(
+            |_shard| {
+                let (mut m, _) = mock(1); // batch of 1: only the poison row dies
+                m.poison = true;
+                m
+            },
+            BatchPolicy { max_batch: 1, max_wait: Duration::from_micros(10) },
+            2,
+        )
+        .unwrap();
+        // Kill one worker: its reply channel drops during the unwind.
+        let rx = srv.submit(vec![99, 0]).unwrap();
+        assert!(rx.recv().is_err(), "poisoned batch must drop its reply");
+        // Let the unwind finish dropping the dead worker's queue receiver,
+        // so later sends to that shard fail (and fail over) deterministically.
+        std::thread::sleep(Duration::from_millis(50));
+        // Every subsequent request still gets served via failover
+        // (recv_timeout so a lost request fails the test instead of hanging).
+        for v in 0..10u16 {
+            let rx = srv.submit(vec![v, 0]).unwrap();
+            let reply = rx
+                .recv_timeout(Duration::from_secs(5))
+                .expect("request lost on a dead shard")
+                .unwrap();
+            assert_eq!(reply.class, (v % 3) as u32);
+        }
+        assert_eq!(srv.stats().rejected.load(Ordering::Relaxed), 0);
+        srv.shutdown();
+    }
+
+    #[test]
+    fn pool_factory_error_propagates() {
+        let r = Server::start_pool_with::<Mock, _>(
+            |shard| {
+                if shard == 1 {
+                    anyhow::bail!("shard 1 refuses to start")
+                }
+                let (m, _) = mock(4);
+                Ok(m)
+            },
+            BatchPolicy::default(),
+            2,
+        );
+        assert!(r.is_err());
     }
 
     #[test]

@@ -8,16 +8,19 @@ use crate::util::Summary;
 pub struct ServingReport {
     /// Per-request end-to-end latency summary (seconds).
     pub latency: Summary,
-    /// Requests completed per second.
+    /// Requests completed per second (one row per request: also rows/sec).
     pub throughput: f64,
     /// Mean rows per executed batch.
     pub mean_batch: f64,
     /// Offered load (requests per second), if known.
     pub offered_rps: Option<f64>,
+    /// Worker shards serving the run (1 = the single-worker baseline).
+    pub shards: usize,
 }
 
 impl ServingReport {
-    /// Build from raw per-request latencies and the wall-clock span.
+    /// Build from raw per-request latencies and the wall-clock span
+    /// (single-shard by default; see [`ServingReport::with_shards`]).
     pub fn from_latencies(
         lat_secs: &[f64],
         wall_secs: f64,
@@ -29,14 +32,23 @@ impl ServingReport {
             throughput: if wall_secs > 0.0 { lat_secs.len() as f64 / wall_secs } else { 0.0 },
             mean_batch,
             offered_rps,
+            shards: 1,
         }
+    }
+
+    /// Record the shard count of the serving pool that produced this run.
+    pub fn with_shards(mut self, shards: usize) -> ServingReport {
+        self.shards = shards;
+        self
     }
 
     /// One-line human-readable rendering (microsecond latencies).
     pub fn render(&self) -> String {
         let us = |s: f64| s * 1e6;
+        let shards =
+            if self.shards > 1 { format!(" shards={}", self.shards) } else { String::new() };
         format!(
-            "thru={:.0} req/s{} batch={:.1} lat p50={:.0}us p90={:.0}us p99={:.0}us max={:.0}us",
+            "thru={:.0} rows/s{}{shards} batch={:.1} lat p50={:.0}us p90={:.0}us p99={:.0}us max={:.0}us",
             self.throughput,
             self.offered_rps.map(|r| format!(" (offered {r:.0})")).unwrap_or_default(),
             self.mean_batch,
@@ -67,5 +79,15 @@ mod tests {
     fn zero_wall_clock() {
         let r = ServingReport::from_latencies(&[], 0.0, 0.0, None);
         assert_eq!(r.throughput, 0.0);
+    }
+
+    #[test]
+    fn shard_count_rendering() {
+        let r = ServingReport::from_latencies(&[0.001; 10], 1.0, 2.0, None);
+        assert_eq!(r.shards, 1);
+        assert!(!r.render().contains("shards="));
+        let r4 = r.with_shards(4);
+        assert_eq!(r4.shards, 4);
+        assert!(r4.render().contains("shards=4"));
     }
 }

@@ -3,15 +3,17 @@
 //!
 //! The paper motivates GBDT accelerators with ultra-low-latency / high-
 //! throughput serving; this module is the software-serving analogue around
-//! the AOT-compiled forward pass (the vLLM-router shape scaled to this
-//! paper): clients submit single rows, the [`batcher`] coalesces them into
-//! engine-sized batches under a latency bound (II = 1 equivalent: one batch
-//! in flight at a time per worker), and [`metrics`] reports p50/p99 and
-//! throughput.
+//! the quantized forward pass (the vLLM-router shape scaled to this paper):
+//! clients submit single rows, the [`batcher`] round-robins them across an
+//! N-shard worker pool and coalesces each shard's queue into engine-sized
+//! batches under a latency bound (II = 1 equivalent: one batch in flight at
+//! a time per shard, N batches in flight across the pool), and [`metrics`]
+//! reports p50/p99 and throughput.
 //!
 //! The coordinator is generic over [`BatchExecutor`] so unit tests run
 //! against a deterministic mock and the serving path runs against
-//! [`crate::runtime::Engine`].
+//! [`FlatExecutor`] (the flat-forest CPU engine) or
+//! [`crate::runtime::Engine`] (the AOT PJRT artifact).
 
 pub mod batcher;
 pub mod metrics;
@@ -22,8 +24,8 @@ pub use metrics::ServingReport;
 /// Anything that can classify a batch of quantized rows.
 ///
 /// Not required to be `Send`: the PJRT executable holds raw pointers, so
-/// [`batcher::Server`] constructs the executor *inside* its worker thread
-/// from a `Send` factory closure.
+/// [`batcher::Server`] constructs each shard's executor *inside* its worker
+/// thread from a `Send` factory closure.
 pub trait BatchExecutor: 'static {
     /// Maximum rows per call.
     fn max_batch(&self) -> usize;
@@ -45,8 +47,10 @@ impl BatchExecutor for crate::runtime::Engine {
     }
 }
 
-/// A [`BatchExecutor`] backed by the pure-Rust integer predictor — the
-/// no-PJRT fallback and the reference the engine is tested against.
+/// A [`BatchExecutor`] backed by the pure-Rust enum-tree predictor
+/// ([`crate::quantize::QuantModel::predict_class`]) — the reference
+/// implementation and the serving baseline the flat executor is benchmarked
+/// against (`benches/serving_throughput.rs`).
 pub struct CpuExecutor {
     pub model: crate::quantize::QuantModel,
     pub max_batch: usize,
@@ -61,5 +65,37 @@ impl BatchExecutor for CpuExecutor {
     }
     fn execute(&self, rows: &[&[u16]]) -> anyhow::Result<Vec<u32>> {
         Ok(rows.iter().map(|r| self.model.predict_class(r)).collect())
+    }
+}
+
+/// A [`BatchExecutor`] backed by [`crate::quantize::FlatForest`]: the
+/// structure-of-arrays compilation of the model with branchless descent and
+/// trees-outer/rows-inner batch evaluation. This is the default CPU serving
+/// engine; it is bit-exact against [`CpuExecutor`] (property-tested in
+/// `tests/props.rs`) and measurably faster on every batch size.
+pub struct FlatExecutor {
+    pub forest: crate::quantize::FlatForest,
+    pub max_batch: usize,
+}
+
+impl FlatExecutor {
+    /// Compile `model` into a flat executor.
+    pub fn new(
+        model: &crate::quantize::QuantModel,
+        max_batch: usize,
+    ) -> anyhow::Result<FlatExecutor> {
+        Ok(FlatExecutor { forest: crate::quantize::FlatForest::compile(model)?, max_batch })
+    }
+}
+
+impl BatchExecutor for FlatExecutor {
+    fn max_batch(&self) -> usize {
+        self.max_batch
+    }
+    fn n_features(&self) -> usize {
+        self.forest.n_features()
+    }
+    fn execute(&self, rows: &[&[u16]]) -> anyhow::Result<Vec<u32>> {
+        Ok(self.forest.predict_batch(rows))
     }
 }

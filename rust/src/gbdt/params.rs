@@ -61,7 +61,7 @@ impl BoostParams {
     /// Validate ranges.
     pub fn validate(&self) -> anyhow::Result<()> {
         anyhow::ensure!(self.n_estimators > 0, "n_estimators must be > 0");
-        anyhow::ensure!(self.max_depth >= 1 && self.max_depth <= 10, "max_depth in 1..=10");
+        anyhow::ensure!((1..=10).contains(&self.max_depth), "max_depth in 1..=10");
         anyhow::ensure!(self.eta > 0.0 && self.eta <= 1.0, "eta in (0,1]");
         anyhow::ensure!(self.lambda >= 0.0, "lambda >= 0");
         anyhow::ensure!(self.scale_pos_weight > 0.0, "scale_pos_weight > 0");

@@ -244,7 +244,7 @@ mod tests {
         let params = BoostParams::default().n_estimators(8).max_depth(4);
         let (model, _) = train_on(&ds, &params, 3);
         for (_, t) in model.unique_comparisons() {
-            assert!(t >= 1 && t <= 7, "threshold {t} outside 1..=2^3-1");
+            assert!((1..=7).contains(&t), "threshold {t} outside 1..=2^3-1");
         }
     }
 

@@ -9,18 +9,19 @@
 //!     train a float GBDT and save it
 //! treelut datasets
 //!     print the evaluation datasets (paper Table 4)
-//! treelut serve [--config jsc] [--requests N] [--rps R]
-//!     batched serving over the AOT PJRT artifact (needs `make artifacts`)
+//! treelut serve [--config jsc] [--requests N] [--rps R] [--shards S]
+//!     batched serving over an N-shard pool: the AOT PJRT artifact when
+//!     available (`make artifacts`), the flat-forest CPU executor otherwise
 //! ```
 
 use std::path::PathBuf;
 
-use treelut::coordinator::{BatchPolicy, Server, ServingReport};
+use treelut::coordinator::{BatchPolicy, FlatExecutor, Server, ServingReport};
 use treelut::data::synth;
 use treelut::exp::configs::{default_rows, design_point};
 use treelut::exp::{run_design_point, RunOptions};
 use treelut::gbdt::train;
-use treelut::quantize::{quantize_leaves, FeatureQuantizer};
+use treelut::quantize::{quantize_leaves, FeatureQuantizer, FlatForest};
 use treelut::rtl::{design_from_quant, verilog::emit_verilog};
 use treelut::runtime::{Engine, Manifest, ModelTensors};
 use treelut::util::{Args, Rng, Timer};
@@ -29,7 +30,7 @@ const USAGE: &str = "usage: treelut <flow|train|datasets|serve> [options]
   flow      --dataset <mnist|jsc|nid> [--variant I|II] [--rows N] [--seed S] [--out DIR] [--bypass-keygen]
   train     --dataset <mnist|jsc|nid> [--variant I|II] [--rows N] [--seed S] --out FILE
   datasets
-  serve     [--config jsc] [--requests N] [--rps R] [--rows N] [--max-wait-us U]";
+  serve     [--config jsc] [--requests N] [--rps R] [--rows N] [--max-wait-us U] [--shards S]";
 
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env();
@@ -129,11 +130,17 @@ fn cmd_serve(mut args: Args) -> anyhow::Result<()> {
     let offered_rps = args.get_as::<f64>("rps", 4_000.0);
     let rows = args.get_as::<usize>("rows", 8_000);
     let max_wait_us = args.get_as::<u64>("max-wait-us", 500);
+    let shards = args.get_as::<usize>("shards", 1);
     args.finish()?;
 
     let artifacts = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    let manifest = Manifest::load(&artifacts)?;
-    let cfg = manifest.get(&config)?.clone();
+    // The AOT PJRT engine serves when artifacts exist and PJRT is linked;
+    // otherwise the flat-forest CPU executor serves the same API.
+    let engine_cfg = if artifacts.join("manifest.txt").exists() {
+        Some(Manifest::load(&artifacts)?.get(&config)?.clone())
+    } else {
+        None
+    };
     let variant = if config == "jsc" { "II" } else { "I" };
     let dp = design_point(&config, variant)
         .ok_or_else(|| anyhow::anyhow!("no Table 2 config for {config}"))?;
@@ -147,19 +154,49 @@ fn cmd_serve(mut args: Args) -> anyhow::Result<()> {
     let (quant, _) = quantize_leaves(&model, dp.w_tree);
     let btest = fq.transform(&test_ds);
 
-    let q2 = quant.clone();
-    let cfg2 = cfg.clone();
-    let art2 = artifacts.clone();
-    let server = Server::start_with(
-        move || {
-            let tensors = ModelTensors::from_quant(&q2, &cfg2)?;
-            Engine::load(&art2, &cfg2, tensors)
-        },
-        BatchPolicy {
-            max_batch: cfg.batch,
-            max_wait: std::time::Duration::from_micros(max_wait_us),
-        },
-    )?;
+    let max_batch = engine_cfg.as_ref().map(|c| c.batch).unwrap_or(64);
+    let policy = BatchPolicy {
+        max_batch,
+        max_wait: std::time::Duration::from_micros(max_wait_us),
+    };
+    // Fallback pool: compile the flat forest once (lazily — only when the
+    // PJRT engine cannot serve), then each shard clones the finished tables.
+    let quant_flat = quant.clone();
+    let flat_server = move || -> anyhow::Result<Server> {
+        let flat_forest = FlatForest::compile(&quant_flat)?;
+        Server::start_pool_with(
+            move |_shard| Ok(FlatExecutor { forest: flat_forest.clone(), max_batch }),
+            policy,
+            shards,
+        )
+    };
+    let server = match engine_cfg {
+        Some(cfg) => {
+            let q2 = quant.clone();
+            let cfg2 = cfg.clone();
+            let art2 = artifacts.clone();
+            let started = Server::start_pool_with(
+                move |_shard| {
+                    let tensors = ModelTensors::from_quant(&q2, &cfg2)?;
+                    Engine::load(&art2, &cfg2, tensors)
+                },
+                policy,
+                shards,
+            );
+            match started {
+                Ok(s) => s,
+                Err(e) if treelut::runtime::pjrt_unavailable(&e) => {
+                    eprintln!("PJRT unavailable; serving with the flat-forest CPU executor");
+                    flat_server()?
+                }
+                Err(e) => return Err(e),
+            }
+        }
+        None => {
+            eprintln!("artifacts/ missing (run `make artifacts`); serving with the flat-forest CPU executor");
+            flat_server()?
+        }
+    };
 
     let mut rng = Rng::new(3);
     let t0 = Timer::start();
@@ -177,7 +214,8 @@ fn cmd_serve(mut args: Args) -> anyhow::Result<()> {
         t0.secs(),
         server.stats().mean_batch(),
         Some(offered_rps),
-    );
+    )
+    .with_shards(server.n_shards());
     println!("{}", report.render());
     server.shutdown();
     Ok(())

@@ -1,0 +1,351 @@
+//! Flat, cache-friendly compilation of a [`QuantModel`] — the serving-path
+//! executor.
+//!
+//! [`QuantTree::predict`] walks a `Vec<QuantNode>` of enum nodes: every step
+//! is a discriminant match plus a pointer chase through per-tree heap
+//! allocations scattered across the model. That is fine for the tool flow,
+//! but the coordinator's hot path calls it once per tree per request.
+//! [`FlatForest`] compiles the whole ensemble once into four contiguous
+//! structure-of-arrays node tables (`feat`, `thresh`, `left`, `right`):
+//!
+//! * **leaves are sentinel child indices** — a child code with [`LEAF_BIT`]
+//!   set carries the leaf value in its low bits, so descent never inspects a
+//!   node discriminant;
+//! * **descent is branchless** — the comparison result selects the child by
+//!   mask arithmetic instead of a data-dependent branch (the software
+//!   analogue of the paper's key→mux datapath, Fig. 6);
+//! * **batch evaluation is trees-outer / rows-inner** — a tree's nodes stay
+//!   cache-resident while a run of rows streams through it, instead of
+//!   re-faulting the whole model per row.
+//!
+//! Bit-exactness against the enum predictor over random models is part of
+//! the crate's central invariant chain (`tests/props.rs`).
+
+use super::model::{QuantModel, QuantNode};
+
+/// High bit of a child code: set = the code is a leaf, low bits = its value.
+const LEAF_BIT: u32 = 1 << 31;
+
+/// A [`QuantModel`] compiled to flat node tables. Immutable once built;
+/// cheap to clone per serving shard (the tables are `Arc`-free by design so
+/// each shard owns its copy and no cross-shard cache-line sharing occurs).
+#[derive(Clone, Debug)]
+pub struct FlatForest {
+    /// Per split node: feature index tested.
+    feat: Vec<u32>,
+    /// Per split node: threshold (`x[feat] >= thresh` goes right).
+    thresh: Vec<u32>,
+    /// Per split node: child code when the comparison is false.
+    left: Vec<u32>,
+    /// Per split node: child code when the comparison is true.
+    right: Vec<u32>,
+    /// Per tree: root child code (may itself be a leaf for constant trees).
+    roots: Vec<u32>,
+    /// Per group quantized bias `qb_g`.
+    biases: Vec<i64>,
+    n_groups: usize,
+    n_features: usize,
+}
+
+impl FlatForest {
+    /// Compile `model` into flat tables.
+    ///
+    /// The model is validated structurally (child indices in range, leaf
+    /// values and node counts fit the sentinel encoding) so that descent can
+    /// skip those checks.
+    pub fn compile(model: &QuantModel) -> anyhow::Result<FlatForest> {
+        anyhow::ensure!(model.n_groups >= 1, "model needs at least one group");
+        anyhow::ensure!(
+            model.biases.len() == model.n_groups,
+            "bias count {} != group count {}",
+            model.biases.len(),
+            model.n_groups
+        );
+        anyhow::ensure!(
+            model.trees.len() % model.n_groups == 0,
+            "tree count not a multiple of groups"
+        );
+        let total_nodes: usize = model.trees.iter().map(|t| t.nodes.len()).sum();
+        anyhow::ensure!(
+            (total_nodes as u64) < LEAF_BIT as u64,
+            "ensemble too large for the flat encoding ({total_nodes} nodes)"
+        );
+
+        let mut forest = FlatForest {
+            feat: Vec::with_capacity(total_nodes),
+            thresh: Vec::with_capacity(total_nodes),
+            left: Vec::with_capacity(total_nodes),
+            right: Vec::with_capacity(total_nodes),
+            roots: Vec::with_capacity(model.trees.len()),
+            biases: model.biases.clone(),
+            n_groups: model.n_groups,
+            n_features: model.n_features,
+        };
+
+        for (ti, tree) in model.trees.iter().enumerate() {
+            anyhow::ensure!(!tree.nodes.is_empty(), "tree {ti} is empty");
+            // Reject cycles and DAG sharing up front: walking from the root,
+            // every node may be reached at most once (same contract as
+            // `gbdt::Tree::validate`). This is what lets `descend` loop
+            // without a visited set or depth bound.
+            let mut seen = vec![false; tree.nodes.len()];
+            let mut stack = vec![0usize];
+            while let Some(i) = stack.pop() {
+                anyhow::ensure!(
+                    !seen[i],
+                    "tree {ti}: node {i} reached twice (cycle or DAG)"
+                );
+                seen[i] = true;
+                if let QuantNode::Split { left, right, .. } = &tree.nodes[i] {
+                    for child in [*left as usize, *right as usize] {
+                        anyhow::ensure!(
+                            child < tree.nodes.len(),
+                            "tree {ti} node {i}: child {child} out of range"
+                        );
+                        stack.push(child);
+                    }
+                }
+            }
+            // Pass 1: assign each local node its child code — split nodes get
+            // the next flat slot, leaves get the sentinel-encoded value.
+            let mut code = vec![0u32; tree.nodes.len()];
+            let mut next = forest.feat.len() as u32;
+            for (i, node) in tree.nodes.iter().enumerate() {
+                match node {
+                    QuantNode::Split { .. } => {
+                        code[i] = next;
+                        next += 1;
+                    }
+                    QuantNode::Leaf { value } => {
+                        anyhow::ensure!(
+                            *value < LEAF_BIT,
+                            "tree {ti}: leaf value {value} exceeds the sentinel encoding"
+                        );
+                        code[i] = LEAF_BIT | *value;
+                    }
+                }
+            }
+            // Pass 2: emit the split nodes in local order.
+            for (i, node) in tree.nodes.iter().enumerate() {
+                if let QuantNode::Split { feat, thresh, left, right } = node {
+                    anyhow::ensure!(
+                        (*feat as usize) < model.n_features,
+                        "tree {ti} node {i}: feature {feat} out of range"
+                    );
+                    // Unreachable split nodes skip the DFS above, so their
+                    // children must still be range-checked before indexing.
+                    anyhow::ensure!(
+                        (*left as usize) < tree.nodes.len()
+                            && (*right as usize) < tree.nodes.len(),
+                        "tree {ti} node {i}: child index out of range"
+                    );
+                    forest.feat.push(*feat);
+                    forest.thresh.push(*thresh);
+                    forest.left.push(code[*left as usize]);
+                    forest.right.push(code[*right as usize]);
+                }
+            }
+            forest.roots.push(code[0]);
+        }
+        Ok(forest)
+    }
+
+    /// Number of trees (round-major over groups, like [`QuantModel`]).
+    pub fn n_trees(&self) -> usize {
+        self.roots.len()
+    }
+
+    /// Split-node count across the ensemble.
+    pub fn n_nodes(&self) -> usize {
+        self.feat.len()
+    }
+
+    /// Input feature count.
+    pub fn n_features(&self) -> usize {
+        self.n_features
+    }
+
+    /// Score group count (1 = binary).
+    pub fn n_groups(&self) -> usize {
+        self.n_groups
+    }
+
+    /// Branchless descent from a child code to a leaf value.
+    #[inline]
+    fn descend(&self, root: u32, x: &[u16]) -> u32 {
+        let mut code = root;
+        while code & LEAF_BIT == 0 {
+            let i = code as usize;
+            let go_right = (x[self.feat[i] as usize] as u32 >= self.thresh[i]) as u32;
+            // mask = all-ones when the comparison is true: select right.
+            let mask = go_right.wrapping_neg();
+            code = (self.left[i] & !mask) | (self.right[i] & mask);
+        }
+        code & !LEAF_BIT
+    }
+
+    /// Evaluate one tree on a row — identical to
+    /// [`crate::quantize::QuantTree::predict`] on the source tree.
+    pub fn eval_tree(&self, tree: usize, x: &[u16]) -> u32 {
+        assert_eq!(x.len(), self.n_features, "row width mismatch");
+        self.descend(self.roots[tree], x)
+    }
+
+    /// Integer scores `QF_g(X)` for one row (= [`QuantModel::scores`]).
+    pub fn scores(&self, x: &[u16]) -> Vec<i64> {
+        assert_eq!(x.len(), self.n_features, "row width mismatch");
+        let mut s = self.biases.clone();
+        for (t, &root) in self.roots.iter().enumerate() {
+            s[t % self.n_groups] += self.descend(root, x) as i64;
+        }
+        s
+    }
+
+    /// Class prediction for one row (= [`QuantModel::predict_class`]).
+    pub fn predict(&self, x: &[u16]) -> u32 {
+        crate::runtime::decide(&self.scores(x), self.n_groups)
+    }
+
+    /// Row-major `[rows.len() * n_groups]` scores for a batch, iterating
+    /// trees-outer / rows-inner: the hot tree's nodes stay cache-resident
+    /// while the rows stream through it.
+    pub fn scores_batch(&self, rows: &[&[u16]]) -> Vec<i64> {
+        let ng = self.n_groups;
+        let mut scores = Vec::with_capacity(rows.len() * ng);
+        for row in rows {
+            // Hard check (mirrors `QuantModel::predict_batch`): a short row
+            // would otherwise read out of bounds mid-descent in a worker.
+            assert_eq!(row.len(), self.n_features, "row width mismatch");
+            scores.extend_from_slice(&self.biases);
+        }
+        for (t, &root) in self.roots.iter().enumerate() {
+            let g = t % ng;
+            for (r, row) in rows.iter().enumerate() {
+                scores[r * ng + g] += self.descend(root, row) as i64;
+            }
+        }
+        scores
+    }
+
+    /// Batch class prediction — the serving entry point.
+    pub fn predict_batch(&self, rows: &[&[u16]]) -> Vec<u32> {
+        let scores = self.scores_batch(rows);
+        scores
+            .chunks_exact(self.n_groups.max(1))
+            .map(|s| crate::runtime::decide(s, self.n_groups))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quantize::{QuantNode as N, QuantTree};
+
+    fn split(feat: u32, thresh: u32, left: u32, right: u32) -> N {
+        N::Split { feat, thresh, left, right }
+    }
+
+    fn binary_model() -> QuantModel {
+        // tree 0: x0 >= 2 ? (x1 >= 1 ? 7 : 3) : 0
+        // tree 1: constant leaf 2
+        QuantModel {
+            trees: vec![
+                QuantTree {
+                    nodes: vec![
+                        split(0, 2, 1, 2),
+                        N::Leaf { value: 0 },
+                        split(1, 1, 3, 4),
+                        N::Leaf { value: 3 },
+                        N::Leaf { value: 7 },
+                    ],
+                },
+                QuantTree { nodes: vec![N::Leaf { value: 2 }] },
+            ],
+            n_groups: 1,
+            biases: vec![-6],
+            n_features: 2,
+            w_feature: 2,
+            w_tree: 3,
+            scale: 1.0,
+        }
+    }
+
+    #[test]
+    fn matches_enum_predictor_exhaustively() {
+        let m = binary_model();
+        let f = FlatForest::compile(&m).unwrap();
+        assert_eq!(f.n_trees(), 2);
+        assert_eq!(f.n_nodes(), 2); // two split nodes total
+        for a in 0..4u16 {
+            for b in 0..4u16 {
+                let x = [a, b];
+                assert_eq!(f.scores(&x), m.scores(&x), "x={x:?}");
+                assert_eq!(f.predict(&x), m.predict_class(&x), "x={x:?}");
+                for (ti, tree) in m.trees.iter().enumerate() {
+                    assert_eq!(f.eval_tree(ti, &x), tree.predict(&x), "tree {ti}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn batch_matches_single_row() {
+        let m = binary_model();
+        let f = FlatForest::compile(&m).unwrap();
+        let rows: Vec<Vec<u16>> = (0..16).map(|v| vec![(v % 4) as u16, (v / 4) as u16]).collect();
+        let refs: Vec<&[u16]> = rows.iter().map(|r| r.as_slice()).collect();
+        let batch = f.predict_batch(&refs);
+        for (i, row) in rows.iter().enumerate() {
+            assert_eq!(batch[i], f.predict(row), "row {i}");
+        }
+    }
+
+    #[test]
+    fn multiclass_argmax() {
+        let leaf = |v: u32| QuantTree { nodes: vec![N::Leaf { value: v }] };
+        let m = QuantModel {
+            trees: vec![leaf(1), leaf(5), leaf(2)],
+            n_groups: 3,
+            biases: vec![-1, -2, -1],
+            n_features: 1,
+            w_feature: 1,
+            w_tree: 3,
+            scale: 1.0,
+        };
+        let f = FlatForest::compile(&m).unwrap();
+        // scores: [0, 3, 1] → class 1 (same as QuantModel's test).
+        assert_eq!(f.predict(&[0]), 1);
+        assert_eq!(f.predict_batch(&[&[0u16][..]]), vec![1]);
+    }
+
+    #[test]
+    fn rejects_malformed_models() {
+        let mut m = binary_model();
+        m.biases = vec![]; // bias/group mismatch
+        assert!(FlatForest::compile(&m).is_err());
+        let mut m2 = binary_model();
+        m2.trees[0].nodes[0] = split(9, 1, 1, 2); // feature out of range
+        assert!(FlatForest::compile(&m2).is_err());
+        let mut m3 = binary_model();
+        m3.trees[0].nodes[0] = split(0, 1, 0, 1); // self-cycle: descent would spin
+        assert!(FlatForest::compile(&m3).is_err());
+        let mut m4 = binary_model();
+        m4.trees[0].nodes[0] = split(0, 1, 1, 9); // child out of range
+        assert!(FlatForest::compile(&m4).is_err());
+        let mut m5 = binary_model();
+        // Unreachable split (root is a leaf) with an out-of-range child must
+        // error, not panic, even though the DFS never visits it.
+        m5.trees[0].nodes[0] = N::Leaf { value: 0 };
+        m5.trees[0].nodes[2] = split(0, 1, 9, 9);
+        assert!(FlatForest::compile(&m5).is_err());
+    }
+
+    #[test]
+    #[should_panic(expected = "row width mismatch")]
+    fn short_row_panics_instead_of_reading_oob() {
+        let m = binary_model();
+        let f = FlatForest::compile(&m).unwrap();
+        let _ = f.predict(&[0]); // model expects 2 features
+    }
+}

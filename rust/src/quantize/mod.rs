@@ -17,13 +17,16 @@
 //!
 //! [`model::QuantModel`] is the integer-exact predictor the paper describes
 //! in §3 ("models the exact behavior of hardware implementations in terms of
-//! accuracy") — the RTL generator, the gate-level simulator, and the PJRT
-//! runtime are all verified bit-identical against it.
+//! accuracy") — the RTL generator, the gate-level simulator, the PJRT
+//! runtime, and the flat serving executor ([`flat::FlatForest`]) are all
+//! verified bit-identical against it.
 
 pub mod feature;
+pub mod flat;
 pub mod leaf;
 pub mod model;
 
 pub use feature::FeatureQuantizer;
+pub use flat::FlatForest;
 pub use leaf::quantize_leaves;
 pub use model::{QuantModel, QuantNode, QuantTree};

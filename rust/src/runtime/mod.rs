@@ -108,6 +108,15 @@ impl Engine {
     }
 }
 
+/// True when `err` originates from the vendored `xla` stub (PJRT is not
+/// linked into this build) — used by artifact-gated tests/benches to skip
+/// instead of failing. Deliberately a string check on the rendered error
+/// chain: it must compile unchanged when the real xla crate is swapped in
+/// (DESIGN.md §2), where it simply never matches.
+pub fn pjrt_unavailable(err: &anyhow::Error) -> bool {
+    format!("{err:#}").contains("xla stub")
+}
+
 /// Decision rule shared with the quantized predictor.
 pub fn decide(scores: &[i64], n_groups: usize) -> u32 {
     if n_groups == 1 {

@@ -10,12 +10,14 @@
 //!      │                   netlist simulation (any pipeline config)
 //!      │                         │ == (bit-exact)
 //!      │                   perfect-tree tensors (runtime padding)
+//!      │                         │ == (bit-exact)
+//!      │                   FlatForest (flat serving executor)
 //! ```
 
 use treelut::gbdt::{GbdtModel, Tree, TreeNode};
 use treelut::netlist::simulate::{InputBatch, Simulator};
 use treelut::netlist::{build_netlist, map_luts};
-use treelut::quantize::quantize_leaves;
+use treelut::quantize::{quantize_leaves, FlatForest};
 use treelut::rtl::{design_from_quant, Pipeline};
 use treelut::runtime::tensors::eval_perfect;
 use treelut::runtime::{ArtifactConfig, ModelTensors};
@@ -156,6 +158,48 @@ fn prop_perfect_tensors_preserve_tree_semantics() {
                 );
                 assert_eq!(got, 0, "padded tree {ti} leaked value");
             }
+        }
+    }
+}
+
+/// The flat serving executor is bit-exact against the enum predictor:
+/// per-tree descent equals `QuantTree::predict`, single-row prediction
+/// equals `QuantModel::predict_class`, and the trees-outer/rows-inner batch
+/// entry point equals both — over random models (binary and multiclass),
+/// random bitwidths, and random inputs.
+#[test]
+fn prop_flat_forest_equals_quant_predictor() {
+    let mut rng = Rng::new(0xF1A7);
+    for case in 0..40 {
+        let (model, n_bins) = random_model(&mut rng, case % 2 == 0);
+        let w_tree = 1 + rng.below(5) as u8;
+        let (qm, _) = quantize_leaves(&model, w_tree);
+        let forest = FlatForest::compile(&qm).unwrap();
+        assert_eq!(forest.n_trees(), qm.trees.len(), "case {case}");
+        assert_eq!(forest.n_groups(), qm.n_groups, "case {case}");
+        assert_eq!(forest.n_features(), qm.n_features, "case {case}");
+
+        let rows: Vec<Vec<u16>> =
+            (0..24).map(|_| random_row(&mut rng, qm.n_features, n_bins)).collect();
+        for (ri, row) in rows.iter().enumerate() {
+            for (ti, tree) in qm.trees.iter().enumerate() {
+                assert_eq!(
+                    forest.eval_tree(ti, row),
+                    tree.predict(row),
+                    "case {case} row {ri} tree {ti}"
+                );
+            }
+            assert_eq!(forest.scores(row), qm.scores(row), "case {case} row {ri}");
+            assert_eq!(
+                forest.predict(row),
+                qm.predict_class(row),
+                "case {case} row {ri}"
+            );
+        }
+        let refs: Vec<&[u16]> = rows.iter().map(|r| r.as_slice()).collect();
+        let batch = forest.predict_batch(&refs);
+        for (ri, row) in rows.iter().enumerate() {
+            assert_eq!(batch[ri], qm.predict_class(row), "case {case} batch row {ri}");
         }
     }
 }

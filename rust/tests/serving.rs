@@ -1,0 +1,172 @@
+//! Serving-surface integration tests: shard-pool dispatch and correctness,
+//! shutdown draining (replies still delivered when the server drops
+//! mid-flight), executor-error fan-out, rejected-submission accounting, and
+//! the flat-forest executor serving a trained model bit-exactly.
+
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use treelut::coordinator::{BatchExecutor, BatchPolicy, FlatExecutor, Server};
+use treelut::data::synth;
+use treelut::gbdt::{train, BoostParams};
+use treelut::quantize::{quantize_leaves, FeatureQuantizer, FlatForest};
+
+/// Deterministic mock: class = (first feature * 7 + second) % 5.
+struct Mock {
+    n_features: usize,
+    max_batch: usize,
+    delay: Duration,
+    fail: bool,
+    batch_sizes: Arc<Mutex<Vec<usize>>>,
+}
+
+impl Mock {
+    fn new(n_features: usize) -> Mock {
+        Mock {
+            n_features,
+            max_batch: 8,
+            delay: Duration::ZERO,
+            fail: false,
+            batch_sizes: Arc::new(Mutex::new(Vec::new())),
+        }
+    }
+}
+
+fn expected_class(row: &[u16]) -> u32 {
+    ((row[0] as u32) * 7 + row[1] as u32) % 5
+}
+
+impl BatchExecutor for Mock {
+    fn max_batch(&self) -> usize {
+        self.max_batch
+    }
+    fn n_features(&self) -> usize {
+        self.n_features
+    }
+    fn execute(&self, rows: &[&[u16]]) -> anyhow::Result<Vec<u32>> {
+        self.batch_sizes.lock().unwrap().push(rows.len());
+        if !self.delay.is_zero() {
+            std::thread::sleep(self.delay);
+        }
+        anyhow::ensure!(!self.fail, "mock executor failure");
+        Ok(rows.iter().map(|r| expected_class(r)).collect())
+    }
+}
+
+/// Every reply matches its own request across a 4-shard pool, and the
+/// per-shard stats roll up into the aggregate counters.
+#[test]
+fn pool_replies_match_requests() {
+    let srv = Server::start_pool(|_shard| Mock::new(2), BatchPolicy::default(), 4).unwrap();
+    let rows: Vec<Vec<u16>> = (0..200u16).map(|v| vec![v, (v * 3) % 11]).collect();
+    let rxs: Vec<_> = rows.iter().map(|r| srv.submit(r.clone()).unwrap()).collect();
+    for (row, rx) in rows.iter().zip(rxs) {
+        let reply = rx.recv().unwrap().unwrap();
+        assert_eq!(reply.class, expected_class(row));
+    }
+    assert_eq!(srv.stats().requests.load(Ordering::Relaxed), 200);
+    assert_eq!(srv.stats().rows_executed.load(Ordering::Relaxed), 200);
+    // Round-robin dispatch: every shard saw exactly its share.
+    let per_shard: Vec<u64> =
+        srv.shard_stats().map(|s| s.requests.load(Ordering::Relaxed)).collect();
+    assert_eq!(per_shard, vec![50, 50, 50, 50]);
+    let rolled: u64 = srv.shard_stats().map(|s| s.rows_executed.load(Ordering::Relaxed)).sum();
+    assert_eq!(rolled, 200);
+    srv.shutdown();
+}
+
+/// Dropping the server mid-flight still delivers every queued reply: the
+/// workers drain their queues before exiting and the response channels
+/// outlive the server.
+#[test]
+fn replies_delivered_after_server_drops_mid_flight() {
+    let srv = Server::start_pool(
+        |_shard| {
+            let mut m = Mock::new(2);
+            m.delay = Duration::from_millis(2); // keep jobs queued at drop time
+            m
+        },
+        BatchPolicy { max_batch: 4, max_wait: Duration::from_micros(50) },
+        3,
+    )
+    .unwrap();
+    let rows: Vec<Vec<u16>> = (0..60u16).map(|v| vec![v, v + 1]).collect();
+    let rxs: Vec<_> = rows.iter().map(|r| srv.submit(r.clone()).unwrap()).collect();
+    drop(srv); // joins the workers after their queues drain
+    for (row, rx) in rows.iter().zip(rxs) {
+        let reply = rx.recv().expect("reply must survive server drop").unwrap();
+        assert_eq!(reply.class, expected_class(row));
+    }
+}
+
+/// An executor error is fanned out to every job of the failed batch.
+#[test]
+fn executor_error_fans_out_to_all_jobs() {
+    let srv = Server::start(
+        {
+            let mut m = Mock::new(2);
+            m.fail = true;
+            m
+        },
+        BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(5) },
+    );
+    let rxs: Vec<_> = (0..24u16).map(|v| srv.submit(vec![v, 0]).unwrap()).collect();
+    for rx in rxs {
+        let reply = rx.recv().expect("worker must answer");
+        let err = reply.expect_err("failed batch must error every job");
+        assert!(err.to_string().contains("batch failed"), "{err}");
+    }
+    // The batches still count as executed work in the stats.
+    assert!(srv.stats().batches.load(Ordering::Relaxed) >= 1);
+    assert_eq!(srv.stats().rows_executed.load(Ordering::Relaxed), 24);
+    srv.shutdown();
+}
+
+/// Rejected submissions (wrong width) are observable and do not count as
+/// accepted requests.
+#[test]
+fn rejections_are_counted_separately() {
+    let srv = Server::start(Mock::new(3), BatchPolicy::default());
+    assert!(srv.submit(vec![1, 2]).is_err());
+    assert!(srv.submit(vec![1, 2, 3, 4]).is_err());
+    assert!(srv.classify(vec![1, 2, 3]).is_ok());
+    assert_eq!(srv.stats().rejected.load(Ordering::Relaxed), 2);
+    assert_eq!(srv.stats().requests.load(Ordering::Relaxed), 1);
+    srv.shutdown();
+}
+
+/// Shards disagreeing on feature width is a construction error.
+#[test]
+fn pool_rejects_mismatched_executors() {
+    let r = Server::start_pool(|shard| Mock::new(2 + shard), BatchPolicy::default(), 2);
+    assert!(r.is_err());
+}
+
+/// A sharded FlatForest pool serves a trained model bit-exactly against the
+/// enum predictor.
+#[test]
+fn sharded_flat_executor_is_bit_exact() {
+    let ds = synth::tiny_multiclass(400, 6, 3, 8);
+    let fq = FeatureQuantizer::fit(&ds, 3);
+    let binned = fq.transform(&ds);
+    let params = BoostParams::default().n_estimators(5).max_depth(3).eta(0.5);
+    let model = train(&binned, &ds.y, 3, &params, 3).unwrap();
+    let (quant, _) = quantize_leaves(&model, 3);
+
+    let forest = FlatForest::compile(&quant).unwrap();
+    let srv = Server::start_pool_with(
+        move |_shard| Ok(FlatExecutor { forest: forest.clone(), max_batch: 16 }),
+        BatchPolicy { max_batch: 16, max_wait: Duration::from_micros(100) },
+        2,
+    )
+    .unwrap();
+    let rxs: Vec<_> =
+        (0..binned.n_rows).map(|i| srv.submit(binned.row(i).to_vec()).unwrap()).collect();
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let got = rx.recv().unwrap().unwrap().class;
+        assert_eq!(got, quant.predict_class(binned.row(i)), "row {i}");
+    }
+    assert_eq!(srv.n_shards(), 2);
+    srv.shutdown();
+}

@@ -1,0 +1,241 @@
+//! Offline stub of the `xla` crate (xla-rs PJRT bindings).
+//!
+//! The real runtime path loads an AOT-compiled HLO module through PJRT
+//! (`PjRtClient::cpu` → `HloModuleProto::from_text_file` → `compile` →
+//! `execute`). That crate links the native `xla_extension` library, which is
+//! not available in this offline build environment, so this stub provides
+//! the exact API surface `treelut::runtime` uses with the same shapes and
+//! ownership:
+//!
+//! * [`Literal`] is real: it stores typed host data plus dimensions, so
+//!   tensor construction ([`Literal::vec1`], [`Literal::reshape`]) and the
+//!   padding logic built on it stay fully testable.
+//! * The PJRT entry points ([`PjRtClient::cpu`], [`PjRtClient::compile`],
+//!   [`PjRtLoadedExecutable::execute`]) return [`Error::Unavailable`]: every
+//!   caller in the repo is gated on `artifacts/manifest.txt` existing, so
+//!   the error only surfaces when someone has artifacts but no real PJRT.
+//!
+//! To run against real PJRT, replace the `xla = { path = "vendor/xla-stub" }`
+//! dependency in `rust/Cargo.toml` with the real `xla` crate (LaurentMazare's
+//! xla-rs, pinned to xla_extension 0.5.1 — see `python/compile/aot.py` for
+//! the HLO-text interchange rationale). No source changes are required.
+
+use std::borrow::Borrow;
+use std::fmt;
+
+/// Stub error type; mirrors xla-rs in implementing [`std::error::Error`] so
+/// `anyhow`'s `?` conversions work unchanged.
+#[derive(Debug)]
+pub enum Error {
+    /// PJRT is not linked into this build.
+    Unavailable(&'static str),
+    /// A real error from the host-side tensor logic (shape mismatch, I/O).
+    Msg(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Unavailable(what) => write!(
+                f,
+                "{what}: built against the vendored xla stub (rust/vendor/xla-stub); \
+                 link the real xla crate to execute PJRT artifacts"
+            ),
+            Error::Msg(m) => write!(f, "{m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Element types [`Literal`] can hold.
+#[derive(Clone, Debug, PartialEq)]
+enum Buf {
+    I32(Vec<i32>),
+    I64(Vec<i64>),
+    F32(Vec<f32>),
+}
+
+/// Host element types accepted by [`Literal::vec1`] / [`Literal::to_vec`].
+pub trait NativeType: Copy {
+    fn wrap(data: Vec<Self>) -> Buf;
+    fn unwrap(buf: &Buf) -> Option<Vec<Self>>;
+}
+
+impl NativeType for i32 {
+    fn wrap(data: Vec<Self>) -> Buf {
+        Buf::I32(data)
+    }
+    fn unwrap(buf: &Buf) -> Option<Vec<Self>> {
+        match buf {
+            Buf::I32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+impl NativeType for i64 {
+    fn wrap(data: Vec<Self>) -> Buf {
+        Buf::I64(data)
+    }
+    fn unwrap(buf: &Buf) -> Option<Vec<Self>> {
+        match buf {
+            Buf::I64(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+impl NativeType for f32 {
+    fn wrap(data: Vec<Self>) -> Buf {
+        Buf::F32(data)
+    }
+    fn unwrap(buf: &Buf) -> Option<Vec<Self>> {
+        match buf {
+            Buf::F32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+/// A host tensor: typed data plus dimensions.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Literal {
+    buf: Buf,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    fn len(&self) -> usize {
+        match &self.buf {
+            Buf::I32(v) => v.len(),
+            Buf::I64(v) => v.len(),
+            Buf::F32(v) => v.len(),
+        }
+    }
+
+    /// Rank-1 literal from a host slice.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        Literal { buf: T::wrap(data.to_vec()), dims: vec![data.len() as i64] }
+    }
+
+    /// Reinterpret with new dimensions (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let count: i64 = dims.iter().product();
+        if count != self.len() as i64 {
+            return Err(Error::Msg(format!(
+                "reshape to {dims:?} ({count} elements) from {} elements",
+                self.len()
+            )));
+        }
+        Ok(Literal { buf: self.buf.clone(), dims: dims.to_vec() })
+    }
+
+    /// Unwrap a single-element tuple result (execution results are lowered
+    /// with `return_tuple=True`; see python/compile/aot.py). The stub never
+    /// produces tuples, so this is unreachable in practice.
+    pub fn to_tuple1(self) -> Result<Literal> {
+        Err(Error::Unavailable("Literal::to_tuple1 on a non-tuple stub literal"))
+    }
+
+    /// Copy the elements out as `T`.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::unwrap(&self.buf)
+            .ok_or_else(|| Error::Msg("literal element type mismatch".to_string()))
+    }
+}
+
+/// Parsed HLO module text (the stub stores the text verbatim).
+pub struct HloModuleProto {
+    #[allow(dead_code)]
+    text: String,
+}
+
+impl HloModuleProto {
+    /// Read an HLO text artifact from disk.
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error::Msg(format!("reading {path}: {e}")))?;
+        Ok(HloModuleProto { text })
+    }
+}
+
+/// An XLA computation wrapping an HLO module.
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+/// PJRT client handle. [`PjRtClient::cpu`] always fails in the stub.
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    /// Create the CPU PJRT client.
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error::Unavailable("PjRtClient::cpu"))
+    }
+
+    /// Compile a computation for this client.
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::Unavailable("PjRtClient::compile"))
+    }
+}
+
+/// A compiled executable. Unreachable in the stub (compilation fails first).
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    /// Execute on one batch of argument literals.
+    pub fn execute<L: Borrow<Literal>>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::Unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// A device buffer produced by execution.
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    /// Transfer the buffer to a host literal.
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::Unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vec1_reshape_roundtrip() {
+        let l = Literal::vec1(&[1i32, 2, 3, 4, 5, 6]);
+        let r = l.reshape(&[2, 3]).unwrap();
+        assert_eq!(r.to_vec::<i32>().unwrap(), vec![1, 2, 3, 4, 5, 6]);
+        assert!(l.reshape(&[4, 3]).is_err());
+    }
+
+    #[test]
+    fn type_mismatch_rejected() {
+        let l = Literal::vec1(&[1.0f32]);
+        assert!(l.to_vec::<i32>().is_err());
+        assert!(l.to_vec::<f32>().is_ok());
+    }
+
+    #[test]
+    fn pjrt_unavailable() {
+        let err = PjRtClient::cpu().err().expect("stub must fail");
+        assert!(err.to_string().contains("xla stub"));
+    }
+}
