@@ -1,7 +1,9 @@
 //! Serving-path benchmark: throughput/latency of the L3 coordinator,
 //! swept over executor kind (enum-walking `CpuExecutor` vs flat-forest
-//! `FlatExecutor`), shard count, and batching policy — the software analogue
-//! of the paper's throughput motivation (II = 1, one prediction per cycle).
+//! `FlatExecutor`), shard count, batching policy, and dispatch policy
+//! (blind round-robin vs power-of-two-choices + work stealing) — the
+//! software analogue of the paper's throughput motivation (II = 1, one
+//! prediction per cycle).
 //!
 //! Two load shapes per configuration:
 //! * **firehose** — submit every request as fast as possible and measure
@@ -9,9 +11,12 @@
 //! * **Poisson open loop** — measure p50/p99 latency at a fixed offered
 //!   load.
 //!
-//! The headline check: an N-shard `FlatForest` pool must beat the
-//! single-worker `CpuExecutor` baseline on rows/sec at the same batch
-//! policy.
+//! Two headline checks:
+//! * an N-shard `FlatForest` pool must beat the single-worker
+//!   `CpuExecutor` baseline on rows/sec at the same batch policy;
+//! * with one artificially slow shard (the **slow-shard sweep**), the
+//!   p2c+stealing pool must beat blind round-robin on Poisson p99 at equal
+//!   offered load — the PolyLUT-Add-style tail-latency comparison.
 //!
 //! The PJRT section (AOT artifact engine) additionally runs when
 //! `artifacts/manifest.txt` exists (`make artifacts`).
@@ -23,7 +28,8 @@ use std::sync::atomic::Ordering;
 use std::time::Duration;
 
 use treelut::coordinator::{
-    BatchPolicy, CpuExecutor, FlatExecutor, Server, ServingReport,
+    BatchExecutor, BatchPolicy, CpuExecutor, DispatchPolicy, FlatExecutor, Server,
+    ServingReport,
 };
 use treelut::data::synth;
 use treelut::exp::configs::design_point;
@@ -34,24 +40,38 @@ use treelut::quantize::{quantize_leaves, FeatureQuantizer, FlatForest, QuantMode
 use treelut::runtime::{Engine, Manifest, ModelTensors};
 use treelut::util::{Args, Rng, Summary, Timer};
 
-/// Snapshot of the batch counters, for per-run mean-batch deltas (the same
+/// Snapshot of the batch/steal counters, for per-run deltas (the same
 /// server serves several runs; lifetime means would mix them).
-struct BatchSnapshot {
+struct StatSnapshot {
     batches: u64,
     rows: u64,
+    steals: u64,
+    stolen_jobs: u64,
 }
 
-fn snapshot(server: &Server) -> BatchSnapshot {
-    BatchSnapshot {
-        batches: server.stats().batches.load(Ordering::Relaxed),
-        rows: server.stats().rows_executed.load(Ordering::Relaxed),
+fn snapshot(server: &Server) -> StatSnapshot {
+    let s = server.stats();
+    StatSnapshot {
+        batches: s.batches.load(Ordering::Relaxed),
+        rows: s.rows_executed.load(Ordering::Relaxed),
+        steals: s.steals.load(Ordering::Relaxed),
+        stolen_jobs: s.stolen_jobs.load(Ordering::Relaxed),
     }
 }
 
-fn mean_batch_since(server: &Server, before: &BatchSnapshot) -> f64 {
+fn mean_batch_since(server: &Server, before: &StatSnapshot) -> f64 {
     let after = snapshot(server);
     let batches = after.batches - before.batches;
     if batches == 0 { 0.0 } else { (after.rows - before.rows) as f64 / batches as f64 }
+}
+
+/// Attach pool metadata + per-run steal deltas to a report.
+fn finish_report(server: &Server, before: &StatSnapshot, report: ServingReport) -> ServingReport {
+    let after = snapshot(server);
+    report
+        .with_shards(server.n_shards())
+        .with_dispatch(server.dispatch())
+        .with_steals(after.steals - before.steals, after.stolen_jobs - before.stolen_jobs)
 }
 
 /// Open-loop Poisson arrivals at `rps`; returns the latency report.
@@ -79,8 +99,8 @@ fn poisson_run(
         lats.push(rx.recv()??.latency.as_secs_f64());
     }
     let mean_batch = mean_batch_since(server, &before);
-    Ok(ServingReport::from_latencies(&lats, t0.secs(), mean_batch, Some(rps))
-        .with_shards(server.n_shards()))
+    let rep = ServingReport::from_latencies(&lats, t0.secs(), mean_batch, Some(rps));
+    Ok(finish_report(server, &before, rep))
 }
 
 /// Closed-loop firehose: submit everything immediately, measure capacity.
@@ -100,8 +120,30 @@ fn firehose_run(
         lats.push(rx.recv()??.latency.as_secs_f64());
     }
     let mean_batch = mean_batch_since(server, &before);
-    Ok(ServingReport::from_latencies(&lats, t0.secs(), mean_batch, None)
-        .with_shards(server.n_shards()))
+    let rep = ServingReport::from_latencies(&lats, t0.secs(), mean_batch, None);
+    Ok(finish_report(server, &before, rep))
+}
+
+/// `FlatExecutor` with an artificial per-batch stall — the "one slow or
+/// stalling shard" the dispatch policies are compared against.
+struct SlowExecutor {
+    inner: FlatExecutor,
+    extra: Duration,
+}
+
+impl BatchExecutor for SlowExecutor {
+    fn max_batch(&self) -> usize {
+        self.inner.max_batch()
+    }
+    fn n_features(&self) -> usize {
+        self.inner.n_features()
+    }
+    fn execute(&self, rows: &[&[u16]]) -> anyhow::Result<Vec<u32>> {
+        if !self.extra.is_zero() {
+            std::thread::sleep(self.extra);
+        }
+        self.inner.execute(rows)
+    }
 }
 
 fn main() -> anyhow::Result<()> {
@@ -145,58 +187,70 @@ fn main() -> anyhow::Result<()> {
         flat_rate / enum_rate
     );
 
-    // --- Coordinator sweep: executor x shards x batch policy --------------
+    // --- Coordinator sweep: executor x shards x policy x dispatch ---------
     println!("\n== coordinator sweep (firehose capacity + Poisson @ {rps:.0} rps) ==");
     let mut t = Table::new(&[
-        "executor", "shards", "max_wait", "rows/s", "batch", "p50", "p99",
+        "executor", "dispatch", "shards", "max_wait", "rows/s", "batch", "p50", "p99", "steals",
     ]);
     let mut cpu1_capacity = 0.0f64; // single-worker CpuExecutor baseline
     let mut flat_sharded_capacity = 0.0f64; // best sharded FlatForest
     for &shards in &[1usize, 2, 4] {
-        for &wait_us in &[100u64, 1_000] {
-            for kind in ["cpu", "flat"] {
-                let policy = BatchPolicy {
-                    max_batch: MAX_BATCH,
-                    max_wait: Duration::from_micros(wait_us),
-                };
-                let server = if kind == "cpu" {
-                    let q = quant.clone();
-                    Server::start_pool_with(
-                        move |_shard| {
-                            Ok(CpuExecutor { model: q.clone(), max_batch: MAX_BATCH })
-                        },
-                        policy,
-                        shards,
-                    )?
-                } else {
-                    // Compile once (done above), clone the tables per shard.
-                    let fo = forest.clone();
-                    Server::start_pool_with(
-                        move |_shard| {
-                            Ok(FlatExecutor { forest: fo.clone(), max_batch: MAX_BATCH })
-                        },
-                        policy,
-                        shards,
-                    )?
-                };
-                let cap = firehose_run(&server, &btest, n_requests)?;
-                let lat = poisson_run(&server, &btest, n_requests.min(2_000), rps)?;
-                if kind == "cpu" && shards == 1 && wait_us == 100 {
-                    cpu1_capacity = cap.throughput;
+        // Dispatch only matters with siblings to choose between.
+        let dispatches: &[DispatchPolicy] = if shards == 1 {
+            &[DispatchPolicy::RoundRobin]
+        } else {
+            &[DispatchPolicy::RoundRobin, DispatchPolicy::P2c]
+        };
+        for &dispatch in dispatches {
+            for &wait_us in &[100u64, 1_000] {
+                for kind in ["cpu", "flat"] {
+                    let policy = BatchPolicy {
+                        max_batch: MAX_BATCH,
+                        max_wait: Duration::from_micros(wait_us),
+                    };
+                    let server = if kind == "cpu" {
+                        let q = quant.clone();
+                        Server::start_pool_dispatch(
+                            move |_shard| {
+                                Ok(CpuExecutor { model: q.clone(), max_batch: MAX_BATCH })
+                            },
+                            policy,
+                            shards,
+                            dispatch,
+                        )?
+                    } else {
+                        // Compile once (done above), clone the tables per shard.
+                        let fo = forest.clone();
+                        Server::start_pool_dispatch(
+                            move |_shard| {
+                                Ok(FlatExecutor { forest: fo.clone(), max_batch: MAX_BATCH })
+                            },
+                            policy,
+                            shards,
+                            dispatch,
+                        )?
+                    };
+                    let cap = firehose_run(&server, &btest, n_requests)?;
+                    let lat = poisson_run(&server, &btest, n_requests.min(2_000), rps)?;
+                    if kind == "cpu" && shards == 1 && wait_us == 100 {
+                        cpu1_capacity = cap.throughput;
+                    }
+                    if kind == "flat" && shards > 1 && wait_us == 100 {
+                        flat_sharded_capacity = flat_sharded_capacity.max(cap.throughput);
+                    }
+                    t.row(&[
+                        kind.into(),
+                        dispatch.label().into(),
+                        shards.to_string(),
+                        format!("{wait_us}us"),
+                        format!("{:.0}", cap.throughput),
+                        format!("{:.1}", cap.mean_batch),
+                        format!("{:.0}us", lat.latency.p50 * 1e6),
+                        format!("{:.0}us", lat.latency.p99 * 1e6),
+                        (cap.steals + lat.steals).to_string(),
+                    ]);
+                    server.shutdown();
                 }
-                if kind == "flat" && shards > 1 && wait_us == 100 {
-                    flat_sharded_capacity = flat_sharded_capacity.max(cap.throughput);
-                }
-                t.row(&[
-                    kind.into(),
-                    shards.to_string(),
-                    format!("{wait_us}us"),
-                    format!("{:.0}", cap.throughput),
-                    format!("{:.1}", cap.mean_batch),
-                    format!("{:.0}us", lat.latency.p50 * 1e6),
-                    format!("{:.0}us", lat.latency.p99 * 1e6),
-                ]);
-                server.shutdown();
             }
         }
     }
@@ -206,6 +260,54 @@ fn main() -> anyhow::Result<()> {
          CpuExecutor {cpu1_capacity:.0} rows/s at equal policy -> {:.2}x {}",
         flat_sharded_capacity / cpu1_capacity,
         if flat_sharded_capacity > cpu1_capacity { "(sharded flat wins)" } else { "(REGRESSION)" }
+    );
+
+    // --- Slow-shard sweep: dispatch policy under skew ---------------------
+    // One of four shards stalls ~10x a typical batch on every execute; at
+    // equal offered load, depth-aware dispatch + stealing must keep the
+    // tail down where blind round-robin feeds the stall every 4th request.
+    let extra = Duration::from_secs_f64(10.0 * MAX_BATCH as f64 / flat_rate)
+        .max(Duration::from_millis(2));
+    println!(
+        "\n== slow-shard sweep: shard 0 stalls {:.1}ms/batch, 4 shards, Poisson @ {rps:.0} rps ==",
+        extra.as_secs_f64() * 1e3
+    );
+    let mut t = Table::new(&["dispatch", "rows/s", "batch", "p50", "p99", "steals(jobs)"]);
+    let mut p99 = [0.0f64; 2];
+    for (i, dispatch) in [DispatchPolicy::RoundRobin, DispatchPolicy::P2c].into_iter().enumerate()
+    {
+        let fo = forest.clone();
+        let server = Server::start_pool_dispatch(
+            move |shard| {
+                Ok(SlowExecutor {
+                    inner: FlatExecutor { forest: fo.clone(), max_batch: MAX_BATCH },
+                    extra: if shard == 0 { extra } else { Duration::ZERO },
+                })
+            },
+            BatchPolicy { max_batch: MAX_BATCH, max_wait: Duration::from_micros(100) },
+            4,
+            dispatch,
+        )?;
+        let rep = poisson_run(&server, &btest, n_requests.min(4_000), rps)?;
+        p99[i] = rep.latency.p99;
+        t.row(&[
+            dispatch.label().into(),
+            format!("{:.0}", rep.throughput),
+            format!("{:.1}", rep.mean_batch),
+            format!("{:.0}us", rep.latency.p50 * 1e6),
+            format!("{:.0}us", rep.latency.p99 * 1e6),
+            format!("{} ({})", rep.steals, rep.stolen_jobs),
+        ]);
+        server.shutdown();
+    }
+    println!("{}", t.render());
+    println!(
+        "headline: p2c+stealing p99 {:.0}us vs round-robin p99 {:.0}us under one slow shard \
+         at equal offered load -> {:.2}x {}",
+        p99[1] * 1e6,
+        p99[0] * 1e6,
+        p99[0] / p99[1],
+        if p99[1] < p99[0] { "(p2c wins the tail)" } else { "(REGRESSION)" }
     );
 
     // --- PJRT engine section (artifact-gated) -----------------------------

@@ -1,6 +1,7 @@
 //! Serving metrics: latency distribution + throughput report, produced by
 //! load generators (examples/serve.rs, benches/serving_throughput.rs).
 
+use super::DispatchPolicy;
 use crate::util::Summary;
 
 /// One load-test run's results.
@@ -16,6 +17,12 @@ pub struct ServingReport {
     pub offered_rps: Option<f64>,
     /// Worker shards serving the run (1 = the single-worker baseline).
     pub shards: usize,
+    /// Dispatch policy the pool used, if recorded.
+    pub dispatch: Option<DispatchPolicy>,
+    /// Steal events during the run (batches moved off a sibling queue).
+    pub steals: u64,
+    /// Jobs moved by those steals.
+    pub stolen_jobs: u64,
 }
 
 impl ServingReport {
@@ -33,6 +40,9 @@ impl ServingReport {
             mean_batch,
             offered_rps,
             shards: 1,
+            dispatch: None,
+            steals: 0,
+            stolen_jobs: 0,
         }
     }
 
@@ -42,13 +52,33 @@ impl ServingReport {
         self
     }
 
+    /// Record the pool's dispatch policy.
+    pub fn with_dispatch(mut self, dispatch: DispatchPolicy) -> ServingReport {
+        self.dispatch = Some(dispatch);
+        self
+    }
+
+    /// Record the run's work-stealing counters.
+    pub fn with_steals(mut self, steals: u64, stolen_jobs: u64) -> ServingReport {
+        self.steals = steals;
+        self.stolen_jobs = stolen_jobs;
+        self
+    }
+
     /// One-line human-readable rendering (microsecond latencies).
     pub fn render(&self) -> String {
         let us = |s: f64| s * 1e6;
         let shards =
             if self.shards > 1 { format!(" shards={}", self.shards) } else { String::new() };
+        let dispatch =
+            self.dispatch.map(|d| format!(" dispatch={d}")).unwrap_or_default();
+        let steals = if self.steals > 0 {
+            format!(" steals={} ({} jobs)", self.steals, self.stolen_jobs)
+        } else {
+            String::new()
+        };
         format!(
-            "thru={:.0} rows/s{}{shards} batch={:.1} lat p50={:.0}us p90={:.0}us p99={:.0}us max={:.0}us",
+            "thru={:.0} rows/s{}{shards}{dispatch} batch={:.1} lat p50={:.0}us p90={:.0}us p99={:.0}us max={:.0}us{steals}",
             self.throughput,
             self.offered_rps.map(|r| format!(" (offered {r:.0})")).unwrap_or_default(),
             self.mean_batch,
@@ -89,5 +119,19 @@ mod tests {
         let r4 = r.with_shards(4);
         assert_eq!(r4.shards, 4);
         assert!(r4.render().contains("shards=4"));
+    }
+
+    #[test]
+    fn dispatch_and_steal_rendering() {
+        let r = ServingReport::from_latencies(&[0.001; 10], 1.0, 2.0, None);
+        // Unset: neither marker appears.
+        assert!(!r.render().contains("dispatch="));
+        assert!(!r.render().contains("steals="));
+        let r = r.with_dispatch(DispatchPolicy::P2c).with_steals(3, 17);
+        assert!(r.render().contains("dispatch=p2c"));
+        assert!(r.render().contains("steals=3 (17 jobs)"));
+        let rr = ServingReport::from_latencies(&[0.001; 10], 1.0, 2.0, None)
+            .with_dispatch(DispatchPolicy::RoundRobin);
+        assert!(rr.render().contains("dispatch=round-robin"));
     }
 }

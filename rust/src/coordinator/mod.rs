@@ -4,11 +4,13 @@
 //! The paper motivates GBDT accelerators with ultra-low-latency / high-
 //! throughput serving; this module is the software-serving analogue around
 //! the quantized forward pass (the vLLM-router shape scaled to this paper):
-//! clients submit single rows, the [`batcher`] round-robins them across an
-//! N-shard worker pool and coalesces each shard's queue into engine-sized
-//! batches under a latency bound (II = 1 equivalent: one batch in flight at
-//! a time per shard, N batches in flight across the pool), and [`metrics`]
-//! reports p50/p99 and throughput.
+//! clients submit single rows, the [`batcher`] dispatches them across an
+//! N-shard worker pool — blind round-robin or load-aware power-of-two-
+//! choices ([`DispatchPolicy`]), with idle workers stealing from the
+//! deepest sibling queue — and coalesces each shard's queue into
+//! engine-sized batches under a latency bound (II = 1 equivalent: one batch
+//! in flight at a time per shard, N batches in flight across the pool), and
+//! [`metrics`] reports p50/p99 and throughput.
 //!
 //! The coordinator is generic over [`BatchExecutor`] so unit tests run
 //! against a deterministic mock and the serving path runs against
@@ -18,7 +20,7 @@
 pub mod batcher;
 pub mod metrics;
 
-pub use batcher::{BatchPolicy, Reply, Server, ServerStats};
+pub use batcher::{BatchPolicy, DispatchPolicy, Reply, Server, ServerStats};
 pub use metrics::ServingReport;
 
 /// Anything that can classify a batch of quantized rows.

@@ -9,14 +9,17 @@
 //!     train a float GBDT and save it
 //! treelut datasets
 //!     print the evaluation datasets (paper Table 4)
-//! treelut serve [--config jsc] [--requests N] [--rps R] [--shards S]
+//! treelut serve [--config jsc] [--requests N] [--rps R] [--shards S] [--dispatch p2c]
 //!     batched serving over an N-shard pool: the AOT PJRT artifact when
-//!     available (`make artifacts`), the flat-forest CPU executor otherwise
+//!     available (`make artifacts`), the flat-forest CPU executor otherwise;
+//!     dispatch is load-aware power-of-two-choices by default (round-robin
+//!     selectable for comparison), with idle shards stealing from the
+//!     deepest sibling queue
 //! ```
 
 use std::path::PathBuf;
 
-use treelut::coordinator::{BatchPolicy, FlatExecutor, Server, ServingReport};
+use treelut::coordinator::{BatchPolicy, DispatchPolicy, FlatExecutor, Server, ServingReport};
 use treelut::data::synth;
 use treelut::exp::configs::{default_rows, design_point};
 use treelut::exp::{run_design_point, RunOptions};
@@ -30,7 +33,7 @@ const USAGE: &str = "usage: treelut <flow|train|datasets|serve> [options]
   flow      --dataset <mnist|jsc|nid> [--variant I|II] [--rows N] [--seed S] [--out DIR] [--bypass-keygen]
   train     --dataset <mnist|jsc|nid> [--variant I|II] [--rows N] [--seed S] --out FILE
   datasets
-  serve     [--config jsc] [--requests N] [--rps R] [--rows N] [--max-wait-us U] [--shards S]";
+  serve     [--config jsc] [--requests N] [--rps R] [--rows N] [--max-wait-us U] [--shards S] [--dispatch round-robin|p2c]";
 
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env();
@@ -131,6 +134,7 @@ fn cmd_serve(mut args: Args) -> anyhow::Result<()> {
     let rows = args.get_as::<usize>("rows", 8_000);
     let max_wait_us = args.get_as::<u64>("max-wait-us", 500);
     let shards = args.get_as::<usize>("shards", 1);
+    let dispatch = args.get("dispatch", "p2c").parse::<DispatchPolicy>()?;
     args.finish()?;
 
     let artifacts = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
@@ -164,10 +168,11 @@ fn cmd_serve(mut args: Args) -> anyhow::Result<()> {
     let quant_flat = quant.clone();
     let flat_server = move || -> anyhow::Result<Server> {
         let flat_forest = FlatForest::compile(&quant_flat)?;
-        Server::start_pool_with(
+        Server::start_pool_dispatch(
             move |_shard| Ok(FlatExecutor { forest: flat_forest.clone(), max_batch }),
             policy,
             shards,
+            dispatch,
         )
     };
     let server = match engine_cfg {
@@ -175,13 +180,14 @@ fn cmd_serve(mut args: Args) -> anyhow::Result<()> {
             let q2 = quant.clone();
             let cfg2 = cfg.clone();
             let art2 = artifacts.clone();
-            let started = Server::start_pool_with(
+            let started = Server::start_pool_dispatch(
                 move |_shard| {
                     let tensors = ModelTensors::from_quant(&q2, &cfg2)?;
                     Engine::load(&art2, &cfg2, tensors)
                 },
                 policy,
                 shards,
+                dispatch,
             );
             match started {
                 Ok(s) => s,
@@ -209,13 +215,19 @@ fn cmd_serve(mut args: Args) -> anyhow::Result<()> {
     for rx in pending {
         lats.push(rx.recv()??.latency.as_secs_f64());
     }
+    let stats = server.stats();
     let report = ServingReport::from_latencies(
         &lats,
         t0.secs(),
-        server.stats().mean_batch(),
+        stats.mean_batch(),
         Some(offered_rps),
     )
-    .with_shards(server.n_shards());
+    .with_shards(server.n_shards())
+    .with_dispatch(server.dispatch())
+    .with_steals(
+        stats.steals.load(std::sync::atomic::Ordering::Relaxed),
+        stats.stolen_jobs.load(std::sync::atomic::Ordering::Relaxed),
+    );
     println!("{}", report.render());
     server.shutdown();
     Ok(())

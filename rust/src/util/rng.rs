@@ -13,13 +13,24 @@ pub struct Rng {
     gauss_spare: Option<f64>,
 }
 
+/// Golden-gamma state increment for a SplitMix64 stream.
+pub const SPLITMIX64_GAMMA: u64 = 0x9E37_79B9_7F4A_7C15;
+
+/// SplitMix64 finalizer (Steele et al.): mix an arbitrary 64-bit value into
+/// a well-distributed one. Pure; stream users advance their own state by
+/// [`SPLITMIX64_GAMMA`] between calls (as `coordinator::batcher`'s p2c
+/// sampler does with an atomic counter).
 #[inline]
-fn splitmix64(state: &mut u64) -> u64 {
-    *state = state.wrapping_add(0x9E37_79B9_7F4A_7C15);
-    let mut z = *state;
+pub fn splitmix64(mut z: u64) -> u64 {
     z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
     z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
     z ^ (z >> 31)
+}
+
+#[inline]
+fn splitmix64_next(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(SPLITMIX64_GAMMA);
+    splitmix64(*state)
 }
 
 impl Rng {
@@ -27,10 +38,10 @@ impl Rng {
     pub fn new(seed: u64) -> Self {
         let mut sm = seed;
         let s = [
-            splitmix64(&mut sm),
-            splitmix64(&mut sm),
-            splitmix64(&mut sm),
-            splitmix64(&mut sm),
+            splitmix64_next(&mut sm),
+            splitmix64_next(&mut sm),
+            splitmix64_next(&mut sm),
+            splitmix64_next(&mut sm),
         ];
         Rng { s, gauss_spare: None }
     }

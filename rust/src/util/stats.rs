@@ -14,13 +14,18 @@ pub struct Summary {
 }
 
 impl Summary {
-    /// Compute a summary; sorts a copy of the data.
+    /// Compute a summary; sorts a copy of the data. Non-finite samples are
+    /// dropped first (`count` reflects the finite samples): one NaN
+    /// measurement must neither panic the sort nor poison every statistic
+    /// (mean/std/max and, for small runs, the percentiles would all become
+    /// NaN).
     pub fn of(data: &[f64]) -> Summary {
-        if data.is_empty() {
+        let mut v: Vec<f64> = data.iter().copied().filter(|x| x.is_finite()).collect();
+        if v.is_empty() {
             return Summary::default();
         }
-        let mut v = data.to_vec();
-        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        // total_cmp as a belt-and-braces panic-free comparator.
+        v.sort_by(f64::total_cmp);
         let n = v.len();
         let mean = v.iter().sum::<f64>() / n as f64;
         let var = v.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
@@ -89,6 +94,25 @@ mod tests {
         let s = Summary::of(&[]);
         assert_eq!(s.count, 0);
         assert_eq!(s.mean, 0.0);
+    }
+
+    #[test]
+    fn summary_survives_nan_sample() {
+        // A NaN latency sample must neither panic the summary (regression:
+        // partial_cmp(..).unwrap() aborted the sort) nor poison the
+        // statistics: it is dropped, and every moment/percentile reflects
+        // the finite samples.
+        let mut data: Vec<f64> = (1..=99).map(|i| i as f64).collect();
+        data.push(f64::NAN);
+        let s = Summary::of(&data);
+        assert_eq!(s.count, 99);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 99.0);
+        assert!(s.mean.is_finite() && (s.mean - 50.0).abs() < 1e-9);
+        assert!((s.p50 - 50.0).abs() <= 1.0);
+        assert!((s.p99 - 99.0).abs() <= 1.0);
+        // All-NaN input degrades to the empty summary rather than NaN soup.
+        assert_eq!(Summary::of(&[f64::NAN, f64::NAN]).count, 0);
     }
 
     #[test]

@@ -1,13 +1,15 @@
 //! Serving-surface integration tests: shard-pool dispatch and correctness,
-//! shutdown draining (replies still delivered when the server drops
-//! mid-flight), executor-error fan-out, rejected-submission accounting, and
-//! the flat-forest executor serving a trained model bit-exactly.
+//! the enqueue-anchored batching deadline, load-aware (p2c) dispatch and
+//! work stealing under a skewed pool, shutdown draining (replies still
+//! delivered when the server drops mid-flight), executor-error fan-out,
+//! rejected-submission accounting, and the flat-forest executor serving a
+//! trained model bit-exactly.
 
 use std::sync::atomic::Ordering;
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
-use treelut::coordinator::{BatchExecutor, BatchPolicy, FlatExecutor, Server};
+use treelut::coordinator::{BatchExecutor, BatchPolicy, DispatchPolicy, FlatExecutor, Server};
 use treelut::data::synth;
 use treelut::gbdt::{train, BoostParams};
 use treelut::quantize::{quantize_leaves, FeatureQuantizer, FlatForest};
@@ -52,6 +54,115 @@ impl BatchExecutor for Mock {
         anyhow::ensure!(!self.fail, "mock executor failure");
         Ok(rows.iter().map(|r| expected_class(r)).collect())
     }
+}
+
+/// Executor whose batch stalls for `max(row[1])` milliseconds — rows carry
+/// their own stall so one batch can hold the worker while others queue.
+struct StallRows;
+
+impl BatchExecutor for StallRows {
+    fn max_batch(&self) -> usize {
+        2
+    }
+    fn n_features(&self) -> usize {
+        2
+    }
+    fn execute(&self, rows: &[&[u16]]) -> anyhow::Result<Vec<u32>> {
+        let ms = rows.iter().map(|r| r[1]).max().unwrap_or(0);
+        if ms > 0 {
+            std::thread::sleep(Duration::from_millis(ms as u64));
+        }
+        Ok(rows.iter().map(|r| expected_class(r)).collect())
+    }
+}
+
+/// Regression for the latency-bound bug: the batching deadline must be
+/// anchored to the head job's *enqueue* time, not the moment the worker
+/// picks it up. Under backlog, a request that already spent its `max_wait`
+/// queueing must have its batch close immediately.
+#[test]
+fn batch_closes_within_max_wait_of_enqueue() {
+    let srv = Server::start(
+        StallRows,
+        BatchPolicy { max_batch: 2, max_wait: Duration::from_millis(150) },
+    );
+    // Fill a 2-row batch that stalls the worker for 300 ms.
+    let a = srv.submit(vec![1, 300]).unwrap();
+    let b = srv.submit(vec![2, 300]).unwrap();
+    // While it executes, enqueue a fast request: by the time the worker is
+    // free it will have waited ~250 ms — already past its own max_wait.
+    std::thread::sleep(Duration::from_millis(50));
+    let c = srv.submit(vec![3, 0]).unwrap();
+    a.recv().unwrap().unwrap();
+    b.recv().unwrap().unwrap();
+    let reply = c.recv_timeout(Duration::from_secs(5)).unwrap().unwrap();
+    assert_eq!(reply.class, expected_class(&[3, 0]));
+    // ~250 ms of unavoidable queueing; the buggy pickup-anchored deadline
+    // added a fresh 150 ms wait on top (~400 ms total).
+    assert!(
+        reply.latency < Duration::from_millis(325),
+        "latency {:?}: batch deadline appears to restart at worker pickup",
+        reply.latency
+    );
+    srv.shutdown();
+}
+
+/// One shard 10x slower than its sibling: p2c must route the bulk of the
+/// traffic to the fast shard (round-robin, by construction, must not), and
+/// the fast worker must steal part of the slow shard's backlog.
+#[test]
+fn p2c_routes_around_slow_shard_where_round_robin_does_not() {
+    let run = |dispatch: DispatchPolicy| {
+        let srv = Server::start_pool_dispatch(
+            |shard| {
+                let mut m = Mock::new(2);
+                // >10x skew, singleton batches (policy caps max_batch at 1).
+                m.delay = if shard == 0 {
+                    Duration::from_millis(8)
+                } else {
+                    Duration::from_micros(500)
+                };
+                Ok(m)
+            },
+            BatchPolicy { max_batch: 1, max_wait: Duration::from_millis(1) },
+            2,
+            dispatch,
+        )
+        .unwrap();
+        // Paced open loop: inside the fast shard's capacity, far beyond the
+        // slow shard's, so queue depth and in-flight work carry signal.
+        let rxs: Vec<_> = (0..200u16)
+            .map(|v| {
+                std::thread::sleep(Duration::from_millis(2));
+                srv.submit(vec![v, 1]).unwrap()
+            })
+            .collect();
+        for (v, rx) in rxs.into_iter().enumerate() {
+            let reply = rx
+                .recv_timeout(Duration::from_secs(10))
+                .expect("request must be answered")
+                .unwrap();
+            assert_eq!(reply.class, expected_class(&[v as u16, 1]));
+        }
+        let per_shard: Vec<u64> =
+            srv.shard_stats().map(|s| s.requests.load(Ordering::Relaxed)).collect();
+        let stolen = srv.stats().stolen_jobs.load(Ordering::Relaxed);
+        srv.shutdown();
+        (per_shard, stolen)
+    };
+
+    let (rr, rr_stolen) = run(DispatchPolicy::RoundRobin);
+    assert_eq!(rr, vec![100, 100], "round-robin dispatches blindly");
+    // The slow shard cannot keep up with its blind half: the idle fast
+    // worker must have stolen part of its backlog.
+    assert!(rr_stolen > 0, "expected steals from the slow shard's backlog");
+
+    let (p2c, _) = run(DispatchPolicy::P2c);
+    assert_eq!(p2c[0] + p2c[1], 200);
+    assert!(
+        p2c[1] >= 120,
+        "p2c must route the majority of traffic away from the slow shard: {p2c:?}"
+    );
 }
 
 /// Every reply matches its own request across a 4-shard pool, and the
