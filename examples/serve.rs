@@ -64,7 +64,11 @@ fn main() -> anyhow::Result<()> {
             let tensors = ModelTensors::from_quant(&quant_for_engine, &cfg_for_engine)?;
             Engine::load(&artifacts_for_engine, &cfg_for_engine, tensors)
         },
-        BatchPolicy { max_batch: cfg.batch, max_wait: Duration::from_micros(max_wait_us) },
+        BatchPolicy {
+            max_batch: cfg.batch,
+            max_wait: Duration::from_micros(max_wait_us),
+            ..BatchPolicy::default()
+        },
     )?;
 
     // Poisson open-loop load over quantized test rows.

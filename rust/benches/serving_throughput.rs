@@ -28,8 +28,8 @@ use std::sync::atomic::Ordering;
 use std::time::Duration;
 
 use treelut::coordinator::{
-    BatchExecutor, BatchPolicy, CpuExecutor, DispatchPolicy, FlatExecutor, Server,
-    ServingReport,
+    BatchExecutor, BatchPolicy, CpuExecutor, DispatchPolicy, FlatExecutor, OverloadPolicy,
+    Server, ServingReport, SubmitError,
 };
 use treelut::data::synth;
 use treelut::exp::configs::design_point;
@@ -74,14 +74,31 @@ fn finish_report(server: &Server, before: &StatSnapshot, report: ServingReport) 
         .with_steals(after.steals - before.steals, after.stolen_jobs - before.stolen_jobs)
 }
 
-/// Open-loop Poisson arrivals at `rps`; returns the latency report.
+/// Open-loop Poisson arrivals at `rps`; returns the latency report. On
+/// the unbounded pools this section uses, shedding is impossible, so this
+/// is just [`poisson_run_admitting`] under its original name.
 fn poisson_run(
     server: &Server,
     rows: &BinnedMatrix,
     n_requests: usize,
     rps: f64,
 ) -> anyhow::Result<ServingReport> {
+    poisson_run_admitting(server, rows, n_requests, rps)
+}
+
+/// Open-loop Poisson arrivals that tolerate admission control: shed-new
+/// refusals and shed-oldest victims are counted instead of aborting the
+/// run, and the report's latency summary covers *served* jobs only (the
+/// point of shedding is exactly that those jobs stay fast).
+fn poisson_run_admitting(
+    server: &Server,
+    rows: &BinnedMatrix,
+    n_requests: usize,
+    rps: f64,
+) -> anyhow::Result<ServingReport> {
     let before = snapshot(server);
+    let sheds0 = server.stats().sheds.load(Ordering::Relaxed);
+    let full0 = server.stats().queue_full.load(Ordering::Relaxed);
     let mut rng = Rng::new(17);
     let t0 = Timer::start();
     let mut pending = Vec::with_capacity(n_requests);
@@ -92,15 +109,34 @@ fn poisson_run(
         if next > now {
             std::thread::sleep(next - now);
         }
-        pending.push(server.submit(rows.row(i % rows.n_rows).to_vec())?);
+        match server.submit(rows.row(i % rows.n_rows).to_vec()) {
+            Ok(rx) => pending.push(rx),
+            Err(e)
+                if matches!(
+                    e.downcast_ref::<SubmitError>(),
+                    Some(SubmitError::QueueFull { .. })
+                ) => {}
+            Err(e) => return Err(e),
+        }
     }
-    let mut lats = Vec::with_capacity(n_requests);
+    let mut lats = Vec::with_capacity(pending.len());
     for rx in pending {
-        lats.push(rx.recv()??.latency.as_secs_f64());
+        match rx.recv()? {
+            Ok(reply) => lats.push(reply.latency.as_secs_f64()),
+            Err(e)
+                if matches!(
+                    e.downcast_ref::<SubmitError>(),
+                    Some(SubmitError::Shed { .. })
+                ) => {}
+            Err(e) => return Err(e),
+        }
     }
     let mean_batch = mean_batch_since(server, &before);
     let rep = ServingReport::from_latencies(&lats, t0.secs(), mean_batch, Some(rps));
-    Ok(finish_report(server, &before, rep))
+    Ok(finish_report(server, &before, rep).with_admission(
+        server.stats().sheds.load(Ordering::Relaxed) - sheds0,
+        server.stats().queue_full.load(Ordering::Relaxed) - full0,
+    ))
 }
 
 /// Closed-loop firehose: submit everything immediately, measure capacity.
@@ -207,6 +243,7 @@ fn main() -> anyhow::Result<()> {
                     let policy = BatchPolicy {
                         max_batch: MAX_BATCH,
                         max_wait: Duration::from_micros(wait_us),
+                        ..BatchPolicy::default()
                     };
                     let server = if kind == "cpu" {
                         let q = quant.clone();
@@ -284,7 +321,11 @@ fn main() -> anyhow::Result<()> {
                     extra: if shard == 0 { extra } else { Duration::ZERO },
                 })
             },
-            BatchPolicy { max_batch: MAX_BATCH, max_wait: Duration::from_micros(100) },
+            BatchPolicy {
+                max_batch: MAX_BATCH,
+                max_wait: Duration::from_micros(100),
+                ..BatchPolicy::default()
+            },
             4,
             dispatch,
         )?;
@@ -308,6 +349,98 @@ fn main() -> anyhow::Result<()> {
         p99[0] * 1e6,
         p99[0] / p99[1],
         if p99[1] < p99[0] { "(p2c wins the tail)" } else { "(REGRESSION)" }
+    );
+
+    // --- Overload sweep: admission control at 2x saturation ---------------
+    // Measure a 2-shard flat pool's firehose capacity, then offer twice
+    // that as Poisson load under each overload policy. The headline check
+    // (ISSUE 4): with a finite queue cap, shed-new / shed-oldest hold the
+    // *admitted*-job p99 under the queue's drain bound while sheds > 0,
+    // where the unbounded default buffers without limit and lets the tail
+    // grow with the run length.
+    const OVERLOAD_SHARDS: usize = 2;
+    const QUEUE_CAP: usize = 64;
+    let overload_wait = Duration::from_micros(500);
+    let capacity2 = {
+        let fo = forest.clone();
+        let server = Server::start_pool_dispatch(
+            move |_shard| Ok(FlatExecutor { forest: fo.clone(), max_batch: MAX_BATCH }),
+            BatchPolicy { max_batch: MAX_BATCH, max_wait: overload_wait, ..BatchPolicy::default() },
+            OVERLOAD_SHARDS,
+            DispatchPolicy::P2c,
+        )?;
+        let cap = firehose_run(&server, &btest, n_requests.min(8_000))?.throughput;
+        server.shutdown();
+        cap
+    };
+    let offered = 2.0 * capacity2;
+    // Worst admitted wait: a full queue (cap rows) plus up to two in-flight
+    // batches drain at the per-shard rate, plus the batching budget.
+    let drain_bound = overload_wait.as_secs_f64()
+        + (QUEUE_CAP + 2 * MAX_BATCH) as f64 / (capacity2 / OVERLOAD_SHARDS as f64);
+    println!(
+        "\n== overload sweep: {OVERLOAD_SHARDS}-shard flat capacity {capacity2:.0} rows/s, \
+         Poisson @ {offered:.0} rps (2x), queue-cap {QUEUE_CAP}, \
+         admitted-p99 bound {:.0}us ==",
+        drain_bound * 1e6
+    );
+    let mut t = Table::new(&[
+        "policy", "served/s", "served", "sheds", "queue_full", "p50", "p99", "p99<=bound",
+    ]);
+    let mut bounded_ok = true;
+    let mut unbounded_p99 = 0.0f64;
+    let mut shed_p99 = [0.0f64; 2];
+    for (i, (label, cap, overload)) in [
+        ("unbounded", usize::MAX, OverloadPolicy::Block),
+        ("block", QUEUE_CAP, OverloadPolicy::Block),
+        ("shed-new", QUEUE_CAP, OverloadPolicy::ShedNew),
+        ("shed-oldest", QUEUE_CAP, OverloadPolicy::ShedOldest),
+    ]
+    .into_iter()
+    .enumerate()
+    {
+        let fo = forest.clone();
+        let server = Server::start_pool_dispatch(
+            move |_shard| Ok(FlatExecutor { forest: fo.clone(), max_batch: MAX_BATCH }),
+            BatchPolicy { max_batch: MAX_BATCH, max_wait: overload_wait, queue_cap: cap, overload },
+            OVERLOAD_SHARDS,
+            DispatchPolicy::P2c,
+        )?;
+        let rep = poisson_run_admitting(&server, &btest, n_requests.min(4_000), offered)?;
+        let within = rep.latency.p99 <= drain_bound;
+        match i {
+            0 => unbounded_p99 = rep.latency.p99,
+            2 | 3 => {
+                shed_p99[i - 2] = rep.latency.p99;
+                bounded_ok &= within && rep.sheds > 0;
+            }
+            _ => {}
+        }
+        t.row(&[
+            label.into(),
+            format!("{:.0}", rep.throughput),
+            rep.latency.count.to_string(),
+            rep.sheds.to_string(),
+            rep.queue_full.to_string(),
+            format!("{:.0}us", rep.latency.p50 * 1e6),
+            format!("{:.0}us", rep.latency.p99 * 1e6),
+            if within { "yes" } else { "NO" }.into(),
+        ]);
+        server.shutdown();
+    }
+    println!("{}", t.render());
+    println!(
+        "headline: at 2x saturation, shed-new p99 {:.0}us / shed-oldest p99 {:.0}us vs \
+         unbounded p99 {:.0}us; bound {:.0}us -> {}",
+        shed_p99[0] * 1e6,
+        shed_p99[1] * 1e6,
+        unbounded_p99 * 1e6,
+        drain_bound * 1e6,
+        if bounded_ok {
+            "(admission control holds the admitted tail)"
+        } else {
+            "(REGRESSION: shed policy exceeded the drain bound or shed nothing)"
+        }
     );
 
     // --- PJRT engine section (artifact-gated) -----------------------------
@@ -371,6 +504,7 @@ fn pjrt_section(artifacts: &std::path::Path, n_requests: usize) -> anyhow::Resul
                 BatchPolicy {
                     max_batch: cfg.batch,
                     max_wait: Duration::from_micros(wait_us),
+                    ..BatchPolicy::default()
                 },
             )?;
             let rep = poisson_run(&server, &btest, n_requests, rps)?;

@@ -1,6 +1,6 @@
 //! Dynamic batcher: coalesce single-row requests into engine-sized batches
 //! under a latency bound, across an N-shard worker pool with load-aware
-//! dispatch and work stealing.
+//! dispatch, work stealing, and bounded-queue admission control.
 //!
 //! Per-shard policy: a worker blocks for the first request on its queue,
 //! then drains it until either `max_batch` rows are collected or `max_wait`
@@ -21,10 +21,31 @@
 //!   batch in execution), so a slow shard's backlog steers new traffic
 //!   away from it.
 //!
-//! Work stealing runs under both policies: a worker that times out idle on
-//! its own queue takes about half the jobs of the deepest sibling queue and
-//! executes them as one batch, so a stalled shard degrades into extra work
-//! for its siblings instead of a latency cliff.
+//! Admission control: [`BatchPolicy::queue_cap`] bounds every shard queue
+//! (unbounded by default, which reproduces the uncapped behavior exactly).
+//! When the dispatched-to queue is at capacity, [`OverloadPolicy`] decides:
+//! `Block` holds the submitter until the queue drains, `ShedNew` refuses
+//! the new request with a typed [`SubmitError::QueueFull`], and `ShedOldest`
+//! drops the head of the queue (failing it with [`SubmitError::Shed`]) to
+//! admit the new request — the knob that keeps *admitted*-job latency
+//! bounded when offered load exceeds capacity, instead of buffering without
+//! limit and letting every latency promise silently degrade. Shed events
+//! are counted in [`ServerStats::sheds`]; at-capacity encounters in
+//! [`ServerStats::queue_full`].
+//!
+//! Work stealing runs under every dispatch policy: a worker that times out
+//! idle on its own queue takes about half the jobs of the deepest sibling
+//! queue and executes them as one batch, so a stalled shard degrades into
+//! extra work for its siblings instead of a latency cliff. The idle poll is
+//! adaptive: it starts near the batching budget and backs off exponentially
+//! (up to [`STEAL_POLL_MAX`]) while the scan keeps coming up empty, then
+//! snaps back on any successful pop or steal — an idle pool parks instead
+//! of burning wakeups, a loaded pool keeps steal latency low.
+//!
+//! Time is abstracted behind the [`Clock`] trait: production uses
+//! [`WallClock`]; the deterministic serving harness
+//! (`coordinator::testing`) substitutes a virtual clock so deadline,
+//! steal-poll, and latency arithmetic run on scripted time.
 //!
 //! Fault containment: queues are shared structures that outlive their
 //! worker, so a panicking worker strands no work silently — an unwind guard
@@ -32,15 +53,15 @@
 //! and re-dispatches the jobs still queued behind it onto live siblings
 //! (failing them explicitly if none remain). Every accepted `submit`
 //! therefore ends in a reply: an `Ok` [`Reply`], an explicit batch-failed
-//! error (the batch still counts in `batches`/`rows_executed`), or a
-//! worker-death error counted in [`ServerStats::rejected`]. Nothing is
-//! silently dropped.
+//! error (the batch still counts in `batches`/`rows_executed`), a typed
+//! shed ([`SubmitError::Shed`], counted in `sheds`), or a worker-death
+//! error counted in [`ServerStats::rejected`]. Nothing is silently dropped.
 
 use super::BatchExecutor;
 use crate::util::rng::{splitmix64, SPLITMIX64_GAMMA};
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::sync::{mpsc, Arc, Condvar, Mutex, MutexGuard, OnceLock};
 use std::time::{Duration, Instant};
 
 /// A served answer: the class plus the queue+execute latency, measured by
@@ -52,7 +73,91 @@ pub struct Reply {
     pub latency: Duration,
 }
 
-/// Batching policy knobs (applied independently by every shard).
+/// How a shard reacts when a submit finds its queue at
+/// [`BatchPolicy::queue_cap`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum OverloadPolicy {
+    /// Hold the submitter until the queue drains below the cap (or the
+    /// shard dies). Backpressure propagates to the caller; nothing is
+    /// shed, and submit latency is bounded by the queue's drain time.
+    #[default]
+    Block,
+    /// Refuse the new request with a typed [`SubmitError::QueueFull`].
+    /// Oldest-queued jobs keep their place; fresh load is shed.
+    ShedNew,
+    /// Drop the *oldest* queued job (failing it with
+    /// [`SubmitError::Shed`]) and admit the new one. Keeps the queue's
+    /// age — and therefore admitted-job latency — bounded under overload.
+    ShedOldest,
+}
+
+impl OverloadPolicy {
+    /// Stable human-readable label (also the CLI spelling).
+    pub fn label(&self) -> &'static str {
+        match self {
+            OverloadPolicy::Block => "block",
+            OverloadPolicy::ShedNew => "shed-new",
+            OverloadPolicy::ShedOldest => "shed-oldest",
+        }
+    }
+}
+
+impl std::fmt::Display for OverloadPolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.label())
+    }
+}
+
+impl std::str::FromStr for OverloadPolicy {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> anyhow::Result<OverloadPolicy> {
+        match s {
+            "block" => Ok(OverloadPolicy::Block),
+            "shed-new" => Ok(OverloadPolicy::ShedNew),
+            "shed-oldest" => Ok(OverloadPolicy::ShedOldest),
+            other => {
+                anyhow::bail!("unknown overload policy {other:?} (block | shed-new | shed-oldest)")
+            }
+        }
+    }
+}
+
+/// Typed submission failures, downcastable from the `anyhow::Error`
+/// returned by [`Server::submit`] or delivered on a reply channel.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SubmitError {
+    /// The row's feature count does not match the pool's executors.
+    WidthMismatch { got: usize, want: usize },
+    /// `shed-new`: the dispatched-to queue was at capacity; the request
+    /// was refused at the door.
+    QueueFull { shard: usize },
+    /// `shed-oldest`: this previously admitted job was dropped from the
+    /// head of the queue to admit a newer one.
+    Shed { shard: usize },
+    /// Every shard's worker has terminated; the pool can accept nothing.
+    AllShardsDead,
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::WidthMismatch { got, want } => {
+                write!(f, "row has {got} features, server expects {want}")
+            }
+            SubmitError::QueueFull { shard } => {
+                write!(f, "shard {shard} queue at capacity (shed-new)")
+            }
+            SubmitError::Shed { shard } => {
+                write!(f, "job shed from shard {shard} queue head to admit newer work")
+            }
+            SubmitError::AllShardsDead => f.write_str("all server workers terminated"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
+/// Batching + admission knobs (applied independently by every shard).
 #[derive(Clone, Copy, Debug)]
 pub struct BatchPolicy {
     /// Maximum rows per batch (clamped to the executor's `max_batch`).
@@ -60,11 +165,37 @@ pub struct BatchPolicy {
     /// Maximum time a request may wait, from enqueue, for its batch to
     /// close once a worker is free.
     pub max_wait: Duration,
+    /// Per-shard queue bound. `usize::MAX` (the default) is unbounded and
+    /// reproduces the uncapped PR 3 behavior exactly; any finite cap arms
+    /// [`BatchPolicy::overload`].
+    pub queue_cap: usize,
+    /// What happens when a submit finds the dispatched-to queue at
+    /// `queue_cap`. Irrelevant while the cap is unbounded.
+    pub overload: OverloadPolicy,
 }
 
 impl Default for BatchPolicy {
     fn default() -> Self {
-        BatchPolicy { max_batch: usize::MAX, max_wait: Duration::from_micros(200) }
+        BatchPolicy {
+            max_batch: usize::MAX,
+            max_wait: Duration::from_micros(200),
+            queue_cap: usize::MAX,
+            overload: OverloadPolicy::Block,
+        }
+    }
+}
+
+impl BatchPolicy {
+    /// Builder-style queue bound.
+    pub fn queue_cap(mut self, cap: usize) -> Self {
+        self.queue_cap = cap;
+        self
+    }
+
+    /// Builder-style overload policy.
+    pub fn overload(mut self, overload: OverloadPolicy) -> Self {
+        self.overload = overload;
+        self
     }
 }
 
@@ -110,16 +241,74 @@ impl std::str::FromStr for DispatchPolicy {
     }
 }
 
-struct Job {
+/// One queued request. Public only because it appears in [`Clock`]'s
+/// object-safe signature; the fields are module-private.
+pub struct Job {
     row: Vec<u16>,
-    enqueued: Instant,
+    /// Clock time at submit ([`Clock::now`]).
+    enqueued: Duration,
     resp: mpsc::Sender<anyhow::Result<Reply>>,
+}
+
+/// Time source for every deadline, steal-poll, and latency computation in
+/// the pool. Production uses [`WallClock`]; the deterministic serving
+/// harness (`coordinator::testing::VirtualClock`) substitutes scripted
+/// time, which is what makes overload and chaos scenarios testable without
+/// wall-clock sleeps.
+pub trait Clock: Send + Sync + 'static {
+    /// Monotonic time since the clock's epoch.
+    fn now(&self) -> Duration;
+
+    /// Block on `cv` (releasing `guard`'s lock) until notified or roughly
+    /// `timeout` of *clock* time passes. May wake spuriously — callers
+    /// loop and re-check their own deadline against [`Clock::now`].
+    fn wait_timeout<'a>(
+        &self,
+        cv: &Condvar,
+        guard: MutexGuard<'a, VecDeque<Job>>,
+        timeout: Duration,
+    ) -> MutexGuard<'a, VecDeque<Job>>;
+
+    /// Hook: a condvar the pool will park on. Virtual clocks notify every
+    /// registered condvar when time advances; the wall clock ignores this.
+    fn register_condvar(&self, _cv: &Arc<Condvar>) {}
+
+    /// Hook: shard `shard`'s worker thread is entering its loop (called
+    /// from that thread). Virtual clocks use this for quiescence tracking.
+    fn worker_started(&self, _shard: usize) {}
+
+    /// Hook: shard `shard`'s worker thread is exiting (normal or unwind).
+    fn worker_stopped(&self, _shard: usize) {}
+}
+
+/// Process-epoch instant backing [`WallClock::now`] (durations since first
+/// use; only differences are ever observed).
+static WALL_EPOCH: OnceLock<Instant> = OnceLock::new();
+
+/// The real-time clock: `now` is the duration since process epoch and
+/// waits are plain condvar timed waits.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct WallClock;
+
+impl Clock for WallClock {
+    fn now(&self) -> Duration {
+        WALL_EPOCH.get_or_init(Instant::now).elapsed()
+    }
+
+    fn wait_timeout<'a>(
+        &self,
+        cv: &Condvar,
+        guard: MutexGuard<'a, VecDeque<Job>>,
+        timeout: Duration,
+    ) -> MutexGuard<'a, VecDeque<Job>> {
+        cv.wait_timeout(guard, timeout).unwrap().0
+    }
 }
 
 /// Serving counters (lock-free snapshot). The server keeps one aggregate
 /// instance plus one per shard; work dispatched to a shard is counted in
-/// both. Width-mismatch rejections happen *before* dispatch and therefore
-/// appear only in the aggregate counters.
+/// both. Width-mismatch and all-dead rejections happen *before* dispatch
+/// and therefore appear only in the aggregate counters.
 #[derive(Default)]
 pub struct ServerStats {
     /// Accepted submissions (counted on the shard the job was dispatched
@@ -129,8 +318,15 @@ pub struct ServerStats {
     /// only), plus accepted jobs explicitly failed because their shard's
     /// worker died and no live sibling could inherit them. Together with
     /// `requests`, this makes job loss observable: every accepted submit
-    /// ends in a reply or an error counted here.
+    /// ends in a reply or an error counted here (or in `sheds`).
     pub rejected: AtomicU64,
+    /// Jobs shed by admission control: `shed-new` refusals at the door
+    /// plus `shed-oldest` drops of previously admitted queue heads.
+    pub sheds: AtomicU64,
+    /// Submit attempts that found the dispatched-to queue at
+    /// [`BatchPolicy::queue_cap`] (every shed, plus each blocking episode
+    /// under the `block` policy).
+    pub queue_full: AtomicU64,
     pub batches: AtomicU64,
     pub rows_executed: AtomicU64,
     pub exec_nanos: AtomicU64,
@@ -138,6 +334,10 @@ pub struct ServerStats {
     pub steals: AtomicU64,
     /// Jobs moved by those steals, counted on the thief.
     pub stolen_jobs: AtomicU64,
+    /// Idle-timeout wakeups that scanned siblings for stealable work — the
+    /// adaptive steal poll's cost signal (backoff keeps this small on an
+    /// idle pool).
+    pub steal_scans: AtomicU64,
     /// Jobs moved off a dying shard's queue onto a live sibling, counted on
     /// the dying shard.
     pub redispatched: AtomicU64,
@@ -164,11 +364,34 @@ enum Pop {
     Closed,
 }
 
+/// Outcome of an admission-controlled push.
+enum Admit {
+    /// Enqueued; `depth` is the new queue depth, `waited` whether a
+    /// `block` episode preceded admission.
+    Ok { depth: usize, waited: bool },
+    /// Shard dead or closing; the job bounces back for failover. `waited`
+    /// records a `block` episode that ended in the shard dying, so the
+    /// saturation it witnessed still gets counted.
+    Dead { job: Job, waited: bool },
+    /// `shed-new`: queue at capacity, new job refused (bounced back so the
+    /// caller can fail it with context).
+    Full(Job),
+    /// `shed-oldest`: new job admitted at `depth`; `dropped` is the former
+    /// queue head the caller must fail explicitly.
+    Shed { depth: usize, dropped: Job },
+}
+
 /// One shard's submission queue: a shared structure that outlives its
 /// worker, so queued jobs survive a worker panic and siblings can steal.
 struct ShardQueue {
     jobs: Mutex<VecDeque<Job>>,
-    cv: Condvar,
+    /// Jobs-available / shutdown / virtual-time signal for the worker.
+    cv: Arc<Condvar>,
+    /// Space-below-cap signal for `block`-policy submitters.
+    space: Arc<Condvar>,
+    /// Admission bound (`usize::MAX` = unbounded).
+    cap: usize,
+    overload: OverloadPolicy,
     /// Gauge: current queue length (kept in sync under the lock).
     depth: AtomicUsize,
     /// Gauge: rows of the batch the worker is currently executing. Popped
@@ -183,10 +406,13 @@ struct ShardQueue {
 }
 
 impl ShardQueue {
-    fn new() -> ShardQueue {
+    fn new(cap: usize, overload: OverloadPolicy) -> ShardQueue {
         ShardQueue {
             jobs: Mutex::new(VecDeque::new()),
-            cv: Condvar::new(),
+            cv: Arc::new(Condvar::new()),
+            space: Arc::new(Condvar::new()),
+            cap,
+            overload,
             depth: AtomicUsize::new(0),
             inflight: AtomicUsize::new(0),
             alive: AtomicBool::new(false),
@@ -209,11 +435,59 @@ impl ShardQueue {
         self.alive.load(Ordering::Relaxed)
     }
 
-    /// Enqueue unless the shard is dead or closing; returns the new depth.
-    /// The alive check happens under the queue lock, so it cannot race the
-    /// dying worker's drain: a job is either drained by the guard or
-    /// bounced back to the caller, never stranded.
-    fn push(&self, job: Job) -> Result<usize, Job> {
+    /// Wake `block`-policy submitters after the queue shrank (no-op for
+    /// unbounded queues, which never have space waiters).
+    fn notify_space(&self) {
+        if self.cap != usize::MAX {
+            self.space.notify_all();
+        }
+    }
+
+    /// Admission-controlled enqueue. The alive check happens under the
+    /// queue lock, so it cannot race the dying worker's drain: a job is
+    /// either drained by the guard or bounced back to the caller, never
+    /// stranded. At capacity, [`OverloadPolicy`] decides between blocking
+    /// (waiting on `space` via the clock), refusing the new job, and
+    /// dropping the queue head.
+    fn push(&self, job: Job, clock: &dyn Clock) -> Admit {
+        let mut q = self.jobs.lock().unwrap();
+        let mut waited = false;
+        loop {
+            if !self.alive.load(Ordering::Relaxed) || self.closed.load(Ordering::Relaxed) {
+                return Admit::Dead { job, waited };
+            }
+            if q.len() < self.cap {
+                q.push_back(job);
+                let d = q.len();
+                self.depth.store(d, Ordering::Relaxed);
+                self.cv.notify_one();
+                return Admit::Ok { depth: d, waited };
+            }
+            match self.overload {
+                OverloadPolicy::ShedNew => return Admit::Full(job),
+                OverloadPolicy::ShedOldest => {
+                    let dropped = q.pop_front().expect("cap >= 1 and queue at cap");
+                    q.push_back(job);
+                    let d = q.len();
+                    self.depth.store(d, Ordering::Relaxed);
+                    self.cv.notify_one();
+                    return Admit::Shed { depth: d, dropped };
+                }
+                OverloadPolicy::Block => {
+                    waited = true;
+                    // Re-checks alive/closed/space on every wake; the poll
+                    // below is only a liveness safety net — the real wakes
+                    // are a worker's pop (space) or a clock advance.
+                    q = clock.wait_timeout(&self.space, q, BLOCK_RECHECK);
+                }
+            }
+        }
+    }
+
+    /// Enqueue ignoring the capacity bound — used for jobs a dying shard
+    /// re-dispatches onto a sibling: they were already admitted once, so
+    /// admission control must not double-charge (or deadlock a guard).
+    fn push_inherited(&self, job: Job) -> Result<usize, Job> {
         let mut q = self.jobs.lock().unwrap();
         if !self.alive.load(Ordering::Relaxed) || self.closed.load(Ordering::Relaxed) {
             return Err(job);
@@ -230,28 +504,31 @@ impl ShardQueue {
         let j = q.pop_front();
         if j.is_some() {
             self.depth.store(q.len(), Ordering::Relaxed);
+            self.notify_space();
         }
         j
     }
 
-    /// Block up to `timeout` for a job. `Closed` is only returned once the
-    /// queue is both closed *and* empty, so shutdown still drains.
-    fn pop_wait(&self, timeout: Duration) -> Pop {
-        let deadline = Instant::now() + timeout;
+    /// Block up to `timeout` of clock time for a job. `Closed` is only
+    /// returned once the queue is both closed *and* empty, so shutdown
+    /// still drains.
+    fn pop_wait(&self, timeout: Duration, clock: &dyn Clock) -> Pop {
+        let deadline = clock.now() + timeout;
         let mut q = self.jobs.lock().unwrap();
         loop {
             if let Some(j) = q.pop_front() {
                 self.depth.store(q.len(), Ordering::Relaxed);
+                self.notify_space();
                 return Pop::Job(j);
             }
             if self.closed.load(Ordering::Relaxed) {
                 return Pop::Closed;
             }
-            let remaining = deadline.saturating_duration_since(Instant::now());
-            if remaining.is_zero() {
+            let now = clock.now();
+            if now >= deadline {
                 return Pop::Timeout;
             }
-            q = self.cv.wait_timeout(q, remaining).unwrap().0;
+            q = clock.wait_timeout(&self.cv, q, deadline - now);
         }
     }
 
@@ -260,7 +537,10 @@ impl ShardQueue {
         let mut q = self.jobs.lock().unwrap();
         let n = q.len().div_ceil(2).min(max_n);
         let out: Vec<Job> = q.drain(..n).collect();
-        self.depth.store(q.len(), Ordering::Relaxed);
+        if !out.is_empty() {
+            self.depth.store(q.len(), Ordering::Relaxed);
+            self.notify_space();
+        }
         out
     }
 
@@ -271,14 +551,18 @@ impl ShardQueue {
         self.alive.store(false, Ordering::Relaxed);
         let out: Vec<Job> = q.drain(..).collect();
         self.depth.store(0, Ordering::Relaxed);
+        // Space waiters must wake to observe death and fail over.
+        self.space.notify_all();
         out
     }
 
-    /// Begin shutdown: refuse new pushes, wake the worker to drain.
+    /// Begin shutdown: refuse new pushes, wake the worker to drain and any
+    /// blocked submitters to bail out.
     fn close(&self) {
         let _q = self.jobs.lock().unwrap();
         self.closed.store(true, Ordering::Relaxed);
         self.cv.notify_all();
+        self.space.notify_all();
     }
 }
 
@@ -302,6 +586,7 @@ pub struct Server {
     p2c_seed: AtomicU64,
     /// Aggregate counters across all shards.
     stats: Arc<ServerStats>,
+    clock: Arc<dyn Clock>,
     n_features: usize,
 }
 
@@ -316,14 +601,22 @@ impl Server {
         E: BatchExecutor,
         F: FnOnce() -> anyhow::Result<E> + Send + 'static,
     {
+        anyhow::ensure!(policy.queue_cap >= 1, "queue cap must be at least 1");
+        let clock: Arc<dyn Clock> = Arc::new(WallClock);
         let stats = Arc::new(ServerStats::default());
-        let queues: Arc<Vec<Arc<ShardQueue>>> = Arc::new(vec![Arc::new(ShardQueue::new())]);
+        let queues: Arc<Vec<Arc<ShardQueue>>> =
+            Arc::new(vec![Arc::new(ShardQueue::new(policy.queue_cap, policy.overload))]);
+        for q in queues.iter() {
+            clock.register_condvar(&q.cv);
+            clock.register_condvar(&q.space);
+        }
         let (shard, n_features) = spawn_shard::<E>(
             Box::new(factory),
             0,
             Arc::clone(&queues),
             policy,
             Arc::clone(&stats),
+            Arc::clone(&clock),
         )?;
         Ok(Server {
             shards: vec![shard],
@@ -332,13 +625,18 @@ impl Server {
             next: AtomicUsize::new(0),
             p2c_seed: AtomicU64::new(P2C_SEED),
             stats,
+            clock,
             n_features,
         })
     }
 
     /// Spawn a single worker thread owning an already-built (`Send`)
-    /// executor.
+    /// executor. Panics on an invalid policy (zero queue cap) — use
+    /// [`Server::start_with`] for a fallible construction path.
     pub fn start<E: BatchExecutor + Send>(executor: E, policy: BatchPolicy) -> Server {
+        // Validate up front so a policy error panics with its own message
+        // instead of blaming the (infallible) factory.
+        assert!(policy.queue_cap >= 1, "queue cap must be at least 1");
         Self::start_with(move || Ok(executor), policy).expect("infallible factory")
     }
 
@@ -355,10 +653,7 @@ impl Server {
         Self::start_pool_dispatch(factory, policy, n_shards, DispatchPolicy::RoundRobin)
     }
 
-    /// Spawn an `n_shards`-worker pool; `factory(shard_id)` runs inside each
-    /// worker thread to build that shard's executor. All shards must agree
-    /// on `n_features`. Construction is sequential; the first failure tears
-    /// down the shards already started and returns the error.
+    /// [`Server::start_pool_clocked`] on the wall clock.
     pub fn start_pool_dispatch<E, F>(
         factory: F,
         policy: BatchPolicy,
@@ -369,11 +664,39 @@ impl Server {
         E: BatchExecutor,
         F: Fn(usize) -> anyhow::Result<E> + Send + Sync + 'static,
     {
+        Self::start_pool_clocked(factory, policy, n_shards, dispatch, Arc::new(WallClock))
+    }
+
+    /// Spawn an `n_shards`-worker pool; `factory(shard_id)` runs inside each
+    /// worker thread to build that shard's executor (executors need not be
+    /// `Send`). All shards must agree on `n_features`. Construction is
+    /// sequential; the first failure tears down the shards already started
+    /// and returns the error. Every deadline/poll/latency computation flows
+    /// through `clock`.
+    pub fn start_pool_clocked<E, F>(
+        factory: F,
+        policy: BatchPolicy,
+        n_shards: usize,
+        dispatch: DispatchPolicy,
+        clock: Arc<dyn Clock>,
+    ) -> anyhow::Result<Server>
+    where
+        E: BatchExecutor,
+        F: Fn(usize) -> anyhow::Result<E> + Send + Sync + 'static,
+    {
         anyhow::ensure!(n_shards >= 1, "need at least one shard");
+        anyhow::ensure!(policy.queue_cap >= 1, "queue cap must be at least 1");
         let factory = Arc::new(factory);
         let stats = Arc::new(ServerStats::default());
-        let queues: Arc<Vec<Arc<ShardQueue>>> =
-            Arc::new((0..n_shards).map(|_| Arc::new(ShardQueue::new())).collect());
+        let queues: Arc<Vec<Arc<ShardQueue>>> = Arc::new(
+            (0..n_shards)
+                .map(|_| Arc::new(ShardQueue::new(policy.queue_cap, policy.overload)))
+                .collect(),
+        );
+        for q in queues.iter() {
+            clock.register_condvar(&q.cv);
+            clock.register_condvar(&q.space);
+        }
         let mut shards: Vec<ShardHandle> = Vec::with_capacity(n_shards);
         let mut n_features = 0usize;
         for s in 0..n_shards {
@@ -384,6 +707,7 @@ impl Server {
                 Arc::clone(&queues),
                 policy,
                 Arc::clone(&stats),
+                Arc::clone(&clock),
             );
             match spawned {
                 Ok((shard, nf)) => {
@@ -410,6 +734,7 @@ impl Server {
             next: AtomicUsize::new(0),
             p2c_seed: AtomicU64::new(P2C_SEED),
             stats,
+            clock,
             n_features,
         })
     }
@@ -431,8 +756,11 @@ impl Server {
     /// The dispatch policy picks a preferred shard; if that shard is dead
     /// (its worker panicked) the scan fails over to the next live one, so
     /// one crashed worker degrades capacity instead of failing requests.
-    /// Failed submissions (wrong width, every worker dead) are counted in
-    /// [`ServerStats::rejected`].
+    /// Admission control applies at the first *live* shard the scan
+    /// reaches (dead-shard failover never bypasses the queue bound).
+    /// Failures are typed [`SubmitError`]s: width mismatch and
+    /// [`SubmitError::AllShardsDead`] count in [`ServerStats::rejected`];
+    /// `shed-new` refusals count in [`ServerStats::sheds`].
     pub fn submit(&self, row: Vec<u16>) -> anyhow::Result<mpsc::Receiver<anyhow::Result<Reply>>> {
         assert!(!self.shards.is_empty(), "server already shut down");
         // Validate before touching the dispatch cursor so rejected rows
@@ -440,7 +768,12 @@ impl Server {
         // never reached (width rejections are aggregate-only by design).
         if row.len() != self.n_features {
             self.stats.rejected.fetch_add(1, Ordering::Relaxed);
-            anyhow::bail!("row has {} features, server expects {}", row.len(), self.n_features);
+            return Err(SubmitError::WidthMismatch { got: row.len(), want: self.n_features }.into());
+        }
+        // Fast path for a fully dead pool: typed, immediate, no scan.
+        if self.queues.iter().all(|q| !q.is_alive()) {
+            self.stats.rejected.fetch_add(1, Ordering::Relaxed);
+            return Err(SubmitError::AllShardsDead.into());
         }
         let n = self.shards.len();
         let start = match self.dispatch {
@@ -448,27 +781,58 @@ impl Server {
             DispatchPolicy::P2c => self.p2c_pick(),
         };
         let (resp_tx, resp_rx) = mpsc::channel();
-        let mut job = Job { row, enqueued: Instant::now(), resp: resp_tx };
+        let mut job = Job { row, enqueued: self.clock.now(), resp: resp_tx };
         for k in 0..n {
-            let shard = &self.shards[(start + k) % n];
+            let idx = (start + k) % n;
+            let shard = &self.shards[idx];
             if !shard.queue.is_alive() {
                 continue;
             }
-            match shard.queue.push(job) {
-                Ok(depth) => {
-                    self.stats.requests.fetch_add(1, Ordering::Relaxed);
-                    shard.stats.requests.fetch_add(1, Ordering::Relaxed);
-                    self.stats.peak_depth.fetch_max(depth as u64, Ordering::Relaxed);
-                    shard.stats.peak_depth.fetch_max(depth as u64, Ordering::Relaxed);
+            match shard.queue.push(job, &*self.clock) {
+                Admit::Ok { depth, waited } => {
+                    for stats in [&self.stats, &shard.stats] {
+                        stats.requests.fetch_add(1, Ordering::Relaxed);
+                        stats.peak_depth.fetch_max(depth as u64, Ordering::Relaxed);
+                        if waited {
+                            stats.queue_full.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
                     return Ok(resp_rx);
                 }
+                Admit::Shed { depth, dropped } => {
+                    for stats in [&self.stats, &shard.stats] {
+                        stats.requests.fetch_add(1, Ordering::Relaxed);
+                        stats.peak_depth.fetch_max(depth as u64, Ordering::Relaxed);
+                        stats.queue_full.fetch_add(1, Ordering::Relaxed);
+                        stats.sheds.fetch_add(1, Ordering::Relaxed);
+                    }
+                    let _ = dropped.resp.send(Err(SubmitError::Shed { shard: idx }.into()));
+                    return Ok(resp_rx);
+                }
+                Admit::Full(_refused) => {
+                    // shed-new honors the policy at the dispatched-to shard
+                    // exactly: no sibling scan, a typed refusal instead.
+                    for stats in [&self.stats, &shard.stats] {
+                        stats.queue_full.fetch_add(1, Ordering::Relaxed);
+                        stats.sheds.fetch_add(1, Ordering::Relaxed);
+                    }
+                    return Err(SubmitError::QueueFull { shard: idx }.into());
+                }
                 // The shard died between the alive check and the push; take
-                // the job back and try the next shard.
-                Err(j) => job = j,
+                // the job back and try the next shard. A `block` episode
+                // cut short by the death still counts as witnessed
+                // saturation (aggregate-only: the shard it happened on is
+                // gone).
+                Admit::Dead { job: j, waited } => {
+                    if waited {
+                        self.stats.queue_full.fetch_add(1, Ordering::Relaxed);
+                    }
+                    job = j;
+                }
             }
         }
         self.stats.rejected.fetch_add(1, Ordering::Relaxed);
-        anyhow::bail!("all server workers terminated");
+        Err(SubmitError::AllShardsDead.into())
     }
 
     /// Power-of-two-choices: sample two distinct shards, prefer the live
@@ -531,6 +895,15 @@ impl Server {
         self.queues.iter().map(|q| q.depth()).collect()
     }
 
+    /// Gauge: live shards whose queue currently sits at the admission cap
+    /// (always 0 for unbounded pools).
+    pub fn shards_at_cap(&self) -> usize {
+        self.queues
+            .iter()
+            .filter(|q| q.cap != usize::MAX && q.is_alive() && q.depth() >= q.cap)
+            .count()
+    }
+
     /// The dispatch policy this pool was started with.
     pub fn dispatch(&self) -> DispatchPolicy {
         self.dispatch
@@ -562,6 +935,19 @@ impl Drop for Server {
 /// stream is only a tie-breaker, not a statistical requirement.
 const P2C_SEED: u64 = 0x51c0_ffee_c0de_2026;
 
+/// Floor of the adaptive idle poll (also its reset value, unless
+/// `max_wait` clamps lower on a multi-shard pool).
+const STEAL_POLL_MIN: Duration = Duration::from_millis(1);
+
+/// Ceiling of the adaptive idle poll: an idle worker parks this long
+/// between sibling scans once backoff saturates (the condvar still wakes
+/// it instantly on a push or close).
+pub const STEAL_POLL_MAX: Duration = Duration::from_millis(50);
+
+/// Safety recheck interval for `block`-policy submitters (the real wakes
+/// are space notifications and clock advances).
+const BLOCK_RECHECK: Duration = Duration::from_millis(50);
+
 /// Close every queue (ending the workers once their queues drain) and join.
 fn teardown(shards: Vec<ShardHandle>) {
     // Close all queues first so every worker sees shutdown promptly, then
@@ -582,6 +968,7 @@ fn spawn_shard<E: BatchExecutor>(
     queues: Arc<Vec<Arc<ShardQueue>>>,
     policy: BatchPolicy,
     aggregate: Arc<ServerStats>,
+    clock: Arc<dyn Clock>,
 ) -> anyhow::Result<(ShardHandle, usize)> {
     let stats = Arc::new(ServerStats::default());
     let stats_w = Arc::clone(&stats);
@@ -592,6 +979,9 @@ fn spawn_shard<E: BatchExecutor>(
     let worker = std::thread::spawn(move || {
         let executor = match factory() {
             Ok(e) => {
+                // Register with the clock before signalling readiness so a
+                // virtual-clock harness sees every worker from step zero.
+                clock.worker_started(shard_id);
                 let _ = ready_tx.send(Ok((e.n_features(), e.max_batch())));
                 e
             }
@@ -601,7 +991,7 @@ fn spawn_shard<E: BatchExecutor>(
             }
         };
         let max_batch = policy_max.min(executor.max_batch()).max(1);
-        worker_loop(executor, shard_id, queues, max_batch, max_wait, aggregate, stats_w);
+        worker_loop(executor, shard_id, queues, max_batch, max_wait, aggregate, stats_w, clock);
     });
     let ready = ready_rx
         .recv()
@@ -631,6 +1021,7 @@ struct WorkerGuard {
     queues: Arc<Vec<Arc<ShardQueue>>>,
     aggregate: Arc<ServerStats>,
     shard: Arc<ServerStats>,
+    clock: Arc<dyn Clock>,
     /// Jobs popped for the batch currently executing; emptied on the normal
     /// path, non-empty only during an unwind.
     in_flight: Vec<Job>,
@@ -652,14 +1043,16 @@ impl Drop for WorkerGuard {
         }
         // Shallowest-live-first inheritance order; one pass, no rescans (a
         // push can only fail if the target died meanwhile, which the next
-        // candidate handles).
+        // candidate handles). Inherited jobs bypass the admission cap:
+        // they were admitted once already, and a blocking push here could
+        // deadlock the unwind.
         let mut targets: Vec<usize> = (0..self.queues.len())
             .filter(|&i| i != self.shard_id && self.queues[i].is_alive())
             .collect();
         targets.sort_by_key(|&i| self.queues[i].depth());
         'jobs: for mut job in stranded {
             for &t in &targets {
-                match self.queues[t].push(job) {
+                match self.queues[t].push_inherited(job) {
                     Ok(_) => {
                         self.aggregate.redispatched.fetch_add(1, Ordering::Relaxed);
                         self.shard.redispatched.fetch_add(1, Ordering::Relaxed);
@@ -670,9 +1063,11 @@ impl Drop for WorkerGuard {
             }
             self.fail(job, "worker died with the job queued and no live sibling");
         }
+        self.clock.worker_stopped(self.shard_id);
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn worker_loop<E: BatchExecutor>(
     executor: E,
     shard_id: usize,
@@ -681,29 +1076,34 @@ fn worker_loop<E: BatchExecutor>(
     max_wait: Duration,
     aggregate: Arc<ServerStats>,
     shard: Arc<ServerStats>,
+    clock: Arc<dyn Clock>,
 ) {
     let mut guard = WorkerGuard {
         shard_id,
         queues: Arc::clone(&queues),
         aggregate: Arc::clone(&aggregate),
         shard: Arc::clone(&shard),
+        clock: Arc::clone(&clock),
         in_flight: Vec::new(),
     };
     let own = &queues[shard_id];
-    // Idle poll bound: how long to block on an empty queue before checking
-    // sibling depths for stealable work. Tied to max_wait (the latency
-    // budget the policy already accepts) but clamped so pathological
-    // policies neither busy-spin nor let stolen jobs stall. With no
-    // siblings there is nothing to steal, so park long (the condvar still
-    // wakes instantly on push or close).
-    let steal_poll = if queues.len() > 1 {
-        max_wait.clamp(Duration::from_micros(100), Duration::from_millis(1))
+    // Adaptive idle poll: how long to block on an empty queue before
+    // checking sibling depths for stealable work. The floor tracks the
+    // latency budget (`max_wait`) on multi-shard pools so stolen jobs
+    // never stall behind a long park; each empty scan doubles the poll up
+    // to STEAL_POLL_MAX, and any successful pop or steal snaps it back.
+    // The condvar still wakes a parked worker instantly on push or close,
+    // so backoff only delays *stealing*, never direct dispatch.
+    let min_poll = if queues.len() > 1 {
+        max_wait.clamp(Duration::from_micros(100), STEAL_POLL_MIN)
     } else {
-        Duration::from_millis(50)
+        STEAL_POLL_MIN
     };
+    let mut poll = min_poll;
     loop {
-        let jobs: Vec<Job> = match own.pop_wait(steal_poll) {
+        let jobs: Vec<Job> = match own.pop_wait(poll, &*clock) {
             Pop::Job(first) => {
+                poll = min_poll;
                 // The batching deadline is anchored to the head job's
                 // *enqueue* time: under backlog it has already spent its
                 // wait budget queueing, so the batch closes immediately
@@ -719,11 +1119,11 @@ fn worker_loop<E: BatchExecutor>(
                 }
                 // ...then wait out the remaining budget for stragglers.
                 while jobs.len() < max_batch {
-                    let remaining = deadline.saturating_duration_since(Instant::now());
+                    let remaining = deadline.saturating_sub(clock.now());
                     if remaining.is_zero() {
                         break;
                     }
-                    match own.pop_wait(remaining) {
+                    match own.pop_wait(remaining, &*clock) {
                         Pop::Job(j) => jobs.push(j),
                         Pop::Timeout | Pop::Closed => break,
                     }
@@ -733,10 +1133,15 @@ fn worker_loop<E: BatchExecutor>(
             Pop::Timeout => {
                 // Idle: steal a run of jobs from the deepest sibling queue
                 // and execute them immediately (they are already late).
+                for stats in [&aggregate, &shard] {
+                    stats.steal_scans.fetch_add(1, Ordering::Relaxed);
+                }
                 let jobs = steal_batch(&queues, shard_id, max_batch);
                 if jobs.is_empty() {
+                    poll = (poll * 2).min(STEAL_POLL_MAX);
                     continue;
                 }
+                poll = min_poll;
                 for stats in [&aggregate, &shard] {
                     stats.steals.fetch_add(1, Ordering::Relaxed);
                     stats.stolen_jobs.fetch_add(jobs.len() as u64, Ordering::Relaxed);
@@ -750,9 +1155,9 @@ fn worker_loop<E: BatchExecutor>(
         guard.in_flight = jobs;
         own.inflight.store(guard.in_flight.len(), Ordering::Relaxed);
         let rows: Vec<&[u16]> = guard.in_flight.iter().map(|j| j.row.as_slice()).collect();
-        let t0 = Instant::now();
+        let t0 = clock.now();
         let result = executor.execute(&rows);
-        let exec_nanos = t0.elapsed().as_nanos() as u64;
+        let exec_nanos = clock.now().saturating_sub(t0).as_nanos() as u64;
         drop(rows);
         own.inflight.store(0, Ordering::Relaxed);
         let jobs = std::mem::take(&mut guard.in_flight);
@@ -762,11 +1167,11 @@ fn worker_loop<E: BatchExecutor>(
             stats.rows_executed.fetch_add(jobs.len() as u64, Ordering::Relaxed);
         }
 
-        let done = Instant::now();
+        let done = clock.now();
         match result {
             Ok(preds) if preds.len() == jobs.len() => {
                 for (job, pred) in jobs.into_iter().zip(preds) {
-                    let reply = Reply { class: pred, latency: done - job.enqueued };
+                    let reply = Reply { class: pred, latency: done.saturating_sub(job.enqueued) };
                     let _ = job.resp.send(Ok(reply)); // receiver may have gone
                 }
             }
@@ -819,16 +1224,14 @@ mod tests {
 
     /// Mock executor: class = first feature mod 3; records batch sizes.
     /// A row with first feature 99 panics the worker when `poison` is set —
-    /// before the recorder lock, so the Mutex never poisons. When
-    /// `poison_latch` is set, the panic waits for the latch first, so tests
-    /// can deterministically queue jobs behind the doomed batch instead of
-    /// racing a fixed sleep.
+    /// before the recorder lock, so the Mutex never poisons. (The queued-
+    /// behind-a-doomed-batch scenarios that used to latch-synchronize here
+    /// live in `tests/serving.rs` on the deterministic chaos harness.)
     struct Mock {
         batches: Arc<Mutex<Vec<usize>>>,
         max: usize,
         delay: Duration,
         poison: bool,
-        poison_latch: Option<Arc<AtomicBool>>,
     }
 
     impl BatchExecutor for Mock {
@@ -840,12 +1243,6 @@ mod tests {
         }
         fn execute(&self, rows: &[&[u16]]) -> anyhow::Result<Vec<u32>> {
             if self.poison && rows.iter().any(|r| r[0] == 99) {
-                if let Some(latch) = &self.poison_latch {
-                    let deadline = Instant::now() + Duration::from_secs(5);
-                    while !latch.load(Ordering::Relaxed) && Instant::now() < deadline {
-                        std::thread::sleep(Duration::from_millis(1));
-                    }
-                }
                 panic!("poison row: simulated executor crash");
             }
             self.batches.lock().unwrap().push(rows.len());
@@ -863,7 +1260,6 @@ mod tests {
             max,
             delay: Duration::ZERO,
             poison: false,
-            poison_latch: None,
         };
         (m, batches)
     }
@@ -893,7 +1289,11 @@ mod tests {
         let (m, batches) = mock(4);
         let srv = Server::start(
             m,
-            BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(20) },
+            BatchPolicy {
+                max_batch: 4,
+                max_wait: Duration::from_millis(20),
+                ..BatchPolicy::default()
+            },
         );
         // Flood 33 requests asynchronously, then collect.
         let rxs: Vec<_> = (0..33u16).map(|v| srv.submit(vec![v, 1]).unwrap()).collect();
@@ -914,11 +1314,14 @@ mod tests {
             max: 16,
             delay: Duration::from_millis(5), // slow execute → queue builds
             poison: false,
-            poison_latch: None,
         };
         let srv = Server::start(
             m,
-            BatchPolicy { max_batch: 16, max_wait: Duration::from_millis(1) },
+            BatchPolicy {
+                max_batch: 16,
+                max_wait: Duration::from_millis(1),
+                ..BatchPolicy::default()
+            },
         );
         let rxs: Vec<_> = (0..64u16).map(|v| srv.submit(vec![v, 0]).unwrap()).collect();
         for rx in rxs {
@@ -935,7 +1338,11 @@ mod tests {
     fn rejects_wrong_width_and_counts_it() {
         let (m, _) = mock(4);
         let srv = Server::start(m, BatchPolicy::default());
-        assert!(srv.submit(vec![1, 2, 3]).is_err());
+        let err = srv.submit(vec![1, 2, 3]).unwrap_err();
+        assert!(matches!(
+            err.downcast_ref::<SubmitError>(),
+            Some(SubmitError::WidthMismatch { got: 3, want: 2 })
+        ));
         assert!(srv.submit(vec![7]).is_err());
         assert_eq!(srv.stats().rejected.load(Ordering::Relaxed), 2);
         assert_eq!(srv.stats().requests.load(Ordering::Relaxed), 0);
@@ -953,6 +1360,8 @@ mod tests {
         assert_eq!(s.requests.load(Ordering::Relaxed), 10);
         assert_eq!(s.rows_executed.load(Ordering::Relaxed), 10);
         assert_eq!(s.rejected.load(Ordering::Relaxed), 0);
+        assert_eq!(s.sheds.load(Ordering::Relaxed), 0);
+        assert_eq!(s.queue_full.load(Ordering::Relaxed), 0);
         assert!(s.mean_batch() >= 1.0);
         srv.shutdown();
     }
@@ -965,9 +1374,11 @@ mod tests {
             max: 1, // singleton batches: the queue must visibly build
             delay: Duration::from_millis(5),
             poison: false,
-            poison_latch: None,
         };
-        let srv = Server::start(m, BatchPolicy { max_batch: 1, max_wait: Duration::ZERO });
+        let srv = Server::start(
+            m,
+            BatchPolicy { max_batch: 1, max_wait: Duration::ZERO, ..BatchPolicy::default() },
+        );
         let rxs: Vec<_> = (0..8u16).map(|v| srv.submit(vec![v, 0]).unwrap()).collect();
         for rx in rxs {
             rx.recv().unwrap().unwrap();
@@ -976,6 +1387,7 @@ mod tests {
         assert_eq!(srv.queue_depths(), vec![0]);
         assert!(srv.stats().peak_depth.load(Ordering::Relaxed) >= 2);
         assert_eq!(srv.live_shards(), 1);
+        assert_eq!(srv.shards_at_cap(), 0);
         srv.shutdown();
     }
 
@@ -987,7 +1399,6 @@ mod tests {
                 max: 8,
                 delay: Duration::ZERO,
                 poison: false,
-                poison_latch: None,
             },
             BatchPolicy::default(),
             4,
@@ -1042,6 +1453,29 @@ mod tests {
     }
 
     #[test]
+    fn overload_policy_parses() {
+        assert_eq!("block".parse::<OverloadPolicy>().unwrap(), OverloadPolicy::Block);
+        assert_eq!("shed-new".parse::<OverloadPolicy>().unwrap(), OverloadPolicy::ShedNew);
+        assert_eq!("shed-oldest".parse::<OverloadPolicy>().unwrap(), OverloadPolicy::ShedOldest);
+        assert!("drop-tail".parse::<OverloadPolicy>().is_err());
+        assert_eq!(OverloadPolicy::ShedOldest.to_string(), "shed-oldest");
+        assert_eq!(OverloadPolicy::default(), OverloadPolicy::Block);
+    }
+
+    #[test]
+    fn zero_queue_cap_is_a_construction_error() {
+        let r = Server::start_pool_with::<Mock, _>(
+            |_| {
+                let (m, _) = mock(4);
+                Ok(m)
+            },
+            BatchPolicy::default().queue_cap(0),
+            1,
+        );
+        assert!(r.is_err());
+    }
+
+    #[test]
     fn failover_routes_around_dead_shard() {
         let srv = Server::start_pool(
             |_shard| {
@@ -1049,7 +1483,11 @@ mod tests {
                 m.poison = true;
                 m
             },
-            BatchPolicy { max_batch: 1, max_wait: Duration::from_micros(10) },
+            BatchPolicy {
+                max_batch: 1,
+                max_wait: Duration::from_micros(10),
+                ..BatchPolicy::default()
+            },
             2,
         )
         .unwrap();
@@ -1080,92 +1518,36 @@ mod tests {
     }
 
     #[test]
-    fn single_shard_death_fails_stranded_jobs_explicitly() {
-        let batches = Arc::new(Mutex::new(Vec::new()));
-        let latch = Arc::new(AtomicBool::new(false));
-        let m = Mock {
-            batches,
-            max: 1,
-            delay: Duration::ZERO,
-            poison: true,
-            poison_latch: Some(Arc::clone(&latch)),
-        };
-        let srv = Server::start(m, BatchPolicy { max_batch: 1, max_wait: Duration::ZERO });
-        // The poison batch blocks on the latch before panicking, so the
-        // stragglers deterministically queue behind it on the only shard.
-        let doomed: Vec<_> = std::iter::once(srv.submit(vec![99, 0]).unwrap())
-            .chain((0..5u16).map(|v| srv.submit(vec![v, 0]).unwrap()))
-            .collect();
-        latch.store(true, Ordering::Relaxed);
-        // Poison kills the worker; with no live sibling, every queued job
-        // must be failed explicitly — not silently dropped.
-        for rx in doomed {
-            let reply = rx
-                .recv_timeout(Duration::from_secs(5))
-                .expect("stranded job must get an explicit reply");
-            assert!(reply.is_err(), "stranded job cannot succeed");
-        }
-        assert_eq!(srv.stats().rejected.load(Ordering::Relaxed), 6);
-        assert_eq!(srv.live_shards(), 0);
-        // And the pool as a whole now rejects explicitly too.
-        assert!(srv.submit(vec![2, 0]).is_err());
-        assert_eq!(srv.stats().rejected.load(Ordering::Relaxed), 7);
-        srv.shutdown();
-    }
-
-    #[test]
-    fn dead_shard_jobs_inherited_by_live_sibling() {
-        // Both shards are poisonous, so whichever worker ends up executing
-        // the poison row (its dispatch shard, or a thief that stole it)
-        // dies; the test's invariants hold either way.
-        let latch = Arc::new(AtomicBool::new(false));
-        let latch_f = Arc::clone(&latch);
+    fn dead_pool_submit_is_typed_all_shards_dead() {
         let srv = Server::start_pool(
-            move |_shard| {
+            |_shard| {
                 let (mut m, _) = mock(1);
                 m.poison = true;
-                m.poison_latch = Some(Arc::clone(&latch_f));
                 m
             },
-            BatchPolicy { max_batch: 1, max_wait: Duration::from_millis(1) },
+            BatchPolicy {
+                max_batch: 1,
+                max_wait: Duration::from_micros(10),
+                ..BatchPolicy::default()
+            },
             2,
         )
         .unwrap();
-        // Cursor 0: the poison row goes to shard 0, whose worker blocks on
-        // the latch before dying; the following even-cursor submissions
-        // queue up behind the doomed batch while the odd ones complete on
-        // shard 1.
-        let poisoned = srv.submit(vec![99, 0]).unwrap();
-        let plain: Vec<_> = (0..6u16).map(|v| srv.submit(vec![v, 0]).unwrap()).collect();
-        latch.store(true, Ordering::Relaxed);
-        assert!(poisoned
-            .recv_timeout(Duration::from_secs(5))
-            .expect("poisoned job must get an explicit reply")
-            .is_err());
-        // The jobs queued behind the poison must still be answered: stolen
-        // by the idle sibling mid-stall, or re-dispatched by the dying
-        // worker's guard.
-        for (v, rx) in plain.into_iter().enumerate() {
-            let reply = rx
-                .recv_timeout(Duration::from_secs(5))
-                .expect("job on the dead shard must be inherited, not lost")
-                .expect("inherited job must succeed");
-            assert_eq!(reply.class, (v % 3) as u32);
+        // Kill both workers.
+        for _ in 0..2 {
+            let rx = srv.submit(vec![99, 0]).unwrap();
+            let _ = rx.recv_timeout(Duration::from_secs(5));
         }
-        wait_for("dead shard to retire", || srv.live_shards() == 1);
-        let s = srv.stats();
-        // Only the poison row itself was failed and counted...
-        assert_eq!(s.rejected.load(Ordering::Relaxed), 1);
-        // ...and work moved off the dying shard. The exact count depends on
-        // which worker won the race for the poison row: normally shard 0
-        // stalls on it and its 3 queue-mates move to shard 1 (moved = 3);
-        // if idle shard 1 stole the poison instead, the steal itself is a
-        // movement and shard 1's own queued dispatches (0-3 of them,
-        // depending on when it stole) move back. Every branch moves at
-        // least the poison or its queue-mates; none loses a job (asserted
-        // via the replies above).
-        let moved = s.stolen_jobs.load(Ordering::Relaxed) + s.redispatched.load(Ordering::Relaxed);
-        assert!((1..=4).contains(&moved), "moved={moved}");
+        wait_for("both shards to retire", || srv.live_shards() == 0);
+        let before = srv.stats().rejected.load(Ordering::Relaxed);
+        // Regression: a fully dead pool must fail fast with the typed
+        // error, not a generic string.
+        let err = srv.submit(vec![1, 0]).unwrap_err();
+        assert!(
+            matches!(err.downcast_ref::<SubmitError>(), Some(SubmitError::AllShardsDead)),
+            "{err}"
+        );
+        assert_eq!(srv.stats().rejected.load(Ordering::Relaxed), before + 1);
         srv.shutdown();
     }
 
@@ -1186,7 +1568,11 @@ mod tests {
         }
         let srv = Server::start(
             Short,
-            BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(5) },
+            BatchPolicy {
+                max_batch: 8,
+                max_wait: Duration::from_millis(5),
+                ..BatchPolicy::default()
+            },
         );
         // Whatever the coalescing, every batch comes back short, so every
         // job must get an explicit error — not a dropped reply channel.

@@ -23,6 +23,11 @@ pub struct ServingReport {
     pub steals: u64,
     /// Jobs moved by those steals.
     pub stolen_jobs: u64,
+    /// Jobs shed by admission control (`shed-new` refusals plus
+    /// `shed-oldest` queue-head drops).
+    pub sheds: u64,
+    /// Submit attempts that found the dispatched-to queue at its cap.
+    pub queue_full: u64,
 }
 
 impl ServingReport {
@@ -43,6 +48,8 @@ impl ServingReport {
             dispatch: None,
             steals: 0,
             stolen_jobs: 0,
+            sheds: 0,
+            queue_full: 0,
         }
     }
 
@@ -65,6 +72,13 @@ impl ServingReport {
         self
     }
 
+    /// Record the run's admission-control counters.
+    pub fn with_admission(mut self, sheds: u64, queue_full: u64) -> ServingReport {
+        self.sheds = sheds;
+        self.queue_full = queue_full;
+        self
+    }
+
     /// One-line human-readable rendering (microsecond latencies).
     pub fn render(&self) -> String {
         let us = |s: f64| s * 1e6;
@@ -77,8 +91,13 @@ impl ServingReport {
         } else {
             String::new()
         };
+        let sheds = if self.sheds > 0 || self.queue_full > 0 {
+            format!(" sheds={} (queue_full={})", self.sheds, self.queue_full)
+        } else {
+            String::new()
+        };
         format!(
-            "thru={:.0} rows/s{}{shards}{dispatch} batch={:.1} lat p50={:.0}us p90={:.0}us p99={:.0}us max={:.0}us{steals}",
+            "thru={:.0} rows/s{}{shards}{dispatch} batch={:.1} lat p50={:.0}us p90={:.0}us p99={:.0}us max={:.0}us{steals}{sheds}",
             self.throughput,
             self.offered_rps.map(|r| format!(" (offered {r:.0})")).unwrap_or_default(),
             self.mean_batch,
@@ -119,6 +138,17 @@ mod tests {
         let r4 = r.with_shards(4);
         assert_eq!(r4.shards, 4);
         assert!(r4.render().contains("shards=4"));
+    }
+
+    #[test]
+    fn admission_rendering() {
+        let r = ServingReport::from_latencies(&[0.001; 10], 1.0, 2.0, None);
+        // Unset: no shed marker.
+        assert!(!r.render().contains("sheds="));
+        let r = r.with_admission(12, 30);
+        assert_eq!(r.sheds, 12);
+        assert_eq!(r.queue_full, 30);
+        assert!(r.render().contains("sheds=12 (queue_full=30)"));
     }
 
     #[test]

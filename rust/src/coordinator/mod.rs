@@ -7,20 +7,34 @@
 //! clients submit single rows, the [`batcher`] dispatches them across an
 //! N-shard worker pool — blind round-robin or load-aware power-of-two-
 //! choices ([`DispatchPolicy`]), with idle workers stealing from the
-//! deepest sibling queue — and coalesces each shard's queue into
-//! engine-sized batches under a latency bound (II = 1 equivalent: one batch
-//! in flight at a time per shard, N batches in flight across the pool), and
-//! [`metrics`] reports p50/p99 and throughput.
+//! deepest sibling queue on an adaptive poll — and coalesces each shard's
+//! queue into engine-sized batches under a latency bound (II = 1
+//! equivalent: one batch in flight at a time per shard, N batches in
+//! flight across the pool), and [`metrics`] reports p50/p99, throughput,
+//! and shed counts.
+//!
+//! Overload is governed by admission control ([`BatchPolicy::queue_cap`] +
+//! [`OverloadPolicy`]): a bounded pool sheds or blocks instead of
+//! buffering without limit, which is what keeps the enqueue-anchored
+//! latency bound meaningful at 2x saturation (DESIGN.md §4).
 //!
 //! The coordinator is generic over [`BatchExecutor`] so unit tests run
 //! against a deterministic mock and the serving path runs against
 //! [`FlatExecutor`] (the flat-forest CPU engine) or
-//! [`crate::runtime::Engine`] (the AOT PJRT artifact).
+//! [`crate::runtime::Engine`] (the AOT PJRT artifact). Time is generic
+//! too ([`Clock`]): production uses [`WallClock`], while the `testing`
+//! harness (compiled under the `test-harness` feature) drives the pool on
+//! a virtual clock so overload and chaos scenarios are deterministic.
 
 pub mod batcher;
 pub mod metrics;
+#[cfg(any(test, feature = "test-harness"))]
+pub mod testing;
 
-pub use batcher::{BatchPolicy, DispatchPolicy, Reply, Server, ServerStats};
+pub use batcher::{
+    BatchPolicy, Clock, DispatchPolicy, OverloadPolicy, Reply, Server, ServerStats,
+    SubmitError, WallClock,
+};
 pub use metrics::ServingReport;
 
 /// Anything that can classify a batch of quantized rows.

@@ -1,0 +1,720 @@
+//! Deterministic serving test harness: a virtual clock, a scripted
+//! open-loop load generator, and a chaos hook — the machinery that lets
+//! `tests/serving.rs` pin overload, batching-deadline, dispatch-skew, and
+//! shard-death behavior *exactly*, with no wall-clock sleeps and no timing
+//! races (DESIGN.md §Testing).
+//!
+//! How determinism is achieved: the pool's workers are real threads, but
+//! every deadline, steal poll, and latency measurement flows through the
+//! [`Clock`] trait, and [`VirtualClock`] only moves time when the harness
+//! says so. The harness in turn only moves time when the pool is
+//! **quiescent** — every live worker is parked (blocked popping its queue
+//! or inside a scripted service sleep) and has observed the latest tick,
+//! and no parked-popping worker has an undelivered push in its queue. Time
+//! then hops directly to the next parked deadline (discrete-event style),
+//! so batching composition, shed decisions, and reply latencies are pure
+//! functions of the script: virtual timestamps come out exact, and chaos
+//! scenarios repeat bit-identically run after run.
+//!
+//! Gated behind `cfg(test)` / the `test-harness` feature (enabled for the
+//! crate's own integration tests via the self-dev-dependency in
+//! `Cargo.toml`); nothing here is compiled into production builds.
+
+use super::batcher::{
+    BatchPolicy, Clock, DispatchPolicy, Job, OverloadPolicy, Reply, Server, SubmitError,
+};
+use super::BatchExecutor;
+use crate::util::Rng;
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex, MutexGuard, Weak};
+use std::thread::ThreadId;
+use std::time::{Duration, Instant};
+
+/// Real-time safety recheck while parked on virtual time: purely a
+/// liveness net against a lost notification — correctness never depends on
+/// it (every wake re-checks virtual state).
+const SAFETY_RECHECK: Duration = Duration::from_millis(10);
+
+/// Real-time bound on waiting for the pool to quiesce before a tick; a
+/// healthy pool quiesces in microseconds, so hitting this means a bug
+/// (e.g. a worker stuck outside clock-mediated blocking).
+const QUIESCE_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// What a registered worker thread is doing, as seen by the clock.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WorkerState {
+    /// Between blocking points (popping, batching, replying).
+    Running,
+    /// Blocked in `pop_wait` on its (empty) queue.
+    ParkedPop,
+    /// Blocked in a scripted service-time sleep ([`VirtualClock::sleep_until`]).
+    ParkedSleep,
+}
+
+struct WorkerSlot {
+    shard: usize,
+    state: WorkerState,
+    /// Virtual deadline of the current park (pop timeout or sleep target).
+    deadline: Option<Duration>,
+    /// Tick sequence number observed at the last park — quiescence
+    /// requires every worker to have re-parked *after* the latest tick.
+    parked_seq: u64,
+}
+
+struct VcState {
+    now: Duration,
+    /// Bumped on every tick; workers stamp it into `parked_seq` on park.
+    seq: u64,
+    /// Condvars the pool parks on (queue `cv` + `space`); every tick
+    /// notifies all of them.
+    cvs: Vec<Weak<Condvar>>,
+    workers: HashMap<ThreadId, WorkerSlot>,
+}
+
+/// A manually advanced clock. `now` starts at zero and moves only via
+/// [`VirtualClock::advance_raw_to`] (use [`Harness::advance`], which adds
+/// the quiescence discipline that makes runs deterministic).
+pub struct VirtualClock {
+    state: Mutex<VcState>,
+    /// Notified on every tick and every worker state change; the harness's
+    /// quiescence wait and scripted sleeps park here.
+    tick: Condvar,
+}
+
+impl Default for VirtualClock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl VirtualClock {
+    pub fn new() -> VirtualClock {
+        VirtualClock {
+            state: Mutex::new(VcState {
+                now: Duration::ZERO,
+                seq: 0,
+                cvs: Vec::new(),
+                workers: HashMap::new(),
+            }),
+            tick: Condvar::new(),
+        }
+    }
+
+    /// Current virtual time.
+    pub fn now(&self) -> Duration {
+        self.state.lock().unwrap().now
+    }
+
+    /// Jump virtual time to `t` (monotonic; earlier targets are ignored)
+    /// and wake everything parked on the clock. No quiescence discipline —
+    /// prefer [`Harness::advance`] unless determinism is irrelevant (e.g.
+    /// draining a shutdown).
+    pub fn advance_raw_to(&self, t: Duration) {
+        let cvs: Vec<Arc<Condvar>> = {
+            let mut st = self.state.lock().unwrap();
+            if t > st.now {
+                st.now = t;
+            }
+            st.seq += 1;
+            st.cvs.retain(|w| w.strong_count() > 0);
+            st.cvs.iter().filter_map(|w| w.upgrade()).collect()
+        };
+        for cv in cvs {
+            cv.notify_all();
+        }
+        self.tick.notify_all();
+    }
+
+    /// Earliest virtual deadline any parked worker is waiting for — the
+    /// next discrete event.
+    pub fn next_deadline(&self) -> Option<Duration> {
+        let st = self.state.lock().unwrap();
+        st.workers
+            .values()
+            .filter(|w| w.state != WorkerState::Running)
+            .filter_map(|w| w.deadline)
+            .min()
+    }
+
+    /// Snapshot of `(tick seq, [(shard, state, parked_seq)])` for the
+    /// harness's quiescence check.
+    pub fn worker_snapshot(&self) -> (u64, Vec<(usize, WorkerState, u64)>) {
+        let st = self.state.lock().unwrap();
+        (st.seq, st.workers.values().map(|w| (w.shard, w.state, w.parked_seq)).collect())
+    }
+
+    /// Park on the clock's own condvar for up to `real_timeout` of *real*
+    /// time or until any state change / tick.
+    pub fn wait_state_change(&self, real_timeout: Duration) {
+        let st = self.state.lock().unwrap();
+        let _ = self.tick.wait_timeout(st, real_timeout).unwrap();
+    }
+
+    /// Block the calling thread until virtual time reaches `target` — the
+    /// scripted executors' service-time primitive. Registered workers are
+    /// tracked as [`WorkerState::ParkedSleep`] while inside.
+    pub fn sleep_until(&self, target: Duration) {
+        let me = std::thread::current().id();
+        let mut st = self.state.lock().unwrap();
+        loop {
+            let seq = st.seq;
+            if let Some(w) = st.workers.get_mut(&me) {
+                w.state = WorkerState::ParkedSleep;
+                w.deadline = Some(target);
+                w.parked_seq = seq;
+            }
+            self.tick.notify_all();
+            if st.now >= target {
+                break;
+            }
+            st = self.tick.wait_timeout(st, SAFETY_RECHECK).unwrap().0;
+        }
+        if let Some(w) = st.workers.get_mut(&me) {
+            w.state = WorkerState::Running;
+            w.deadline = None;
+        }
+        drop(st);
+        self.tick.notify_all();
+    }
+
+    fn set_worker_state(&self, state: WorkerState, deadline: Option<Duration>) {
+        let me = std::thread::current().id();
+        let mut st = self.state.lock().unwrap();
+        let seq = st.seq;
+        if let Some(w) = st.workers.get_mut(&me) {
+            w.state = state;
+            w.deadline = deadline;
+            w.parked_seq = seq;
+        }
+        drop(st);
+        self.tick.notify_all();
+    }
+}
+
+impl Clock for VirtualClock {
+    fn now(&self) -> Duration {
+        VirtualClock::now(self)
+    }
+
+    fn wait_timeout<'a>(
+        &self,
+        cv: &Condvar,
+        guard: MutexGuard<'a, VecDeque<Job>>,
+        timeout: Duration,
+    ) -> MutexGuard<'a, VecDeque<Job>> {
+        // Stamp the park (with its virtual deadline) while still holding
+        // the queue lock `guard` protects: a pop-parked worker therefore
+        // always has an empty queue at stamp time, which is what lets the
+        // harness treat "parked-popping + non-empty queue" as an
+        // in-flight push and hold the tick until it lands.
+        let deadline = VirtualClock::now(self) + timeout;
+        self.set_worker_state(WorkerState::ParkedPop, Some(deadline));
+        // The virtual `timeout` is NOT a real wait bound: wakes come from
+        // pushes/close (cv) and ticks (every registered cv); the short
+        // real timeout below only guards against a lost notification.
+        let (guard, _) = cv.wait_timeout(guard, SAFETY_RECHECK).unwrap();
+        self.set_worker_state(WorkerState::Running, None);
+        guard
+    }
+
+    fn register_condvar(&self, cv: &Arc<Condvar>) {
+        self.state.lock().unwrap().cvs.push(Arc::downgrade(cv));
+    }
+
+    fn worker_started(&self, shard: usize) {
+        let me = std::thread::current().id();
+        let mut st = self.state.lock().unwrap();
+        st.workers.insert(
+            me,
+            WorkerSlot { shard, state: WorkerState::Running, deadline: None, parked_seq: 0 },
+        );
+        drop(st);
+        self.tick.notify_all();
+    }
+
+    fn worker_stopped(&self, _shard: usize) {
+        let me = std::thread::current().id();
+        self.state.lock().unwrap().workers.remove(&me);
+        self.tick.notify_all();
+    }
+}
+
+/// Per-batch service time of a scripted shard.
+#[derive(Clone, Debug)]
+pub enum ServiceModel {
+    /// Same duration per batch on every shard.
+    Fixed(Duration),
+    /// Per-shard duration per batch (index = shard id).
+    PerShard(Vec<Duration>),
+}
+
+impl ServiceModel {
+    fn service(&self, shard: usize) -> Duration {
+        match self {
+            ServiceModel::Fixed(d) => *d,
+            ServiceModel::PerShard(v) => v[shard],
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug)]
+enum ChaosAction {
+    Kill,
+    Stall(Duration),
+}
+
+/// Scripted faults: kill (panic the worker) or stall (stretch the service
+/// time) a chosen shard at a chosen step, where `step` is that shard's
+/// 0-based executed-batch index. Because batching composition is
+/// deterministic under the harness, "step" pins an exact moment in the run.
+#[derive(Clone, Debug, Default)]
+pub struct ChaosPlan {
+    events: Vec<(usize, usize, ChaosAction)>,
+}
+
+impl ChaosPlan {
+    /// No faults.
+    pub fn none() -> ChaosPlan {
+        ChaosPlan::default()
+    }
+
+    /// Panic `shard`'s worker when it starts its `step`-th batch.
+    pub fn kill(shard: usize, step: usize) -> ChaosPlan {
+        ChaosPlan { events: vec![(shard, step, ChaosAction::Kill)] }
+    }
+
+    /// Stretch `shard`'s `step`-th batch by `extra`.
+    pub fn stall(shard: usize, step: usize, extra: Duration) -> ChaosPlan {
+        ChaosPlan { events: vec![(shard, step, ChaosAction::Stall(extra))] }
+    }
+
+    fn action(&self, shard: usize, step: usize) -> Option<ChaosAction> {
+        self.events.iter().find(|&&(s, t, _)| s == shard && t == step).map(|&(_, _, a)| a)
+    }
+}
+
+/// One executed batch, as recorded by the scripted executors.
+#[derive(Clone, Debug)]
+pub struct BatchRecord {
+    pub shard: usize,
+    /// The shard's 0-based batch index.
+    pub step: usize,
+    /// Virtual completion time.
+    pub done: Duration,
+    /// `row[0]` (the job id) of every row in the batch, in batch order.
+    pub jobs: Vec<u16>,
+}
+
+/// Deterministic class function shared by the scripted executor and test
+/// assertions: rows are `[id, aux]`.
+pub fn scripted_class(row: &[u16]) -> u32 {
+    ((row[0] as u32) * 7 + row[1] as u32) % 5
+}
+
+/// A [`BatchExecutor`] whose execution cost is *virtual*: each batch holds
+/// the worker in [`VirtualClock::sleep_until`] for the scripted service
+/// time, then replies with [`scripted_class`]. Chaos events fire by shard
+/// and batch step.
+pub struct ScriptedExecutor {
+    shard: usize,
+    n_features: usize,
+    clock: Arc<VirtualClock>,
+    service: ServiceModel,
+    chaos: Arc<ChaosPlan>,
+    step: AtomicUsize,
+    log: Arc<Mutex<Vec<BatchRecord>>>,
+}
+
+impl BatchExecutor for ScriptedExecutor {
+    fn max_batch(&self) -> usize {
+        usize::MAX // the BatchPolicy clamp governs
+    }
+    fn n_features(&self) -> usize {
+        self.n_features
+    }
+    fn execute(&self, rows: &[&[u16]]) -> anyhow::Result<Vec<u32>> {
+        let step = self.step.fetch_add(1, Ordering::Relaxed);
+        let mut extra = Duration::ZERO;
+        match self.chaos.action(self.shard, step) {
+            Some(ChaosAction::Kill) => {
+                panic!("chaos: killing shard {} at step {step}", self.shard)
+            }
+            Some(ChaosAction::Stall(d)) => extra = d,
+            None => {}
+        }
+        let service = self.service.service(self.shard) + extra;
+        if !service.is_zero() {
+            let target = self.clock.now() + service;
+            self.clock.sleep_until(target);
+        }
+        self.log.lock().unwrap().push(BatchRecord {
+            shard: self.shard,
+            step,
+            done: self.clock.now(),
+            jobs: rows.iter().map(|r| r[0]).collect(),
+        });
+        Ok(rows.iter().map(|r| scripted_class(r)).collect())
+    }
+}
+
+/// Pool shape + script for a harness run.
+#[derive(Clone, Debug)]
+pub struct HarnessConfig {
+    pub n_shards: usize,
+    pub policy: BatchPolicy,
+    pub dispatch: DispatchPolicy,
+    pub service: ServiceModel,
+    pub chaos: ChaosPlan,
+}
+
+impl Default for HarnessConfig {
+    fn default() -> Self {
+        HarnessConfig {
+            n_shards: 1,
+            policy: BatchPolicy::default(),
+            dispatch: DispatchPolicy::RoundRobin,
+            service: ServiceModel::Fixed(Duration::from_millis(1)),
+            chaos: ChaosPlan::none(),
+        }
+    }
+}
+
+/// Outcome of a scripted open-loop run, per job id (the arrival index).
+#[derive(Debug, Default)]
+pub struct LoadOutcome {
+    /// Successfully served jobs with their (virtual-time-exact) replies.
+    pub ok: Vec<(u16, Reply)>,
+    /// Jobs that got an explicit error reply (shed-oldest drops, failed
+    /// batches, worker deaths).
+    pub failed: Vec<(u16, anyhow::Error)>,
+    /// Jobs refused at the door by `shed-new`.
+    pub shed_at_submit: Vec<u16>,
+}
+
+impl LoadOutcome {
+    /// Served latencies in job-id order.
+    pub fn latencies(&self) -> Vec<Duration> {
+        self.ok.iter().map(|(_, r)| r.latency).collect()
+    }
+
+    /// Nearest-rank p99 of served-job latency.
+    pub fn p99_latency(&self) -> Duration {
+        let mut lats = self.latencies();
+        lats.sort_unstable();
+        match lats.len() {
+            0 => Duration::ZERO,
+            n => lats[((n as f64 - 1.0) * 0.99).round() as usize],
+        }
+    }
+
+    /// Reply for a served job id, if any.
+    pub fn reply(&self, id: u16) -> Option<Reply> {
+        self.ok.iter().find(|&&(i, _)| i == id).map(|&(_, r)| r)
+    }
+
+    /// Error string for a failed job id, if any.
+    pub fn error(&self, id: u16) -> Option<&anyhow::Error> {
+        self.failed.iter().find(|&&(i, _)| i == id).map(|(_, e)| e)
+    }
+}
+
+/// Cumulative Poisson arrival times at `rps`, seeded through the crate's
+/// deterministic PRNG.
+pub fn poisson_arrivals(seed: u64, rps: f64, n: usize) -> Vec<Duration> {
+    let mut rng = Rng::new(seed);
+    let mut t = 0.0f64;
+    (0..n)
+        .map(|_| {
+            t += rng.exp(rps);
+            Duration::from_secs_f64(t)
+        })
+        .collect()
+}
+
+/// Evenly spaced arrivals `0, period, 2*period, ...`.
+pub fn uniform_arrivals(period: Duration, n: usize) -> Vec<Duration> {
+    (0..n).map(|i| period * i as u32).collect()
+}
+
+/// A serving pool on a virtual clock, plus the drivers that keep it
+/// deterministic.
+pub struct Harness {
+    pub clock: Arc<VirtualClock>,
+    pub server: Server,
+    policy: BatchPolicy,
+    log: Arc<Mutex<Vec<BatchRecord>>>,
+}
+
+impl Harness {
+    /// Start a scripted pool. Rows are `[id, aux]` (2 features); classes
+    /// come from [`scripted_class`].
+    pub fn start(cfg: HarnessConfig) -> Harness {
+        let clock = Arc::new(VirtualClock::new());
+        let log = Arc::new(Mutex::new(Vec::new()));
+        let chaos = Arc::new(cfg.chaos);
+        let service = cfg.service;
+        let (clock_f, log_f) = (Arc::clone(&clock), Arc::clone(&log));
+        let server = Server::start_pool_clocked(
+            move |shard| {
+                Ok(ScriptedExecutor {
+                    shard,
+                    n_features: 2,
+                    clock: Arc::clone(&clock_f),
+                    service: service.clone(),
+                    chaos: Arc::clone(&chaos),
+                    step: AtomicUsize::new(0),
+                    log: Arc::clone(&log_f),
+                })
+            },
+            cfg.policy,
+            cfg.n_shards,
+            cfg.dispatch,
+            Arc::clone(&clock) as Arc<dyn Clock>,
+        )
+        .expect("harness pool must start");
+        Harness { clock, server, policy: cfg.policy, log }
+    }
+
+    /// Guard against a driver-thread livelock: a `block`-policy submit on a
+    /// capped queue suspends its caller until virtual time drains the
+    /// queue, but the harness driver is the only thread that advances
+    /// virtual time. Submitting such a pool from the driver would hang
+    /// forever; tests must submit from a separate thread (see
+    /// `tests/serving.rs::block_policy_bounds_submit_latency_by_drain`)
+    /// while the driver keeps the clock moving.
+    fn assert_driver_cannot_block(&self) {
+        assert!(
+            self.policy.queue_cap == usize::MAX
+                || self.policy.overload != OverloadPolicy::Block,
+            "harness driver would deadlock: block-policy submits on a capped queue must run \
+             on their own thread (server.submit) while the driver advances the clock"
+        );
+    }
+
+    /// Every batch executed so far, in completion order.
+    pub fn batches(&self) -> Vec<BatchRecord> {
+        self.log.lock().unwrap().clone()
+    }
+
+    /// True when every live worker is parked, has observed the latest
+    /// tick, and has no undelivered push sitting in its queue — the state
+    /// in which advancing time cannot race worker progress.
+    fn quiesced(&self) -> bool {
+        let (seq, workers) = self.clock.worker_snapshot();
+        let depths = self.server.queue_depths();
+        workers.iter().all(|&(shard, state, parked_seq)| match state {
+            WorkerState::Running => false,
+            WorkerState::ParkedSleep => parked_seq == seq,
+            WorkerState::ParkedPop => {
+                parked_seq == seq && depths.get(shard).copied().unwrap_or(0) == 0
+            }
+        })
+    }
+
+    /// Block (real time, bounded) until the pool quiesces.
+    fn wait_quiesced(&self) {
+        let deadline = Instant::now() + QUIESCE_TIMEOUT;
+        loop {
+            if self.quiesced() {
+                return;
+            }
+            assert!(
+                Instant::now() < deadline,
+                "harness: pool failed to quiesce: workers={:?} depths={:?}",
+                self.clock.worker_snapshot(),
+                self.server.queue_depths()
+            );
+            self.clock.wait_state_change(Duration::from_millis(2));
+        }
+    }
+
+    /// Advance virtual time by `d`, hopping deadline-to-deadline and
+    /// waiting for the pool to quiesce between hops — the discrete-event
+    /// step that keeps every run identical.
+    pub fn advance(&self, d: Duration) {
+        let target = self.clock.now() + d;
+        loop {
+            self.wait_quiesced();
+            let now = self.clock.now();
+            if now >= target {
+                return;
+            }
+            let hop = match self.clock.next_deadline() {
+                Some(t) if t > now && t < target => t,
+                _ => target,
+            };
+            self.clock.advance_raw_to(hop);
+        }
+    }
+
+    /// Submit one job (row `[id, aux]`) once the pool has quiesced, so the
+    /// enqueue order relative to worker progress is deterministic.
+    pub fn submit(
+        &self,
+        id: u16,
+        aux: u16,
+    ) -> anyhow::Result<mpsc::Receiver<anyhow::Result<Reply>>> {
+        self.assert_driver_cannot_block();
+        self.wait_quiesced();
+        self.server.submit(vec![id, aux])
+    }
+
+    /// Step virtual time until `rx` resolves and return its outcome.
+    /// Panics if the pool loses the job (a generous virtual budget passes
+    /// with no reply and no error).
+    pub fn recv(&self, rx: &mpsc::Receiver<anyhow::Result<Reply>>) -> anyhow::Result<Reply> {
+        for _ in 0..100_000 {
+            self.wait_quiesced();
+            match rx.try_recv() {
+                Ok(r) => return r,
+                Err(mpsc::TryRecvError::Empty) => self.advance(Duration::from_millis(1)),
+                Err(mpsc::TryRecvError::Disconnected) => {
+                    panic!("reply channel dropped without an answer")
+                }
+            }
+        }
+        panic!("reply never arrived by virtual {:?}", self.clock.now());
+    }
+
+    /// Scripted open loop: submit job `i` at `arrivals[i]` (virtual time),
+    /// then advance until every admitted job has resolved. Panics if a job
+    /// neither resolves nor errors within a generous virtual budget (i.e.
+    /// the pool lost it).
+    pub fn run_open_loop(&self, arrivals: &[Duration]) -> LoadOutcome {
+        self.assert_driver_cannot_block();
+        let mut out = LoadOutcome::default();
+        let mut pending: VecDeque<(u16, mpsc::Receiver<anyhow::Result<Reply>>)> = VecDeque::new();
+        for (i, &at) in arrivals.iter().enumerate() {
+            let id = i as u16;
+            let now = self.clock.now();
+            if at > now {
+                self.advance(at - now);
+            }
+            match self.submit(id, 0) {
+                Ok(rx) => pending.push_back((id, rx)),
+                Err(e) => {
+                    if matches!(
+                        e.downcast_ref::<SubmitError>(),
+                        Some(SubmitError::QueueFull { .. })
+                    ) {
+                        out.shed_at_submit.push(id);
+                    } else {
+                        out.failed.push((id, e));
+                    }
+                }
+            }
+        }
+        // Drain: step time until every admitted job has an outcome.
+        let mut steps = 0usize;
+        while !pending.is_empty() {
+            self.wait_quiesced();
+            let mut still = VecDeque::new();
+            for (id, rx) in pending {
+                match rx.try_recv() {
+                    Ok(Ok(reply)) => out.ok.push((id, reply)),
+                    Ok(Err(e)) => out.failed.push((id, e)),
+                    Err(mpsc::TryRecvError::Empty) => still.push_back((id, rx)),
+                    Err(mpsc::TryRecvError::Disconnected) => {
+                        panic!("job {id}: reply channel dropped without an answer")
+                    }
+                }
+            }
+            pending = still;
+            if pending.is_empty() {
+                break;
+            }
+            steps += 1;
+            assert!(
+                steps < 100_000,
+                "jobs {:?} never resolved (virtual time {:?})",
+                pending.iter().map(|(id, _)| *id).collect::<Vec<_>>(),
+                self.clock.now()
+            );
+            self.advance(Duration::from_millis(1));
+        }
+        out
+    }
+
+    /// Shut the pool down while a background thread keeps virtual time
+    /// flowing, so workers can drain their queues (scripted service sleeps
+    /// need ticks to finish). Returns the batch log.
+    pub fn shutdown_draining(self) -> Vec<BatchRecord> {
+        let Harness { clock, server, log } = self;
+        let stop = Arc::new(AtomicBool::new(false));
+        let (clock_t, stop_t) = (Arc::clone(&clock), Arc::clone(&stop));
+        let advancer = std::thread::spawn(move || {
+            while !stop_t.load(Ordering::Relaxed) {
+                let t = clock_t.now() + Duration::from_millis(1);
+                clock_t.advance_raw_to(t);
+                clock_t.wait_state_change(Duration::from_micros(500));
+            }
+        });
+        server.shutdown();
+        stop.store(true, Ordering::Relaxed);
+        let _ = advancer.join();
+        log.lock().unwrap().clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn virtual_clock_advances_and_snapshots() {
+        let c = VirtualClock::new();
+        assert_eq!(c.now(), Duration::ZERO);
+        c.advance_raw_to(Duration::from_millis(5));
+        assert_eq!(c.now(), Duration::from_millis(5));
+        // Monotonic: an earlier target is ignored but still ticks.
+        c.advance_raw_to(Duration::from_millis(3));
+        assert_eq!(c.now(), Duration::from_millis(5));
+        let (seq, workers) = c.worker_snapshot();
+        assert_eq!(seq, 2);
+        assert!(workers.is_empty());
+        assert_eq!(c.next_deadline(), None);
+    }
+
+    #[test]
+    fn arrival_generators_are_deterministic() {
+        let a = poisson_arrivals(7, 1000.0, 50);
+        let b = poisson_arrivals(7, 1000.0, 50);
+        assert_eq!(a, b);
+        assert!(a.windows(2).all(|w| w[0] <= w[1]), "arrivals must be sorted");
+        let u = uniform_arrivals(Duration::from_millis(2), 4);
+        assert_eq!(u[3], Duration::from_millis(6));
+    }
+
+    #[test]
+    fn scripted_pool_serves_exact_virtual_latency() {
+        let h = Harness::start(HarnessConfig {
+            service: ServiceModel::Fixed(Duration::from_millis(10)),
+            policy: BatchPolicy {
+                max_batch: 1,
+                max_wait: Duration::ZERO,
+                ..BatchPolicy::default()
+            },
+            ..HarnessConfig::default()
+        });
+        let out = h.run_open_loop(&uniform_arrivals(Duration::from_millis(20), 3));
+        assert_eq!(out.ok.len(), 3);
+        assert!(out.failed.is_empty() && out.shed_at_submit.is_empty());
+        for (id, reply) in &out.ok {
+            // Arrivals are spaced beyond the service time: every job's
+            // latency is exactly one service interval.
+            assert_eq!(reply.latency, Duration::from_millis(10), "job {id}");
+            assert_eq!(reply.class, scripted_class(&[*id, 0]));
+        }
+        h.server.shutdown();
+    }
+
+    #[test]
+    fn chaos_plan_targets_shard_and_step() {
+        let p = ChaosPlan::kill(1, 3);
+        assert!(matches!(p.action(1, 3), Some(ChaosAction::Kill)));
+        assert!(p.action(1, 2).is_none());
+        assert!(p.action(0, 3).is_none());
+        assert!(ChaosPlan::none().action(0, 0).is_none());
+    }
+}

@@ -10,16 +10,23 @@
 //! treelut datasets
 //!     print the evaluation datasets (paper Table 4)
 //! treelut serve [--config jsc] [--requests N] [--rps R] [--shards S] [--dispatch p2c]
+//!               [--queue-cap C] [--overload block|shed-new|shed-oldest]
 //!     batched serving over an N-shard pool: the AOT PJRT artifact when
 //!     available (`make artifacts`), the flat-forest CPU executor otherwise;
 //!     dispatch is load-aware power-of-two-choices by default (round-robin
 //!     selectable for comparison), with idle shards stealing from the
-//!     deepest sibling queue
+//!     deepest sibling queue on an adaptive poll. `--queue-cap` arms
+//!     bounded-queue admission control (0 = unbounded): at capacity the
+//!     overload policy blocks the submitter, sheds the new request, or
+//!     sheds the queue head, and shed counts appear in the report
 //! ```
 
 use std::path::PathBuf;
 
-use treelut::coordinator::{BatchPolicy, DispatchPolicy, FlatExecutor, Server, ServingReport};
+use treelut::coordinator::{
+    BatchPolicy, DispatchPolicy, FlatExecutor, OverloadPolicy, Server, ServingReport,
+    SubmitError,
+};
 use treelut::data::synth;
 use treelut::exp::configs::{default_rows, design_point};
 use treelut::exp::{run_design_point, RunOptions};
@@ -33,7 +40,7 @@ const USAGE: &str = "usage: treelut <flow|train|datasets|serve> [options]
   flow      --dataset <mnist|jsc|nid> [--variant I|II] [--rows N] [--seed S] [--out DIR] [--bypass-keygen]
   train     --dataset <mnist|jsc|nid> [--variant I|II] [--rows N] [--seed S] --out FILE
   datasets
-  serve     [--config jsc] [--requests N] [--rps R] [--rows N] [--max-wait-us U] [--shards S] [--dispatch round-robin|p2c]";
+  serve     [--config jsc] [--requests N] [--rps R] [--rows N] [--max-wait-us U] [--shards S] [--dispatch round-robin|p2c] [--queue-cap C] [--overload block|shed-new|shed-oldest]";
 
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env();
@@ -83,7 +90,13 @@ fn cmd_flow(mut args: Args) -> anyhow::Result<()> {
         println!("gate-level simulation accuracy: {a:.4} (bit-exact vs predictor)");
     }
     println!("hardware: {}", r.cost.render());
-    println!("keys={} gates={} | flow {:.1}s -> {}", r.n_keys, r.n_gates, t.secs(), vpath.display());
+    println!(
+        "keys={} gates={} | flow {:.1}s -> {}",
+        r.n_keys,
+        r.n_gates,
+        t.secs(),
+        vpath.display()
+    );
     Ok(())
 }
 
@@ -135,6 +148,12 @@ fn cmd_serve(mut args: Args) -> anyhow::Result<()> {
     let max_wait_us = args.get_as::<u64>("max-wait-us", 500);
     let shards = args.get_as::<usize>("shards", 1);
     let dispatch = args.get("dispatch", "p2c").parse::<DispatchPolicy>()?;
+    // 0 = unbounded (the default), matching the library's usize::MAX.
+    let queue_cap = match args.get_as::<usize>("queue-cap", 0) {
+        0 => usize::MAX,
+        cap => cap,
+    };
+    let overload = args.get("overload", "block").parse::<OverloadPolicy>()?;
     args.finish()?;
 
     let artifacts = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
@@ -162,6 +181,8 @@ fn cmd_serve(mut args: Args) -> anyhow::Result<()> {
     let policy = BatchPolicy {
         max_batch,
         max_wait: std::time::Duration::from_micros(max_wait_us),
+        queue_cap,
+        overload,
     };
     // Fallback pool: compile the flat forest once (lazily — only when the
     // PJRT engine cannot serve), then each shard clones the finished tables.
@@ -199,7 +220,10 @@ fn cmd_serve(mut args: Args) -> anyhow::Result<()> {
             }
         }
         None => {
-            eprintln!("artifacts/ missing (run `make artifacts`); serving with the flat-forest CPU executor");
+            eprintln!(
+                "artifacts/ missing (run `make artifacts`); serving with the flat-forest \
+                 CPU executor"
+            );
             flat_server()?
         }
     };
@@ -209,11 +233,30 @@ fn cmd_serve(mut args: Args) -> anyhow::Result<()> {
     let mut pending = Vec::with_capacity(n_requests);
     for i in 0..n_requests {
         std::thread::sleep(std::time::Duration::from_secs_f64(rng.exp(offered_rps)));
-        pending.push(server.submit(btest.row(i % btest.n_rows).to_vec())?);
+        match server.submit(btest.row(i % btest.n_rows).to_vec()) {
+            Ok(rx) => pending.push(rx),
+            // shed-new refusals are part of the overload report, not a
+            // fatal error; anything else still aborts the run.
+            Err(e)
+                if matches!(
+                    e.downcast_ref::<SubmitError>(),
+                    Some(SubmitError::QueueFull { .. })
+                ) => {}
+            Err(e) => return Err(e),
+        }
     }
     let mut lats = Vec::with_capacity(n_requests);
     for rx in pending {
-        lats.push(rx.recv()??.latency.as_secs_f64());
+        match rx.recv()? {
+            Ok(reply) => lats.push(reply.latency.as_secs_f64()),
+            // shed-oldest victims report through the shed counters.
+            Err(e)
+                if matches!(
+                    e.downcast_ref::<SubmitError>(),
+                    Some(SubmitError::Shed { .. })
+                ) => {}
+            Err(e) => return Err(e),
+        }
     }
     let stats = server.stats();
     let report = ServingReport::from_latencies(
@@ -227,6 +270,10 @@ fn cmd_serve(mut args: Args) -> anyhow::Result<()> {
     .with_steals(
         stats.steals.load(std::sync::atomic::Ordering::Relaxed),
         stats.stolen_jobs.load(std::sync::atomic::Ordering::Relaxed),
+    )
+    .with_admission(
+        stats.sheds.load(std::sync::atomic::Ordering::Relaxed),
+        stats.queue_full.load(std::sync::atomic::Ordering::Relaxed),
     );
     println!("{}", report.render());
     server.shutdown();

@@ -26,6 +26,65 @@ use super::model::{QuantModel, QuantNode};
 /// High bit of a child code: set = the code is a leaf, low bits = its value.
 const LEAF_BIT: u32 = 1 << 31;
 
+/// Structural defects [`FlatForest::compile`] rejects, downcastable from
+/// the returned `anyhow::Error` (callers that route corrupt models — e.g.
+/// deserialized tables — can branch on the variant instead of parsing
+/// message strings).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FlatCompileError {
+    /// `n_groups == 0`.
+    NoGroups,
+    /// `biases.len() != n_groups`.
+    BiasCountMismatch { biases: usize, groups: usize },
+    /// `trees.len()` is not a multiple of `n_groups`.
+    TreeCountNotMultiple { trees: usize, groups: usize },
+    /// Total node count exceeds the sentinel encoding's index space.
+    EnsembleTooLarge { nodes: usize },
+    /// A tree with no nodes at all.
+    EmptyTree { tree: usize },
+    /// A node reachable from the root by two paths (cycle or DAG sharing) —
+    /// descent would revisit or spin.
+    CycleOrShared { tree: usize, node: usize },
+    /// A split's child index points outside the tree's node table.
+    ChildOutOfRange { tree: usize, node: usize, child: usize },
+    /// A split tests a feature the model does not have.
+    FeatureOutOfRange { tree: usize, node: usize, feat: u32 },
+    /// A leaf value collides with the sentinel bit.
+    LeafOverflow { tree: usize, value: u32 },
+}
+
+impl std::fmt::Display for FlatCompileError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FlatCompileError::NoGroups => f.write_str("model needs at least one group"),
+            FlatCompileError::BiasCountMismatch { biases, groups } => {
+                write!(f, "bias count {biases} != group count {groups}")
+            }
+            FlatCompileError::TreeCountNotMultiple { trees, groups } => {
+                write!(f, "tree count {trees} not a multiple of {groups} groups")
+            }
+            FlatCompileError::EnsembleTooLarge { nodes } => {
+                write!(f, "ensemble too large for the flat encoding ({nodes} nodes)")
+            }
+            FlatCompileError::EmptyTree { tree } => write!(f, "tree {tree} is empty"),
+            FlatCompileError::CycleOrShared { tree, node } => {
+                write!(f, "tree {tree}: node {node} reached twice (cycle or DAG)")
+            }
+            FlatCompileError::ChildOutOfRange { tree, node, child } => {
+                write!(f, "tree {tree} node {node}: child {child} out of range")
+            }
+            FlatCompileError::FeatureOutOfRange { tree, node, feat } => {
+                write!(f, "tree {tree} node {node}: feature {feat} out of range")
+            }
+            FlatCompileError::LeafOverflow { tree, value } => {
+                write!(f, "tree {tree}: leaf value {value} exceeds the sentinel encoding")
+            }
+        }
+    }
+}
+
+impl std::error::Error for FlatCompileError {}
+
 /// A [`QuantModel`] compiled to flat node tables. Immutable once built;
 /// cheap to clone per serving shard (the tables are `Arc`-free by design so
 /// each shard owns its copy and no cross-shard cache-line sharing occurs).
@@ -54,21 +113,25 @@ impl FlatForest {
     /// values and node counts fit the sentinel encoding) so that descent can
     /// skip those checks.
     pub fn compile(model: &QuantModel) -> anyhow::Result<FlatForest> {
-        anyhow::ensure!(model.n_groups >= 1, "model needs at least one group");
+        anyhow::ensure!(model.n_groups >= 1, FlatCompileError::NoGroups);
         anyhow::ensure!(
             model.biases.len() == model.n_groups,
-            "bias count {} != group count {}",
-            model.biases.len(),
-            model.n_groups
+            FlatCompileError::BiasCountMismatch {
+                biases: model.biases.len(),
+                groups: model.n_groups
+            }
         );
         anyhow::ensure!(
             model.trees.len() % model.n_groups == 0,
-            "tree count not a multiple of groups"
+            FlatCompileError::TreeCountNotMultiple {
+                trees: model.trees.len(),
+                groups: model.n_groups
+            }
         );
         let total_nodes: usize = model.trees.iter().map(|t| t.nodes.len()).sum();
         anyhow::ensure!(
             (total_nodes as u64) < LEAF_BIT as u64,
-            "ensemble too large for the flat encoding ({total_nodes} nodes)"
+            FlatCompileError::EnsembleTooLarge { nodes: total_nodes }
         );
 
         let mut forest = FlatForest {
@@ -83,7 +146,7 @@ impl FlatForest {
         };
 
         for (ti, tree) in model.trees.iter().enumerate() {
-            anyhow::ensure!(!tree.nodes.is_empty(), "tree {ti} is empty");
+            anyhow::ensure!(!tree.nodes.is_empty(), FlatCompileError::EmptyTree { tree: ti });
             // Reject cycles and DAG sharing up front: walking from the root,
             // every node may be reached at most once (same contract as
             // `gbdt::Tree::validate`). This is what lets `descend` loop
@@ -91,16 +154,13 @@ impl FlatForest {
             let mut seen = vec![false; tree.nodes.len()];
             let mut stack = vec![0usize];
             while let Some(i) = stack.pop() {
-                anyhow::ensure!(
-                    !seen[i],
-                    "tree {ti}: node {i} reached twice (cycle or DAG)"
-                );
+                anyhow::ensure!(!seen[i], FlatCompileError::CycleOrShared { tree: ti, node: i });
                 seen[i] = true;
                 if let QuantNode::Split { left, right, .. } = &tree.nodes[i] {
                     for child in [*left as usize, *right as usize] {
                         anyhow::ensure!(
                             child < tree.nodes.len(),
-                            "tree {ti} node {i}: child {child} out of range"
+                            FlatCompileError::ChildOutOfRange { tree: ti, node: i, child }
                         );
                         stack.push(child);
                     }
@@ -119,7 +179,7 @@ impl FlatForest {
                     QuantNode::Leaf { value } => {
                         anyhow::ensure!(
                             *value < LEAF_BIT,
-                            "tree {ti}: leaf value {value} exceeds the sentinel encoding"
+                            FlatCompileError::LeafOverflow { tree: ti, value: *value }
                         );
                         code[i] = LEAF_BIT | *value;
                     }
@@ -130,14 +190,25 @@ impl FlatForest {
                 if let QuantNode::Split { feat, thresh, left, right } = node {
                     anyhow::ensure!(
                         (*feat as usize) < model.n_features,
-                        "tree {ti} node {i}: feature {feat} out of range"
+                        FlatCompileError::FeatureOutOfRange { tree: ti, node: i, feat: *feat }
                     );
                     // Unreachable split nodes skip the DFS above, so their
                     // children must still be range-checked before indexing.
                     anyhow::ensure!(
-                        (*left as usize) < tree.nodes.len()
-                            && (*right as usize) < tree.nodes.len(),
-                        "tree {ti} node {i}: child index out of range"
+                        (*left as usize) < tree.nodes.len(),
+                        FlatCompileError::ChildOutOfRange {
+                            tree: ti,
+                            node: i,
+                            child: *left as usize
+                        }
+                    );
+                    anyhow::ensure!(
+                        (*right as usize) < tree.nodes.len(),
+                        FlatCompileError::ChildOutOfRange {
+                            tree: ti,
+                            node: i,
+                            child: *right as usize
+                        }
                     );
                     forest.feat.push(*feat);
                     forest.thresh.push(*thresh);
@@ -319,26 +390,142 @@ mod tests {
         assert_eq!(f.predict_batch(&[&[0u16][..]]), vec![1]);
     }
 
+    /// Typed downcast helper for the corrupt-table tests.
+    fn compile_err(m: &QuantModel) -> FlatCompileError {
+        *FlatForest::compile(m)
+            .expect_err("corrupt table must be rejected")
+            .downcast_ref::<FlatCompileError>()
+            .expect("compile errors must be typed FlatCompileError")
+    }
+
     #[test]
-    fn rejects_malformed_models() {
+    fn rejects_malformed_models_with_typed_errors() {
         let mut m = binary_model();
         m.biases = vec![]; // bias/group mismatch
-        assert!(FlatForest::compile(&m).is_err());
+        assert_eq!(
+            compile_err(&m),
+            FlatCompileError::BiasCountMismatch { biases: 0, groups: 1 }
+        );
         let mut m2 = binary_model();
         m2.trees[0].nodes[0] = split(9, 1, 1, 2); // feature out of range
-        assert!(FlatForest::compile(&m2).is_err());
+        assert_eq!(
+            compile_err(&m2),
+            FlatCompileError::FeatureOutOfRange { tree: 0, node: 0, feat: 9 }
+        );
         let mut m3 = binary_model();
         m3.trees[0].nodes[0] = split(0, 1, 0, 1); // self-cycle: descent would spin
-        assert!(FlatForest::compile(&m3).is_err());
+        assert_eq!(compile_err(&m3), FlatCompileError::CycleOrShared { tree: 0, node: 0 });
         let mut m4 = binary_model();
         m4.trees[0].nodes[0] = split(0, 1, 1, 9); // child out of range
-        assert!(FlatForest::compile(&m4).is_err());
+        assert_eq!(
+            compile_err(&m4),
+            FlatCompileError::ChildOutOfRange { tree: 0, node: 0, child: 9 }
+        );
         let mut m5 = binary_model();
         // Unreachable split (root is a leaf) with an out-of-range child must
         // error, not panic, even though the DFS never visits it.
         m5.trees[0].nodes[0] = N::Leaf { value: 0 };
         m5.trees[0].nodes[2] = split(0, 1, 9, 9);
-        assert!(FlatForest::compile(&m5).is_err());
+        assert!(matches!(compile_err(&m5), FlatCompileError::ChildOutOfRange { .. }));
+        let mut m6 = binary_model();
+        m6.trees[0].nodes[1] = N::Leaf { value: 1 << 31 }; // sentinel collision
+        assert_eq!(
+            compile_err(&m6),
+            FlatCompileError::LeafOverflow { tree: 0, value: 1 << 31 }
+        );
+        let mut m7 = binary_model();
+        m7.trees.push(QuantTree { nodes: vec![] }); // empty tree
+        assert_eq!(compile_err(&m7), FlatCompileError::EmptyTree { tree: 2 });
+        let mut m8 = binary_model();
+        m8.n_groups = 0;
+        m8.biases = vec![];
+        assert_eq!(compile_err(&m8), FlatCompileError::NoGroups);
+        let mut m9 = binary_model();
+        m9.trees.push(QuantTree { nodes: vec![N::Leaf { value: 0 }] });
+        m9.n_groups = 2; // 3 trees, 2 groups
+        m9.biases = vec![0, 0];
+        assert_eq!(
+            compile_err(&m9),
+            FlatCompileError::TreeCountNotMultiple { trees: 3, groups: 2 }
+        );
+    }
+
+    #[test]
+    fn empty_forest_predicts_from_biases_alone() {
+        // Zero trees is a legal degenerate model: scores are the biases.
+        let m = QuantModel {
+            trees: vec![],
+            n_groups: 2,
+            biases: vec![3, 7],
+            n_features: 1,
+            w_feature: 1,
+            w_tree: 1,
+            scale: 1.0,
+        };
+        let f = FlatForest::compile(&m).unwrap();
+        assert_eq!(f.n_trees(), 0);
+        assert_eq!(f.n_nodes(), 0);
+        assert_eq!(f.scores(&[0]), vec![3, 7]);
+        assert_eq!(f.predict(&[0]), 1);
+        assert_eq!(f.predict_batch(&[&[0u16][..], &[1u16][..]]), vec![1, 1]);
+    }
+
+    #[test]
+    fn single_leaf_forest_matches_enum_predictor() {
+        // Every tree a constant leaf: no split nodes are emitted at all.
+        let leaf = |v: u32| QuantTree { nodes: vec![N::Leaf { value: v }] };
+        let m = QuantModel {
+            trees: vec![leaf(2), leaf(0), leaf(1)],
+            n_groups: 3,
+            biases: vec![0, 2, 0],
+            n_features: 2,
+            w_feature: 1,
+            w_tree: 2,
+            scale: 1.0,
+        };
+        let f = FlatForest::compile(&m).unwrap();
+        assert_eq!(f.n_nodes(), 0);
+        for a in 0..2u16 {
+            for b in 0..2u16 {
+                let x = [a, b];
+                assert_eq!(f.scores(&x), m.scores(&x));
+                assert_eq!(f.predict(&x), m.predict_class(&x));
+            }
+        }
+    }
+
+    #[test]
+    fn max_depth_chain_compiles_and_predicts() {
+        // A 500-deep left-spine chain: x0 >= k descends one more level;
+        // compile's iterative validation and the iterative descent must
+        // both survive it (no recursion, no stack overflow), and the
+        // prediction must match the enum predictor on both extremes.
+        const DEPTH: usize = 500;
+        let mut nodes = Vec::with_capacity(2 * DEPTH + 1);
+        for i in 0..DEPTH {
+            let split_idx = 2 * i;
+            // Child layout: left = next split (or final leaf), right = leaf.
+            let left = (split_idx + 2) as u32;
+            let right = (split_idx + 1) as u32;
+            nodes.push(N::Split { feat: 0, thresh: 1, left, right });
+            nodes.push(N::Leaf { value: (i % 2) as u32 });
+        }
+        nodes.push(N::Leaf { value: 1 }); // the chain's terminal leaf
+        let m = QuantModel {
+            trees: vec![QuantTree { nodes }],
+            n_groups: 1,
+            biases: vec![-1],
+            n_features: 1,
+            w_feature: 1,
+            w_tree: 1,
+            scale: 1.0,
+        };
+        let f = FlatForest::compile(&m).unwrap();
+        assert_eq!(f.n_nodes(), DEPTH);
+        for x in [[0u16], [1u16]] {
+            assert_eq!(f.eval_tree(0, &x), m.trees[0].predict(&x));
+            assert_eq!(f.predict(&x), m.predict_class(&x));
+        }
     }
 
     #[test]

@@ -27,6 +27,6 @@ pub mod leaf;
 pub mod model;
 
 pub use feature::FeatureQuantizer;
-pub use flat::FlatForest;
+pub use flat::{FlatCompileError, FlatForest};
 pub use leaf::quantize_leaves;
 pub use model::{QuantModel, QuantNode, QuantTree};

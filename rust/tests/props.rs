@@ -204,6 +204,60 @@ fn prop_flat_forest_equals_quant_predictor() {
     }
 }
 
+/// The full differential chain in one property: for random small
+/// `QuantModel`s and random (u8-ranged) feature vectors, gate-level
+/// netlist simulation, `FlatForest` batch evaluation, and per-tree
+/// `QuantTree` eval (summed + biased + decided by hand) are bit-identical
+/// — closing the quantize↔netlist gap that the pairwise properties above
+/// each cover only one edge of.
+#[test]
+fn prop_netlist_flat_and_per_tree_eval_agree() {
+    let mut rng = Rng::new(0xD1FF);
+    for case in 0..40 {
+        let (model, n_bins) = random_model(&mut rng, case % 2 == 0);
+        let w_tree = 1 + rng.below(5) as u8;
+        let (qm, _) = quantize_leaves(&model, w_tree);
+        let forest = FlatForest::compile(&qm).unwrap();
+        let pipeline = Pipeline::new(rng.below(2), rng.below(2), rng.below(3));
+        let design = design_from_quant("diff", &qm, pipeline, true);
+        let built = build_netlist(&design);
+        let mut sim = Simulator::new(&built.net);
+
+        // Random u8 feature vectors, clamped into the quantized bin range
+        // (n_bins <= 16, so the u8 draw covers every legal level).
+        let rows: Vec<Vec<u16>> = (0..24)
+            .map(|_| {
+                (0..qm.n_features)
+                    .map(|_| {
+                        let byte = rng.below(256) as u16;
+                        byte % n_bins as u16
+                    })
+                    .collect()
+            })
+            .collect();
+        let mut batch = InputBatch::new(built.net.n_inputs);
+        for row in &rows {
+            batch.push_features(row, qm.w_feature as usize);
+        }
+        let out = sim.run(&built.net, &batch);
+
+        let refs: Vec<&[u16]> = rows.iter().map(|r| r.as_slice()).collect();
+        let flat = forest.predict_batch(&refs);
+
+        for (lane, row) in rows.iter().enumerate() {
+            // Per-tree enum eval, accumulated and decided by hand.
+            let mut scores = qm.biases.clone();
+            for (t, tree) in qm.trees.iter().enumerate() {
+                scores[t % qm.n_groups] += tree.predict(row) as i64;
+            }
+            let per_tree = treelut::runtime::decide(&scores, qm.n_groups);
+            let netlist = built.class_of(&out, lane);
+            assert_eq!(netlist, flat[lane], "case {case} lane {lane}: netlist vs flat");
+            assert_eq!(flat[lane], per_tree, "case {case} lane {lane}: flat vs per-tree");
+        }
+    }
+}
+
 /// Quantization invariants (paper §2.2.2): every tree's min quantized leaf
 /// is 0; the global max hits full scale; high-resolution quantization
 /// preserves every decision.

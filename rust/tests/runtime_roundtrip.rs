@@ -143,7 +143,11 @@ fn served_predictions_match_quant_model() {
             let tensors = ModelTensors::from_quant(&qm, &cfg)?;
             Engine::load(&dir2, &cfg, tensors)
         },
-        BatchPolicy { max_batch: 8, max_wait: std::time::Duration::from_millis(1) },
+        BatchPolicy {
+            max_batch: 8,
+            max_wait: std::time::Duration::from_millis(1),
+            ..BatchPolicy::default()
+        },
     ) {
         Ok(srv) => srv,
         Err(e) if treelut::runtime::pjrt_unavailable(&e) => {

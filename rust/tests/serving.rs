@@ -1,24 +1,40 @@
-//! Serving-surface integration tests: shard-pool dispatch and correctness,
-//! the enqueue-anchored batching deadline, load-aware (p2c) dispatch and
-//! work stealing under a skewed pool, shutdown draining (replies still
-//! delivered when the server drops mid-flight), executor-error fan-out,
-//! rejected-submission accounting, and the flat-forest executor serving a
-//! trained model bit-exactly.
+//! Serving-surface integration tests, driven by the deterministic harness
+//! (`coordinator::testing`): the enqueue-anchored batching deadline,
+//! load-aware (p2c) dispatch and work stealing under a skewed pool,
+//! bounded-queue admission control (block / shed-new / shed-oldest) at
+//! overload, the adaptive steal-poll backoff, chaos (shard death mid-load)
+//! containment, shutdown draining, executor-error fan-out, typed
+//! rejection accounting, and the flat-forest executor serving a trained
+//! model bit-exactly.
+//!
+//! Every scenario that depends on time runs on the harness's virtual
+//! clock: no sleep-based synchronization anywhere in this file (CI greps
+//! to keep it that way), and latency assertions are *exact* virtual
+//! durations, not racy bounds.
 
 use std::sync::atomic::Ordering;
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
-use treelut::coordinator::{BatchExecutor, BatchPolicy, DispatchPolicy, FlatExecutor, Server};
+use treelut::coordinator::testing::{
+    poisson_arrivals, scripted_class, uniform_arrivals, ChaosPlan, Harness, HarnessConfig,
+    ServiceModel,
+};
+use treelut::coordinator::{
+    BatchExecutor, BatchPolicy, DispatchPolicy, FlatExecutor, OverloadPolicy, Server,
+    SubmitError,
+};
 use treelut::data::synth;
 use treelut::gbdt::{train, BoostParams};
 use treelut::quantize::{quantize_leaves, FeatureQuantizer, FlatForest};
 
-/// Deterministic mock: class = (first feature * 7 + second) % 5.
+const MS: Duration = Duration::from_millis(1);
+
+/// Deterministic wall-clock mock for scenarios that need no timing at all:
+/// class = (first feature * 7 + second) % 5, same as [`scripted_class`].
 struct Mock {
     n_features: usize,
     max_batch: usize,
-    delay: Duration,
     fail: bool,
     batch_sizes: Arc<Mutex<Vec<usize>>>,
 }
@@ -28,7 +44,6 @@ impl Mock {
         Mock {
             n_features,
             max_batch: 8,
-            delay: Duration::ZERO,
             fail: false,
             batch_sizes: Arc::new(Mutex::new(Vec::new())),
         }
@@ -48,121 +63,492 @@ impl BatchExecutor for Mock {
     }
     fn execute(&self, rows: &[&[u16]]) -> anyhow::Result<Vec<u32>> {
         self.batch_sizes.lock().unwrap().push(rows.len());
-        if !self.delay.is_zero() {
-            std::thread::sleep(self.delay);
-        }
         anyhow::ensure!(!self.fail, "mock executor failure");
         Ok(rows.iter().map(|r| expected_class(r)).collect())
     }
 }
 
-/// Executor whose batch stalls for `max(row[1])` milliseconds — rows carry
-/// their own stall so one batch can hold the worker while others queue.
-struct StallRows;
-
-impl BatchExecutor for StallRows {
-    fn max_batch(&self) -> usize {
-        2
-    }
-    fn n_features(&self) -> usize {
-        2
-    }
-    fn execute(&self, rows: &[&[u16]]) -> anyhow::Result<Vec<u32>> {
-        let ms = rows.iter().map(|r| r[1]).max().unwrap_or(0);
-        if ms > 0 {
-            std::thread::sleep(Duration::from_millis(ms as u64));
-        }
-        Ok(rows.iter().map(|r| expected_class(r)).collect())
-    }
-}
+// ---------------------------------------------------------------------------
+// Batching deadline (virtual-time exact)
+// ---------------------------------------------------------------------------
 
 /// Regression for the latency-bound bug: the batching deadline must be
 /// anchored to the head job's *enqueue* time, not the moment the worker
 /// picks it up. Under backlog, a request that already spent its `max_wait`
-/// queueing must have its batch close immediately.
+/// queueing must have its batch close immediately. On the virtual clock the
+/// assertion is exact: the buggy pickup-anchored deadline would hold job 3
+/// a further 150 ms (latency 700 ms instead of 550 ms).
 #[test]
 fn batch_closes_within_max_wait_of_enqueue() {
-    let srv = Server::start(
-        StallRows,
-        BatchPolicy { max_batch: 2, max_wait: Duration::from_millis(150) },
-    );
-    // Fill a 2-row batch that stalls the worker for 300 ms.
-    let a = srv.submit(vec![1, 300]).unwrap();
-    let b = srv.submit(vec![2, 300]).unwrap();
-    // While it executes, enqueue a fast request: by the time the worker is
-    // free it will have waited ~250 ms — already past its own max_wait.
-    std::thread::sleep(Duration::from_millis(50));
-    let c = srv.submit(vec![3, 0]).unwrap();
-    a.recv().unwrap().unwrap();
-    b.recv().unwrap().unwrap();
-    let reply = c.recv_timeout(Duration::from_secs(5)).unwrap().unwrap();
+    let h = Harness::start(HarnessConfig {
+        service: ServiceModel::Fixed(300 * MS),
+        policy: BatchPolicy { max_batch: 2, max_wait: 150 * MS, ..BatchPolicy::default() },
+        ..HarnessConfig::default()
+    });
+    // Fill a 2-row batch that holds the worker for 300 ms of virtual time.
+    let a = h.submit(1, 0).unwrap();
+    let b = h.submit(2, 0).unwrap();
+    // While it executes, enqueue a fast request at t = 50 ms: by the time
+    // the worker frees up (t = 300 ms) it is already 100 ms past its own
+    // max_wait, so its batch must close at pickup.
+    h.advance(50 * MS);
+    let c = h.submit(3, 0).unwrap();
+    assert_eq!(h.recv(&a).unwrap().latency, 300 * MS);
+    assert_eq!(h.recv(&b).unwrap().latency, 300 * MS);
+    let reply = h.recv(&c).unwrap();
     assert_eq!(reply.class, expected_class(&[3, 0]));
-    // ~250 ms of unavoidable queueing; the buggy pickup-anchored deadline
-    // added a fresh 150 ms wait on top (~400 ms total).
-    assert!(
-        reply.latency < Duration::from_millis(325),
-        "latency {:?}: batch deadline appears to restart at worker pickup",
-        reply.latency
-    );
-    srv.shutdown();
+    // Enqueued at 50 ms, executed 300..600 ms: exactly 550 ms.
+    assert_eq!(reply.latency, 550 * MS, "batch deadline appears to restart at worker pickup");
+    h.server.shutdown();
 }
 
-/// One shard 10x slower than its sibling: p2c must route the bulk of the
+// ---------------------------------------------------------------------------
+// Dispatch + stealing under skew (virtual-time deterministic)
+// ---------------------------------------------------------------------------
+
+/// One shard 16x slower than its sibling: p2c must route the bulk of the
 /// traffic to the fast shard (round-robin, by construction, must not), and
 /// the fast worker must steal part of the slow shard's backlog.
 #[test]
 fn p2c_routes_around_slow_shard_where_round_robin_does_not() {
     let run = |dispatch: DispatchPolicy| {
-        let srv = Server::start_pool_dispatch(
-            |shard| {
-                let mut m = Mock::new(2);
-                // >10x skew, singleton batches (policy caps max_batch at 1).
-                m.delay = if shard == 0 {
-                    Duration::from_millis(8)
-                } else {
-                    Duration::from_micros(500)
-                };
-                Ok(m)
-            },
-            BatchPolicy { max_batch: 1, max_wait: Duration::from_millis(1) },
-            2,
+        let h = Harness::start(HarnessConfig {
+            n_shards: 2,
+            service: ServiceModel::PerShard(vec![8 * MS, Duration::from_micros(500)]),
+            policy: BatchPolicy { max_batch: 1, max_wait: MS, ..BatchPolicy::default() },
             dispatch,
-        )
-        .unwrap();
-        // Paced open loop: inside the fast shard's capacity, far beyond the
-        // slow shard's, so queue depth and in-flight work carry signal.
-        let rxs: Vec<_> = (0..200u16)
-            .map(|v| {
-                std::thread::sleep(Duration::from_millis(2));
-                srv.submit(vec![v, 1]).unwrap()
-            })
-            .collect();
-        for (v, rx) in rxs.into_iter().enumerate() {
-            let reply = rx
-                .recv_timeout(Duration::from_secs(10))
-                .expect("request must be answered")
-                .unwrap();
-            assert_eq!(reply.class, expected_class(&[v as u16, 1]));
+            ..HarnessConfig::default()
+        });
+        // Open loop inside the fast shard's capacity, far beyond the slow
+        // shard's, so queue depth and in-flight work carry signal.
+        let out = h.run_open_loop(&uniform_arrivals(2 * MS, 60));
+        assert_eq!(out.ok.len(), 60, "every request must be answered");
+        for (id, reply) in &out.ok {
+            assert_eq!(reply.class, scripted_class(&[*id, 0]), "job {id}");
         }
         let per_shard: Vec<u64> =
-            srv.shard_stats().map(|s| s.requests.load(Ordering::Relaxed)).collect();
-        let stolen = srv.stats().stolen_jobs.load(Ordering::Relaxed);
-        srv.shutdown();
+            h.server.shard_stats().map(|s| s.requests.load(Ordering::Relaxed)).collect();
+        let stolen = h.server.stats().stolen_jobs.load(Ordering::Relaxed);
+        h.server.shutdown();
         (per_shard, stolen)
     };
 
     let (rr, rr_stolen) = run(DispatchPolicy::RoundRobin);
-    assert_eq!(rr, vec![100, 100], "round-robin dispatches blindly");
+    assert_eq!(rr, vec![30, 30], "round-robin dispatches blindly");
     // The slow shard cannot keep up with its blind half: the idle fast
     // worker must have stolen part of its backlog.
     assert!(rr_stolen > 0, "expected steals from the slow shard's backlog");
 
     let (p2c, _) = run(DispatchPolicy::P2c);
-    assert_eq!(p2c[0] + p2c[1], 200);
+    assert_eq!(p2c[0] + p2c[1], 60);
     assert!(
-        p2c[1] >= 120,
+        p2c[1] >= 36,
         "p2c must route the majority of traffic away from the slow shard: {p2c:?}"
     );
+}
+
+// ---------------------------------------------------------------------------
+// Admission control at overload (virtual-time exact)
+// ---------------------------------------------------------------------------
+
+/// shed-new honors the cap exactly: with one 10 ms/job worker and a cap of
+/// 4, ten instantaneous submissions admit exactly five jobs (one executing
+/// plus four queued) and refuse exactly five with a typed QueueFull, and
+/// the admitted jobs drain on the exact 10 ms grid.
+#[test]
+fn shed_new_honors_cap_exactly() {
+    let h = Harness::start(HarnessConfig {
+        service: ServiceModel::Fixed(10 * MS),
+        policy: BatchPolicy {
+            max_batch: 1,
+            max_wait: Duration::ZERO,
+            queue_cap: 4,
+            overload: OverloadPolicy::ShedNew,
+        },
+        ..HarnessConfig::default()
+    });
+    let mut admitted = Vec::new();
+    let mut refused = 0usize;
+    for id in 0..10u16 {
+        match h.submit(id, 0) {
+            Ok(rx) => admitted.push((id, rx)),
+            Err(e) => {
+                assert!(
+                    matches!(
+                        e.downcast_ref::<SubmitError>(),
+                        Some(SubmitError::QueueFull { shard: 0 })
+                    ),
+                    "{e}"
+                );
+                refused += 1;
+            }
+        }
+    }
+    assert_eq!(admitted.len(), 5, "one executing + queue_cap queued");
+    assert_eq!(refused, 5);
+    // The queue-full gauge sees the saturated shard before the drain.
+    assert_eq!(h.server.shards_at_cap(), 1);
+    let s = h.server.stats();
+    assert_eq!(s.sheds.load(Ordering::Relaxed), 5);
+    assert_eq!(s.queue_full.load(Ordering::Relaxed), 5);
+    assert_eq!(s.requests.load(Ordering::Relaxed), 5);
+    assert_eq!(s.rejected.load(Ordering::Relaxed), 0);
+    // Admitted jobs complete on the exact service grid; the cap bounds the
+    // worst admitted latency at (cap + 1) * service.
+    for (i, (id, rx)) in admitted.into_iter().enumerate() {
+        let reply = h.recv(&rx).unwrap();
+        assert_eq!(reply.class, scripted_class(&[id, 0]));
+        assert_eq!(reply.latency, (i as u32 + 1) * 10 * MS, "job {id}");
+    }
+    assert_eq!(h.server.shards_at_cap(), 0);
+    h.server.shutdown();
+}
+
+/// shed-oldest drops the head of the queue (typed, counted) to admit new
+/// work, keeping the age of everything still queued — and therefore
+/// admitted-job latency — bounded by the cap.
+#[test]
+fn shed_oldest_drops_head_and_bounds_admitted_latency() {
+    let h = Harness::start(HarnessConfig {
+        service: ServiceModel::Fixed(10 * MS),
+        policy: BatchPolicy {
+            max_batch: 1,
+            max_wait: Duration::ZERO,
+            queue_cap: 2,
+            overload: OverloadPolicy::ShedOldest,
+        },
+        ..HarnessConfig::default()
+    });
+    // j0 executes; j1, j2 fill the queue; j3 evicts j1; j4 evicts j2.
+    let rxs: Vec<_> = (0..5u16).map(|id| h.submit(id, 0).unwrap()).collect();
+    let s = h.server.stats();
+    assert_eq!(s.sheds.load(Ordering::Relaxed), 2);
+    assert_eq!(s.queue_full.load(Ordering::Relaxed), 2);
+    assert_eq!(s.requests.load(Ordering::Relaxed), 5, "every submit was admitted");
+    for (id, rx) in rxs.into_iter().enumerate() {
+        let outcome = h.recv(&rx);
+        match id {
+            // The evicted jobs get the typed shed error, not silence.
+            1 | 2 => {
+                let e = outcome.expect_err("evicted job must fail explicitly");
+                assert!(
+                    matches!(
+                        e.downcast_ref::<SubmitError>(),
+                        Some(SubmitError::Shed { shard: 0 })
+                    ),
+                    "job {id}: {e}"
+                );
+            }
+            // Survivors drain on the exact grid: j0 at 10 ms, then the two
+            // queue survivors; nothing waits longer than (cap+1)*service.
+            0 => assert_eq!(outcome.unwrap().latency, 10 * MS),
+            3 => assert_eq!(outcome.unwrap().latency, 20 * MS),
+            4 => assert_eq!(outcome.unwrap().latency, 30 * MS),
+            _ => unreachable!(),
+        }
+    }
+    h.server.shutdown();
+}
+
+/// block propagates backpressure: nothing is shed, and each submit returns
+/// only once the queue has drained below the cap — submit latency is
+/// bounded by the drain, not unbounded buffering.
+#[test]
+fn block_policy_bounds_submit_latency_by_drain() {
+    let h = Harness::start(HarnessConfig {
+        service: ServiceModel::Fixed(10 * MS),
+        policy: BatchPolicy {
+            max_batch: 1,
+            max_wait: Duration::ZERO,
+            queue_cap: 1,
+            overload: OverloadPolicy::Block,
+        },
+        ..HarnessConfig::default()
+    });
+    // The submitter runs on its own thread because `block` suspends it
+    // mid-submit; the main thread keeps virtual time flowing.
+    let (done_tx, done_rx) = std::sync::mpsc::channel();
+    std::thread::scope(|scope| {
+        let hh = &h;
+        scope.spawn(move || {
+            let mut handed = Vec::new();
+            for id in 0..4u16 {
+                let rx = hh.server.submit(vec![id, 0]).unwrap();
+                // Virtual time observed as each submit returns.
+                handed.push((id, rx, hh.clock.now()));
+            }
+            done_tx.send(handed).unwrap();
+        });
+        // Drive time until the submitter finishes, then drain the replies.
+        // Disconnected means the submitter panicked: fail fast instead of
+        // advancing the clock forever.
+        let handed = loop {
+            match done_rx.try_recv() {
+                Ok(h) => break h,
+                Err(std::sync::mpsc::TryRecvError::Empty) => h.advance(MS),
+                Err(std::sync::mpsc::TryRecvError::Disconnected) => {
+                    panic!("submitter thread died before handing its receivers back")
+                }
+            }
+        };
+        // Lower bounds are physical: a `block` submit cannot return before
+        // the slot it needs was freed by a drain (j2 needs j1's slot, free
+        // when j1 is picked up at 10 ms; j3 needs j2's, free at 20 ms).
+        // Upper bounds are deliberately not asserted — the submitter runs
+        // on real threads and may observe the clock a step late.
+        let mut prev = Duration::ZERO;
+        for (id, rx, returned_at) in handed {
+            let reply = h.recv(&rx).expect("block policy sheds nothing");
+            assert_eq!(reply.class, scripted_class(&[id, 0]));
+            assert!(returned_at >= prev, "admission times must be monotone");
+            prev = returned_at;
+            match id {
+                2 => assert!(returned_at >= 10 * MS, "job 2 admitted at {returned_at:?}"),
+                3 => assert!(returned_at >= 20 * MS, "job 3 admitted at {returned_at:?}"),
+                _ => {}
+            }
+        }
+    });
+    let s = h.server.stats();
+    assert_eq!(s.sheds.load(Ordering::Relaxed), 0, "block never sheds");
+    assert_eq!(s.requests.load(Ordering::Relaxed), 4);
+    // j2 and j3 each blocked once; j1 may or may not have caught the
+    // worker before its first pop.
+    let queue_full = s.queue_full.load(Ordering::Relaxed);
+    assert!((2..=3).contains(&queue_full), "queue_full={queue_full}");
+    h.server.shutdown();
+}
+
+/// The acceptance sweep in miniature: offered load at 2x a single shard's
+/// capacity. Unbounded queues buffer without limit (tail latency grows
+/// with the run), while both shed policies hold every admitted job under
+/// the (cap+1)*service drain bound — at the price of sheds > 0.
+#[test]
+fn shed_policies_bound_admitted_p99_at_twice_capacity() {
+    let service = MS; // capacity: 1000 jobs/s
+    let arrivals = uniform_arrivals(Duration::from_micros(500), 100); // 2x
+    let drain_bound = 5 * service; // (queue_cap + 1) * service
+
+    // Unbounded baseline: every job is served, but the backlog grows all
+    // run and the tail blows through the drain bound.
+    let h = Harness::start(HarnessConfig {
+        service: ServiceModel::Fixed(service),
+        policy: BatchPolicy { max_batch: 1, max_wait: Duration::ZERO, ..BatchPolicy::default() },
+        ..HarnessConfig::default()
+    });
+    let out = h.run_open_loop(&arrivals);
+    assert_eq!(out.ok.len(), 100);
+    assert_eq!(h.server.stats().sheds.load(Ordering::Relaxed), 0);
+    assert!(
+        out.p99_latency() > 4 * drain_bound,
+        "unbounded backlog should blow the tail: p99 {:?}",
+        out.p99_latency()
+    );
+    h.server.shutdown();
+
+    for overload in [OverloadPolicy::ShedNew, OverloadPolicy::ShedOldest] {
+        let h = Harness::start(HarnessConfig {
+            service: ServiceModel::Fixed(service),
+            policy: BatchPolicy { max_batch: 1, max_wait: Duration::ZERO, queue_cap: 4, overload },
+            ..HarnessConfig::default()
+        });
+        let out = h.run_open_loop(&arrivals);
+        let sheds = h.server.stats().sheds.load(Ordering::Relaxed);
+        assert!(sheds > 0, "{overload}: 2x load must shed");
+        let accounted = out.ok.len() + out.failed.len() + out.shed_at_submit.len();
+        assert_eq!(accounted, 100, "{overload}: every job has an explicit outcome");
+        for (id, reply) in &out.ok {
+            assert!(
+                reply.latency <= drain_bound,
+                "{overload}: admitted job {id} waited {:?} > drain bound {drain_bound:?}",
+                reply.latency
+            );
+        }
+        // shed-oldest's victims fail with the typed error; shed-new's are
+        // refused at the door.
+        for (id, e) in &out.failed {
+            assert!(
+                matches!(e.downcast_ref::<SubmitError>(), Some(SubmitError::Shed { .. })),
+                "{overload}: job {id}: {e}"
+            );
+        }
+        match overload {
+            OverloadPolicy::ShedNew => assert!(out.failed.is_empty()),
+            OverloadPolicy::ShedOldest => assert!(out.shed_at_submit.is_empty()),
+            OverloadPolicy::Block => unreachable!(),
+        }
+        h.server.shutdown();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Adaptive steal poll
+// ---------------------------------------------------------------------------
+
+/// While the pool idles, the steal poll backs off exponentially (few idle
+/// scans over a long window); any served job snaps it back to the floor.
+#[test]
+fn adaptive_steal_poll_backs_off_while_idle_and_resets_on_work() {
+    let h = Harness::start(HarnessConfig {
+        n_shards: 2,
+        service: ServiceModel::Fixed(MS),
+        ..HarnessConfig::default()
+    });
+    // 200 ms of idle virtual time. Without backoff the two workers would
+    // scan ~1000 times (200 µs floor poll); with exponential backoff to
+    // 50 ms the series sums to ~11 scans per worker.
+    h.advance(200 * MS);
+    let idle_scans = h.server.stats().steal_scans.load(Ordering::Relaxed);
+    assert!(
+        (2..=40).contains(&idle_scans),
+        "backoff should park the idle pool: {idle_scans} scans in 200 ms"
+    );
+    // Serve one job: the worker that popped it resets its poll to the
+    // floor, so scans resume promptly afterwards.
+    let rx = h.submit(1, 0).unwrap();
+    h.recv(&rx).unwrap();
+    let before = h.server.stats().steal_scans.load(Ordering::Relaxed);
+    h.advance(2 * MS);
+    let after = h.server.stats().steal_scans.load(Ordering::Relaxed);
+    assert!(after > before, "poll must reset to the floor after serving work");
+    h.server.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// Chaos: shard death mid-load
+// ---------------------------------------------------------------------------
+
+/// Chaos kill on the only shard: the in-flight job and everything queued
+/// behind it fail explicitly (counted), and the dead pool refuses further
+/// work with the typed AllShardsDead — nothing hangs, nothing is lost.
+#[test]
+fn chaos_kill_single_shard_fails_stranded_jobs_explicitly() {
+    let h = Harness::start(HarnessConfig {
+        service: ServiceModel::Fixed(5 * MS),
+        policy: BatchPolicy { max_batch: 1, max_wait: Duration::ZERO, ..BatchPolicy::default() },
+        chaos: ChaosPlan::kill(0, 1), // die on the second batch
+        ..HarnessConfig::default()
+    });
+    let rxs: Vec<_> = (0..4u16).map(|id| h.submit(id, 0).unwrap()).collect();
+    // j0 completes (step 0); j1 panics the worker (step 1); j2 and j3 are
+    // stranded behind it with no live sibling.
+    let mut outcomes = rxs.iter().map(|rx| h.recv(rx));
+    let ok = outcomes.next().unwrap().unwrap();
+    assert_eq!(ok.latency, 5 * MS);
+    let killed = outcomes.next().unwrap().expect_err("in-flight job must fail");
+    assert!(killed.to_string().contains("panicked"), "{killed}");
+    for (id, stranded) in outcomes.enumerate() {
+        let e = stranded.expect_err("stranded job must fail explicitly");
+        assert!(e.to_string().contains("no live sibling"), "job {}: {e}", id + 2);
+    }
+    assert_eq!(h.server.stats().rejected.load(Ordering::Relaxed), 3);
+    assert_eq!(h.server.live_shards(), 0);
+    // And the dead pool fails fast with the typed error.
+    let err = h.server.submit(vec![9, 0]).unwrap_err();
+    assert!(matches!(err.downcast_ref::<SubmitError>(), Some(SubmitError::AllShardsDead)), "{err}");
+    h.server.shutdown();
+}
+
+/// Chaos kill with a live sibling: the dying shard's queue is inherited
+/// (re-dispatched) and completes on the survivor, on the exact virtual
+/// schedule — shard death degrades capacity, it does not lose work.
+#[test]
+fn chaos_kill_mid_load_sibling_inherits_queue() {
+    let h = Harness::start(HarnessConfig {
+        n_shards: 2,
+        service: ServiceModel::Fixed(5 * MS),
+        policy: BatchPolicy { max_batch: 1, max_wait: MS, ..BatchPolicy::default() },
+        chaos: ChaosPlan::kill(0, 1), // shard 0 dies on its second batch
+        ..HarnessConfig::default()
+    });
+    // Round-robin at t=0: j0,j2,j4 -> shard 0; j1,j3,j5 -> shard 1. Both
+    // workers go busy on j0/j1 immediately, so the rest queue up.
+    let out = h.run_open_loop(&[Duration::ZERO; 6]);
+    // j2 was in flight on the dying shard: explicit failure.
+    assert_eq!(out.failed.len(), 1);
+    let (failed_id, e) = &out.failed[0];
+    assert_eq!(*failed_id, 2);
+    assert!(e.to_string().contains("panicked"), "{e}");
+    // Everything else completes, including j4, inherited by shard 1 after
+    // shard 0 died at t=5ms — behind j3 (5..10) and j5 (10..15).
+    assert_eq!(out.ok.len(), 5);
+    assert_eq!(out.reply(0).unwrap().latency, 5 * MS);
+    assert_eq!(out.reply(1).unwrap().latency, 5 * MS);
+    assert_eq!(out.reply(3).unwrap().latency, 10 * MS);
+    assert_eq!(out.reply(5).unwrap().latency, 15 * MS);
+    assert_eq!(out.reply(4).unwrap().latency, 20 * MS);
+    let s = h.server.stats();
+    assert_eq!(s.rejected.load(Ordering::Relaxed), 1, "only the in-flight job failed");
+    assert_eq!(s.redispatched.load(Ordering::Relaxed), 1, "j4 moved to the survivor");
+    assert_eq!(h.server.live_shards(), 1);
+    h.server.shutdown();
+}
+
+/// Chaos under sustained Poisson load across four shards: one shard dies
+/// mid-run and every single job still gets an explicit outcome (reply or
+/// typed error) — the repeated-runs CI stability scenario.
+#[test]
+fn chaos_kill_under_poisson_load_loses_nothing() {
+    let h = Harness::start(HarnessConfig {
+        n_shards: 4,
+        service: ServiceModel::Fixed(MS),
+        policy: BatchPolicy {
+            max_batch: 4,
+            max_wait: Duration::from_micros(500),
+            ..BatchPolicy::default()
+        },
+        dispatch: DispatchPolicy::P2c,
+        chaos: ChaosPlan::kill(2, 3),
+        ..HarnessConfig::default()
+    });
+    let out = h.run_open_loop(&poisson_arrivals(0xC4A05, 2_000.0, 120));
+    assert_eq!(
+        out.ok.len() + out.failed.len() + out.shed_at_submit.len(),
+        120,
+        "every job must resolve"
+    );
+    assert!(out.shed_at_submit.is_empty(), "pool is unbounded here");
+    for (id, reply) in &out.ok {
+        assert_eq!(reply.class, scripted_class(&[*id, 0]), "job {id}");
+    }
+    // The dying batch (and only jobs caught on the dying shard) may fail;
+    // each such failure is explicit and counted.
+    let s = h.server.stats();
+    assert_eq!(s.rejected.load(Ordering::Relaxed), out.failed.len() as u64);
+    assert_eq!(h.server.live_shards(), 3);
+    h.server.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// Shutdown, errors, accounting (timing-free)
+// ---------------------------------------------------------------------------
+
+/// Shutting the pool down mid-flight still delivers every queued reply:
+/// the workers drain their queues before exiting and the response channels
+/// outlive the server.
+#[test]
+fn replies_delivered_after_shutdown_mid_flight() {
+    let h = Harness::start(HarnessConfig {
+        n_shards: 3,
+        service: ServiceModel::Fixed(2 * MS),
+        policy: BatchPolicy {
+            max_batch: 4,
+            max_wait: Duration::from_micros(50),
+            ..BatchPolicy::default()
+        },
+        ..HarnessConfig::default()
+    });
+    let rxs: Vec<_> = (0..30u16).map(|id| h.submit(id, 0).unwrap()).collect();
+    // Shut down with jobs still queued; the drain keeps virtual time
+    // flowing until the workers exit.
+    h.shutdown_draining();
+    for (id, rx) in rxs.into_iter().enumerate() {
+        let reply = rx
+            .try_recv()
+            .expect("reply must be delivered before shutdown completes")
+            .expect("drained job must succeed");
+        assert_eq!(reply.class, scripted_class(&[id as u16, 0]));
+    }
 }
 
 /// Every reply matches its own request across a 4-shard pool, and the
@@ -187,30 +573,6 @@ fn pool_replies_match_requests() {
     srv.shutdown();
 }
 
-/// Dropping the server mid-flight still delivers every queued reply: the
-/// workers drain their queues before exiting and the response channels
-/// outlive the server.
-#[test]
-fn replies_delivered_after_server_drops_mid_flight() {
-    let srv = Server::start_pool(
-        |_shard| {
-            let mut m = Mock::new(2);
-            m.delay = Duration::from_millis(2); // keep jobs queued at drop time
-            m
-        },
-        BatchPolicy { max_batch: 4, max_wait: Duration::from_micros(50) },
-        3,
-    )
-    .unwrap();
-    let rows: Vec<Vec<u16>> = (0..60u16).map(|v| vec![v, v + 1]).collect();
-    let rxs: Vec<_> = rows.iter().map(|r| srv.submit(r.clone()).unwrap()).collect();
-    drop(srv); // joins the workers after their queues drain
-    for (row, rx) in rows.iter().zip(rxs) {
-        let reply = rx.recv().expect("reply must survive server drop").unwrap();
-        assert_eq!(reply.class, expected_class(row));
-    }
-}
-
 /// An executor error is fanned out to every job of the failed batch.
 #[test]
 fn executor_error_fans_out_to_all_jobs() {
@@ -220,7 +582,11 @@ fn executor_error_fans_out_to_all_jobs() {
             m.fail = true;
             m
         },
-        BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(5) },
+        BatchPolicy {
+            max_batch: 8,
+            max_wait: Duration::from_millis(5),
+            ..BatchPolicy::default()
+        },
     );
     let rxs: Vec<_> = (0..24u16).map(|v| srv.submit(vec![v, 0]).unwrap()).collect();
     for rx in rxs {
@@ -234,12 +600,19 @@ fn executor_error_fans_out_to_all_jobs() {
     srv.shutdown();
 }
 
-/// Rejected submissions (wrong width) are observable and do not count as
-/// accepted requests.
+/// Rejected submissions (wrong width) are observable, typed, and do not
+/// count as accepted requests.
 #[test]
-fn rejections_are_counted_separately() {
+fn rejections_are_counted_separately_and_typed() {
     let srv = Server::start(Mock::new(3), BatchPolicy::default());
-    assert!(srv.submit(vec![1, 2]).is_err());
+    let err = srv.submit(vec![1, 2]).unwrap_err();
+    assert!(
+        matches!(
+            err.downcast_ref::<SubmitError>(),
+            Some(SubmitError::WidthMismatch { got: 2, want: 3 })
+        ),
+        "{err}"
+    );
     assert!(srv.submit(vec![1, 2, 3, 4]).is_err());
     assert!(srv.classify(vec![1, 2, 3]).is_ok());
     assert_eq!(srv.stats().rejected.load(Ordering::Relaxed), 2);
@@ -268,7 +641,11 @@ fn sharded_flat_executor_is_bit_exact() {
     let forest = FlatForest::compile(&quant).unwrap();
     let srv = Server::start_pool_with(
         move |_shard| Ok(FlatExecutor { forest: forest.clone(), max_batch: 16 }),
-        BatchPolicy { max_batch: 16, max_wait: Duration::from_micros(100) },
+        BatchPolicy {
+            max_batch: 16,
+            max_wait: Duration::from_micros(100),
+            ..BatchPolicy::default()
+        },
         2,
     )
     .unwrap();
