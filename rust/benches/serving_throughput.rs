@@ -18,6 +18,12 @@
 //!   p2c+stealing pool must beat blind round-robin on Poisson p99 at equal
 //!   offered load — the PolyLUT-Add-style tail-latency comparison.
 //!
+//! The **netlist executor sweep** additionally serves the hardware-accurate
+//! path (`NetlistExecutor`: the mapped gate-level circuit, 64 rows per
+//! machine word) against the flat forest at equal load, reporting the
+//! circuit's LUT/FF/cut structure and the 64-lane occupancy (rows mod 64
+//! padding waste) real traffic achieved.
+//!
 //! The PJRT section (AOT artifact engine) additionally runs when
 //! `artifacts/manifest.txt` exists (`make artifacts`).
 //!
@@ -25,11 +31,12 @@
 
 use std::path::PathBuf;
 use std::sync::atomic::Ordering;
+use std::sync::Arc;
 use std::time::Duration;
 
 use treelut::coordinator::{
-    BatchExecutor, BatchPolicy, CpuExecutor, DispatchPolicy, FlatExecutor, OverloadPolicy,
-    Server, ServingReport, SubmitError,
+    BatchExecutor, BatchPolicy, CompiledNetlist, CpuExecutor, DispatchPolicy, FlatExecutor,
+    LaneStats, OverloadPolicy, Server, ServingReport, SubmitError,
 };
 use treelut::data::synth;
 use treelut::exp::configs::design_point;
@@ -99,6 +106,7 @@ fn poisson_run_admitting(
     let before = snapshot(server);
     let sheds0 = server.stats().sheds.load(Ordering::Relaxed);
     let full0 = server.stats().queue_full.load(Ordering::Relaxed);
+    let redirects0 = server.stats().redirects.load(Ordering::Relaxed);
     let mut rng = Rng::new(17);
     let t0 = Timer::start();
     let mut pending = Vec::with_capacity(n_requests);
@@ -136,6 +144,7 @@ fn poisson_run_admitting(
     Ok(finish_report(server, &before, rep).with_admission(
         server.stats().sheds.load(Ordering::Relaxed) - sheds0,
         server.stats().queue_full.load(Ordering::Relaxed) - full0,
+        server.stats().redirects.load(Ordering::Relaxed) - redirects0,
     ))
 }
 
@@ -441,6 +450,82 @@ fn main() -> anyhow::Result<()> {
         } else {
             "(REGRESSION: shed policy exceeded the drain bound or shed nothing)"
         }
+    );
+
+    // --- Netlist executor sweep: the hardware-accurate path ---------------
+    // Serve the *mapped circuit* itself: quantized rows packed 64 per
+    // machine word through the bit-parallel gate-level simulator, vs the
+    // flat forest at equal load. The table reports the circuit structure
+    // and how much of the 64-lane word real traffic filled.
+    let netlist_requests = n_requests.min(4_000);
+    let compiled = CompiledNetlist::compile(&quant, dp.pipeline)?;
+    let meta = compiled.meta();
+    println!(
+        "\n== netlist executor sweep: {} LUTs, {} FFs, {} cuts, depth {} \
+         ({} gates, {} keys) ==",
+        meta.luts, meta.ffs, meta.cuts, meta.levels, meta.gates, meta.keys
+    );
+    let mut t = Table::new(&["executor", "shards", "rows/s", "batch", "p50", "p99", "lanes"]);
+    let mut flat_equal_load = 0.0f64;
+    let mut netlist_rate = 0.0f64;
+    let mut netlist_util = 0.0f64;
+    for &shards in &[1usize, 4] {
+        for kind in ["flat", "netlist"] {
+            let policy = BatchPolicy {
+                max_batch: MAX_BATCH,
+                max_wait: Duration::from_micros(500),
+                ..BatchPolicy::default()
+            };
+            let lanes = Arc::new(LaneStats::default());
+            let server = if kind == "flat" {
+                let fo = forest.clone();
+                Server::start_pool_dispatch(
+                    move |_shard| Ok(FlatExecutor { forest: fo.clone(), max_batch: MAX_BATCH }),
+                    policy,
+                    shards,
+                    DispatchPolicy::P2c,
+                )?
+            } else {
+                let cn = compiled.clone();
+                let lf = Arc::clone(&lanes);
+                Server::start_pool_dispatch(
+                    move |_shard| Ok(cn.executor(MAX_BATCH, Arc::clone(&lf))),
+                    policy,
+                    shards,
+                    DispatchPolicy::P2c,
+                )?
+            };
+            let cap = firehose_run(&server, &btest, netlist_requests)?;
+            let lat = poisson_run(&server, &btest, netlist_requests.min(2_000), rps)?;
+            let util = lanes.utilization();
+            if shards == 4 {
+                if kind == "flat" {
+                    flat_equal_load = cap.throughput;
+                } else {
+                    netlist_rate = cap.throughput;
+                    netlist_util = util;
+                }
+            }
+            t.row(&[
+                kind.into(),
+                shards.to_string(),
+                format!("{:.0}", cap.throughput),
+                format!("{:.1}", cap.mean_batch),
+                format!("{:.0}us", lat.latency.p50 * 1e6),
+                format!("{:.0}us", lat.latency.p99 * 1e6),
+                if kind == "netlist" { format!("{:.0}%", util * 100.0) } else { "-".into() },
+            ]);
+            server.shutdown();
+        }
+    }
+    println!("{}", t.render());
+    println!(
+        "headline: netlist executor {netlist_rate:.0} rows/s vs flat {flat_equal_load:.0} \
+         rows/s at equal load (4 shards) -> {:.3}x; lanes utilization {:.0}% \
+         (rows mod 64 padding waste {:.0}%)",
+        netlist_rate / flat_equal_load,
+        netlist_util * 100.0,
+        (1.0 - netlist_util) * 100.0
     );
 
     // --- PJRT engine section (artifact-gated) -----------------------------

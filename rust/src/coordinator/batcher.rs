@@ -29,8 +29,12 @@
 //! drops the head of the queue (failing it with [`SubmitError::Shed`]) to
 //! admit the new request — the knob that keeps *admitted*-job latency
 //! bounded when offered load exceeds capacity, instead of buffering without
-//! limit and letting every latency promise silently degrade. Shed events
-//! are counted in [`ServerStats::sheds`]; at-capacity encounters in
+//! limit and letting every latency promise silently degrade. `shed-new`
+//! admission is **pool-wide**: before refusing, the submit scan probes the
+//! remaining live shards once for a non-full queue and enqueues there
+//! (counted in [`ServerStats::redirects`]); the typed refusal only fires
+//! when every live queue is at capacity. Shed events are counted in
+//! [`ServerStats::sheds`]; at-capacity encounters in
 //! [`ServerStats::queue_full`].
 //!
 //! Work stealing runs under every dispatch policy: a worker that times out
@@ -323,10 +327,16 @@ pub struct ServerStats {
     /// Jobs shed by admission control: `shed-new` refusals at the door
     /// plus `shed-oldest` drops of previously admitted queue heads.
     pub sheds: AtomicU64,
-    /// Submit attempts that found the dispatched-to queue at
-    /// [`BatchPolicy::queue_cap`] (every shed, plus each blocking episode
-    /// under the `block` policy).
+    /// At-capacity queue encounters: each full queue the admission scan
+    /// hit (the dispatched-to shard and, under `shed-new`, every full
+    /// sibling probed before redirecting or refusing), plus each blocking
+    /// episode under the `block` policy.
     pub queue_full: AtomicU64,
+    /// `shed-new` submissions admitted by a live *sibling* after the
+    /// dispatched-to queue was found at capacity — pool-wide admission
+    /// turning a would-be shed into served work. Counted on the shard
+    /// that accepted the job.
+    pub redirects: AtomicU64,
     pub batches: AtomicU64,
     pub rows_executed: AtomicU64,
     pub exec_nanos: AtomicU64,
@@ -756,11 +766,14 @@ impl Server {
     /// The dispatch policy picks a preferred shard; if that shard is dead
     /// (its worker panicked) the scan fails over to the next live one, so
     /// one crashed worker degrades capacity instead of failing requests.
-    /// Admission control applies at the first *live* shard the scan
-    /// reaches (dead-shard failover never bypasses the queue bound).
-    /// Failures are typed [`SubmitError`]s: width mismatch and
-    /// [`SubmitError::AllShardsDead`] count in [`ServerStats::rejected`];
-    /// `shed-new` refusals count in [`ServerStats::sheds`].
+    /// Admission is pool-wide but never bypasses the queue bound: under
+    /// `shed-new` a full dispatched-to queue sends the scan on to the next
+    /// live *non-full* sibling (a success there counts in
+    /// [`ServerStats::redirects`]), and the typed refusal fires only once
+    /// every live queue was found at capacity. Failures are typed
+    /// [`SubmitError`]s: width mismatch and [`SubmitError::AllShardsDead`]
+    /// count in [`ServerStats::rejected`]; `shed-new` refusals count in
+    /// [`ServerStats::sheds`].
     pub fn submit(&self, row: Vec<u16>) -> anyhow::Result<mpsc::Receiver<anyhow::Result<Reply>>> {
         assert!(!self.shards.is_empty(), "server already shut down");
         // Validate before touching the dispatch cursor so rejected rows
@@ -782,6 +795,12 @@ impl Server {
         };
         let (resp_tx, resp_rx) = mpsc::channel();
         let mut job = Job { row, enqueued: self.clock.now(), resp: resp_tx };
+        // First shard the scan found at capacity (only `shed-new` surfaces
+        // `Admit::Full`): admission there is refused *pool-wide* — the scan
+        // keeps looking for a live non-full sibling, and only sheds once
+        // every live queue turned out full (ROADMAP: admission consults
+        // pool-wide load before shedding).
+        let mut first_full: Option<usize> = None;
         for k in 0..n {
             let idx = (start + k) % n;
             let shard = &self.shards[idx];
@@ -796,6 +815,9 @@ impl Server {
                         if waited {
                             stats.queue_full.fetch_add(1, Ordering::Relaxed);
                         }
+                        if first_full.is_some() {
+                            stats.redirects.fetch_add(1, Ordering::Relaxed);
+                        }
                     }
                     return Ok(resp_rx);
                 }
@@ -809,14 +831,15 @@ impl Server {
                     let _ = dropped.resp.send(Err(SubmitError::Shed { shard: idx }.into()));
                     return Ok(resp_rx);
                 }
-                Admit::Full(_refused) => {
-                    // shed-new honors the policy at the dispatched-to shard
-                    // exactly: no sibling scan, a typed refusal instead.
+                // `shed-new` at capacity: count the encounter, remember the
+                // dispatched-to shard for the typed refusal, and keep
+                // scanning for a non-full live sibling.
+                Admit::Full(j) => {
                     for stats in [&self.stats, &shard.stats] {
                         stats.queue_full.fetch_add(1, Ordering::Relaxed);
-                        stats.sheds.fetch_add(1, Ordering::Relaxed);
                     }
-                    return Err(SubmitError::QueueFull { shard: idx }.into());
+                    first_full.get_or_insert(idx);
+                    job = j;
                 }
                 // The shard died between the alive check and the push; take
                 // the job back and try the next shard. A `block` episode
@@ -830,6 +853,14 @@ impl Server {
                     job = j;
                 }
             }
+        }
+        if let Some(full) = first_full {
+            // Every live queue was at capacity: shed, blaming the shard the
+            // dispatch policy originally picked.
+            for stats in [&self.stats, &self.shards[full].stats] {
+                stats.sheds.fetch_add(1, Ordering::Relaxed);
+            }
+            return Err(SubmitError::QueueFull { shard: full }.into());
         }
         self.stats.rejected.fetch_add(1, Ordering::Relaxed);
         Err(SubmitError::AllShardsDead.into())

@@ -1,7 +1,7 @@
 //! Serving metrics: latency distribution + throughput report, produced by
 //! load generators (examples/serve.rs, benches/serving_throughput.rs).
 
-use super::DispatchPolicy;
+use super::{DispatchPolicy, NetlistMeta};
 use crate::util::Summary;
 
 /// One load-test run's results.
@@ -26,8 +26,22 @@ pub struct ServingReport {
     /// Jobs shed by admission control (`shed-new` refusals plus
     /// `shed-oldest` queue-head drops).
     pub sheds: u64,
-    /// Submit attempts that found the dispatched-to queue at its cap.
+    /// At-capacity queue encounters: the dispatched-to shard plus, under
+    /// `shed-new`, every full sibling the pool-wide admission scan probed
+    /// (can exceed the submit count on a saturated multi-shard pool).
     pub queue_full: u64,
+    /// `shed-new` submissions a non-full sibling accepted after the
+    /// dispatched-to queue was full — would-be sheds the pool absorbed.
+    pub redirects: u64,
+    /// Which executor served the run (`flat`, `netlist`, `cpu`, `pjrt`),
+    /// if recorded.
+    pub executor: Option<String>,
+    /// Structural metadata of the served circuit, when the executor was
+    /// the hardware-accurate netlist path.
+    pub netlist: Option<NetlistMeta>,
+    /// Fraction of 64-wide simulation lanes carrying real rows (netlist
+    /// executor only): 1.0 = every word full, low values = padding waste.
+    pub lanes_utilization: Option<f64>,
 }
 
 impl ServingReport {
@@ -50,6 +64,10 @@ impl ServingReport {
             stolen_jobs: 0,
             sheds: 0,
             queue_full: 0,
+            redirects: 0,
+            executor: None,
+            netlist: None,
+            lanes_utilization: None,
         }
     }
 
@@ -73,15 +91,36 @@ impl ServingReport {
     }
 
     /// Record the run's admission-control counters.
-    pub fn with_admission(mut self, sheds: u64, queue_full: u64) -> ServingReport {
+    pub fn with_admission(mut self, sheds: u64, queue_full: u64, redirects: u64) -> ServingReport {
         self.sheds = sheds;
         self.queue_full = queue_full;
+        self.redirects = redirects;
+        self
+    }
+
+    /// Record which executor served the run.
+    pub fn with_executor(mut self, executor: &str) -> ServingReport {
+        self.executor = Some(executor.to_string());
+        self
+    }
+
+    /// Record the served circuit's structural metadata (netlist executor).
+    pub fn with_netlist(mut self, meta: NetlistMeta) -> ServingReport {
+        self.netlist = Some(meta);
+        self
+    }
+
+    /// Record the run's 64-lane occupancy (netlist executor).
+    pub fn with_lanes_utilization(mut self, utilization: f64) -> ServingReport {
+        self.lanes_utilization = Some(utilization);
         self
     }
 
     /// One-line human-readable rendering (microsecond latencies).
     pub fn render(&self) -> String {
         let us = |s: f64| s * 1e6;
+        let executor =
+            self.executor.as_ref().map(|e| format!(" exec={e}")).unwrap_or_default();
         let shards =
             if self.shards > 1 { format!(" shards={}", self.shards) } else { String::new() };
         let dispatch =
@@ -91,13 +130,29 @@ impl ServingReport {
         } else {
             String::new()
         };
-        let sheds = if self.sheds > 0 || self.queue_full > 0 {
-            format!(" sheds={} (queue_full={})", self.sheds, self.queue_full)
+        let sheds = if self.sheds > 0 || self.queue_full > 0 || self.redirects > 0 {
+            format!(
+                " sheds={} (queue_full={} redirects={})",
+                self.sheds, self.queue_full, self.redirects
+            )
         } else {
             String::new()
         };
+        let netlist = self
+            .netlist
+            .map(|m| {
+                format!(
+                    " netlist[luts={} ffs={} cuts={} depth={}]",
+                    m.luts, m.ffs, m.cuts, m.levels
+                )
+            })
+            .unwrap_or_default();
+        let lanes = self
+            .lanes_utilization
+            .map(|u| format!(" lanes={:.0}%", u * 100.0))
+            .unwrap_or_default();
         format!(
-            "thru={:.0} rows/s{}{shards}{dispatch} batch={:.1} lat p50={:.0}us p90={:.0}us p99={:.0}us max={:.0}us{steals}{sheds}",
+            "thru={:.0} rows/s{}{executor}{shards}{dispatch} batch={:.1} lat p50={:.0}us p90={:.0}us p99={:.0}us max={:.0}us{steals}{sheds}{netlist}{lanes}",
             self.throughput,
             self.offered_rps.map(|r| format!(" (offered {r:.0})")).unwrap_or_default(),
             self.mean_batch,
@@ -145,10 +200,33 @@ mod tests {
         let r = ServingReport::from_latencies(&[0.001; 10], 1.0, 2.0, None);
         // Unset: no shed marker.
         assert!(!r.render().contains("sheds="));
-        let r = r.with_admission(12, 30);
+        let r = r.with_admission(12, 30, 4);
         assert_eq!(r.sheds, 12);
         assert_eq!(r.queue_full, 30);
-        assert!(r.render().contains("sheds=12 (queue_full=30)"));
+        assert_eq!(r.redirects, 4);
+        assert!(r.render().contains("sheds=12 (queue_full=30 redirects=4)"));
+        // Redirect-only overload (pool absorbed every would-be shed) still
+        // surfaces in the report.
+        let r2 = ServingReport::from_latencies(&[0.001; 10], 1.0, 2.0, None)
+            .with_admission(0, 3, 3);
+        assert!(r2.render().contains("sheds=0 (queue_full=3 redirects=3)"));
+    }
+
+    #[test]
+    fn executor_and_netlist_rendering() {
+        let r = ServingReport::from_latencies(&[0.001; 10], 1.0, 2.0, None);
+        // Unset: no executor / netlist / lane markers.
+        assert!(!r.render().contains("exec="));
+        assert!(!r.render().contains("netlist["));
+        assert!(!r.render().contains("lanes="));
+        let meta = NetlistMeta { luts: 120, ffs: 30, cuts: 2, levels: 4, gates: 900, keys: 17 };
+        let r = r.with_executor("netlist").with_netlist(meta).with_lanes_utilization(0.43);
+        assert_eq!(r.executor.as_deref(), Some("netlist"));
+        assert_eq!(r.netlist, Some(meta));
+        let s = r.render();
+        assert!(s.contains("exec=netlist"), "{s}");
+        assert!(s.contains("netlist[luts=120 ffs=30 cuts=2 depth=4]"), "{s}");
+        assert!(s.contains("lanes=43%"), "{s}");
     }
 
     #[test]

@@ -20,7 +20,8 @@
 //!
 //! The coordinator is generic over [`BatchExecutor`] so unit tests run
 //! against a deterministic mock and the serving path runs against
-//! [`FlatExecutor`] (the flat-forest CPU engine) or
+//! [`FlatExecutor`] (the flat-forest CPU engine), [`NetlistExecutor`]
+//! (the bit-parallel gate-level netlist — the hardware-accurate path), or
 //! [`crate::runtime::Engine`] (the AOT PJRT artifact). Time is generic
 //! too ([`Clock`]): production uses [`WallClock`], while the `testing`
 //! harness (compiled under the `test-harness` feature) drives the pool on
@@ -28,6 +29,7 @@
 
 pub mod batcher;
 pub mod metrics;
+pub mod netlist_exec;
 #[cfg(any(test, feature = "test-harness"))]
 pub mod testing;
 
@@ -36,6 +38,9 @@ pub use batcher::{
     SubmitError, WallClock,
 };
 pub use metrics::ServingReport;
+pub use netlist_exec::{
+    CompiledNetlist, LaneStats, NetlistExecError, NetlistExecutor, NetlistMeta,
+};
 
 /// Anything that can classify a batch of quantized rows.
 ///

@@ -1,0 +1,422 @@
+//! The hardware-accurate serving executor: batched inference through the
+//! *mapped gate-level netlist* instead of the software tree walker.
+//!
+//! TreeLUT's claim (paper §2.3–2.4) is about the hardware artifact — the
+//! comparator key generator, the per-tree path logic, the adder trees and
+//! their register cuts. The serving pool historically only ever ran the
+//! software [`crate::quantize::FlatForest`]; the netlist and its simulator
+//! sat behind offline tests. [`NetlistExecutor`] promotes the netlist to a
+//! first-class [`super::BatchExecutor`]: quantized rows are packed 64 to a
+//! machine word ([`InputBatch`] — the bit-parallel simulator is a natural
+//! batch engine), evaluated through the built circuit, and the per-class
+//! adder-tree output bits are unpacked back into per-row argmax classes.
+//! It is bit-exact against [`super::FlatExecutor`] (property-tested in
+//! `tests/props.rs`, pinned by the conformance vectors in
+//! `tests/conformance.rs`).
+//!
+//! Construction is split in two so pools can share the expensive part:
+//! [`CompiledNetlist`] (design lowering + netlist build + LUT mapping) is
+//! `Send + Sync` and built once, then each shard materializes its own
+//! [`NetlistExecutor`] (simulator scratch is per-shard state) via
+//! [`CompiledNetlist::executor`].
+
+use super::BatchExecutor;
+use crate::netlist::simulate::{InputBatch, OutputBatch};
+use crate::netlist::{build_netlist, map_luts, BuiltDesign, Simulator};
+use crate::quantize::{FeatureQuantizer, QuantModel};
+use crate::rtl::{design_from_quant, Pipeline};
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Typed failures of [`CompiledNetlist::compile`] and
+/// [`NetlistExecutor::execute`], downcastable from the returned
+/// `anyhow::Error`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum NetlistExecError {
+    /// A row's feature count does not match the circuit's input contract.
+    WidthMismatch { row: usize, got: usize, want: usize },
+    /// A comparator threshold exceeds the `w_feature`-bit input domain:
+    /// the hardware key would be constant-false while the software
+    /// predictor could still satisfy it on out-of-domain inputs, so the
+    /// input clamp could no longer guarantee executor agreement.
+    ThresholdOutOfDomain { feat: u32, thresh: u32, max: u32 },
+}
+
+impl std::fmt::Display for NetlistExecError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            NetlistExecError::WidthMismatch { row, got, want } => {
+                write!(f, "row {row} has {got} features, netlist expects {want}")
+            }
+            NetlistExecError::ThresholdOutOfDomain { feat, thresh, max } => {
+                write!(
+                    f,
+                    "comparator on feature {feat} has threshold {thresh} outside the \
+                     w_feature input domain (max {max})"
+                )
+            }
+        }
+    }
+}
+
+impl std::error::Error for NetlistExecError {}
+
+/// Structural metadata of the served circuit, surfaced through
+/// [`super::ServingReport`] so a load test reports *what hardware* it
+/// exercised (LUT count and per-stage depth from
+/// [`crate::netlist::MapResult`], register cuts from
+/// [`crate::netlist::BuiltDesign`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct NetlistMeta {
+    /// LUTs in the technology-mapped cover.
+    pub luts: usize,
+    /// Flip-flops (pipeline register bits).
+    pub ffs: usize,
+    /// Register cuts = pipeline latency in cycles.
+    pub cuts: usize,
+    /// LUT depth of the critical pipeline stage.
+    pub levels: u32,
+    /// Gate count of the netlist before mapping.
+    pub gates: usize,
+    /// Key-generator comparators.
+    pub keys: usize,
+}
+
+/// Lane-occupancy counters for the 64-wide simulation words. Shared
+/// (`Arc`) across the shards of a pool so a bench can report how much of
+/// the bit-parallel width real traffic actually filled.
+#[derive(Debug, Default)]
+pub struct LaneStats {
+    /// Rows simulated.
+    pub rows: AtomicU64,
+    /// 64-lane words simulated (each costs one full netlist pass).
+    pub words: AtomicU64,
+}
+
+impl LaneStats {
+    /// Fraction of simulated lanes carrying a real row (1.0 = every word
+    /// full; a 1-row batch utilizes 1/64). 0 when nothing ran.
+    pub fn utilization(&self) -> f64 {
+        let words = self.words.load(Ordering::Relaxed);
+        if words == 0 {
+            return 0.0;
+        }
+        self.rows.load(Ordering::Relaxed) as f64 / (64 * words) as f64
+    }
+}
+
+/// The shareable compilation product: built netlist + mapping metadata,
+/// `Arc`-backed so per-shard clones share one copy of the circuit. Cheap
+/// to clone; contains no simulation state.
+#[derive(Clone, Debug)]
+pub struct CompiledNetlist {
+    shared: Arc<CompiledShared>,
+}
+
+#[derive(Debug)]
+struct CompiledShared {
+    built: BuiltDesign,
+    meta: NetlistMeta,
+    n_features: usize,
+    w_feature: usize,
+}
+
+impl CompiledNetlist {
+    /// Lower `model` into the keygen-mode architecture, build the gate
+    /// netlist with `pipeline` register cuts, and map it onto 6-LUTs for
+    /// the metadata.
+    pub fn compile(model: &QuantModel, pipeline: Pipeline) -> anyhow::Result<CompiledNetlist> {
+        model.validate()?;
+        anyhow::ensure!(
+            (1..=16).contains(&model.w_feature),
+            "w_feature {} outside the supported 1..=16 range",
+            model.w_feature
+        );
+        let design = design_from_quant("serve_netlist", model, pipeline, true);
+        // The executor's input clamp preserves agreement with the software
+        // predictor only while every comparator threshold fits the w-bit
+        // input domain (true of every TreeLUT-quantized model); reject the
+        // degenerate case instead of serving silent disagreement.
+        let domain_max = (1u32 << model.w_feature) - 1;
+        for &(feat, thresh) in &design.keys {
+            anyhow::ensure!(
+                thresh <= domain_max,
+                NetlistExecError::ThresholdOutOfDomain { feat, thresh, max: domain_max }
+            );
+        }
+        let n_keys = design.keys.len();
+        let built = build_netlist(&design);
+        let map = map_luts(&built.net);
+        let meta = NetlistMeta {
+            luts: map.luts,
+            ffs: map.ffs,
+            cuts: built.cuts,
+            levels: map.max_stage_depth(),
+            gates: built.net.len(),
+            keys: n_keys,
+        };
+        Ok(CompiledNetlist {
+            shared: Arc::new(CompiledShared {
+                built,
+                meta,
+                n_features: model.n_features,
+                w_feature: model.w_feature as usize,
+            }),
+        })
+    }
+
+    /// Circuit metadata for reporting.
+    pub fn meta(&self) -> NetlistMeta {
+        self.shared.meta
+    }
+
+    /// Materialize a per-shard executor (its own simulator scratch over
+    /// the shared circuit) that records lane occupancy into the shared
+    /// `lanes` counters.
+    pub fn executor(&self, max_batch: usize, lanes: Arc<LaneStats>) -> NetlistExecutor {
+        NetlistExecutor {
+            sim: RefCell::new(Simulator::new(&self.shared.built.net)),
+            compiled: self.clone(),
+            max_batch,
+            lanes,
+        }
+    }
+}
+
+/// A [`BatchExecutor`] over the built netlist: the hardware-accurate
+/// serving path. See the module docs for the packing scheme.
+///
+/// Out-of-range feature values are clamped into the circuit's
+/// `w_feature`-bit input domain before packing. Every threshold of a
+/// TreeLUT-quantized model fits that domain, so the clamp preserves each
+/// comparator's outcome — and therefore exact agreement with
+/// [`super::FlatExecutor`] — for arbitrary `u16` inputs.
+pub struct NetlistExecutor {
+    compiled: CompiledNetlist,
+    /// Simulator scratch. `RefCell`: an executor is owned by exactly one
+    /// worker thread ([`super::BatchExecutor`] is not `Sync`-bound), but
+    /// `execute` takes `&self`.
+    sim: RefCell<Simulator>,
+    max_batch: usize,
+    lanes: Arc<LaneStats>,
+}
+
+impl NetlistExecutor {
+    /// Compile `model` and build a standalone executor with private lane
+    /// counters. Pools should [`CompiledNetlist::compile`] once instead
+    /// and call [`CompiledNetlist::executor`] per shard.
+    pub fn new(
+        model: &QuantModel,
+        pipeline: Pipeline,
+        max_batch: usize,
+    ) -> anyhow::Result<NetlistExecutor> {
+        Ok(CompiledNetlist::compile(model, pipeline)?
+            .executor(max_batch, Arc::new(LaneStats::default())))
+    }
+
+    /// Circuit metadata for reporting.
+    pub fn meta(&self) -> NetlistMeta {
+        self.compiled.shared.meta
+    }
+
+    /// The shared lane-occupancy counters.
+    pub fn lane_stats(&self) -> Arc<LaneStats> {
+        Arc::clone(&self.lanes)
+    }
+
+    /// Convenience for raw-float clients: quantize `rows` through the
+    /// model's per-feature threshold maps (the same min-max quantizer the
+    /// tool flow trained with), then classify through the netlist.
+    pub fn classify_f32(
+        &self,
+        fq: &FeatureQuantizer,
+        rows: &[&[f32]],
+    ) -> anyhow::Result<Vec<u32>> {
+        let quantized: Vec<Vec<u16>> = rows.iter().map(|r| fq.transform_row(r)).collect();
+        let refs: Vec<&[u16]> = quantized.iter().map(|r| r.as_slice()).collect();
+        self.execute(&refs)
+    }
+
+    /// Pack up to 64 rows into one word batch, simulate, and decode one
+    /// class per lane into `out`.
+    fn run_chunk(&self, sim: &mut Simulator, chunk: &[&[u16]], out: &mut Vec<u32>) {
+        let built = &self.compiled.shared.built;
+        let w = self.compiled.shared.w_feature;
+        let clamp = ((1u32 << w) - 1) as u16;
+        let mut batch = InputBatch::new(built.net.n_inputs);
+        let mut clamped: Vec<u16> = Vec::with_capacity(self.compiled.shared.n_features);
+        for row in chunk {
+            clamped.clear();
+            clamped.extend(row.iter().map(|&v| v.min(clamp)));
+            batch.push_features(&clamped, w);
+        }
+        let out_batch: OutputBatch = sim.run(&built.net, &batch);
+        for lane in 0..chunk.len() {
+            out.push(built.class_of(&out_batch, lane));
+        }
+    }
+}
+
+impl BatchExecutor for NetlistExecutor {
+    fn max_batch(&self) -> usize {
+        self.max_batch
+    }
+
+    fn n_features(&self) -> usize {
+        self.compiled.shared.n_features
+    }
+
+    fn execute(&self, rows: &[&[u16]]) -> anyhow::Result<Vec<u32>> {
+        let want = self.compiled.shared.n_features;
+        for (i, row) in rows.iter().enumerate() {
+            anyhow::ensure!(
+                row.len() == want,
+                NetlistExecError::WidthMismatch { row: i, got: row.len(), want }
+            );
+        }
+        let mut preds = Vec::with_capacity(rows.len());
+        let mut sim = self.sim.borrow_mut();
+        for chunk in rows.chunks(64) {
+            self.run_chunk(&mut sim, chunk, &mut preds);
+        }
+        self.lanes.rows.fetch_add(rows.len() as u64, Ordering::Relaxed);
+        self.lanes.words.fetch_add(rows.len().div_ceil(64) as u64, Ordering::Relaxed);
+        Ok(preds)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quantize::{QuantNode as N, QuantTree};
+
+    fn model() -> QuantModel {
+        QuantModel {
+            trees: vec![
+                QuantTree {
+                    nodes: vec![
+                        N::Split { feat: 0, thresh: 2, left: 1, right: 2 },
+                        N::Leaf { value: 0 },
+                        N::Leaf { value: 3 },
+                    ],
+                },
+                QuantTree {
+                    nodes: vec![
+                        N::Split { feat: 1, thresh: 1, left: 1, right: 2 },
+                        N::Leaf { value: 0 },
+                        N::Leaf { value: 5 },
+                    ],
+                },
+            ],
+            n_groups: 1,
+            biases: vec![-4],
+            n_features: 2,
+            w_feature: 2,
+            w_tree: 3,
+            scale: 1.0,
+        }
+    }
+
+    #[test]
+    fn matches_quant_predictor_exhaustively() {
+        let m = model();
+        let e = NetlistExecutor::new(&m, Pipeline::new(0, 1, 1), 64).unwrap();
+        let rows: Vec<Vec<u16>> = (0..16).map(|v| vec![v % 4, v / 4]).collect();
+        let refs: Vec<&[u16]> = rows.iter().map(|r| r.as_slice()).collect();
+        let got = e.execute(&refs).unwrap();
+        for (i, row) in rows.iter().enumerate() {
+            assert_eq!(got[i], m.predict_class(row), "row {row:?}");
+        }
+    }
+
+    #[test]
+    fn meta_reflects_mapping_and_cuts() {
+        let m = model();
+        let e = NetlistExecutor::new(&m, Pipeline::new(1, 1, 1), 64).unwrap();
+        let meta = e.meta();
+        assert!(meta.luts > 0);
+        assert!(meta.ffs > 0);
+        assert_eq!(meta.cuts, 3);
+        assert!(meta.levels >= 1);
+        assert!(meta.gates > 0);
+        assert_eq!(meta.keys, 2);
+    }
+
+    #[test]
+    fn lane_stats_count_words_and_rows() {
+        let m = model();
+        let e = NetlistExecutor::new(&m, Pipeline::new(0, 0, 0), 128).unwrap();
+        let rows: Vec<Vec<u16>> = (0..65).map(|v| vec![v % 4, (v / 4) % 4]).collect();
+        let refs: Vec<&[u16]> = rows.iter().map(|r| r.as_slice()).collect();
+        e.execute(&refs).unwrap();
+        let lanes = e.lane_stats();
+        assert_eq!(lanes.rows.load(Ordering::Relaxed), 65);
+        assert_eq!(lanes.words.load(Ordering::Relaxed), 2); // 64 + 1
+        let util = lanes.utilization();
+        assert!((util - 65.0 / 128.0).abs() < 1e-12, "util={util}");
+    }
+
+    #[test]
+    fn width_mismatch_is_typed() {
+        let m = model();
+        let e = NetlistExecutor::new(&m, Pipeline::new(0, 0, 0), 64).unwrap();
+        let short = [0u16];
+        let err = e.execute(&[&short[..]]).unwrap_err();
+        assert_eq!(
+            *err.downcast_ref::<NetlistExecError>().expect("typed error"),
+            NetlistExecError::WidthMismatch { row: 0, got: 1, want: 2 }
+        );
+    }
+
+    #[test]
+    fn out_of_domain_threshold_is_a_typed_compile_error() {
+        // thresh 5 can never fire in 2-bit hardware but the software
+        // predictor could satisfy it on out-of-domain inputs: compile must
+        // refuse instead of serving silent executor disagreement.
+        let mut m = model();
+        m.trees[0].nodes[0] = N::Split { feat: 0, thresh: 5, left: 1, right: 2 };
+        let err = CompiledNetlist::compile(&m, Pipeline::new(0, 0, 0)).unwrap_err();
+        assert_eq!(
+            *err.downcast_ref::<NetlistExecError>().expect("typed error"),
+            NetlistExecError::ThresholdOutOfDomain { feat: 0, thresh: 5, max: 3 }
+        );
+    }
+
+    #[test]
+    fn out_of_domain_inputs_clamp_like_the_hardware() {
+        // u16::MAX is far outside the 2-bit input domain; the clamp maps it
+        // to 3, which satisfies every in-domain comparator exactly like the
+        // software predictor does.
+        let m = model();
+        let e = NetlistExecutor::new(&m, Pipeline::new(0, 0, 0), 64).unwrap();
+        let row = [u16::MAX, u16::MAX];
+        let got = e.execute(&[&row[..]]).unwrap();
+        assert_eq!(got, vec![m.predict_class(&row)]);
+    }
+
+    #[test]
+    fn empty_batch_is_ok() {
+        let m = model();
+        let e = NetlistExecutor::new(&m, Pipeline::new(0, 0, 0), 64).unwrap();
+        assert_eq!(e.execute(&[]).unwrap(), Vec::<u32>::new());
+        assert_eq!(e.lane_stats().words.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn classify_f32_quantizes_through_threshold_maps() {
+        use crate::data::Dataset;
+        let m = model();
+        // A quantizer whose [0, 3] range maps floats onto the 2-bit grid.
+        let ds = Dataset::new("t", vec![0.0, 0.0, 3.0, 3.0], vec![0, 1], 2, 2);
+        let fq = FeatureQuantizer::fit(&ds, 2);
+        let e = NetlistExecutor::new(&m, Pipeline::new(0, 1, 0), 64).unwrap();
+        let rows: Vec<Vec<f32>> = vec![vec![0.0, 0.0], vec![2.0, 1.0], vec![3.0, 3.0]];
+        let refs: Vec<&[f32]> = rows.iter().map(|r| r.as_slice()).collect();
+        let got = e.classify_f32(&fq, &refs).unwrap();
+        for (i, row) in rows.iter().enumerate() {
+            let q = fq.transform_row(row);
+            assert_eq!(got[i], m.predict_class(&q), "row {row:?} -> {q:?}");
+        }
+    }
+}

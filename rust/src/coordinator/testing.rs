@@ -16,6 +16,13 @@
 //! functions of the script: virtual timestamps come out exact, and chaos
 //! scenarios repeat bit-identically run after run.
 //!
+//! Two executor modes share the machinery: [`ScriptedExecutor`] (service
+//! time and classes fully scripted — the original PR 4 harness) and
+//! [`Harness::start_real`], which wraps *real* executors (flat forest,
+//! gate-level netlist) in [`ChaosWrapped`] so the same chaos plans and
+//! admission scripts drive the production prediction engines
+//! deterministically.
+//!
 //! Gated behind `cfg(test)` / the `test-harness` feature (enabled for the
 //! crate's own integration tests via the self-dev-dependency in
 //! `Cargo.toml`); nothing here is compiled into production builds.
@@ -294,7 +301,8 @@ impl ChaosPlan {
     }
 }
 
-/// One executed batch, as recorded by the scripted executors.
+/// One successfully executed batch, as recorded by the scripted executors
+/// and [`ChaosWrapped`].
 #[derive(Clone, Debug)]
 pub struct BatchRecord {
     pub shard: usize,
@@ -302,7 +310,10 @@ pub struct BatchRecord {
     pub step: usize,
     /// Virtual completion time.
     pub done: Duration,
-    /// `row[0]` (the job id) of every row in the batch, in batch order.
+    /// `row[0]` of every row in the batch, in batch order — the job id
+    /// under the scripted `[id, aux]` row convention; for real-executor
+    /// pools ([`Harness::start_real`]) it is simply the first feature
+    /// value of each row.
     pub jobs: Vec<u16>,
 }
 
@@ -355,6 +366,58 @@ impl BatchExecutor for ScriptedExecutor {
             jobs: rows.iter().map(|r| r[0]).collect(),
         });
         Ok(rows.iter().map(|r| scripted_class(r)).collect())
+    }
+}
+
+/// Adapter that puts a *real* executor (e.g. [`super::FlatExecutor`] or
+/// [`super::NetlistExecutor`]) under harness control: chaos events fire by
+/// shard and batch step exactly as for [`ScriptedExecutor`] (kill panics
+/// the worker mid-batch, stall holds it in a virtual-clock sleep before
+/// executing), and every batch lands in the harness log. Real execution
+/// consumes zero *virtual* time — the harness clock only advances while
+/// every worker is parked — so batching composition, shed decisions, and
+/// reply latencies remain exact functions of the script even though the
+/// predictions come from the real engine.
+pub struct ChaosWrapped<E: BatchExecutor> {
+    inner: E,
+    shard: usize,
+    clock: Arc<VirtualClock>,
+    chaos: Arc<ChaosPlan>,
+    step: AtomicUsize,
+    log: Arc<Mutex<Vec<BatchRecord>>>,
+}
+
+impl<E: BatchExecutor> BatchExecutor for ChaosWrapped<E> {
+    fn max_batch(&self) -> usize {
+        self.inner.max_batch()
+    }
+    fn n_features(&self) -> usize {
+        self.inner.n_features()
+    }
+    fn execute(&self, rows: &[&[u16]]) -> anyhow::Result<Vec<u32>> {
+        let step = self.step.fetch_add(1, Ordering::Relaxed);
+        match self.chaos.action(self.shard, step) {
+            Some(ChaosAction::Kill) => {
+                panic!("chaos: killing shard {} at step {step}", self.shard)
+            }
+            Some(ChaosAction::Stall(d)) => {
+                let target = self.clock.now() + d;
+                self.clock.sleep_until(target);
+            }
+            None => {}
+        }
+        let out = self.inner.execute(rows);
+        // Only successful batches land in the log (a failed execute is
+        // observable through the jobs' error replies, not as served work).
+        if out.is_ok() {
+            self.log.lock().unwrap().push(BatchRecord {
+                shard: self.shard,
+                step,
+                done: self.clock.now(),
+                jobs: rows.iter().map(|r| r[0]).collect(),
+            });
+        }
+        out
     }
 }
 
@@ -476,6 +539,49 @@ impl Harness {
         Harness { clock, server, policy: cfg.policy, log }
     }
 
+    /// Start a pool of *real* executors (built by `factory(shard)`) on the
+    /// virtual clock, each wrapped in [`ChaosWrapped`] so `chaos` applies.
+    /// Rows and classes are the real executor's — use
+    /// [`Harness::submit_row`] / [`Harness::run_open_loop_rows`] instead
+    /// of the scripted `[id, aux]` convention. Execution costs zero
+    /// virtual time; only queueing, batching deadlines, and chaos stalls
+    /// move the clock, which is what makes overload and shard-death
+    /// scenarios over the real engine deterministic.
+    pub fn start_real<E, F>(
+        n_shards: usize,
+        policy: BatchPolicy,
+        dispatch: DispatchPolicy,
+        chaos: ChaosPlan,
+        factory: F,
+    ) -> Harness
+    where
+        E: BatchExecutor,
+        F: Fn(usize) -> anyhow::Result<E> + Send + Sync + 'static,
+    {
+        let clock = Arc::new(VirtualClock::new());
+        let log = Arc::new(Mutex::new(Vec::new()));
+        let chaos = Arc::new(chaos);
+        let (clock_f, log_f) = (Arc::clone(&clock), Arc::clone(&log));
+        let server = Server::start_pool_clocked(
+            move |shard| {
+                Ok(ChaosWrapped {
+                    inner: factory(shard)?,
+                    shard,
+                    clock: Arc::clone(&clock_f),
+                    chaos: Arc::clone(&chaos),
+                    step: AtomicUsize::new(0),
+                    log: Arc::clone(&log_f),
+                })
+            },
+            policy,
+            n_shards,
+            dispatch,
+            Arc::clone(&clock) as Arc<dyn Clock>,
+        )
+        .expect("harness pool must start");
+        Harness { clock, server, policy, log }
+    }
+
     /// Guard against a driver-thread livelock: a `block`-policy submit on a
     /// capped queue suspends its caller until virtual time drains the
     /// queue, but the harness driver is the only thread that advances
@@ -555,9 +661,19 @@ impl Harness {
         id: u16,
         aux: u16,
     ) -> anyhow::Result<mpsc::Receiver<anyhow::Result<Reply>>> {
+        self.submit_row(vec![id, aux])
+    }
+
+    /// Submit an arbitrary row (real-executor pools) once the pool has
+    /// quiesced, so the enqueue order relative to worker progress is
+    /// deterministic.
+    pub fn submit_row(
+        &self,
+        row: Vec<u16>,
+    ) -> anyhow::Result<mpsc::Receiver<anyhow::Result<Reply>>> {
         self.assert_driver_cannot_block();
         self.wait_quiesced();
-        self.server.submit(vec![id, aux])
+        self.server.submit(row)
     }
 
     /// Step virtual time until `rx` resolves and return its outcome.
@@ -582,6 +698,17 @@ impl Harness {
     /// neither resolves nor errors within a generous virtual budget (i.e.
     /// the pool lost it).
     pub fn run_open_loop(&self, arrivals: &[Duration]) -> LoadOutcome {
+        self.run_open_loop_rows(arrivals, |i| vec![i as u16, 0])
+    }
+
+    /// [`Harness::run_open_loop`] over arbitrary rows: job `i` submits
+    /// `row_of(i)` at `arrivals[i]`. Outcomes are still keyed by the
+    /// arrival index `i` (as a `u16` job id).
+    pub fn run_open_loop_rows(
+        &self,
+        arrivals: &[Duration],
+        row_of: impl Fn(usize) -> Vec<u16>,
+    ) -> LoadOutcome {
         self.assert_driver_cannot_block();
         let mut out = LoadOutcome::default();
         let mut pending: VecDeque<(u16, mpsc::Receiver<anyhow::Result<Reply>>)> = VecDeque::new();
@@ -591,7 +718,7 @@ impl Harness {
             if at > now {
                 self.advance(at - now);
             }
-            match self.submit(id, 0) {
+            match self.submit_row(row_of(i)) {
                 Ok(rx) => pending.push_back((id, rx)),
                 Err(e) => {
                     if matches!(
@@ -707,6 +834,42 @@ mod tests {
             assert_eq!(reply.class, scripted_class(&[*id, 0]));
         }
         h.server.shutdown();
+    }
+
+    #[test]
+    fn real_executor_pool_runs_on_the_virtual_clock() {
+        // A trivial real executor: class = row[0] % 2. Execution costs zero
+        // virtual time, so replies carry only (deterministic) queue wait.
+        struct Parity;
+        impl BatchExecutor for Parity {
+            fn max_batch(&self) -> usize {
+                8
+            }
+            fn n_features(&self) -> usize {
+                1
+            }
+            fn execute(&self, rows: &[&[u16]]) -> anyhow::Result<Vec<u32>> {
+                Ok(rows.iter().map(|r| (r[0] % 2) as u32).collect())
+            }
+        }
+        let h = Harness::start_real(
+            2,
+            BatchPolicy { max_batch: 1, max_wait: Duration::ZERO, ..BatchPolicy::default() },
+            DispatchPolicy::RoundRobin,
+            ChaosPlan::stall(0, 0, Duration::from_millis(7)),
+            |_shard| Ok(Parity),
+        );
+        let out = h.run_open_loop_rows(&uniform_arrivals(Duration::ZERO, 4), |i| vec![i as u16]);
+        assert_eq!(out.ok.len(), 4);
+        for (id, reply) in &out.ok {
+            assert_eq!(reply.class, (*id % 2) as u32, "job {id}");
+        }
+        // Shard 0's first batch (job 0) stalls 7 ms; everything else is
+        // instantaneous in virtual time.
+        assert_eq!(out.reply(0).unwrap().latency, Duration::from_millis(7));
+        assert_eq!(out.reply(1).unwrap().latency, Duration::ZERO);
+        let log = h.shutdown_draining();
+        assert!(log.iter().any(|b| b.shard == 0 && b.done == Duration::from_millis(7)));
     }
 
     #[test]

@@ -10,22 +10,28 @@
 //! treelut datasets
 //!     print the evaluation datasets (paper Table 4)
 //! treelut serve [--config jsc] [--requests N] [--rps R] [--shards S] [--dispatch p2c]
-//!               [--queue-cap C] [--overload block|shed-new|shed-oldest]
-//!     batched serving over an N-shard pool: the AOT PJRT artifact when
-//!     available (`make artifacts`), the flat-forest CPU executor otherwise;
-//!     dispatch is load-aware power-of-two-choices by default (round-robin
+//!               [--executor auto|flat|netlist] [--queue-cap C]
+//!               [--overload block|shed-new|shed-oldest]
+//!     batched serving over an N-shard pool. `--executor auto` (default)
+//!     serves the AOT PJRT artifact when available (`make artifacts`) and
+//!     the flat-forest CPU executor otherwise; `--executor flat` forces the
+//!     flat forest; `--executor netlist` serves the hardware-accurate path:
+//!     the built gate-level netlist evaluated 64 rows per machine word, with
+//!     LUT/FF/register-cut metadata and lane utilization in the report.
+//!     Dispatch is load-aware power-of-two-choices by default (round-robin
 //!     selectable for comparison), with idle shards stealing from the
 //!     deepest sibling queue on an adaptive poll. `--queue-cap` arms
 //!     bounded-queue admission control (0 = unbounded): at capacity the
-//!     overload policy blocks the submitter, sheds the new request, or
-//!     sheds the queue head, and shed counts appear in the report
+//!     overload policy blocks the submitter, sheds the new request
+//!     (redirecting to a non-full sibling first), or sheds the queue head,
+//!     and shed counts appear in the report
 //! ```
 
 use std::path::PathBuf;
 
 use treelut::coordinator::{
-    BatchPolicy, DispatchPolicy, FlatExecutor, OverloadPolicy, Server, ServingReport,
-    SubmitError,
+    BatchPolicy, CompiledNetlist, DispatchPolicy, FlatExecutor, LaneStats, NetlistMeta,
+    OverloadPolicy, Server, ServingReport, SubmitError,
 };
 use treelut::data::synth;
 use treelut::exp::configs::{default_rows, design_point};
@@ -40,7 +46,7 @@ const USAGE: &str = "usage: treelut <flow|train|datasets|serve> [options]
   flow      --dataset <mnist|jsc|nid> [--variant I|II] [--rows N] [--seed S] [--out DIR] [--bypass-keygen]
   train     --dataset <mnist|jsc|nid> [--variant I|II] [--rows N] [--seed S] --out FILE
   datasets
-  serve     [--config jsc] [--requests N] [--rps R] [--rows N] [--max-wait-us U] [--shards S] [--dispatch round-robin|p2c] [--queue-cap C] [--overload block|shed-new|shed-oldest]";
+  serve     [--config jsc] [--requests N] [--rps R] [--rows N] [--max-wait-us U] [--shards S] [--dispatch round-robin|p2c] [--executor auto|flat|netlist] [--queue-cap C] [--overload block|shed-new|shed-oldest]";
 
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env();
@@ -148,6 +154,11 @@ fn cmd_serve(mut args: Args) -> anyhow::Result<()> {
     let max_wait_us = args.get_as::<u64>("max-wait-us", 500);
     let shards = args.get_as::<usize>("shards", 1);
     let dispatch = args.get("dispatch", "p2c").parse::<DispatchPolicy>()?;
+    let executor = args.get("executor", "auto");
+    anyhow::ensure!(
+        matches!(executor.as_str(), "auto" | "flat" | "netlist"),
+        "unknown executor {executor:?} (auto | flat | netlist)"
+    );
     // 0 = unbounded (the default), matching the library's usize::MAX.
     let queue_cap = match args.get_as::<usize>("queue-cap", 0) {
         0 => usize::MAX,
@@ -157,9 +168,12 @@ fn cmd_serve(mut args: Args) -> anyhow::Result<()> {
     args.finish()?;
 
     let artifacts = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    // The AOT PJRT engine serves when artifacts exist and PJRT is linked;
-    // otherwise the flat-forest CPU executor serves the same API.
-    let engine_cfg = if artifacts.join("manifest.txt").exists() {
+    // Under `--executor auto`, the AOT PJRT engine serves when artifacts
+    // exist and PJRT is linked (the flat-forest CPU executor otherwise).
+    // Forced executors never consult the manifest: a missing or corrupt
+    // artifact set must not fail — or change the batching of — a run that
+    // uses no PJRT state.
+    let engine_cfg = if executor == "auto" && artifacts.join("manifest.txt").exists() {
         Some(Manifest::load(&artifacts)?.get(&config)?.clone())
     } else {
         None
@@ -184,8 +198,8 @@ fn cmd_serve(mut args: Args) -> anyhow::Result<()> {
         queue_cap,
         overload,
     };
-    // Fallback pool: compile the flat forest once (lazily — only when the
-    // PJRT engine cannot serve), then each shard clones the finished tables.
+    // Flat pool: compile the flat forest once, then each shard clones the
+    // finished tables.
     let quant_flat = quant.clone();
     let flat_server = move || -> anyhow::Result<Server> {
         let flat_forest = FlatForest::compile(&quant_flat)?;
@@ -196,36 +210,62 @@ fn cmd_serve(mut args: Args) -> anyhow::Result<()> {
             dispatch,
         )
     };
-    let server = match engine_cfg {
-        Some(cfg) => {
-            let q2 = quant.clone();
-            let cfg2 = cfg.clone();
-            let art2 = artifacts.clone();
-            let started = Server::start_pool_dispatch(
+    let mut exec_label = "flat";
+    let mut netlist_info: Option<(NetlistMeta, std::sync::Arc<LaneStats>)> = None;
+    let server = match executor.as_str() {
+        // The hardware-accurate path: lower + build + map the circuit once,
+        // then every shard simulates its own copy 64 rows per word.
+        "netlist" => {
+            exec_label = "netlist";
+            let compiled = CompiledNetlist::compile(&quant, dp.pipeline)?;
+            let lanes = std::sync::Arc::new(LaneStats::default());
+            netlist_info = Some((compiled.meta(), std::sync::Arc::clone(&lanes)));
+            Server::start_pool_dispatch(
                 move |_shard| {
-                    let tensors = ModelTensors::from_quant(&q2, &cfg2)?;
-                    Engine::load(&art2, &cfg2, tensors)
+                    Ok(compiled.executor(max_batch, std::sync::Arc::clone(&lanes)))
                 },
                 policy,
                 shards,
                 dispatch,
-            );
-            match started {
-                Ok(s) => s,
-                Err(e) if treelut::runtime::pjrt_unavailable(&e) => {
-                    eprintln!("PJRT unavailable; serving with the flat-forest CPU executor");
-                    flat_server()?
+            )?
+        }
+        "flat" => flat_server()?,
+        // auto: the AOT PJRT engine when artifacts exist and PJRT is
+        // linked; the flat-forest CPU executor otherwise.
+        _ => match engine_cfg {
+            Some(cfg) => {
+                let q2 = quant.clone();
+                let cfg2 = cfg.clone();
+                let art2 = artifacts.clone();
+                let started = Server::start_pool_dispatch(
+                    move |_shard| {
+                        let tensors = ModelTensors::from_quant(&q2, &cfg2)?;
+                        Engine::load(&art2, &cfg2, tensors)
+                    },
+                    policy,
+                    shards,
+                    dispatch,
+                );
+                match started {
+                    Ok(s) => {
+                        exec_label = "pjrt";
+                        s
+                    }
+                    Err(e) if treelut::runtime::pjrt_unavailable(&e) => {
+                        eprintln!("PJRT unavailable; serving with the flat-forest CPU executor");
+                        flat_server()?
+                    }
+                    Err(e) => return Err(e),
                 }
-                Err(e) => return Err(e),
             }
-        }
-        None => {
-            eprintln!(
-                "artifacts/ missing (run `make artifacts`); serving with the flat-forest \
-                 CPU executor"
-            );
-            flat_server()?
-        }
+            None => {
+                eprintln!(
+                    "artifacts/ missing (run `make artifacts`); serving with the flat-forest \
+                     CPU executor"
+                );
+                flat_server()?
+            }
+        },
     };
 
     let mut rng = Rng::new(3);
@@ -259,7 +299,7 @@ fn cmd_serve(mut args: Args) -> anyhow::Result<()> {
         }
     }
     let stats = server.stats();
-    let report = ServingReport::from_latencies(
+    let mut report = ServingReport::from_latencies(
         &lats,
         t0.secs(),
         stats.mean_batch(),
@@ -267,6 +307,7 @@ fn cmd_serve(mut args: Args) -> anyhow::Result<()> {
     )
     .with_shards(server.n_shards())
     .with_dispatch(server.dispatch())
+    .with_executor(exec_label)
     .with_steals(
         stats.steals.load(std::sync::atomic::Ordering::Relaxed),
         stats.stolen_jobs.load(std::sync::atomic::Ordering::Relaxed),
@@ -274,7 +315,11 @@ fn cmd_serve(mut args: Args) -> anyhow::Result<()> {
     .with_admission(
         stats.sheds.load(std::sync::atomic::Ordering::Relaxed),
         stats.queue_full.load(std::sync::atomic::Ordering::Relaxed),
+        stats.redirects.load(std::sync::atomic::Ordering::Relaxed),
     );
+    if let Some((meta, lanes)) = &netlist_info {
+        report = report.with_netlist(*meta).with_lanes_utilization(lanes.utilization());
+    }
     println!("{}", report.render());
     server.shutdown();
     Ok(())

@@ -1,0 +1,795 @@
+//! Golden-vector conformance: the whole lowering chain pinned against
+//! frozen truth.
+//!
+//! For a set of fixed fixture models, one committed JSON vector
+//! (`tests/vectors/<name>.json`) freezes the observable output of every
+//! layer of the tool flow:
+//!
+//! ```text
+//! float GBDT ──► quantize_leaves ──► QuantModel / FlatForest
+//!                                         │
+//!                              design_from_quant (IR)
+//!                               │                │
+//!                        build_netlist      emit_verilog
+//!                         │        │             │
+//!                    Simulator  CycleSimulator  FNV-1a hash + text
+//! ```
+//!
+//! The property tests (`tests/props.rs`) prove the layers agree with each
+//! other *today*; the vectors additionally pin the absolute values, so a
+//! future quantization or netlist refactor that changes behavior —
+//! silently re-rounding a leaf, reordering keys, perturbing the emitted
+//! Verilog — diffs against frozen truth instead of drifting while the
+//! self-consistency checks keep passing.
+//!
+//! Regeneration: `UPDATE_GOLDEN=1 cargo test --test conformance --
+//! --include-ignored` rewrites the vector files from the current code;
+//! see DESIGN.md §8 for when a diff is legitimate. The JSON codec here is
+//! deliberately dependency-free (a small writer + strict subset parser)
+//! because the crate takes no serialization dependency.
+
+use crate::gbdt::{GbdtModel, Tree, TreeNode};
+use crate::netlist::build::{build_netlist, BuiltDesign};
+use crate::netlist::cyclesim::CycleSimulator;
+use crate::netlist::simulate::{InputBatch, OutputBatch, Simulator};
+use crate::quantize::{quantize_leaves, FlatForest, QuantNode};
+use crate::rtl::verilog::emit_verilog;
+use crate::rtl::{design_from_quant, Pipeline};
+use std::path::PathBuf;
+
+// ---------------------------------------------------------------------------
+// Fixtures
+// ---------------------------------------------------------------------------
+
+/// One conformance fixture: a fixed (hand-specified, fully deterministic)
+/// float ensemble plus the quantization / pipeline configuration and the
+/// input rows the vector pins.
+pub struct Fixture {
+    pub name: &'static str,
+    pub model: GbdtModel,
+    pub w_tree: u8,
+    pub pipeline: Pipeline,
+    pub rows: Vec<Vec<u16>>,
+}
+
+fn split(feat: u32, thresh: u32, left: u32, right: u32) -> TreeNode {
+    TreeNode::Split { feat, thresh, left, right }
+}
+
+fn leaf(value: f32) -> TreeNode {
+    TreeNode::Leaf { value }
+}
+
+/// Exhaustive 2-feature grid over the `w = 2` input domain, feature-0
+/// major: `(0,0), (0,1), …, (3,3)`.
+fn grid_4x4() -> Vec<Vec<u16>> {
+    let mut rows = Vec::with_capacity(16);
+    for a in 0..4u16 {
+        for b in 0..4u16 {
+            rows.push(vec![a, b]);
+        }
+    }
+    rows
+}
+
+/// The conformance fixture set. Values are chosen so quantization margins
+/// are wide (no leaf or bias lands near a rounding boundary) and every
+/// layer of the chain is exercised: stumps, a depth-2 tree with shared
+/// path prefixes, a constant tree, binary and multiclass decisions, and
+/// combinational as well as fully pipelined configurations.
+pub fn fixtures() -> Vec<Fixture> {
+    let stump_model = || GbdtModel {
+        trees: vec![
+            Tree { nodes: vec![split(0, 2, 1, 2), leaf(0.0), leaf(1.5)] },
+            Tree { nodes: vec![split(1, 1, 1, 2), leaf(-0.5), leaf(1.0)] },
+        ],
+        n_groups: 1,
+        base_score: -0.5,
+        n_features: 2,
+        w_feature: 2,
+    };
+    vec![
+        Fixture {
+            name: "binary_stump",
+            model: stump_model(),
+            w_tree: 3,
+            pipeline: Pipeline::new(0, 0, 0),
+            rows: grid_4x4(),
+        },
+        Fixture {
+            name: "binary_pipelined",
+            model: stump_model(),
+            w_tree: 3,
+            pipeline: Pipeline::new(1, 1, 1),
+            rows: grid_4x4(),
+        },
+        Fixture {
+            name: "deep_binary",
+            model: GbdtModel {
+                trees: vec![
+                    Tree {
+                        nodes: vec![
+                            split(0, 2, 1, 2),
+                            split(1, 1, 3, 4),
+                            split(1, 3, 5, 6),
+                            leaf(0.0),
+                            leaf(0.75),
+                            leaf(1.5),
+                            leaf(3.0),
+                        ],
+                    },
+                    Tree::leaf(0.5),
+                ],
+                n_groups: 1,
+                base_score: -1.0,
+                n_features: 2,
+                w_feature: 2,
+            },
+            w_tree: 3,
+            pipeline: Pipeline::new(0, 1, 1),
+            rows: grid_4x4(),
+        },
+        Fixture {
+            name: "multiclass_trio",
+            model: GbdtModel {
+                trees: vec![
+                    Tree { nodes: vec![split(0, 1, 1, 2), leaf(0.0), leaf(2.0)] },
+                    Tree { nodes: vec![split(1, 2, 1, 2), leaf(0.4), leaf(-0.4)] },
+                    Tree::leaf(1.0),
+                ],
+                n_groups: 3,
+                base_score: 0.2,
+                n_features: 2,
+                w_feature: 2,
+            },
+            w_tree: 2,
+            pipeline: Pipeline::new(0, 0, 0),
+            rows: grid_4x4(),
+        },
+    ]
+}
+
+// ---------------------------------------------------------------------------
+// Vector computation
+// ---------------------------------------------------------------------------
+
+/// The frozen observables of one fixture. See the module docs for the
+/// layer chain each field pins.
+#[derive(Clone, Debug, PartialEq)]
+pub struct GoldenVector {
+    pub name: String,
+    pub w_feature: u8,
+    pub w_tree: u8,
+    pub pipeline: [usize; 3],
+    /// Register cuts of the built netlist (= pipeline latency in cycles).
+    pub cuts: usize,
+    pub rows: Vec<Vec<u16>>,
+    /// Float-GBDT class per row.
+    pub float_classes: Vec<u32>,
+    /// `quantize_leaves` output: per-group biases and per-tree leaf values
+    /// in node order.
+    pub quant_biases: Vec<i64>,
+    pub quant_leaves: Vec<Vec<u32>>,
+    /// Integer-predictor class per row.
+    pub quant_classes: Vec<u32>,
+    /// Flat-forest (serving executor) class per row.
+    pub flat_classes: Vec<u32>,
+    /// Bit-parallel gate-level simulation class per row.
+    pub netlist_classes: Vec<u32>,
+    /// Cycle-accurate simulation class per row (steady state after `cuts`
+    /// clock edges).
+    pub cycle_classes: Vec<u32>,
+    /// FNV-1a (64-bit) of the emitted Verilog text, `0x`-hex.
+    pub verilog_fnv1a64: String,
+    /// The emitted Verilog, one entry per line (no trailing newline entry).
+    pub verilog: Vec<String>,
+}
+
+/// FNV-1a, 64-bit.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut hash: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        hash ^= b as u64;
+        hash = hash.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    hash
+}
+
+/// Decode the class of `lane` from raw cycle-simulator output words
+/// (shared with the cycle-sim properties in `tests/props.rs`).
+pub fn class_from_words(built: &BuiltDesign, words: Vec<u64>, lane: usize) -> u32 {
+    let out = OutputBatch { words, lanes: 64 };
+    built.class_of(&out, lane)
+}
+
+/// All-lanes-identical input words for one quantized row (shared with the
+/// cycle-sim properties in `tests/props.rs`).
+pub fn replicated_words(row: &[u16], w: usize, n_inputs: usize) -> Vec<u64> {
+    let mut batch = InputBatch::new(n_inputs);
+    batch.push_features(row, w);
+    batch.words.iter().map(|&b| if b & 1 == 1 { !0u64 } else { 0 }).collect()
+}
+
+/// Run the whole chain for `fixture` and collect its observables.
+pub fn compute(fixture: &Fixture) -> GoldenVector {
+    let model = &fixture.model;
+    model.validate().expect("fixture model must be structurally valid");
+    let float_classes: Vec<u32> = fixture.rows.iter().map(|r| model.predict_class(r)).collect();
+
+    let (quant, _) = quantize_leaves(model, fixture.w_tree);
+    quant.validate().expect("fixture quantization must be valid");
+    let quant_leaves: Vec<Vec<u32>> = quant
+        .trees
+        .iter()
+        .map(|t| {
+            t.nodes
+                .iter()
+                .filter_map(|n| match n {
+                    QuantNode::Leaf { value } => Some(*value),
+                    _ => None,
+                })
+                .collect()
+        })
+        .collect();
+    let quant_classes: Vec<u32> =
+        fixture.rows.iter().map(|r| quant.predict_class(r)).collect();
+
+    let forest = FlatForest::compile(&quant).expect("fixture must compile to a flat forest");
+    let flat_classes: Vec<u32> = fixture.rows.iter().map(|r| forest.predict(r)).collect();
+
+    let design = design_from_quant(fixture.name, &quant, fixture.pipeline, true);
+    let built = build_netlist(&design);
+    let w = quant.w_feature as usize;
+
+    let mut sim = Simulator::new(&built.net);
+    let netlist_classes = sim.classify_dataset(&built, fixture.rows.iter().cloned(), w);
+
+    let mut cycle_classes = Vec::with_capacity(fixture.rows.len());
+    let mut cyc = CycleSimulator::new(&built.net);
+    for row in &fixture.rows {
+        cyc.reset();
+        let words = replicated_words(row, w, built.net.n_inputs);
+        let mut last = Vec::new();
+        for _ in 0..=built.cuts {
+            last = cyc.step(&words);
+        }
+        cycle_classes.push(class_from_words(&built, last, 0));
+    }
+
+    let verilog_text = emit_verilog(&design);
+    let verilog_fnv1a64 = format!("0x{:016x}", fnv1a64(verilog_text.as_bytes()));
+    let mut verilog: Vec<String> = verilog_text.split('\n').map(str::to_string).collect();
+    // The emitted text ends with a newline: drop the empty final entry so
+    // the line list round-trips as `lines.join("\n") + "\n"`.
+    assert_eq!(verilog.pop().as_deref(), Some(""), "emitted Verilog must end with a newline");
+
+    GoldenVector {
+        name: fixture.name.to_string(),
+        w_feature: quant.w_feature,
+        w_tree: fixture.w_tree,
+        pipeline: [fixture.pipeline.p0, fixture.pipeline.p1, fixture.pipeline.p2],
+        cuts: built.cuts,
+        rows: fixture.rows.clone(),
+        float_classes,
+        quant_biases: quant.biases.clone(),
+        quant_leaves,
+        quant_classes,
+        flat_classes,
+        netlist_classes,
+        cycle_classes,
+        verilog_fnv1a64,
+        verilog,
+    }
+}
+
+impl GoldenVector {
+    /// Compare a freshly computed vector (`self`) against a frozen one,
+    /// reporting the first divergent field with enough context to judge
+    /// whether the diff is legitimate (DESIGN.md §8).
+    pub fn diff(&self, frozen: &GoldenVector) -> anyhow::Result<()> {
+        fn check<T: PartialEq + std::fmt::Debug>(
+            field: &str,
+            got: &T,
+            want: &T,
+        ) -> anyhow::Result<()> {
+            anyhow::ensure!(
+                got == want,
+                "conformance drift in {field}:\n  computed: {got:?}\n  frozen:   {want:?}"
+            );
+            Ok(())
+        }
+        check("name", &self.name, &frozen.name)?;
+        check("w_feature", &self.w_feature, &frozen.w_feature)?;
+        check("w_tree", &self.w_tree, &frozen.w_tree)?;
+        check("pipeline", &self.pipeline, &frozen.pipeline)?;
+        check("cuts", &self.cuts, &frozen.cuts)?;
+        check("rows", &self.rows, &frozen.rows)?;
+        check("float_classes", &self.float_classes, &frozen.float_classes)?;
+        check("quant_biases", &self.quant_biases, &frozen.quant_biases)?;
+        check("quant_leaves", &self.quant_leaves, &frozen.quant_leaves)?;
+        check("quant_classes", &self.quant_classes, &frozen.quant_classes)?;
+        check("flat_classes", &self.flat_classes, &frozen.flat_classes)?;
+        check("netlist_classes", &self.netlist_classes, &frozen.netlist_classes)?;
+        check("cycle_classes", &self.cycle_classes, &frozen.cycle_classes)?;
+        for (i, (got, want)) in self.verilog.iter().zip(&frozen.verilog).enumerate() {
+            anyhow::ensure!(
+                got == want,
+                "conformance drift in verilog line {}:\n  computed: {got}\n  frozen:   {want}",
+                i + 1
+            );
+        }
+        check("verilog line count", &self.verilog.len(), &frozen.verilog.len())?;
+        check("verilog_fnv1a64", &self.verilog_fnv1a64, &frozen.verilog_fnv1a64)?;
+        Ok(())
+    }
+
+    /// Internal shape sanity (row/class counts line up, hash matches the
+    /// stored text) — catches a corrupted vector file independent of any
+    /// recomputation.
+    pub fn validate_shape(&self) -> anyhow::Result<()> {
+        let n = self.rows.len();
+        anyhow::ensure!(n > 0, "vector has no rows");
+        for (field, len) in [
+            ("float_classes", self.float_classes.len()),
+            ("quant_classes", self.quant_classes.len()),
+            ("flat_classes", self.flat_classes.len()),
+            ("netlist_classes", self.netlist_classes.len()),
+            ("cycle_classes", self.cycle_classes.len()),
+        ] {
+            anyhow::ensure!(len == n, "{field} has {len} entries for {n} rows");
+        }
+        let text = self.verilog_text();
+        let hash = format!("0x{:016x}", fnv1a64(text.as_bytes()));
+        anyhow::ensure!(
+            hash == self.verilog_fnv1a64,
+            "stored verilog text hashes to {hash}, vector claims {}",
+            self.verilog_fnv1a64
+        );
+        Ok(())
+    }
+
+    /// The stored Verilog as one text blob (trailing newline restored).
+    pub fn verilog_text(&self) -> String {
+        let mut s = self.verilog.join("\n");
+        s.push('\n');
+        s
+    }
+
+    /// Default on-disk location of a fixture's vector.
+    pub fn path_for(name: &str) -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+            .join("tests/vectors")
+            .join(format!("{name}.json"))
+    }
+
+    /// Load and parse a vector file.
+    pub fn load(path: &std::path::Path) -> anyhow::Result<GoldenVector> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+        GoldenVector::from_json(&text)
+            .map_err(|e| e.context(format!("parsing {}", path.display())))
+    }
+
+    // -- JSON codec ---------------------------------------------------------
+
+    /// Serialize to the committed JSON format.
+    pub fn to_json(&self) -> String {
+        let mut s = String::new();
+        s.push_str("{\n");
+        s.push_str(&format!("  \"name\": {},\n", json_str(&self.name)));
+        s.push_str(&format!("  \"w_feature\": {},\n", self.w_feature));
+        s.push_str(&format!("  \"w_tree\": {},\n", self.w_tree));
+        s.push_str(&format!(
+            "  \"pipeline\": [{}, {}, {}],\n",
+            self.pipeline[0], self.pipeline[1], self.pipeline[2]
+        ));
+        s.push_str(&format!("  \"cuts\": {},\n", self.cuts));
+        s.push_str(&format!("  \"rows\": {},\n", json_mat(&self.rows)));
+        s.push_str(&format!("  \"float_classes\": {},\n", json_arr(&self.float_classes)));
+        s.push_str(&format!("  \"quant_biases\": {},\n", json_arr(&self.quant_biases)));
+        s.push_str(&format!("  \"quant_leaves\": {},\n", json_mat(&self.quant_leaves)));
+        s.push_str(&format!("  \"quant_classes\": {},\n", json_arr(&self.quant_classes)));
+        s.push_str(&format!("  \"flat_classes\": {},\n", json_arr(&self.flat_classes)));
+        s.push_str(&format!("  \"netlist_classes\": {},\n", json_arr(&self.netlist_classes)));
+        s.push_str(&format!("  \"cycle_classes\": {},\n", json_arr(&self.cycle_classes)));
+        s.push_str(&format!("  \"verilog_fnv1a64\": {},\n", json_str(&self.verilog_fnv1a64)));
+        s.push_str("  \"verilog\": [\n");
+        for (i, line) in self.verilog.iter().enumerate() {
+            let comma = if i + 1 == self.verilog.len() { "" } else { "," };
+            s.push_str(&format!("    {}{comma}\n", json_str(line)));
+        }
+        s.push_str("  ]\n}\n");
+        s
+    }
+
+    /// Parse the committed JSON format (strict: every field required, and
+    /// out-of-range numbers are a parse error, never a silent wrap).
+    pub fn from_json(text: &str) -> anyhow::Result<GoldenVector> {
+        let value = Json::parse(text)?;
+        let obj = value.as_obj()?;
+        Ok(GoldenVector {
+            name: obj.str_field("name")?,
+            w_feature: fit(obj.num_field("w_feature")?, "w_feature")?,
+            w_tree: fit(obj.num_field("w_tree")?, "w_tree")?,
+            pipeline: {
+                let p = obj.arr_field("pipeline")?.nums()?;
+                anyhow::ensure!(p.len() == 3, "pipeline must have 3 entries");
+                [
+                    fit(p[0], "pipeline")?,
+                    fit(p[1], "pipeline")?,
+                    fit(p[2], "pipeline")?,
+                ]
+            },
+            cuts: fit(obj.num_field("cuts")?, "cuts")?,
+            rows: fit_mat(obj.arr_field("rows")?.mat()?, "rows")?,
+            float_classes: obj.arr_field("float_classes")?.nums_as_u32()?,
+            quant_biases: obj.arr_field("quant_biases")?.nums()?,
+            quant_leaves: fit_mat(obj.arr_field("quant_leaves")?.mat()?, "quant_leaves")?,
+            quant_classes: obj.arr_field("quant_classes")?.nums_as_u32()?,
+            flat_classes: obj.arr_field("flat_classes")?.nums_as_u32()?,
+            netlist_classes: obj.arr_field("netlist_classes")?.nums_as_u32()?,
+            cycle_classes: obj.arr_field("cycle_classes")?.nums_as_u32()?,
+            verilog_fnv1a64: obj.str_field("verilog_fnv1a64")?,
+            verilog: obj.arr_field("verilog")?.strs()?,
+        })
+    }
+}
+
+/// Checked narrowing from the parser's `i64` — the strict half of the
+/// "strict subset" contract.
+fn fit<T: TryFrom<i64>>(v: i64, what: &str) -> anyhow::Result<T> {
+    T::try_from(v).map_err(|_| anyhow::anyhow!("{what}: value {v} out of range"))
+}
+
+/// Checked narrowing over a matrix of parsed numbers.
+fn fit_mat<T: TryFrom<i64>>(rows: Vec<Vec<i64>>, what: &str) -> anyhow::Result<Vec<Vec<T>>> {
+    rows.into_iter()
+        .map(|r| r.into_iter().map(|v| fit(v, what)).collect())
+        .collect()
+}
+
+fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+fn json_arr<T: std::fmt::Display>(xs: &[T]) -> String {
+    let inner: Vec<String> = xs.iter().map(|x| x.to_string()).collect();
+    format!("[{}]", inner.join(", "))
+}
+
+fn json_mat<T: std::fmt::Display>(xs: &[Vec<T>]) -> String {
+    let inner: Vec<String> = xs.iter().map(|r| json_arr(r)).collect();
+    format!("[{}]", inner.join(", "))
+}
+
+// ---------------------------------------------------------------------------
+// Minimal strict JSON subset parser (objects, arrays, strings, integers)
+// ---------------------------------------------------------------------------
+
+/// A parsed JSON value (the subset the vectors use; no floats, bools, or
+/// nulls).
+enum Json {
+    Num(i64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    fn parse(text: &str) -> anyhow::Result<Json> {
+        let mut p = JsonParser { bytes: text.as_bytes(), pos: 0 };
+        let v = p.value()?;
+        p.skip_ws();
+        anyhow::ensure!(p.pos == p.bytes.len(), "trailing garbage at byte {}", p.pos);
+        Ok(v)
+    }
+
+    fn as_obj(&self) -> anyhow::Result<&Vec<(String, Json)>> {
+        match self {
+            Json::Obj(fields) => Ok(fields),
+            _ => anyhow::bail!("expected an object"),
+        }
+    }
+}
+
+/// Typed field accessors over a parsed object.
+trait ObjExt {
+    fn field(&self, key: &str) -> anyhow::Result<&Json>;
+    fn str_field(&self, key: &str) -> anyhow::Result<String>;
+    fn num_field(&self, key: &str) -> anyhow::Result<i64>;
+    fn arr_field(&self, key: &str) -> anyhow::Result<&Vec<Json>>;
+}
+
+impl ObjExt for Vec<(String, Json)> {
+    fn field(&self, key: &str) -> anyhow::Result<&Json> {
+        self.iter()
+            .find(|(k, _)| k == key)
+            .map(|(_, v)| v)
+            .ok_or_else(|| anyhow::anyhow!("missing field {key:?}"))
+    }
+    fn str_field(&self, key: &str) -> anyhow::Result<String> {
+        match self.field(key)? {
+            Json::Str(s) => Ok(s.clone()),
+            _ => anyhow::bail!("field {key:?} is not a string"),
+        }
+    }
+    fn num_field(&self, key: &str) -> anyhow::Result<i64> {
+        match self.field(key)? {
+            Json::Num(n) => Ok(*n),
+            _ => anyhow::bail!("field {key:?} is not a number"),
+        }
+    }
+    fn arr_field(&self, key: &str) -> anyhow::Result<&Vec<Json>> {
+        match self.field(key)? {
+            Json::Arr(a) => Ok(a),
+            _ => anyhow::bail!("field {key:?} is not an array"),
+        }
+    }
+}
+
+/// Typed element accessors over a parsed array.
+trait ArrExt {
+    fn nums(&self) -> anyhow::Result<Vec<i64>>;
+    fn nums_as_u32(&self) -> anyhow::Result<Vec<u32>>;
+    fn strs(&self) -> anyhow::Result<Vec<String>>;
+    fn mat(&self) -> anyhow::Result<Vec<Vec<i64>>>;
+}
+
+impl ArrExt for Vec<Json> {
+    fn nums(&self) -> anyhow::Result<Vec<i64>> {
+        self.iter()
+            .map(|v| match v {
+                Json::Num(n) => Ok(*n),
+                _ => anyhow::bail!("expected a number element"),
+            })
+            .collect()
+    }
+    fn nums_as_u32(&self) -> anyhow::Result<Vec<u32>> {
+        self.nums()?.into_iter().map(|v| fit(v, "class list")).collect()
+    }
+    fn strs(&self) -> anyhow::Result<Vec<String>> {
+        self.iter()
+            .map(|v| match v {
+                Json::Str(s) => Ok(s.clone()),
+                _ => anyhow::bail!("expected a string element"),
+            })
+            .collect()
+    }
+    fn mat(&self) -> anyhow::Result<Vec<Vec<i64>>> {
+        self.iter()
+            .map(|v| match v {
+                Json::Arr(a) => a.nums(),
+                _ => anyhow::bail!("expected an array element"),
+            })
+            .collect()
+    }
+}
+
+struct JsonParser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl JsonParser<'_> {
+    fn skip_ws(&mut self) {
+        while self.pos < self.bytes.len()
+            && matches!(self.bytes[self.pos], b' ' | b'\t' | b'\n' | b'\r')
+        {
+            self.pos += 1;
+        }
+    }
+
+    fn peek(&self) -> anyhow::Result<u8> {
+        self.bytes
+            .get(self.pos)
+            .copied()
+            .ok_or_else(|| anyhow::anyhow!("unexpected end of input"))
+    }
+
+    fn expect(&mut self, c: u8) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.peek()? == c,
+            "expected {:?} at byte {}, found {:?}",
+            c as char,
+            self.pos,
+            self.peek()? as char
+        );
+        self.pos += 1;
+        Ok(())
+    }
+
+    fn value(&mut self) -> anyhow::Result<Json> {
+        self.skip_ws();
+        match self.peek()? {
+            b'{' => self.object(),
+            b'[' => self.array(),
+            b'"' => Ok(Json::Str(self.string()?)),
+            b'-' | b'0'..=b'9' => self.number(),
+            other => anyhow::bail!("unexpected {:?} at byte {}", other as char, self.pos),
+        }
+    }
+
+    fn object(&mut self) -> anyhow::Result<Json> {
+        self.expect(b'{')?;
+        let mut fields = Vec::new();
+        self.skip_ws();
+        if self.peek()? == b'}' {
+            self.pos += 1;
+            return Ok(Json::Obj(fields));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.skip_ws();
+            self.expect(b':')?;
+            let val = self.value()?;
+            fields.push((key, val));
+            self.skip_ws();
+            match self.peek()? {
+                b',' => self.pos += 1,
+                b'}' => {
+                    self.pos += 1;
+                    return Ok(Json::Obj(fields));
+                }
+                other => anyhow::bail!("expected ',' or '}}', found {:?}", other as char),
+            }
+        }
+    }
+
+    fn array(&mut self) -> anyhow::Result<Json> {
+        self.expect(b'[')?;
+        let mut items = Vec::new();
+        self.skip_ws();
+        if self.peek()? == b']' {
+            self.pos += 1;
+            return Ok(Json::Arr(items));
+        }
+        loop {
+            items.push(self.value()?);
+            self.skip_ws();
+            match self.peek()? {
+                b',' => self.pos += 1,
+                b']' => {
+                    self.pos += 1;
+                    return Ok(Json::Arr(items));
+                }
+                other => anyhow::bail!("expected ',' or ']', found {:?}", other as char),
+            }
+        }
+    }
+
+    fn string(&mut self) -> anyhow::Result<String> {
+        self.expect(b'"')?;
+        let mut out = String::new();
+        loop {
+            let c = self.peek()?;
+            self.pos += 1;
+            match c {
+                b'"' => return Ok(out),
+                b'\\' => {
+                    let esc = self.peek()?;
+                    self.pos += 1;
+                    match esc {
+                        b'"' => out.push('"'),
+                        b'\\' => out.push('\\'),
+                        b'/' => out.push('/'),
+                        b'n' => out.push('\n'),
+                        b't' => out.push('\t'),
+                        b'r' => out.push('\r'),
+                        other => {
+                            anyhow::bail!("unsupported escape \\{:?}", other as char)
+                        }
+                    }
+                }
+                c if c < 0x80 => out.push(c as char),
+                _ => {
+                    // Re-decode a multi-byte UTF-8 scalar from the source.
+                    let start = self.pos - 1;
+                    let rest = &self.bytes[start..];
+                    let s = std::str::from_utf8(rest)
+                        .map_err(|_| anyhow::anyhow!("invalid UTF-8 in string"))?;
+                    let ch = s.chars().next().expect("non-empty by construction");
+                    out.push(ch);
+                    self.pos = start + ch.len_utf8();
+                }
+            }
+        }
+    }
+
+    fn number(&mut self) -> anyhow::Result<Json> {
+        let start = self.pos;
+        if self.peek()? == b'-' {
+            self.pos += 1;
+        }
+        while self.pos < self.bytes.len() && self.bytes[self.pos].is_ascii_digit() {
+            self.pos += 1;
+        }
+        let text = std::str::from_utf8(&self.bytes[start..self.pos]).expect("ascii digits");
+        anyhow::ensure!(
+            !text.is_empty() && text != "-",
+            "invalid number at byte {start}"
+        );
+        Ok(Json::Num(text.parse::<i64>()?))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fnv1a64_known_vectors() {
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a64(b"foobar"), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn vectors_roundtrip_through_json() {
+        for fixture in fixtures() {
+            let v = compute(&fixture);
+            let text = v.to_json();
+            let back = GoldenVector::from_json(&text).expect("roundtrip parse");
+            assert_eq!(v, back, "fixture {}", fixture.name);
+            back.validate_shape().unwrap();
+            v.diff(&back).unwrap();
+        }
+    }
+
+    #[test]
+    fn layers_agree_on_every_fixture() {
+        for fixture in fixtures() {
+            let v = compute(&fixture);
+            assert_eq!(v.quant_classes, v.flat_classes, "{}: flat", fixture.name);
+            assert_eq!(v.quant_classes, v.netlist_classes, "{}: netlist", fixture.name);
+            assert_eq!(v.quant_classes, v.cycle_classes, "{}: cycle", fixture.name);
+            // These fixtures are constructed with wide quantization margins:
+            // the float and integer decisions agree on every pinned row.
+            assert_eq!(v.float_classes, v.quant_classes, "{}: float", fixture.name);
+        }
+    }
+
+    #[test]
+    fn parser_rejects_garbage() {
+        assert!(GoldenVector::from_json("{").is_err());
+        assert!(GoldenVector::from_json("[]").is_err());
+        assert!(GoldenVector::from_json("{\"name\": \"x\"} trailing").is_err());
+        assert!(Json::parse("{\"a\": 1e5}").is_err()); // floats unsupported
+        assert!(Json::parse("\"\\u0041\"").is_err()); // \u escapes unsupported
+    }
+
+    #[test]
+    fn parser_rejects_out_of_range_numbers() {
+        let fixture = &fixtures()[0];
+        let v = compute(fixture);
+        let negative_cuts = v.to_json().replace("\"cuts\": 0", "\"cuts\": -1");
+        assert!(GoldenVector::from_json(&negative_cuts).is_err());
+        let negative_class =
+            v.to_json().replace("\"float_classes\": [0", "\"float_classes\": [-1");
+        assert!(GoldenVector::from_json(&negative_class).is_err());
+        let wide_row = v.to_json().replace("\"rows\": [[0, 0]", "\"rows\": [[70000, 0]");
+        assert!(GoldenVector::from_json(&wide_row).is_err());
+    }
+
+    #[test]
+    fn json_string_escaping() {
+        assert_eq!(json_str("a\"b\\c\nd"), "\"a\\\"b\\\\c\\nd\"");
+        match Json::parse("\"a\\\"b\\\\c\\nd\"").unwrap() {
+            Json::Str(s) => assert_eq!(s, "a\"b\\c\nd"),
+            _ => panic!("expected string"),
+        }
+    }
+}

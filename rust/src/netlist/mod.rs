@@ -14,6 +14,10 @@
 //!   substrate's analogue of Vivado's post-implementation functional
 //!   simulation, used to verify the circuit bit-exact against
 //!   [`crate::quantize::QuantModel`].
+//! * [`conform`] — golden-vector conformance: committed JSON vectors that
+//!   freeze every layer of the lowering chain (float GBDT → quantized
+//!   model → flat forest → gate-level simulation → cycle-accurate
+//!   simulation → Verilog emission hash) for fixed fixture models.
 
 pub mod gate;
 pub mod build;
@@ -21,6 +25,7 @@ pub mod lutmap;
 pub mod timing;
 pub mod simulate;
 pub mod cyclesim;
+pub mod conform;
 
 pub use build::{build_netlist, BuiltDesign};
 pub use gate::{Gate, Netlist, NodeId};

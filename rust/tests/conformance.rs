@@ -1,0 +1,68 @@
+//! Cross-layer conformance suite (`netlist::conform`).
+//!
+//! Two tiers:
+//!
+//! * **Live checks** (run under plain `cargo test`): the vector files
+//!   parse, are internally consistent, and every layer of the freshly
+//!   computed chain agrees with every other — the same invariant the
+//!   property tests enforce, anchored on the fixed fixtures.
+//! * **Golden comparison** (`#[ignore]`; the dedicated `conformance` CI
+//!   job runs it with `--include-ignored`): the freshly computed chain is
+//!   diffed field-by-field against the committed vectors, so any behavior
+//!   change in quantization, netlist building, simulation, or Verilog
+//!   emission surfaces as an explicit drift report instead of sliding
+//!   through while the layers still agree with each other.
+//!
+//! Regenerate after an *intentional* behavior change with
+//! `UPDATE_GOLDEN=1 cargo test --test conformance -- --include-ignored`
+//! and commit the rewritten files; DESIGN.md §8 lists what counts as a
+//! legitimate diff.
+
+use treelut::netlist::conform::{compute, fixtures, GoldenVector};
+
+#[test]
+fn vector_files_parse_and_are_well_formed() {
+    for fixture in fixtures() {
+        let path = GoldenVector::path_for(fixture.name);
+        let frozen = GoldenVector::load(&path)
+            .unwrap_or_else(|e| panic!("fixture {}: {e:#}", fixture.name));
+        assert_eq!(frozen.name, fixture.name);
+        assert_eq!(frozen.rows, fixture.rows, "{}: pinned rows", fixture.name);
+        frozen
+            .validate_shape()
+            .unwrap_or_else(|e| panic!("fixture {}: {e:#}", fixture.name));
+    }
+}
+
+#[test]
+fn every_layer_agrees_live() {
+    for fixture in fixtures() {
+        let v = compute(&fixture);
+        assert_eq!(v.quant_classes, v.flat_classes, "{}: quant vs flat", fixture.name);
+        assert_eq!(v.quant_classes, v.netlist_classes, "{}: quant vs netlist", fixture.name);
+        assert_eq!(v.quant_classes, v.cycle_classes, "{}: quant vs cycle", fixture.name);
+        assert_eq!(v.float_classes, v.quant_classes, "{}: float vs quant", fixture.name);
+    }
+}
+
+#[test]
+#[ignore = "golden comparison; run by the conformance CI job (UPDATE_GOLDEN=1 regenerates)"]
+fn golden_vectors_match_frozen_truth() {
+    let update = std::env::var_os("UPDATE_GOLDEN").is_some();
+    for fixture in fixtures() {
+        let computed = compute(&fixture);
+        let path = GoldenVector::path_for(fixture.name);
+        if update {
+            std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+            std::fs::write(&path, computed.to_json())
+                .unwrap_or_else(|e| panic!("writing {}: {e}", path.display()));
+            eprintln!("regenerated {}", path.display());
+            continue;
+        }
+        let frozen = GoldenVector::load(&path)
+            .unwrap_or_else(|e| panic!("fixture {}: {e:#}", fixture.name));
+        computed
+            .diff(&frozen)
+            .unwrap_or_else(|e| panic!("fixture {}: {e:#}", fixture.name));
+    }
+}

@@ -1,0 +1,112 @@
+//! Fuzz-style edge-case tests for the hardware-accurate serving executor
+//! (`coordinator::NetlistExecutor`): degenerate batch shapes around the
+//! 64-lane word boundary, extreme feature values, typed errors, and
+//! bit-exact agreement with `FlatExecutor` on every one of them. The broad
+//! randomized agreement property lives in `tests/props.rs`; these pin the
+//! corners it samples past.
+
+use std::sync::Arc;
+
+use treelut::coordinator::{
+    BatchExecutor, CompiledNetlist, FlatExecutor, LaneStats, NetlistExecError, NetlistExecutor,
+};
+use treelut::data::synth;
+use treelut::gbdt::{train, BoostParams};
+use treelut::quantize::{quantize_leaves, FeatureQuantizer, QuantModel};
+use treelut::rtl::Pipeline;
+
+/// A small trained multiclass model: realistic thresholds (all inside the
+/// `w_feature` domain) and non-trivial trees.
+fn trained_pair() -> (QuantModel, NetlistExecutor, FlatExecutor) {
+    let ds = synth::tiny_multiclass(300, 5, 3, 11);
+    let fq = FeatureQuantizer::fit(&ds, 3);
+    let binned = fq.transform(&ds);
+    let params = BoostParams::default().n_estimators(4).max_depth(3).eta(0.5);
+    let model = train(&binned, &ds.y, 3, &params, 3).unwrap();
+    let (quant, _) = quantize_leaves(&model, 3);
+    let netlist = NetlistExecutor::new(&quant, Pipeline::new(0, 1, 1), 256).unwrap();
+    let flat = FlatExecutor::new(&quant, 256).unwrap();
+    (quant, netlist, flat)
+}
+
+fn row_for(quant: &QuantModel, i: usize) -> Vec<u16> {
+    let cap = (1u16 << quant.w_feature) - 1;
+    (0..quant.n_features).map(|f| ((i * 7 + f * 3) as u16) % (cap + 1)).collect()
+}
+
+/// Batch sizes straddling the 64-lane simulation word: 0, 1, 63, 64, 65,
+/// and a multi-word 130 — every one must agree with the flat executor
+/// row-for-row.
+#[test]
+fn degenerate_batch_sizes_agree_with_flat() {
+    let (quant, netlist, flat) = trained_pair();
+    for n in [0usize, 1, 63, 64, 65, 130] {
+        let rows: Vec<Vec<u16>> = (0..n).map(|i| row_for(&quant, i)).collect();
+        let refs: Vec<&[u16]> = rows.iter().map(|r| r.as_slice()).collect();
+        let got = netlist.execute(&refs).unwrap();
+        let want = flat.execute(&refs).unwrap();
+        assert_eq!(got, want, "batch size {n}");
+        assert_eq!(got.len(), n);
+    }
+}
+
+/// All-zero and all-max (domain max and u16::MAX) feature rows.
+#[test]
+fn extreme_feature_values_agree_with_flat() {
+    let (quant, netlist, flat) = trained_pair();
+    let cap = (1u16 << quant.w_feature) - 1;
+    let extremes: Vec<Vec<u16>> = vec![
+        vec![0; quant.n_features],
+        vec![cap; quant.n_features],
+        vec![u16::MAX; quant.n_features],
+    ];
+    let refs: Vec<&[u16]> = extremes.iter().map(|r| r.as_slice()).collect();
+    assert_eq!(netlist.execute(&refs).unwrap(), flat.execute(&refs).unwrap());
+}
+
+/// Wrong-width rows fail with the typed error, identifying the offending
+/// row, before anything is simulated.
+#[test]
+fn width_mismatch_is_typed_and_positional() {
+    let (quant, netlist, _) = trained_pair();
+    let good = row_for(&quant, 0);
+    let short = vec![0u16; quant.n_features - 1];
+    let long = vec![0u16; quant.n_features + 2];
+    let err = netlist.execute(&[&good, &short]).unwrap_err();
+    assert_eq!(
+        *err.downcast_ref::<NetlistExecError>().expect("typed"),
+        NetlistExecError::WidthMismatch {
+            row: 1,
+            got: quant.n_features - 1,
+            want: quant.n_features
+        }
+    );
+    let err = netlist.execute(&[&long]).unwrap_err();
+    assert!(matches!(
+        err.downcast_ref::<NetlistExecError>(),
+        Some(NetlistExecError::WidthMismatch { row: 0, .. })
+    ));
+    // A failed batch must not pollute the lane counters.
+    assert_eq!(netlist.lane_stats().words.load(std::sync::atomic::Ordering::Relaxed), 0);
+}
+
+/// One compilation shared by several shard executors: each gets its own
+/// simulator scratch but the lane counters aggregate.
+#[test]
+fn compiled_netlist_shares_lanes_across_executors() {
+    let (quant, _, flat) = trained_pair();
+    let compiled = CompiledNetlist::compile(&quant, Pipeline::new(1, 1, 1)).unwrap();
+    assert_eq!(compiled.meta().cuts, 3);
+    let lanes = Arc::new(LaneStats::default());
+    let e0 = compiled.executor(64, Arc::clone(&lanes));
+    let e1 = compiled.executor(64, Arc::clone(&lanes));
+    let rows: Vec<Vec<u16>> = (0..70).map(|i| row_for(&quant, i)).collect();
+    let refs: Vec<&[u16]> = rows.iter().map(|r| r.as_slice()).collect();
+    let a = e0.execute(&refs[..40]).unwrap();
+    let b = e1.execute(&refs[40..]).unwrap();
+    let want = flat.execute(&refs).unwrap();
+    assert_eq!([a, b].concat(), want);
+    use std::sync::atomic::Ordering;
+    assert_eq!(lanes.rows.load(Ordering::Relaxed), 70);
+    assert_eq!(lanes.words.load(Ordering::Relaxed), 2); // 40 -> 1 word, 30 -> 1 word
+}

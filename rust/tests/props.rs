@@ -14,7 +14,10 @@
 //!      │                   FlatForest (flat serving executor)
 //! ```
 
+use treelut::coordinator::{BatchExecutor, FlatExecutor, NetlistExecutor};
 use treelut::gbdt::{GbdtModel, Tree, TreeNode};
+use treelut::netlist::conform::{class_from_words, replicated_words};
+use treelut::netlist::cyclesim::CycleSimulator;
 use treelut::netlist::simulate::{InputBatch, Simulator};
 use treelut::netlist::{build_netlist, map_luts};
 use treelut::quantize::{quantize_leaves, FlatForest};
@@ -387,4 +390,98 @@ fn prop_conifer_baseline_netlist_consistent() {
             assert_eq!(built.class_of(&out, lane), want, "case {case}");
         }
     }
+}
+
+/// Cycle-accurate simulation is bit-exact against the functional simulator
+/// at steady state (all 64 lanes, every output word), and the paper's
+/// §2.4 pipeline claims hold on random designs: latency in cycles equals
+/// the register cuts, at II = 1 with distinct in-flight inputs every cycle.
+#[test]
+fn prop_cycle_sim_matches_functional_sim_and_pipeline_claims() {
+    let mut rng = Rng::new(0xC1C1);
+    for case in 0..30 {
+        let (model, n_bins) = random_model(&mut rng, case % 2 == 0);
+        let (qm, _) = quantize_leaves(&model, 1 + rng.below(4) as u8);
+        let pipeline = Pipeline::new(rng.below(2), rng.below(2), rng.below(3));
+        let design = design_from_quant("cycprop", &qm, pipeline, true);
+        let built = build_netlist(&design);
+        let w = qm.w_feature as usize;
+        let cuts = built.cuts;
+
+        // (a) Steady-state word equality: a full 64-lane batch held
+        // constant for cuts+1 cycles settles to the functional simulation
+        // exactly (registers-transparent view == clocked view).
+        let mut batch = InputBatch::new(built.net.n_inputs);
+        let rows: Vec<Vec<u16>> =
+            (0..64).map(|_| random_row(&mut rng, qm.n_features, n_bins)).collect();
+        for row in &rows {
+            batch.push_features(row, w);
+        }
+        let mut fun = Simulator::new(&built.net);
+        let expect = fun.run(&built.net, &batch);
+        let mut cyc = CycleSimulator::new(&built.net);
+        let mut last = Vec::new();
+        for _ in 0..=cuts {
+            last = cyc.step(&batch.words);
+        }
+        assert_eq!(last, expect.words, "case {case} pipeline {pipeline:?}");
+
+        // (b) II = 1 streaming: a new random input every cycle; the output
+        // at cycle t + cuts must decide the input of cycle t, so latency
+        // equals the register cuts and in-flight inputs never interfere.
+        cyc.reset();
+        let stream: Vec<Vec<u16>> =
+            (0..24).map(|_| random_row(&mut rng, qm.n_features, n_bins)).collect();
+        let mut outputs = Vec::new();
+        for row in &stream {
+            outputs.push(cyc.step(&replicated_words(row, w, built.net.n_inputs)));
+        }
+        for _ in 0..cuts {
+            let flush = replicated_words(&stream[0], w, built.net.n_inputs);
+            outputs.push(cyc.step(&flush));
+        }
+        for (t, row) in stream.iter().enumerate() {
+            let got = class_from_words(&built, outputs[t + cuts].clone(), 0);
+            assert_eq!(
+                got,
+                qm.predict_class(row),
+                "case {case} t={t} cuts={cuts} pipeline {pipeline:?}"
+            );
+        }
+    }
+}
+
+/// The hardware-accurate serving executor agrees with the flat-forest
+/// executor — same class per row — across seeded random models (binary and
+/// multiclass), random pipeline configurations, and well over 1000 rows in
+/// total (ISSUE 5 acceptance: >= 10 models, >= 1000 rows), executed
+/// through the `BatchExecutor` trait in odd-sized batches that cross the
+/// 64-lane word boundary.
+#[test]
+fn prop_netlist_executor_agrees_with_flat_executor() {
+    let mut rng = Rng::new(0x5E7E);
+    let mut total_rows = 0usize;
+    for case in 0..12 {
+        let (model, n_bins) = random_model(&mut rng, case % 2 == 1);
+        let w_tree = 1 + rng.below(5) as u8;
+        let (qm, _) = quantize_leaves(&model, w_tree);
+        let pipeline = Pipeline::new(rng.below(2), rng.below(2), rng.below(3));
+        let netlist = NetlistExecutor::new(&qm, pipeline, 256).unwrap();
+        let flat = FlatExecutor::new(&qm, 256).unwrap();
+        assert_eq!(netlist.n_features(), flat.n_features(), "case {case}");
+
+        let rows: Vec<Vec<u16>> =
+            (0..100).map(|_| random_row(&mut rng, qm.n_features, n_bins)).collect();
+        let refs: Vec<&[u16]> = rows.iter().map(|r| r.as_slice()).collect();
+        for (lo, hi) in [(0usize, 1usize), (1, 38), (38, 100)] {
+            let got = netlist.execute(&refs[lo..hi]).unwrap();
+            let want = flat.execute(&refs[lo..hi]).unwrap();
+            assert_eq!(got, want, "case {case} batch {lo}..{hi}");
+            for (i, row) in rows[lo..hi].iter().enumerate() {
+                assert_eq!(got[i], qm.predict_class(row), "case {case} row {}", lo + i);
+            }
+        }
+        total_rows += rows.len();
+    }
+    assert!(total_rows >= 1000, "property must cover >= 1000 rows, got {total_rows}");
 }

@@ -21,12 +21,14 @@ use treelut::coordinator::testing::{
     ServiceModel,
 };
 use treelut::coordinator::{
-    BatchExecutor, BatchPolicy, DispatchPolicy, FlatExecutor, OverloadPolicy, Server,
-    SubmitError,
+    BatchExecutor, BatchPolicy, CompiledNetlist, DispatchPolicy, FlatExecutor, LaneStats,
+    OverloadPolicy, Server, SubmitError,
 };
 use treelut::data::synth;
+use treelut::gbdt::histogram::BinnedMatrix;
 use treelut::gbdt::{train, BoostParams};
-use treelut::quantize::{quantize_leaves, FeatureQuantizer, FlatForest};
+use treelut::quantize::{quantize_leaves, FeatureQuantizer, FlatForest, QuantModel};
+use treelut::rtl::Pipeline;
 
 const MS: Duration = Duration::from_millis(1);
 
@@ -657,4 +659,164 @@ fn sharded_flat_executor_is_bit_exact() {
     }
     assert_eq!(srv.n_shards(), 2);
     srv.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// Pool-wide admission (redirects) — virtual-time exact
+// ---------------------------------------------------------------------------
+
+/// Pool-wide admission (ROADMAP follow-up): a shed-new submit that finds
+/// its round-robin shard at capacity redirects to a live non-full sibling
+/// instead of refusing — counted in `redirects` on the accepting shard —
+/// and the typed refusal only fires when every live queue is full.
+#[test]
+fn shed_new_redirects_to_nonfull_sibling_before_refusing() {
+    let h = Harness::start(HarnessConfig {
+        n_shards: 2,
+        service: ServiceModel::PerShard(vec![50 * MS, 5 * MS]),
+        policy: BatchPolicy {
+            max_batch: 1,
+            max_wait: Duration::ZERO,
+            queue_cap: 2,
+            overload: OverloadPolicy::ShedNew,
+        },
+        ..HarnessConfig::default()
+    });
+    // t = 0: j0/j1 go busy on shards 0/1; j2..j5 fill both queues to cap.
+    let rxs: Vec<_> = (0..6u16).map(|id| h.submit(id, 0).unwrap()).collect();
+    assert_eq!(h.server.queue_depths(), vec![2, 2]);
+    // t = 5 ms: the fast shard 1 finishes j1 and picks up j3, freeing one
+    // queue slot there; the slow shard 0 is still mid-batch at full cap.
+    h.advance(5 * MS);
+    // j6 dispatches round-robin to shard 0 (cursor = 6): at capacity. The
+    // pool-wide scan must land it on shard 1 instead of refusing.
+    let j6 = h.submit(6, 0).unwrap();
+    let s = h.server.stats();
+    assert_eq!(s.redirects.load(Ordering::Relaxed), 1, "j6 must redirect");
+    assert_eq!(s.sheds.load(Ordering::Relaxed), 0, "nothing was shed");
+    assert_eq!(s.queue_full.load(Ordering::Relaxed), 1, "one full-queue encounter");
+    let per_shard: Vec<u64> =
+        h.server.shard_stats().map(|st| st.redirects.load(Ordering::Relaxed)).collect();
+    assert_eq!(per_shard, vec![0, 1], "redirect credit lands on the accepting sibling");
+    // Shard 1 serves j6 behind j3 (5..10 ms) and j5 (10..15 ms): executed
+    // 15..20 ms, enqueued at 5 ms — exactly 15 ms of latency.
+    let reply = h.recv(&j6).unwrap();
+    assert_eq!(reply.class, scripted_class(&[6, 0]));
+    assert_eq!(reply.latency, 15 * MS);
+    // Everything admitted earlier still resolves (partly via stealing once
+    // the fast shard idles — deterministic on the virtual clock).
+    for (id, rx) in rxs.into_iter().enumerate() {
+        let reply = h.recv(&rx).expect("admitted job must be served");
+        assert_eq!(reply.class, scripted_class(&[id as u16, 0]), "job {id}");
+    }
+    h.server.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// The real (netlist) executor under the deterministic harness
+// ---------------------------------------------------------------------------
+
+/// A small trained multiclass model for the real-executor scenarios.
+fn trained_netlist_model() -> (QuantModel, BinnedMatrix) {
+    let ds = synth::tiny_multiclass(200, 4, 3, 5);
+    let fq = FeatureQuantizer::fit(&ds, 3);
+    let binned = fq.transform(&ds);
+    let params = BoostParams::default().n_estimators(4).max_depth(3).eta(0.5);
+    let model = train(&binned, &ds.y, 3, &params, 3).unwrap();
+    let (quant, _) = quantize_leaves(&model, 3);
+    (quant, binned)
+}
+
+/// Chaos kill over a pool of *real* hardware-accurate executors: the
+/// 2-shard `NetlistExecutor` pool loses shard 0 mid-run, the in-flight job
+/// fails explicitly, every other job is served by the survivor, and every
+/// served class is bit-exact against the flat forest.
+#[test]
+fn chaos_kill_netlist_executor_pool_stays_bit_exact() {
+    let (quant, binned) = trained_netlist_model();
+    let compiled = CompiledNetlist::compile(&quant, Pipeline::new(0, 1, 1)).unwrap();
+    let forest = FlatForest::compile(&quant).unwrap();
+    let h = Harness::start_real(
+        2,
+        BatchPolicy { max_batch: 1, max_wait: Duration::ZERO, ..BatchPolicy::default() },
+        DispatchPolicy::RoundRobin,
+        ChaosPlan::kill(0, 1), // shard 0 dies on its second batch
+        move |_shard| Ok(compiled.executor(64, Arc::new(LaneStats::default()))),
+    );
+    let n = 20usize;
+    let out = h.run_open_loop_rows(&[Duration::ZERO; 20], |i| {
+        binned.row(i % binned.n_rows).to_vec()
+    });
+    // Zero-service executors drain each submit before the next, so exactly
+    // the chaos victim (job 2: shard 0's second batch) fails.
+    assert_eq!(out.failed.len(), 1, "only the chaos victim may fail");
+    let (failed_id, e) = &out.failed[0];
+    assert_eq!(*failed_id, 2);
+    assert!(e.to_string().contains("panicked"), "{e}");
+    assert_eq!(out.ok.len(), n - 1);
+    for (id, reply) in &out.ok {
+        let row = binned.row(*id as usize % binned.n_rows);
+        assert_eq!(reply.class, forest.predict(row), "job {id}");
+        assert_eq!(reply.latency, Duration::ZERO, "real execution is virtual-time free");
+    }
+    assert_eq!(h.server.live_shards(), 1);
+    assert_eq!(h.server.stats().rejected.load(Ordering::Relaxed), 1);
+    h.server.shutdown();
+}
+
+/// Overload over the real netlist executor, deterministically: a chaos
+/// stall pins shard 0's first batch in virtual time while bounded-queue
+/// admission (cap 2, shed-new) refuses exactly the overflow; the admitted
+/// jobs drain on the stall boundary, bit-exact against the flat forest.
+#[test]
+fn netlist_executor_overload_sheds_deterministically() {
+    let (quant, binned) = trained_netlist_model();
+    let compiled = CompiledNetlist::compile(&quant, Pipeline::new(0, 0, 1)).unwrap();
+    let forest = FlatForest::compile(&quant).unwrap();
+    let h = Harness::start_real(
+        1,
+        BatchPolicy {
+            max_batch: 1,
+            max_wait: Duration::ZERO,
+            queue_cap: 2,
+            overload: OverloadPolicy::ShedNew,
+        },
+        DispatchPolicy::RoundRobin,
+        ChaosPlan::stall(0, 0, 50 * MS),
+        move |_shard| Ok(compiled.executor(64, Arc::new(LaneStats::default()))),
+    );
+    // j0 starts executing and stalls 50 ms; j1/j2 fill the queue; j3/j4
+    // are refused at the door (single shard: nowhere to redirect).
+    let rows: Vec<Vec<u16>> = (0..5).map(|i| binned.row(i).to_vec()).collect();
+    let mut admitted = Vec::new();
+    let mut refused = 0usize;
+    for (i, row) in rows.iter().enumerate() {
+        match h.submit_row(row.clone()) {
+            Ok(rx) => admitted.push((i, rx)),
+            Err(e) => {
+                assert!(
+                    matches!(
+                        e.downcast_ref::<SubmitError>(),
+                        Some(SubmitError::QueueFull { shard: 0 })
+                    ),
+                    "{e}"
+                );
+                refused += 1;
+            }
+        }
+    }
+    assert_eq!(admitted.len(), 3, "one executing + queue_cap queued");
+    assert_eq!(refused, 2);
+    let s = h.server.stats();
+    assert_eq!(s.sheds.load(Ordering::Relaxed), 2);
+    assert_eq!(s.queue_full.load(Ordering::Relaxed), 2);
+    assert_eq!(s.redirects.load(Ordering::Relaxed), 0, "no sibling to redirect to");
+    // The stall releases at t = 50 ms and the zero-virtual-cost executor
+    // drains everything at that instant: every admitted job waited 50 ms.
+    for (i, rx) in admitted {
+        let reply = h.recv(&rx).unwrap();
+        assert_eq!(reply.class, forest.predict(&rows[i]), "row {i}");
+        assert_eq!(reply.latency, 50 * MS, "row {i}");
+    }
+    h.server.shutdown();
 }
