@@ -43,6 +43,7 @@ use treelut::exp::configs::design_point;
 use treelut::exp::table::Table;
 use treelut::gbdt::histogram::BinnedMatrix;
 use treelut::gbdt::train;
+use treelut::netlist::LANES;
 use treelut::quantize::{quantize_leaves, FeatureQuantizer, FlatForest, QuantModel};
 use treelut::runtime::{Engine, Manifest, ModelTensors};
 use treelut::util::{Args, Rng, Summary, Timer};
@@ -209,7 +210,7 @@ fn main() -> anyhow::Result<()> {
     let model = train(&btrain, &train_ds.y, train_ds.n_classes, &dp.params, dp.w_feature)?;
     let (quant, _) = quantize_leaves(&model, dp.w_tree);
     let btest = fq.transform(&test_ds);
-    const MAX_BATCH: usize = 64;
+    const MAX_BATCH: usize = LANES;
 
     // --- Raw (coordinator-free) predictor rates --------------------------
     let forest = FlatForest::compile(&quant)?;
@@ -526,6 +527,63 @@ fn main() -> anyhow::Result<()> {
         netlist_rate / flat_equal_load,
         netlist_util * 100.0,
         (1.0 - netlist_util) * 100.0
+    );
+
+    // --- Lane-coalescing sweep: cross-batch word packing ------------------
+    // Small batches (max_batch 8) leave the per-batch path's 64-lane words
+    // ~7/8 empty: each batch becomes its own padded word. The coalescing
+    // drain instead packs jobs across batch boundaries into full words and
+    // streams them through the register-cut pipeline back-to-back (II = 1),
+    // so the same traffic fills the lanes.
+    let coalesce_requests = n_requests.min(4_000);
+    let small = BatchPolicy {
+        max_batch: 8,
+        max_wait: Duration::from_micros(500),
+        ..BatchPolicy::default()
+    };
+    println!("\n== lane-coalescing sweep: netlist executor, 8-row batches, 1 shard ==");
+    let mut t = Table::new(&["mode", "rows/s", "p50", "p99", "lanes", "words", "flushes", "peak"]);
+    let mut coalesce_util = [0.0f64; 2];
+    for (i, coalesce) in [false, true].into_iter().enumerate() {
+        let lanes = Arc::new(LaneStats::default());
+        let cn = compiled.clone();
+        let lf = Arc::clone(&lanes);
+        let server = if coalesce {
+            Server::start_pool_lanes(
+                move |_shard| Ok(cn.executor(MAX_BATCH, Arc::clone(&lf))),
+                small,
+                1,
+                DispatchPolicy::P2c,
+            )?
+        } else {
+            Server::start_pool_dispatch(
+                move |_shard| Ok(cn.executor(MAX_BATCH, Arc::clone(&lf))),
+                small,
+                1,
+                DispatchPolicy::P2c,
+            )?
+        };
+        let rep = poisson_run(&server, &btest, coalesce_requests, rps)?;
+        let s = server.stats();
+        coalesce_util[i] = lanes.utilization();
+        t.row(&[
+            if coalesce { "coalesce" } else { "per-batch" }.into(),
+            format!("{:.0}", rep.throughput),
+            format!("{:.0}us", rep.latency.p50 * 1e6),
+            format!("{:.0}us", rep.latency.p99 * 1e6),
+            format!("{:.0}%", coalesce_util[i] * 100.0),
+            s.coalesced_words.load(Ordering::Relaxed).to_string(),
+            s.pipeline_flushes.load(Ordering::Relaxed).to_string(),
+            s.peak_inflight_words.load(Ordering::Relaxed).to_string(),
+        ]);
+        server.shutdown();
+    }
+    println!("{}", t.render());
+    println!(
+        "headline: coalescing fills {:.0}% of the {LANES} lanes vs {:.0}% per-batch \
+         under 8-row batches",
+        coalesce_util[1] * 100.0,
+        coalesce_util[0] * 100.0
     );
 
     // --- PJRT engine section (artifact-gated) -----------------------------

@@ -47,7 +47,7 @@ fn main() -> anyhow::Result<()> {
             let row: Vec<u16> = (0..design.n_features)
                 .map(|f| ((i as usize + f) % (1 << design.w_feature)) as u16)
                 .collect();
-            batch.push_features(&row, design.w_feature as usize);
+            batch.push_features(&row, design.w_feature as usize).unwrap();
         }
         let iters = 20;
         let samples = treelut::util::timer::bench_loop(iters, || sim.run(&built.net, &batch));

@@ -46,6 +46,16 @@
 //! snaps back on any successful pop or steal — an idle pool parks instead
 //! of burning wakeups, a loaded pool keeps steal latency low.
 //!
+//! Lane coalescing ([`Server::start_pool_lanes`]) replaces the per-batch
+//! worker loop with a pipelined drain over a [`LaneExecutor`]: jobs are
+//! packed *across* batch boundaries into `lanes`-wide words, each full
+//! word is issued into the executor's register-cut pipeline immediately
+//! (II = 1, up to `pipeline_depth` words concurrently in flight), and a
+//! partial word is held open for stragglers only until the *oldest*
+//! un-replied job's enqueue-anchored deadline. When the queue runs dry the
+//! pipeline is flushed eagerly — at low load, reply latency beats lane
+//! padding. See DESIGN.md §4d.
+//!
 //! Time is abstracted behind the [`Clock`] trait: production uses
 //! [`WallClock`]; the deterministic serving harness
 //! (`coordinator::testing`) substitutes a virtual clock so deadline,
@@ -61,7 +71,7 @@
 //! shed ([`SubmitError::Shed`], counted in `sheds`), or a worker-death
 //! error counted in [`ServerStats::rejected`]. Nothing is silently dropped.
 
-use super::BatchExecutor;
+use super::{BatchExecutor, LaneExecutor};
 use crate::util::rng::{splitmix64, SPLITMIX64_GAMMA};
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
@@ -354,6 +364,17 @@ pub struct ServerStats {
     /// Deepest queue observed at enqueue time (aggregate: deepest any
     /// single shard queue ever got).
     pub peak_depth: AtomicU64,
+    /// Lane-coalesced words issued into a pipelined executor
+    /// ([`Server::start_pool_lanes`] pools only; equals `batches` there).
+    pub coalesced_words: AtomicU64,
+    /// Pipeline flushes: the coalescing drain ran out of queued jobs (or
+    /// hit the latency deadline) with words still in flight and drained
+    /// them with bubble cycles.
+    pub pipeline_flushes: AtomicU64,
+    /// Deepest issued-but-unretired word count a coalescing worker
+    /// observed — how much of the executor's pipeline depth real traffic
+    /// actually overlapped.
+    pub peak_inflight_words: AtomicU64,
 }
 
 impl ServerStats {
@@ -598,6 +619,8 @@ pub struct Server {
     stats: Arc<ServerStats>,
     clock: Arc<dyn Clock>,
     n_features: usize,
+    /// Workers run the lane-coalescing drain instead of the per-batch loop.
+    coalesced: bool,
 }
 
 impl Server {
@@ -627,6 +650,7 @@ impl Server {
             policy,
             Arc::clone(&stats),
             Arc::clone(&clock),
+            worker_loop::<E>,
         )?;
         Ok(Server {
             shards: vec![shard],
@@ -637,6 +661,7 @@ impl Server {
             stats,
             clock,
             n_features,
+            coalesced: false,
         })
     }
 
@@ -694,6 +719,59 @@ impl Server {
         E: BatchExecutor,
         F: Fn(usize) -> anyhow::Result<E> + Send + Sync + 'static,
     {
+        Self::start_pool_inner(factory, policy, n_shards, dispatch, clock, worker_loop::<E>, false)
+    }
+
+    /// [`Server::start_pool_lanes_clocked`] on the wall clock.
+    pub fn start_pool_lanes<E, F>(
+        factory: F,
+        policy: BatchPolicy,
+        n_shards: usize,
+        dispatch: DispatchPolicy,
+    ) -> anyhow::Result<Server>
+    where
+        E: LaneExecutor,
+        F: Fn(usize) -> anyhow::Result<E> + Send + Sync + 'static,
+    {
+        Self::start_pool_lanes_clocked(factory, policy, n_shards, dispatch, Arc::new(WallClock))
+    }
+
+    /// Like [`Server::start_pool_clocked`], but each worker runs the
+    /// lane-coalescing drain over a pipelined [`LaneExecutor`]: jobs are
+    /// packed across batch boundaries into `lanes`-wide words, issued
+    /// back-to-back at II = 1, with the latency bound anchored to the
+    /// oldest coalesced job's enqueue time. `policy.max_batch` does not
+    /// bound word size (the executor's lane width does); it still caps
+    /// steal runs.
+    pub fn start_pool_lanes_clocked<E, F>(
+        factory: F,
+        policy: BatchPolicy,
+        n_shards: usize,
+        dispatch: DispatchPolicy,
+        clock: Arc<dyn Clock>,
+    ) -> anyhow::Result<Server>
+    where
+        E: LaneExecutor,
+        F: Fn(usize) -> anyhow::Result<E> + Send + Sync + 'static,
+    {
+        Self::start_pool_inner(factory, policy, n_shards, dispatch, clock, lane_worker_loop::<E>, true)
+    }
+
+    /// Shared pool construction; `run` is the worker-loop entry each shard
+    /// thread jumps into once its executor is built.
+    fn start_pool_inner<E, F>(
+        factory: F,
+        policy: BatchPolicy,
+        n_shards: usize,
+        dispatch: DispatchPolicy,
+        clock: Arc<dyn Clock>,
+        run: fn(E, WorkerCtx),
+        coalesced: bool,
+    ) -> anyhow::Result<Server>
+    where
+        E: BatchExecutor,
+        F: Fn(usize) -> anyhow::Result<E> + Send + Sync + 'static,
+    {
         anyhow::ensure!(n_shards >= 1, "need at least one shard");
         anyhow::ensure!(policy.queue_cap >= 1, "queue cap must be at least 1");
         let factory = Arc::new(factory);
@@ -718,6 +796,7 @@ impl Server {
                 policy,
                 Arc::clone(&stats),
                 Arc::clone(&clock),
+                run,
             );
             match spawned {
                 Ok((shard, nf)) => {
@@ -746,6 +825,7 @@ impl Server {
             stats,
             clock,
             n_features,
+            coalesced,
         })
     }
 
@@ -940,6 +1020,12 @@ impl Server {
         self.dispatch
     }
 
+    /// Whether workers run the lane-coalescing drain
+    /// ([`Server::start_pool_lanes`]).
+    pub fn coalesced(&self) -> bool {
+        self.coalesced
+    }
+
     /// Per-shard counters, in shard order.
     pub fn shard_stats(&self) -> impl Iterator<Item = &ServerStats> + '_ {
         self.shards.iter().map(|s| &*s.stats)
@@ -991,8 +1077,23 @@ fn teardown(shards: Vec<ShardHandle>) {
     }
 }
 
+/// Everything a worker loop needs besides its executor, bundled so the
+/// per-batch and lane-coalescing loops share one spawn path.
+struct WorkerCtx {
+    shard_id: usize,
+    queues: Arc<Vec<Arc<ShardQueue>>>,
+    /// Policy batch cap, *not yet* clamped to the executor (loops clamp
+    /// against `executor.max_batch()` themselves).
+    max_batch: usize,
+    max_wait: Duration,
+    aggregate: Arc<ServerStats>,
+    shard: Arc<ServerStats>,
+    clock: Arc<dyn Clock>,
+}
+
 /// Spawn one shard worker; blocks until its executor is constructed and
-/// returns the shard handle plus the executor's feature count.
+/// returns the shard handle plus the executor's feature count. `run` is
+/// the loop the worker thread enters with the built executor.
 fn spawn_shard<E: BatchExecutor>(
     factory: Box<dyn FnOnce() -> anyhow::Result<E> + Send>,
     shard_id: usize,
@@ -1000,6 +1101,7 @@ fn spawn_shard<E: BatchExecutor>(
     policy: BatchPolicy,
     aggregate: Arc<ServerStats>,
     clock: Arc<dyn Clock>,
+    run: fn(E, WorkerCtx),
 ) -> anyhow::Result<(ShardHandle, usize)> {
     let stats = Arc::new(ServerStats::default());
     let stats_w = Arc::clone(&stats);
@@ -1021,8 +1123,16 @@ fn spawn_shard<E: BatchExecutor>(
                 return;
             }
         };
-        let max_batch = policy_max.min(executor.max_batch()).max(1);
-        worker_loop(executor, shard_id, queues, max_batch, max_wait, aggregate, stats_w, clock);
+        let ctx = WorkerCtx {
+            shard_id,
+            queues,
+            max_batch: policy_max,
+            max_wait,
+            aggregate,
+            shard: stats_w,
+            clock,
+        };
+        run(executor, ctx);
     });
     let ready = ready_rx
         .recv()
@@ -1098,17 +1208,20 @@ impl Drop for WorkerGuard {
     }
 }
 
-#[allow(clippy::too_many_arguments)]
-fn worker_loop<E: BatchExecutor>(
-    executor: E,
-    shard_id: usize,
-    queues: Arc<Vec<Arc<ShardQueue>>>,
-    max_batch: usize,
-    max_wait: Duration,
-    aggregate: Arc<ServerStats>,
-    shard: Arc<ServerStats>,
-    clock: Arc<dyn Clock>,
-) {
+/// Floor of the adaptive idle poll for a pool: tracks the latency budget
+/// (`max_wait`) on multi-shard pools so stolen jobs never stall behind a
+/// long park.
+fn idle_poll_floor(n_queues: usize, max_wait: Duration) -> Duration {
+    if n_queues > 1 {
+        max_wait.clamp(Duration::from_micros(100), STEAL_POLL_MIN)
+    } else {
+        STEAL_POLL_MIN
+    }
+}
+
+fn worker_loop<E: BatchExecutor>(executor: E, ctx: WorkerCtx) {
+    let WorkerCtx { shard_id, queues, max_batch, max_wait, aggregate, shard, clock } = ctx;
+    let max_batch = max_batch.min(executor.max_batch()).max(1);
     let mut guard = WorkerGuard {
         shard_id,
         queues: Arc::clone(&queues),
@@ -1125,11 +1238,7 @@ fn worker_loop<E: BatchExecutor>(
     // to STEAL_POLL_MAX, and any successful pop or steal snaps it back.
     // The condvar still wakes a parked worker instantly on push or close,
     // so backoff only delays *stealing*, never direct dispatch.
-    let min_poll = if queues.len() > 1 {
-        max_wait.clamp(Duration::from_micros(100), STEAL_POLL_MIN)
-    } else {
-        STEAL_POLL_MIN
-    };
+    let min_poll = idle_poll_floor(queues.len(), max_wait);
     let mut poll = min_poll;
     loop {
         let jobs: Vec<Job> = match own.pop_wait(poll, &*clock) {
@@ -1221,6 +1330,275 @@ fn worker_loop<E: BatchExecutor>(
                 // Fan the batch error out to every job in the batch.
                 for job in jobs {
                     let _ = job.resp.send(Err(anyhow::anyhow!("batch failed: {e}")));
+                }
+            }
+        }
+    }
+}
+
+/// Reply to one retired word: pop its jobs (the oldest `len` un-replied
+/// ones) off the guard and deliver predictions, measuring latency at
+/// retire time.
+fn lane_retire(guard: &mut WorkerGuard, word_lens: &mut VecDeque<usize>, preds: Vec<u32>, clock: &dyn Clock) {
+    let len = word_lens.pop_front().expect("retired word was issued");
+    let done = clock.now();
+    let jobs: Vec<Job> = guard.in_flight.drain(..len).collect();
+    if preds.len() == jobs.len() {
+        for (job, pred) in jobs.into_iter().zip(preds) {
+            let reply = Reply { class: pred, latency: done.saturating_sub(job.enqueued) };
+            let _ = job.resp.send(Ok(reply));
+        }
+    } else {
+        // A lane-lying executor must not silently strand jobs.
+        let n_rows = jobs.len();
+        for job in jobs {
+            let _ = job.resp.send(Err(anyhow::anyhow!(
+                "executor returned {} predictions for {n_rows} rows",
+                preds.len()
+            )));
+        }
+    }
+}
+
+/// Fail every un-replied job — the executor reported an error, which per
+/// the [`LaneExecutor`] contract means the pipeline was reset and every
+/// in-flight word (and the open partial word's packing) is lost.
+fn lane_fail_all(guard: &mut WorkerGuard, word_lens: &mut VecDeque<usize>, open: &mut usize, e: &anyhow::Error) {
+    word_lens.clear();
+    *open = 0;
+    for job in std::mem::take(&mut guard.in_flight) {
+        let _ = job.resp.send(Err(anyhow::anyhow!("batch failed: {e}")));
+    }
+}
+
+/// Issue the open partial word (the newest `open` jobs on the guard) into
+/// the executor's pipeline; delivers any word that retires this cycle.
+#[allow(clippy::too_many_arguments)]
+fn lane_issue_open<E: LaneExecutor>(
+    executor: &E,
+    own: &ShardQueue,
+    guard: &mut WorkerGuard,
+    word_lens: &mut VecDeque<usize>,
+    open: &mut usize,
+    aggregate: &ServerStats,
+    shard: &ServerStats,
+    clock: &dyn Clock,
+) {
+    if *open == 0 {
+        return;
+    }
+    let start = guard.in_flight.len() - *open;
+    let rows: Vec<&[u16]> = guard.in_flight[start..].iter().map(|j| j.row.as_slice()).collect();
+    let t0 = clock.now();
+    let result = executor.issue(&rows);
+    let exec_nanos = clock.now().saturating_sub(t0).as_nanos() as u64;
+    drop(rows);
+    for stats in [aggregate, shard] {
+        stats.exec_nanos.fetch_add(exec_nanos, Ordering::Relaxed);
+        stats.batches.fetch_add(1, Ordering::Relaxed);
+        stats.rows_executed.fetch_add(*open as u64, Ordering::Relaxed);
+        stats.coalesced_words.fetch_add(1, Ordering::Relaxed);
+    }
+    word_lens.push_back(*open);
+    *open = 0;
+    for stats in [aggregate, shard] {
+        stats.peak_inflight_words.fetch_max(word_lens.len() as u64, Ordering::Relaxed);
+    }
+    match result {
+        Ok(Some(preds)) => lane_retire(guard, word_lens, preds, clock),
+        Ok(None) => {}
+        Err(e) => lane_fail_all(guard, word_lens, open, &e),
+    }
+    own.inflight.store(guard.in_flight.len(), Ordering::Relaxed);
+}
+
+/// Drain the executor's pipeline with bubble cycles and reply to every
+/// retired word. Issued jobs an inconsistent executor failed to return are
+/// failed explicitly; the open partial word (not yet issued) is kept.
+fn lane_flush_pipe<E: LaneExecutor>(
+    executor: &E,
+    own: &ShardQueue,
+    guard: &mut WorkerGuard,
+    word_lens: &mut VecDeque<usize>,
+    open: &mut usize,
+    aggregate: &ServerStats,
+    shard: &ServerStats,
+    clock: &dyn Clock,
+) {
+    if word_lens.is_empty() {
+        return;
+    }
+    for stats in [aggregate, shard] {
+        stats.pipeline_flushes.fetch_add(1, Ordering::Relaxed);
+    }
+    let t0 = clock.now();
+    let result = executor.flush();
+    let exec_nanos = clock.now().saturating_sub(t0).as_nanos() as u64;
+    for stats in [aggregate, shard] {
+        stats.exec_nanos.fetch_add(exec_nanos, Ordering::Relaxed);
+    }
+    match result {
+        Ok(words) => {
+            for preds in words {
+                if word_lens.is_empty() {
+                    break; // executor returned more words than were issued
+                }
+                lane_retire(guard, word_lens, preds, clock);
+            }
+            if !word_lens.is_empty() {
+                // Fewer words than issued: fail exactly the issued jobs,
+                // keep the open partial word (it was never packed).
+                let issued: usize = word_lens.drain(..).sum();
+                for job in guard.in_flight.drain(..issued) {
+                    let _ = job
+                        .resp
+                        .send(Err(anyhow::anyhow!("executor flush retired fewer words than issued")));
+                }
+            }
+        }
+        Err(e) => lane_fail_all(guard, word_lens, open, &e),
+    }
+    own.inflight.store(guard.in_flight.len(), Ordering::Relaxed);
+}
+
+/// The lane-coalescing drain (`--coalesce` / [`Server::start_pool_lanes`]):
+/// jobs are packed across batch boundaries into `lanes`-wide words; each
+/// full word issues into the executor's register-cut pipeline immediately
+/// (II = 1, so a sustained backlog keeps `pipeline_depth` words overlapped
+/// and every issue retires an older word for free), and a partial word is
+/// held open for stragglers only until the *oldest* un-replied job's
+/// enqueue-anchored deadline. When the queue runs dry, the pipeline is
+/// flushed eagerly: bubble cycles cost `pipeline_depth` netlist passes
+/// (counted in [`ServerStats::pipeline_flushes`] and the executor's
+/// flush-step stats), but at low load reply latency beats lane padding.
+///
+/// Invariant: `guard.in_flight` holds *every* un-replied job, oldest
+/// first — the jobs of issued-but-unretired words (`word_lens` tracks
+/// their word sizes, issue order) followed by the `open` jobs of the
+/// partial word. A panic therefore fails exactly the right jobs through
+/// the existing [`WorkerGuard`] unwind path, and queued-behind jobs
+/// re-dispatch to live siblings — kill-mid-word loses nothing silently.
+fn lane_worker_loop<E: LaneExecutor>(executor: E, ctx: WorkerCtx) {
+    let WorkerCtx { shard_id, queues, max_batch, max_wait, aggregate, shard, clock } = ctx;
+    // Steal runs still respect conventional batch sizing; word size is the
+    // executor's lane width.
+    let steal_cap = max_batch.min(executor.max_batch()).max(1);
+    let lanes = executor.lanes().max(1);
+    let mut guard = WorkerGuard {
+        shard_id,
+        queues: Arc::clone(&queues),
+        aggregate: Arc::clone(&aggregate),
+        shard: Arc::clone(&shard),
+        clock: Arc::clone(&clock),
+        in_flight: Vec::new(),
+    };
+    let own = &queues[shard_id];
+    let mut word_lens: VecDeque<usize> = VecDeque::new();
+    let mut open = 0usize;
+    let min_poll = idle_poll_floor(queues.len(), max_wait);
+    let mut poll = min_poll;
+
+    macro_rules! issue_open {
+        () => {
+            lane_issue_open(
+                &executor,
+                own,
+                &mut guard,
+                &mut word_lens,
+                &mut open,
+                &aggregate,
+                &shard,
+                &*clock,
+            )
+        };
+    }
+    macro_rules! flush_pipe {
+        () => {
+            lane_flush_pipe(
+                &executor,
+                own,
+                &mut guard,
+                &mut word_lens,
+                &mut open,
+                &aggregate,
+                &shard,
+                &*clock,
+            )
+        };
+    }
+    macro_rules! admit {
+        ($job:expr) => {{
+            guard.in_flight.push($job);
+            open += 1;
+            own.inflight.store(guard.in_flight.len(), Ordering::Relaxed);
+            if open == lanes {
+                issue_open!();
+            }
+        }};
+    }
+
+    loop {
+        // 1. Greedy drain: pack everything queued, issuing each word the
+        //    moment it fills.
+        while let Some(job) = own.try_pop() {
+            poll = min_poll;
+            admit!(job);
+        }
+        // 2. Queue dry: retire whatever is in flight now — nothing is left
+        //    to share the pipeline with, so bubbles buy reply latency.
+        flush_pipe!();
+
+        if open == 0 {
+            // Idle: adaptive steal poll, exactly like the per-batch loop.
+            match own.pop_wait(poll, &*clock) {
+                Pop::Job(job) => {
+                    poll = min_poll;
+                    admit!(job);
+                }
+                Pop::Timeout => {
+                    for stats in [&aggregate, &shard] {
+                        stats.steal_scans.fetch_add(1, Ordering::Relaxed);
+                    }
+                    let stolen = steal_batch(&queues, shard_id, steal_cap);
+                    if stolen.is_empty() {
+                        poll = (poll * 2).min(STEAL_POLL_MAX);
+                        continue;
+                    }
+                    poll = min_poll;
+                    for stats in [&aggregate, &shard] {
+                        stats.steals.fetch_add(1, Ordering::Relaxed);
+                        stats.stolen_jobs.fetch_add(stolen.len() as u64, Ordering::Relaxed);
+                    }
+                    for job in stolen {
+                        admit!(job);
+                    }
+                }
+                Pop::Closed => return, // queue drained and server shutting down
+            }
+        } else {
+            // 3. Open partial word: hold it for stragglers until the
+            //    *oldest* coalesced job's enqueue-anchored deadline.
+            let deadline = guard.in_flight[0].enqueued + max_wait;
+            let remaining = deadline.saturating_sub(clock.now());
+            if remaining.is_zero() {
+                issue_open!();
+                flush_pipe!();
+            } else {
+                match own.pop_wait(remaining, &*clock) {
+                    Pop::Job(job) => {
+                        poll = min_poll;
+                        admit!(job);
+                    }
+                    Pop::Timeout => {
+                        issue_open!();
+                        flush_pipe!();
+                    }
+                    Pop::Closed => {
+                        // Serve what we hold, then exit.
+                        issue_open!();
+                        flush_pipe!();
+                        return;
+                    }
                 }
             }
         }

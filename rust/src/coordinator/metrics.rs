@@ -4,6 +4,20 @@
 use super::{DispatchPolicy, NetlistMeta};
 use crate::util::Summary;
 
+/// Lane-coalescing counters of a `--coalesce` run
+/// ([`super::Server::start_pool_lanes`] pools).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CoalesceReport {
+    /// Words issued into the pipelined executor by the coalescing drain.
+    pub words: u64,
+    /// Pipeline flushes (queue ran dry / deadline hit with words in
+    /// flight; each costs up to `cuts` bubble passes).
+    pub flushes: u64,
+    /// Deepest in-flight word count observed — the realized pipeline
+    /// overlap (≤ the design's register cuts).
+    pub peak_inflight: u64,
+}
+
 /// One load-test run's results.
 #[derive(Clone, Debug)]
 pub struct ServingReport {
@@ -39,9 +53,11 @@ pub struct ServingReport {
     /// Structural metadata of the served circuit, when the executor was
     /// the hardware-accurate netlist path.
     pub netlist: Option<NetlistMeta>,
-    /// Fraction of 64-wide simulation lanes carrying real rows (netlist
-    /// executor only): 1.0 = every word full, low values = padding waste.
+    /// Fraction of simulation lanes carrying real rows (netlist executor
+    /// only): 1.0 = every word full, low values = padding waste.
     pub lanes_utilization: Option<f64>,
+    /// Lane-coalescing counters, when the pool ran the coalescing drain.
+    pub coalesce: Option<CoalesceReport>,
 }
 
 impl ServingReport {
@@ -68,6 +84,7 @@ impl ServingReport {
             executor: None,
             netlist: None,
             lanes_utilization: None,
+            coalesce: None,
         }
     }
 
@@ -110,9 +127,15 @@ impl ServingReport {
         self
     }
 
-    /// Record the run's 64-lane occupancy (netlist executor).
+    /// Record the run's lane occupancy (netlist executor).
     pub fn with_lanes_utilization(mut self, utilization: f64) -> ServingReport {
         self.lanes_utilization = Some(utilization);
+        self
+    }
+
+    /// Record the run's lane-coalescing counters (`--coalesce` pools).
+    pub fn with_coalescing(mut self, coalesce: CoalesceReport) -> ServingReport {
+        self.coalesce = Some(coalesce);
         self
     }
 
@@ -151,8 +174,17 @@ impl ServingReport {
             .lanes_utilization
             .map(|u| format!(" lanes={:.0}%", u * 100.0))
             .unwrap_or_default();
+        let coalesce = self
+            .coalesce
+            .map(|c| {
+                format!(
+                    " coalesce[words={} flushes={} peak={}]",
+                    c.words, c.flushes, c.peak_inflight
+                )
+            })
+            .unwrap_or_default();
         format!(
-            "thru={:.0} rows/s{}{executor}{shards}{dispatch} batch={:.1} lat p50={:.0}us p90={:.0}us p99={:.0}us max={:.0}us{steals}{sheds}{netlist}{lanes}",
+            "thru={:.0} rows/s{}{executor}{shards}{dispatch} batch={:.1} lat p50={:.0}us p90={:.0}us p99={:.0}us max={:.0}us{steals}{sheds}{netlist}{lanes}{coalesce}",
             self.throughput,
             self.offered_rps.map(|r| format!(" (offered {r:.0})")).unwrap_or_default(),
             self.mean_batch,
@@ -227,6 +259,16 @@ mod tests {
         assert!(s.contains("exec=netlist"), "{s}");
         assert!(s.contains("netlist[luts=120 ffs=30 cuts=2 depth=4]"), "{s}");
         assert!(s.contains("lanes=43%"), "{s}");
+    }
+
+    #[test]
+    fn coalesce_rendering() {
+        let r = ServingReport::from_latencies(&[0.001; 10], 1.0, 2.0, None);
+        assert!(!r.render().contains("coalesce["));
+        let c = CoalesceReport { words: 40, flushes: 5, peak_inflight: 3 };
+        let r = r.with_coalescing(c);
+        assert_eq!(r.coalesce, Some(c));
+        assert!(r.render().contains("coalesce[words=40 flushes=5 peak=3]"), "{}", r.render());
     }
 
     #[test]

@@ -37,7 +37,7 @@ pub use batcher::{
     BatchPolicy, Clock, DispatchPolicy, OverloadPolicy, Reply, Server, ServerStats,
     SubmitError, WallClock,
 };
-pub use metrics::ServingReport;
+pub use metrics::{CoalesceReport, ServingReport};
 pub use netlist_exec::{
     CompiledNetlist, LaneStats, NetlistExecError, NetlistExecutor, NetlistMeta,
 };
@@ -54,6 +54,36 @@ pub trait BatchExecutor: 'static {
     fn n_features(&self) -> usize;
     /// Classify `rows` (each of length `n_features`).
     fn execute(&self, rows: &[&[u16]]) -> anyhow::Result<Vec<u32>>;
+}
+
+/// A pipelined executor the lane-coalescing worker loop
+/// ([`Server::start_pool_lanes`]) can stream words into: up to [`lanes`]
+/// rows per word, a word issued per call at II = 1, and each word's
+/// predictions retiring [`pipeline_depth`] issues later — the serving
+/// analogue of the paper's register-cut pipeline (§2.4).
+///
+/// Contract: [`issue`]/[`flush`] results come back in issue order, one
+/// prediction vector per issued word. An `Err` from either means the
+/// pipeline has been reset and every in-flight word is lost — the caller
+/// must fail the jobs behind them (the executor stays usable for new
+/// issues).
+///
+/// [`lanes`]: LaneExecutor::lanes
+/// [`pipeline_depth`]: LaneExecutor::pipeline_depth
+/// [`issue`]: LaneExecutor::issue
+/// [`flush`]: LaneExecutor::flush
+pub trait LaneExecutor: BatchExecutor {
+    /// Rows per word (the coalescer packs up to this many before issuing).
+    fn lanes(&self) -> usize;
+    /// Words in flight between a word's issue and its retire (= register
+    /// cuts for the netlist executor; 0 retires within the same call).
+    fn pipeline_depth(&self) -> usize;
+    /// Pack `rows` into one word and clock it into the pipeline. Returns
+    /// the predictions of the word that retires this cycle, if any.
+    fn issue(&self, rows: &[&[u16]]) -> anyhow::Result<Option<Vec<u32>>>;
+    /// Drain the pipeline with bubble cycles; returns the remaining words'
+    /// predictions in issue order.
+    fn flush(&self) -> anyhow::Result<Vec<Vec<u32>>>;
 }
 
 impl BatchExecutor for crate::runtime::Engine {

@@ -20,9 +20,9 @@
 //! [`NetlistExecutor`] (simulator scratch is per-shard state) via
 //! [`CompiledNetlist::executor`].
 
-use super::BatchExecutor;
-use crate::netlist::simulate::{InputBatch, OutputBatch};
-use crate::netlist::{build_netlist, map_luts, BuiltDesign, Simulator};
+use super::{BatchExecutor, LaneExecutor};
+use crate::netlist::simulate::{InputBatch, OutputBatch, LANES};
+use crate::netlist::{build_netlist, map_luts, BuiltDesign, Simulator, StreamingCycleSim};
 use crate::quantize::{FeatureQuantizer, QuantModel};
 use crate::rtl::{design_from_quant, Pipeline};
 use std::cell::RefCell;
@@ -83,26 +83,33 @@ pub struct NetlistMeta {
     pub keys: usize,
 }
 
-/// Lane-occupancy counters for the 64-wide simulation words. Shared
+/// Lane-occupancy counters for the [`LANES`]-wide simulation words. Shared
 /// (`Arc`) across the shards of a pool so a bench can report how much of
 /// the bit-parallel width real traffic actually filled.
 #[derive(Debug, Default)]
 pub struct LaneStats {
     /// Rows simulated.
     pub rows: AtomicU64,
-    /// 64-lane words simulated (each costs one full netlist pass).
+    /// Row-carrying words simulated (each costs one full netlist pass).
     pub words: AtomicU64,
+    /// Bubble cycles clocked by pipeline flushes (each also a full netlist
+    /// pass, but carrying no rows — kept out of `words` so `utilization`
+    /// measures packing quality and flush cost stays visible on its own).
+    pub flush_steps: AtomicU64,
+    /// Deepest issued-but-unretired word count observed — the realized
+    /// pipeline depth (≤ the design's register cuts).
+    pub peak_inflight: AtomicU64,
 }
 
 impl LaneStats {
     /// Fraction of simulated lanes carrying a real row (1.0 = every word
-    /// full; a 1-row batch utilizes 1/64). 0 when nothing ran.
+    /// full; a 1-row batch utilizes `1/LANES`). 0 when nothing ran.
     pub fn utilization(&self) -> f64 {
         let words = self.words.load(Ordering::Relaxed);
         if words == 0 {
             return 0.0;
         }
-        self.rows.load(Ordering::Relaxed) as f64 / (64 * words) as f64
+        self.rows.load(Ordering::Relaxed) as f64 / (LANES as u64 * words) as f64
     }
 }
 
@@ -177,6 +184,10 @@ impl CompiledNetlist {
     pub fn executor(&self, max_batch: usize, lanes: Arc<LaneStats>) -> NetlistExecutor {
         NetlistExecutor {
             sim: RefCell::new(Simulator::new(&self.shared.built.net)),
+            stream: RefCell::new(StreamingCycleSim::new(
+                &self.shared.built.net,
+                self.shared.meta.cuts,
+            )),
             compiled: self.clone(),
             max_batch,
             lanes,
@@ -198,6 +209,9 @@ pub struct NetlistExecutor {
     /// worker thread ([`super::BatchExecutor`] is not `Sync`-bound), but
     /// `execute` takes `&self`.
     sim: RefCell<Simulator>,
+    /// Clocked pipeline scratch for the [`LaneExecutor`] streaming path
+    /// (`--coalesce`): words overlap in the register cuts at II = 1.
+    stream: RefCell<StreamingCycleSim>,
     max_batch: usize,
     lanes: Arc<LaneStats>,
 }
@@ -238,23 +252,48 @@ impl NetlistExecutor {
         self.execute(&refs)
     }
 
-    /// Pack up to 64 rows into one word batch, simulate, and decode one
-    /// class per lane into `out`.
-    fn run_chunk(&self, sim: &mut Simulator, chunk: &[&[u16]], out: &mut Vec<u32>) {
-        let built = &self.compiled.shared.built;
+    /// Every row must match the circuit's feature contract; a mismatch is
+    /// a typed [`NetlistExecError::WidthMismatch`].
+    fn ensure_widths(&self, rows: &[&[u16]]) -> anyhow::Result<()> {
+        let want = self.compiled.shared.n_features;
+        for (i, row) in rows.iter().enumerate() {
+            anyhow::ensure!(
+                row.len() == want,
+                NetlistExecError::WidthMismatch { row: i, got: row.len(), want }
+            );
+        }
+        Ok(())
+    }
+
+    /// Clamp one row into the `w_feature`-bit input domain and pack it as
+    /// the next lane of `batch`. Overflow surfaces as a typed
+    /// [`crate::netlist::LaneOverflow`] — a failed batch, not a panic.
+    fn pack_row(&self, batch: &mut InputBatch, row: &[u16]) -> anyhow::Result<()> {
         let w = self.compiled.shared.w_feature;
         let clamp = ((1u32 << w) - 1) as u16;
+        let clamped: Vec<u16> = row.iter().map(|&v| v.min(clamp)).collect();
+        batch.push_features(&clamped, w).map_err(anyhow::Error::new)
+    }
+
+    /// Pack up to [`LANES`] rows into one word batch, simulate, and decode
+    /// one class per lane into `out`.
+    fn run_chunk(&self, sim: &mut Simulator, chunk: &[&[u16]], out: &mut Vec<u32>) -> anyhow::Result<()> {
+        let built = &self.compiled.shared.built;
         let mut batch = InputBatch::new(built.net.n_inputs);
-        let mut clamped: Vec<u16> = Vec::with_capacity(self.compiled.shared.n_features);
         for row in chunk {
-            clamped.clear();
-            clamped.extend(row.iter().map(|&v| v.min(clamp)));
-            batch.push_features(&clamped, w);
+            self.pack_row(&mut batch, row)?;
         }
         let out_batch: OutputBatch = sim.run(&built.net, &batch);
         for lane in 0..chunk.len() {
             out.push(built.class_of(&out_batch, lane));
         }
+        Ok(())
+    }
+
+    /// Decode every lane of a retired word.
+    fn decode_word(&self, out: &OutputBatch) -> Vec<u32> {
+        let built = &self.compiled.shared.built;
+        (0..out.lanes).map(|lane| built.class_of(out, lane)).collect()
     }
 }
 
@@ -268,21 +307,65 @@ impl BatchExecutor for NetlistExecutor {
     }
 
     fn execute(&self, rows: &[&[u16]]) -> anyhow::Result<Vec<u32>> {
-        let want = self.compiled.shared.n_features;
-        for (i, row) in rows.iter().enumerate() {
-            anyhow::ensure!(
-                row.len() == want,
-                NetlistExecError::WidthMismatch { row: i, got: row.len(), want }
-            );
-        }
+        self.ensure_widths(rows)?;
         let mut preds = Vec::with_capacity(rows.len());
         let mut sim = self.sim.borrow_mut();
-        for chunk in rows.chunks(64) {
-            self.run_chunk(&mut sim, chunk, &mut preds);
+        for chunk in rows.chunks(LANES) {
+            self.run_chunk(&mut sim, chunk, &mut preds)?;
         }
         self.lanes.rows.fetch_add(rows.len() as u64, Ordering::Relaxed);
-        self.lanes.words.fetch_add(rows.len().div_ceil(64) as u64, Ordering::Relaxed);
+        self.lanes.words.fetch_add(rows.len().div_ceil(LANES) as u64, Ordering::Relaxed);
         Ok(preds)
+    }
+}
+
+impl LaneExecutor for NetlistExecutor {
+    fn lanes(&self) -> usize {
+        LANES
+    }
+
+    fn pipeline_depth(&self) -> usize {
+        self.compiled.shared.meta.cuts
+    }
+
+    fn issue(&self, rows: &[&[u16]]) -> anyhow::Result<Option<Vec<u32>>> {
+        if rows.is_empty() {
+            return Ok(None);
+        }
+        let built = &self.compiled.shared.built;
+        let mut stream = self.stream.borrow_mut();
+        let fail = |stream: &mut StreamingCycleSim, e: anyhow::Error| {
+            // LaneExecutor contract: an Err means the pipeline was reset
+            // and every in-flight word is lost.
+            stream.reset();
+            Err(e)
+        };
+        if let Err(e) = self.ensure_widths(rows) {
+            return fail(&mut stream, e);
+        }
+        let mut batch = InputBatch::new(built.net.n_inputs);
+        for row in rows {
+            if let Err(e) = self.pack_row(&mut batch, row) {
+                return fail(&mut stream, e);
+            }
+        }
+        let retired = stream.issue(&built.net, &batch);
+        // Words concurrently in the pipeline during this cycle (a word
+        // retiring this cycle was still in flight while it was clocked).
+        let concurrent = (stream.in_flight() + retired.is_some() as usize) as u64;
+        self.lanes.rows.fetch_add(rows.len() as u64, Ordering::Relaxed);
+        self.lanes.words.fetch_add(1, Ordering::Relaxed);
+        self.lanes.peak_inflight.fetch_max(concurrent, Ordering::Relaxed);
+        Ok(retired.map(|out| self.decode_word(&out)))
+    }
+
+    fn flush(&self) -> anyhow::Result<Vec<Vec<u32>>> {
+        let built = &self.compiled.shared.built;
+        let mut stream = self.stream.borrow_mut();
+        let before = stream.cycles();
+        let words = stream.flush(&built.net);
+        self.lanes.flush_steps.fetch_add(stream.cycles() - before, Ordering::Relaxed);
+        Ok(words.iter().map(|out| self.decode_word(out)).collect())
     }
 }
 
@@ -401,6 +484,52 @@ mod tests {
         let e = NetlistExecutor::new(&m, Pipeline::new(0, 0, 0), 64).unwrap();
         assert_eq!(e.execute(&[]).unwrap(), Vec::<u32>::new());
         assert_eq!(e.lane_stats().words.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn streaming_issue_flush_agrees_with_execute() {
+        let m = model();
+        let e = NetlistExecutor::new(&m, Pipeline::new(1, 1, 2), 64).unwrap();
+        assert!(e.pipeline_depth() >= 2, "fixture should be genuinely pipelined");
+        let rows: Vec<Vec<u16>> = (0..16).map(|v| vec![v % 4, v / 4]).collect();
+        let refs: Vec<&[u16]> = rows.iter().map(|r| r.as_slice()).collect();
+        let expect = e.execute(&refs).unwrap();
+
+        // Stream the same rows as words of 3 (pipeline kept busy at II=1).
+        let mut got = Vec::new();
+        for word in refs.chunks(3) {
+            if let Some(preds) = e.issue(word).unwrap() {
+                got.extend(preds);
+            }
+        }
+        for preds in e.flush().unwrap() {
+            got.extend(preds);
+        }
+        assert_eq!(got, expect);
+        let lanes = e.lane_stats();
+        // 16 execute-rows + 16 issue-rows; 6 issued words; cuts bubbles.
+        assert_eq!(lanes.rows.load(Ordering::Relaxed), 32);
+        assert_eq!(lanes.words.load(Ordering::Relaxed), 1 + 6);
+        assert_eq!(lanes.flush_steps.load(Ordering::Relaxed), e.pipeline_depth() as u64);
+        assert!(lanes.peak_inflight.load(Ordering::Relaxed) >= 2);
+    }
+
+    #[test]
+    fn issue_overflow_is_typed_and_executor_stays_usable() {
+        use crate::netlist::simulate::{LaneOverflow, LANES};
+        let m = model();
+        let e = NetlistExecutor::new(&m, Pipeline::new(0, 1, 1), 128).unwrap();
+        let rows: Vec<Vec<u16>> = (0..LANES as u16 + 1).map(|v| vec![v % 4, v % 4]).collect();
+        let refs: Vec<&[u16]> = rows.iter().map(|r| r.as_slice()).collect();
+        let err = e.issue(&refs).unwrap_err();
+        assert_eq!(*err.downcast_ref::<LaneOverflow>().expect("typed error"), LaneOverflow);
+        // The overflow reset the pipeline; new words stream correctly.
+        let row = [1u16, 2];
+        let mut got = e.issue(&[&row[..]]).unwrap().unwrap_or_default();
+        for preds in e.flush().unwrap() {
+            got.extend(preds);
+        }
+        assert_eq!(got, vec![m.predict_class(&row)]);
     }
 
     #[test]

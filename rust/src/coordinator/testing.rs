@@ -30,7 +30,7 @@
 use super::batcher::{
     BatchPolicy, Clock, DispatchPolicy, Job, OverloadPolicy, Reply, Server, SubmitError,
 };
-use super::BatchExecutor;
+use super::{BatchExecutor, LaneExecutor};
 use crate::util::Rng;
 use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
@@ -421,6 +421,46 @@ impl<E: BatchExecutor> BatchExecutor for ChaosWrapped<E> {
     }
 }
 
+/// Chaos over the coalescing path: `issue` consumes a chaos step exactly
+/// like `execute` (so `ChaosPlan::kill(shard, k)` kills at the k-th issued
+/// *word*, mid-pipeline), and each successfully issued word lands in the
+/// log at issue time. `flush` is left undisturbed — the interesting
+/// failure points are word issues.
+impl<E: LaneExecutor> LaneExecutor for ChaosWrapped<E> {
+    fn lanes(&self) -> usize {
+        self.inner.lanes()
+    }
+    fn pipeline_depth(&self) -> usize {
+        self.inner.pipeline_depth()
+    }
+    fn issue(&self, rows: &[&[u16]]) -> anyhow::Result<Option<Vec<u32>>> {
+        let step = self.step.fetch_add(1, Ordering::Relaxed);
+        match self.chaos.action(self.shard, step) {
+            Some(ChaosAction::Kill) => {
+                panic!("chaos: killing shard {} at step {step}", self.shard)
+            }
+            Some(ChaosAction::Stall(d)) => {
+                let target = self.clock.now() + d;
+                self.clock.sleep_until(target);
+            }
+            None => {}
+        }
+        let out = self.inner.issue(rows);
+        if out.is_ok() {
+            self.log.lock().unwrap().push(BatchRecord {
+                shard: self.shard,
+                step,
+                done: self.clock.now(),
+                jobs: rows.iter().map(|r| r[0]).collect(),
+            });
+        }
+        out
+    }
+    fn flush(&self) -> anyhow::Result<Vec<Vec<u32>>> {
+        self.inner.flush()
+    }
+}
+
 /// Pool shape + script for a harness run.
 #[derive(Clone, Debug)]
 pub struct HarnessConfig {
@@ -563,6 +603,45 @@ impl Harness {
         let chaos = Arc::new(chaos);
         let (clock_f, log_f) = (Arc::clone(&clock), Arc::clone(&log));
         let server = Server::start_pool_clocked(
+            move |shard| {
+                Ok(ChaosWrapped {
+                    inner: factory(shard)?,
+                    shard,
+                    clock: Arc::clone(&clock_f),
+                    chaos: Arc::clone(&chaos),
+                    step: AtomicUsize::new(0),
+                    log: Arc::clone(&log_f),
+                })
+            },
+            policy,
+            n_shards,
+            dispatch,
+            Arc::clone(&clock) as Arc<dyn Clock>,
+        )
+        .expect("harness pool must start");
+        Harness { clock, server, policy, log }
+    }
+
+    /// [`Harness::start_real`] over the lane-coalescing worker loop
+    /// ([`Server::start_pool_lanes_clocked`]): words pack across batch
+    /// boundaries and stream through the executor's pipeline, all on
+    /// virtual time. Chaos steps count issued *words*.
+    pub fn start_lanes<E, F>(
+        n_shards: usize,
+        policy: BatchPolicy,
+        dispatch: DispatchPolicy,
+        chaos: ChaosPlan,
+        factory: F,
+    ) -> Harness
+    where
+        E: LaneExecutor,
+        F: Fn(usize) -> anyhow::Result<E> + Send + Sync + 'static,
+    {
+        let clock = Arc::new(VirtualClock::new());
+        let log = Arc::new(Mutex::new(Vec::new()));
+        let chaos = Arc::new(chaos);
+        let (clock_f, log_f) = (Arc::clone(&clock), Arc::clone(&log));
+        let server = Server::start_pool_lanes_clocked(
             move |shard| {
                 Ok(ChaosWrapped {
                     inner: factory(shard)?,

@@ -10,7 +10,7 @@
 //! treelut datasets
 //!     print the evaluation datasets (paper Table 4)
 //! treelut serve [--config jsc] [--requests N] [--rps R] [--shards S] [--dispatch p2c]
-//!               [--executor auto|flat|netlist] [--queue-cap C]
+//!               [--executor auto|flat|netlist] [--coalesce] [--queue-cap C]
 //!               [--overload block|shed-new|shed-oldest]
 //!     batched serving over an N-shard pool. `--executor auto` (default)
 //!     serves the AOT PJRT artifact when available (`make artifacts`) and
@@ -18,13 +18,17 @@
 //!     flat forest; `--executor netlist` serves the hardware-accurate path:
 //!     the built gate-level netlist evaluated 64 rows per machine word, with
 //!     LUT/FF/register-cut metadata and lane utilization in the report.
-//!     Dispatch is load-aware power-of-two-choices by default (round-robin
-//!     selectable for comparison), with idle shards stealing from the
-//!     deepest sibling queue on an adaptive poll. `--queue-cap` arms
-//!     bounded-queue admission control (0 = unbounded): at capacity the
-//!     overload policy blocks the submitter, sheds the new request
-//!     (redirecting to a non-full sibling first), or sheds the queue head,
-//!     and shed counts appear in the report
+//!     `--coalesce` (netlist only) packs jobs across batch boundaries into
+//!     full 64-lane words and streams them through the cycle-accurate
+//!     register-cut pipeline at II = 1, reporting coalesced words, pipeline
+//!     flushes, and peak in-flight depth. Dispatch is load-aware
+//!     power-of-two-choices by default (round-robin selectable for
+//!     comparison), with idle shards stealing from the deepest sibling
+//!     queue on an adaptive poll. `--queue-cap` arms bounded-queue
+//!     admission control (0 = unbounded): at capacity the overload policy
+//!     blocks the submitter, sheds the new request (redirecting to a
+//!     non-full sibling first), or sheds the queue head, and shed counts
+//!     appear in the report
 //! ```
 
 use std::path::PathBuf;
@@ -46,7 +50,7 @@ const USAGE: &str = "usage: treelut <flow|train|datasets|serve> [options]
   flow      --dataset <mnist|jsc|nid> [--variant I|II] [--rows N] [--seed S] [--out DIR] [--bypass-keygen]
   train     --dataset <mnist|jsc|nid> [--variant I|II] [--rows N] [--seed S] --out FILE
   datasets
-  serve     [--config jsc] [--requests N] [--rps R] [--rows N] [--max-wait-us U] [--shards S] [--dispatch round-robin|p2c] [--executor auto|flat|netlist] [--queue-cap C] [--overload block|shed-new|shed-oldest]";
+  serve     [--config jsc] [--requests N] [--rps R] [--rows N] [--max-wait-us U] [--shards S] [--dispatch round-robin|p2c] [--executor auto|flat|netlist] [--coalesce] [--queue-cap C] [--overload block|shed-new|shed-oldest]";
 
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env();
@@ -159,6 +163,11 @@ fn cmd_serve(mut args: Args) -> anyhow::Result<()> {
         matches!(executor.as_str(), "auto" | "flat" | "netlist"),
         "unknown executor {executor:?} (auto | flat | netlist)"
     );
+    let coalesce = args.flag("coalesce");
+    anyhow::ensure!(
+        !coalesce || executor == "netlist",
+        "--coalesce requires --executor netlist (the pipelined lane path)"
+    );
     // 0 = unbounded (the default), matching the library's usize::MAX.
     let queue_cap = match args.get_as::<usize>("queue-cap", 0) {
         0 => usize::MAX,
@@ -220,14 +229,17 @@ fn cmd_serve(mut args: Args) -> anyhow::Result<()> {
             let compiled = CompiledNetlist::compile(&quant, dp.pipeline)?;
             let lanes = std::sync::Arc::new(LaneStats::default());
             netlist_info = Some((compiled.meta(), std::sync::Arc::clone(&lanes)));
-            Server::start_pool_dispatch(
-                move |_shard| {
-                    Ok(compiled.executor(max_batch, std::sync::Arc::clone(&lanes)))
-                },
-                policy,
-                shards,
-                dispatch,
-            )?
+            let factory = move |_shard: usize| {
+                Ok(compiled.executor(max_batch, std::sync::Arc::clone(&lanes)))
+            };
+            if coalesce {
+                // Lane coalescing: pack jobs across batch boundaries into
+                // full words and stream them through the register-cut
+                // pipeline at II = 1.
+                Server::start_pool_lanes(factory, policy, shards, dispatch)?
+            } else {
+                Server::start_pool_dispatch(factory, policy, shards, dispatch)?
+            }
         }
         "flat" => flat_server()?,
         // auto: the AOT PJRT engine when artifacts exist and PJRT is
@@ -319,6 +331,13 @@ fn cmd_serve(mut args: Args) -> anyhow::Result<()> {
     );
     if let Some((meta, lanes)) = &netlist_info {
         report = report.with_netlist(*meta).with_lanes_utilization(lanes.utilization());
+    }
+    if server.coalesced() {
+        report = report.with_coalescing(treelut::coordinator::CoalesceReport {
+            words: stats.coalesced_words.load(std::sync::atomic::Ordering::Relaxed),
+            flushes: stats.pipeline_flushes.load(std::sync::atomic::Ordering::Relaxed),
+            peak_inflight: stats.peak_inflight_words.load(std::sync::atomic::Ordering::Relaxed),
+        });
     }
     println!("{}", report.render());
     server.shutdown();

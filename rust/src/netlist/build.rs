@@ -235,7 +235,7 @@ mod tests {
         let built = build_netlist(design);
         let mut sim = crate::netlist::simulate::Simulator::new(&built.net);
         let mut batch = crate::netlist::simulate::InputBatch::new(built.net.n_inputs);
-        batch.push_features(x, design.w_feature as usize);
+        batch.push_features(x, design.w_feature as usize).unwrap();
         let out = sim.run(&built.net, &batch);
         built.class_of(&out, 0)
     }

@@ -198,7 +198,7 @@ pub fn fnv1a64(bytes: &[u8]) -> u64 {
 /// Decode the class of `lane` from raw cycle-simulator output words
 /// (shared with the cycle-sim properties in `tests/props.rs`).
 pub fn class_from_words(built: &BuiltDesign, words: Vec<u64>, lane: usize) -> u32 {
-    let out = OutputBatch { words, lanes: 64 };
+    let out = OutputBatch { words, lanes: crate::netlist::simulate::LANES };
     built.class_of(&out, lane)
 }
 
@@ -206,7 +206,7 @@ pub fn class_from_words(built: &BuiltDesign, words: Vec<u64>, lane: usize) -> u3
 /// cycle-sim properties in `tests/props.rs`).
 pub fn replicated_words(row: &[u16], w: usize, n_inputs: usize) -> Vec<u64> {
     let mut batch = InputBatch::new(n_inputs);
-    batch.push_features(row, w);
+    batch.push_features(row, w).expect("single row fits");
     batch.words.iter().map(|&b| if b & 1 == 1 { !0u64 } else { 0 }).collect()
 }
 

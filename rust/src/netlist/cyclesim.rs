@@ -9,9 +9,64 @@
 //! * in-flight inputs do not interfere (no structural hazards — the
 //!   pipeline is feed-forward).
 //!
-//! One u64 word per net, 64 independent streams per run.
+//! One u64 word per net, [`super::simulate::LANES`] independent streams
+//! per run.
+//!
+//! Two front-ends share the clocked core:
+//!
+//! * [`CycleSimulator`] — borrow-the-netlist, one [`step`] per cycle;
+//!   used by tests and conformance to check latency/II claims directly.
+//! * [`StreamingCycleSim`] — owned scratch for serving: [`issue`] a full
+//!   lane word per cycle (II = 1) and retire the word issued `depth`
+//!   cycles earlier in the same call, so concurrent in-flight words
+//!   overlap in the register-cut pipeline instead of each paying the
+//!   full combinational latency; [`flush`] drains the tail with bubble
+//!   cycles. Correctness rests on `build_netlist` balancing every
+//!   input→output path to exactly `cuts` registers (the property suite
+//!   pins this), so the outputs at cycle `c` depend only on the input of
+//!   cycle `c - depth` and bubble outputs can be discarded.
+//!
+//! [`step`]: CycleSimulator::step
+//! [`issue`]: StreamingCycleSim::issue
+//! [`flush`]: StreamingCycleSim::flush
+
+use std::collections::VecDeque;
 
 use super::gate::{Gate, Netlist};
+use super::simulate::{InputBatch, OutputBatch};
+
+/// One clock: combinational logic settles from `input_words` + current
+/// register `state`, primary outputs are collected *before* the edge, then
+/// every register captures its D input.
+fn clock_cycle(net: &Netlist, input_words: &[u64], values: &mut [u64], state: &mut [u64]) -> Vec<u64> {
+    assert_eq!(input_words.len(), net.n_inputs);
+    for (i, g) in net.gates.iter().enumerate() {
+        values[i] = match *g {
+            Gate::Input(k) => input_words[k as usize],
+            Gate::Const(c) => {
+                if c {
+                    !0u64
+                } else {
+                    0
+                }
+            }
+            Gate::Not(a) => !values[a as usize],
+            Gate::And(a, b) => values[a as usize] & values[b as usize],
+            Gate::Or(a, b) => values[a as usize] | values[b as usize],
+            Gate::Xor(a, b) => values[a as usize] ^ values[b as usize],
+            // A register contributes its *current* state this cycle.
+            Gate::Reg(_) => state[i],
+        };
+    }
+    let out = net.outputs.iter().map(|&o| values[o as usize]).collect();
+    // Clock edge: capture D inputs.
+    for (i, g) in net.gates.iter().enumerate() {
+        if let Gate::Reg(a) = *g {
+            state[i] = values[a as usize];
+        }
+    }
+    out
+}
 
 /// Clocked simulator: registers hold state across [`CycleSimulator::step`].
 pub struct CycleSimulator<'a> {
@@ -42,34 +97,99 @@ impl<'a> CycleSimulator<'a> {
     /// primary output words *before* the clock edge (registered-output
     /// designs therefore show a result `cuts` cycles after its input).
     pub fn step(&mut self, input_words: &[u64]) -> Vec<u64> {
-        assert_eq!(input_words.len(), self.net.n_inputs);
-        let v = &mut self.values;
-        for (i, g) in self.net.gates.iter().enumerate() {
-            v[i] = match *g {
-                Gate::Input(k) => input_words[k as usize],
-                Gate::Const(c) => {
-                    if c {
-                        !0u64
-                    } else {
-                        0
-                    }
-                }
-                Gate::Not(a) => !v[a as usize],
-                Gate::And(a, b) => v[a as usize] & v[b as usize],
-                Gate::Or(a, b) => v[a as usize] | v[b as usize],
-                Gate::Xor(a, b) => v[a as usize] ^ v[b as usize],
-                // A register contributes its *current* state this cycle.
-                Gate::Reg(_) => self.state[i],
-            };
+        clock_cycle(self.net, input_words, &mut self.values, &mut self.state)
+    }
+}
+
+/// Pipelined streaming front-end for serving: words enter the register-cut
+/// pipeline back-to-back at II = 1 and retire `depth` cycles after issue.
+///
+/// Owns its scratch (no netlist borrow) so an executor can hold it across
+/// calls; the netlist is passed per call, like [`super::simulate::Simulator`].
+pub struct StreamingCycleSim {
+    values: Vec<u64>,
+    state: Vec<u64>,
+    /// All-zero bubble input, one word per primary input.
+    zeros: Vec<u64>,
+    /// Pipeline depth in cycles = register cuts on every input→output path.
+    depth: usize,
+    /// Clock cycles executed since the last reset.
+    cycle: u64,
+    /// Issued-but-unretired words, oldest first: (issue cycle, lanes).
+    inflight: VecDeque<(u64, usize)>,
+    n_gates: usize,
+}
+
+impl StreamingCycleSim {
+    pub fn new(net: &Netlist, depth: usize) -> StreamingCycleSim {
+        StreamingCycleSim {
+            values: vec![0; net.gates.len()],
+            state: vec![0; net.gates.len()],
+            zeros: vec![0; net.n_inputs],
+            depth,
+            cycle: 0,
+            inflight: VecDeque::new(),
+            n_gates: net.gates.len(),
         }
-        let out = self.net.outputs.iter().map(|&o| v[o as usize]).collect();
-        // Clock edge: capture D inputs.
-        for (i, g) in self.net.gates.iter().enumerate() {
-            if let Gate::Reg(a) = *g {
-                self.state[i] = v[a as usize];
+    }
+
+    /// Pipeline depth in cycles (= the design's register cuts).
+    pub fn depth(&self) -> usize {
+        self.depth
+    }
+
+    /// Words currently in the pipeline (issued, not yet retired).
+    pub fn in_flight(&self) -> usize {
+        self.inflight.len()
+    }
+
+    /// Clock cycles executed since the last reset — issues plus bubbles,
+    /// so callers can account flush cost exactly.
+    pub fn cycles(&self) -> u64 {
+        self.cycle
+    }
+
+    /// Zero all register state and drop any in-flight words. Callers must
+    /// have already failed the jobs behind dropped words.
+    pub fn reset(&mut self) {
+        self.state.iter_mut().for_each(|v| *v = 0);
+        self.inflight.clear();
+        self.cycle = 0;
+    }
+
+    /// Clock one cycle with `batch` on the inputs. Returns the word issued
+    /// `depth` cycles earlier if one retires this cycle (`depth == 0`
+    /// retires the issued word immediately).
+    pub fn issue(&mut self, net: &Netlist, batch: &InputBatch) -> Option<OutputBatch> {
+        assert_eq!(net.gates.len(), self.n_gates, "stream built for another netlist");
+        let issued_at = self.cycle;
+        let out = clock_cycle(net, &batch.words, &mut self.values, &mut self.state);
+        self.cycle += 1;
+        self.inflight.push_back((issued_at, batch.lanes));
+        if let Some(&(c0, lanes)) = self.inflight.front() {
+            if c0 + self.depth as u64 == issued_at {
+                self.inflight.pop_front();
+                return Some(OutputBatch { words: out, lanes });
             }
         }
-        out
+        None
+    }
+
+    /// Clock bubble cycles until every in-flight word has retired; returns
+    /// them in issue order. Costs at most `depth` cycles (less if real
+    /// issues already pushed older words toward the outputs).
+    pub fn flush(&mut self, net: &Netlist) -> Vec<OutputBatch> {
+        let mut retired = Vec::new();
+        while let Some(&(c0, lanes)) = self.inflight.front() {
+            let now = self.cycle;
+            let out = clock_cycle(net, &self.zeros, &mut self.values, &mut self.state);
+            self.cycle += 1;
+            if c0 + self.depth as u64 == now {
+                self.inflight.pop_front();
+                retired.push(OutputBatch { words: out, lanes });
+            }
+        }
+        retired
     }
 }
 
@@ -112,7 +232,7 @@ mod tests {
     /// Pack one quantized row into input words (all 64 lanes identical).
     fn words_for(x: &[u16], w: usize, n_inputs: usize) -> Vec<u64> {
         let mut batch = InputBatch::new(n_inputs);
-        batch.push_features(x, w);
+        batch.push_features(x, w).unwrap();
         batch.words.iter().map(|&b| if b & 1 == 1 { !0u64 } else { 0 }).collect()
     }
 
@@ -177,10 +297,80 @@ mod tests {
                     last = cyc.step(&words)[0];
                 }
                 let mut batch = InputBatch::new(built.net.n_inputs);
-                batch.push_features(&[a, b], 2);
+                batch.push_features(&[a, b], 2).unwrap();
                 let expect = fun.run(&built.net, &batch).words[0] & 1;
                 assert_eq!(last & 1, expect, "x=[{a},{b}]");
             }
+        }
+    }
+
+    /// Streaming issue/retire returns, for every multi-lane word, exactly
+    /// the predictions of the integer model — words overlapping in the
+    /// pipeline at II = 1, tail drained by `flush`.
+    #[test]
+    fn streaming_retire_matches_functional_predictions() {
+        let m = model();
+        for (p0, p1, p2) in [(0, 0, 0), (0, 1, 1), (1, 1, 2)] {
+            let design = design_from_quant("stream", &m, Pipeline::new(p0, p1, p2), true);
+            let built = build_netlist(&design);
+            let mut stream = StreamingCycleSim::new(&built.net, built.cuts);
+
+            let mut rng = Rng::new(7 + p0 as u64 + 2 * p2 as u64);
+            // 9 words × 3 lanes, issued back-to-back.
+            let words: Vec<Vec<Vec<u16>>> = (0..9)
+                .map(|_| {
+                    (0..3).map(|_| vec![rng.below(4) as u16, rng.below(4) as u16]).collect()
+                })
+                .collect();
+            let mut retired = Vec::new();
+            for rows in &words {
+                let mut batch = InputBatch::new(built.net.n_inputs);
+                for row in rows {
+                    batch.push_features(row, 2).unwrap();
+                }
+                if let Some(out) = stream.issue(&built.net, &batch) {
+                    retired.push(out);
+                }
+            }
+            assert_eq!(stream.in_flight(), built.cuts.min(words.len()));
+            retired.extend(stream.flush(&built.net));
+            assert_eq!(stream.in_flight(), 0);
+
+            assert_eq!(retired.len(), words.len(), "pipeline [{p0},{p1},{p2}]");
+            for (w, (out, rows)) in retired.iter().zip(&words).enumerate() {
+                assert_eq!(out.lanes, rows.len());
+                for (lane, row) in rows.iter().enumerate() {
+                    assert_eq!(
+                        built.class_of(out, lane),
+                        m.predict_class(row),
+                        "pipeline [{p0},{p1},{p2}]: word {w} lane {lane}"
+                    );
+                }
+            }
+        }
+    }
+
+    /// Flush cost accounting: `k` back-to-back issues plus a flush execute
+    /// exactly `k + cuts` clock cycles — the bubble tail is bounded by the
+    /// pipeline depth, never proportional to the number of words.
+    #[test]
+    fn streaming_flush_cost_is_depth_bounded() {
+        let m = model();
+        let design = design_from_quant("stream", &m, Pipeline::new(1, 1, 2), true);
+        let built = build_netlist(&design);
+        assert!(built.cuts >= 2, "fixture should be genuinely pipelined");
+        let mut stream = StreamingCycleSim::new(&built.net, built.cuts);
+        for k in [1usize, 3, 8] {
+            stream.reset();
+            let mut batch = InputBatch::new(built.net.n_inputs);
+            batch.push_features(&[1, 2], 2).unwrap();
+            let mut retired = 0;
+            for _ in 0..k {
+                retired += stream.issue(&built.net, &batch).is_some() as usize;
+            }
+            retired += stream.flush(&built.net).len();
+            assert_eq!(retired, k);
+            assert_eq!(stream.cycles(), (k + built.cuts) as u64, "k={k}");
         }
     }
 

@@ -28,7 +28,8 @@ pub mod cyclesim;
 pub mod conform;
 
 pub use build::{build_netlist, BuiltDesign};
+pub use cyclesim::{CycleSimulator, StreamingCycleSim};
 pub use gate::{Gate, Netlist, NodeId};
 pub use lutmap::{map_luts, MapResult};
 pub use timing::{CostReport, TimingModel};
-pub use simulate::Simulator;
+pub use simulate::{LaneOverflow, Simulator, LANES};

@@ -9,8 +9,30 @@
 
 use super::gate::{Gate, Netlist};
 
-/// A batch of up to 64 input vectors, transposed into one u64 word per
-/// input bit (lane `l` = sample `l`).
+/// Canonical lane width of the bit-parallel simulators: one sample per bit
+/// of a machine word. Every layer that packs rows into words — the
+/// simulators here, the serving executor's word packing, the lane
+/// coalescer, occupancy stats, and the benches — derives its width from
+/// this single constant so they cannot drift.
+pub const LANES: usize = 64;
+
+/// Typed overflow: an [`InputBatch`] already holds [`LANES`] samples and
+/// cannot accept another. Surfaced as a failed batch by the serving
+/// executors instead of panicking (a packing miscount must not kill a
+/// shard worker).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct LaneOverflow;
+
+impl std::fmt::Display for LaneOverflow {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "input batch already holds {LANES} samples (word overflow)")
+    }
+}
+
+impl std::error::Error for LaneOverflow {}
+
+/// A batch of up to [`LANES`] input vectors, transposed into one u64 word
+/// per input bit (lane `l` = sample `l`).
 #[derive(Clone, Debug)]
 pub struct InputBatch {
     pub words: Vec<u64>,
@@ -23,20 +45,25 @@ impl InputBatch {
     }
 
     /// Append one sample given raw input bits.
-    pub fn push_bits(&mut self, bits: &[bool]) {
-        assert!(self.lanes < 64, "batch full");
+    pub fn push_bits(&mut self, bits: &[bool]) -> Result<(), LaneOverflow> {
+        if self.lanes >= LANES {
+            return Err(LaneOverflow);
+        }
         assert_eq!(bits.len(), self.words.len());
         let lane = self.lanes;
         for (w, &b) in self.words.iter_mut().zip(bits) {
             *w |= (b as u64) << lane;
         }
         self.lanes += 1;
+        Ok(())
     }
 
     /// Append one sample from quantized features (bit `f*w + j` = bit `j`
     /// of feature `f` — the keygen input convention).
-    pub fn push_features(&mut self, x: &[u16], w: usize) {
-        assert!(self.lanes < 64, "batch full");
+    pub fn push_features(&mut self, x: &[u16], w: usize) -> Result<(), LaneOverflow> {
+        if self.lanes >= LANES {
+            return Err(LaneOverflow);
+        }
         assert_eq!(x.len() * w, self.words.len());
         let lane = self.lanes;
         for (f, &v) in x.iter().enumerate() {
@@ -47,11 +74,12 @@ impl InputBatch {
             }
         }
         self.lanes += 1;
+        Ok(())
     }
 
     /// Append one sample from precomputed key bits (bypass designs).
-    pub fn push_keys(&mut self, keys: &[bool]) {
-        self.push_bits(keys);
+    pub fn push_keys(&mut self, keys: &[bool]) -> Result<(), LaneOverflow> {
+        self.push_bits(keys)
     }
 }
 
@@ -114,7 +142,7 @@ impl Simulator {
     }
 
     /// Classify a full quantized dataset through a built design
-    /// (keygen-mode inputs), 64 rows at a time.
+    /// (keygen-mode inputs), [`LANES`] rows at a time.
     pub fn classify_dataset(
         &mut self,
         built: &super::build::BuiltDesign,
@@ -135,8 +163,8 @@ impl Simulator {
             *batch = InputBatch::new(net.n_inputs);
         };
         for row in rows {
-            batch.push_features(&row, w_feature);
-            if batch.lanes == 64 {
+            batch.push_features(&row, w_feature).expect("batch flushed at LANES");
+            if batch.lanes == LANES {
                 flush(self, &mut batch, &mut preds);
             }
         }
@@ -170,7 +198,7 @@ mod tests {
         let mut expect = Vec::new();
         for v in 0..8u32 {
             let bits = [(v & 1) != 0, (v & 2) != 0, (v & 4) != 0];
-            batch.push_bits(&bits);
+            batch.push_bits(&bits).unwrap();
             expect.push((bits[0] & bits[1]) ^ bits[2]);
         }
         let out = sim.run(&net, &batch);
@@ -187,8 +215,8 @@ mod tests {
         n.outputs = vec![b];
         let mut sim = Simulator::new(&n);
         let mut batch = InputBatch::new(4);
-        batch.push_features(&[2, 0], 2); // feature0 = 2 → bit1 set
-        batch.push_features(&[1, 3], 2); // feature0 = 1 → bit1 clear
+        batch.push_features(&[2, 0], 2).unwrap(); // feature0 = 2 → bit1 set
+        batch.push_features(&[1, 3], 2).unwrap(); // feature0 = 1 → bit1 clear
         let out = sim.run(&n, &batch);
         assert!(out.bit(0, 0));
         assert!(!out.bit(1, 0));
@@ -202,11 +230,23 @@ mod tests {
         n.outputs = vec![a, b]; // class = a + 2b
         let mut sim = Simulator::new(&n);
         let mut batch = InputBatch::new(2);
-        batch.push_bits(&[true, true]);
-        batch.push_bits(&[false, true]);
+        batch.push_bits(&[true, true]).unwrap();
+        batch.push_bits(&[false, true]).unwrap();
         let out = sim.run(&n, &batch);
         assert_eq!(out.class_of(0, 2), 3);
         assert_eq!(out.class_of(1, 2), 2);
+    }
+
+    #[test]
+    fn push_beyond_lanes_is_a_typed_error_not_a_panic() {
+        let mut batch = InputBatch::new(1);
+        for _ in 0..LANES {
+            batch.push_bits(&[true]).unwrap();
+        }
+        assert_eq!(batch.push_bits(&[true]), Err(LaneOverflow));
+        assert_eq!(batch.push_features(&[1], 1), Err(LaneOverflow));
+        assert_eq!(batch.push_keys(&[true]), Err(LaneOverflow));
+        assert_eq!(batch.lanes, LANES, "failed pushes must not corrupt the batch");
     }
 
     #[test]

@@ -1,22 +1,20 @@
 //! Cross-layer conformance suite (`netlist::conform`).
 //!
-//! Two tiers:
+//! All three checks run under plain `cargo test` (tier 1):
 //!
-//! * **Live checks** (run under plain `cargo test`): the vector files
-//!   parse, are internally consistent, and every layer of the freshly
-//!   computed chain agrees with every other — the same invariant the
-//!   property tests enforce, anchored on the fixed fixtures.
-//! * **Golden comparison** (`#[ignore]`; the dedicated `conformance` CI
-//!   job runs it with `--include-ignored`): the freshly computed chain is
-//!   diffed field-by-field against the committed vectors, so any behavior
+//! * **Live checks**: the vector files parse, are internally consistent,
+//!   and every layer of the freshly computed chain agrees with every
+//!   other — the same invariant the property tests enforce, anchored on
+//!   the fixed fixtures.
+//! * **Golden comparison**: the freshly computed chain is diffed
+//!   field-by-field against the committed vectors, so any behavior
 //!   change in quantization, netlist building, simulation, or Verilog
 //!   emission surfaces as an explicit drift report instead of sliding
 //!   through while the layers still agree with each other.
 //!
 //! Regenerate after an *intentional* behavior change with
-//! `UPDATE_GOLDEN=1 cargo test --test conformance -- --include-ignored`
-//! and commit the rewritten files; DESIGN.md §8 lists what counts as a
-//! legitimate diff.
+//! `UPDATE_GOLDEN=1 cargo test --test conformance` and commit the
+//! rewritten files; DESIGN.md §8 lists what counts as a legitimate diff.
 
 use treelut::netlist::conform::{compute, fixtures, GoldenVector};
 
@@ -46,7 +44,6 @@ fn every_layer_agrees_live() {
 }
 
 #[test]
-#[ignore = "golden comparison; run by the conformance CI job (UPDATE_GOLDEN=1 regenerates)"]
 fn golden_vectors_match_frozen_truth() {
     let update = std::env::var_os("UPDATE_GOLDEN").is_some();
     for fixture in fixtures() {

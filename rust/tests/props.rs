@@ -19,7 +19,7 @@ use treelut::gbdt::{GbdtModel, Tree, TreeNode};
 use treelut::netlist::conform::{class_from_words, replicated_words};
 use treelut::netlist::cyclesim::CycleSimulator;
 use treelut::netlist::simulate::{InputBatch, Simulator};
-use treelut::netlist::{build_netlist, map_luts};
+use treelut::netlist::{build_netlist, map_luts, LANES};
 use treelut::quantize::{quantize_leaves, FlatForest};
 use treelut::rtl::{design_from_quant, Pipeline};
 use treelut::runtime::tensors::eval_perfect;
@@ -100,7 +100,7 @@ fn prop_netlist_equals_quant_predictor() {
         let mut expected = Vec::new();
         for _ in 0..32 {
             let row = random_row(&mut rng, model.n_features, n_bins);
-            batch.push_features(&row, model.w_feature as usize);
+            batch.push_features(&row, model.w_feature as usize).unwrap();
             expected.push(qm.predict_class(&row));
         }
         let out = sim.run(&built.net, &batch);
@@ -240,7 +240,7 @@ fn prop_netlist_flat_and_per_tree_eval_agree() {
             .collect();
         let mut batch = InputBatch::new(built.net.n_inputs);
         for row in &rows {
-            batch.push_features(row, qm.w_feature as usize);
+            batch.push_features(row, qm.w_feature as usize).unwrap();
         }
         let out = sim.run(&built.net, &batch);
 
@@ -353,7 +353,7 @@ fn prop_pipeline_functional_invariance() {
             let mut sim = Simulator::new(&built.net);
             let mut batch = InputBatch::new(built.net.n_inputs);
             for row in &rows {
-                batch.push_features(row, qm.w_feature as usize);
+                batch.push_features(row, qm.w_feature as usize).unwrap();
             }
             let out = sim.run(&built.net, &batch);
             let preds: Vec<u32> =
@@ -382,7 +382,7 @@ fn prop_conifer_baseline_netlist_consistent() {
         let mut expected = Vec::new();
         for _ in 0..16 {
             let row = random_row(&mut rng, qm.n_features, n_bins);
-            batch.push_features(&row, qm.w_feature as usize);
+            batch.push_features(&row, qm.w_feature as usize).unwrap();
             expected.push(qm.predict_class(&row));
         }
         let out = sim.run(&built.net, &batch);
@@ -413,9 +413,9 @@ fn prop_cycle_sim_matches_functional_sim_and_pipeline_claims() {
         // exactly (registers-transparent view == clocked view).
         let mut batch = InputBatch::new(built.net.n_inputs);
         let rows: Vec<Vec<u16>> =
-            (0..64).map(|_| random_row(&mut rng, qm.n_features, n_bins)).collect();
+            (0..LANES).map(|_| random_row(&mut rng, qm.n_features, n_bins)).collect();
         for row in &rows {
-            batch.push_features(row, w);
+            batch.push_features(row, w).unwrap();
         }
         let mut fun = Simulator::new(&built.net);
         let expect = fun.run(&built.net, &batch);
@@ -484,4 +484,50 @@ fn prop_netlist_executor_agrees_with_flat_executor() {
         total_rows += rows.len();
     }
     assert!(total_rows >= 1000, "property must cover >= 1000 rows, got {total_rows}");
+}
+
+/// The coalescing path (`LaneExecutor` issue/flush: words overlapped in
+/// the register-cut pipeline at II = 1) agrees with the flat-forest
+/// executor row for row — across seeded random models, random pipeline
+/// depths (including the unpipelined cuts = 0 design), and random word
+/// sizes crossing the lane-width boundary.
+#[test]
+fn prop_coalesced_netlist_executor_agrees_with_flat_executor() {
+    use treelut::coordinator::LaneExecutor;
+    let mut rng = Rng::new(0xC0A7);
+    for case in 0..10 {
+        let (model, n_bins) = random_model(&mut rng, case % 2 == 0);
+        let w_tree = 1 + rng.below(5) as u8;
+        let (qm, _) = quantize_leaves(&model, w_tree);
+        // Case 0 pins the combinational (cuts = 0) design; the rest draw
+        // random register-cut configurations.
+        let pipeline = if case == 0 {
+            Pipeline::new(0, 0, 0)
+        } else {
+            Pipeline::new(rng.below(2), rng.below(2), rng.below(3))
+        };
+        let netlist = NetlistExecutor::new(&qm, pipeline, 256).unwrap();
+        let flat = FlatExecutor::new(&qm, 256).unwrap();
+
+        let rows: Vec<Vec<u16>> =
+            (0..96).map(|_| random_row(&mut rng, qm.n_features, n_bins)).collect();
+        let refs: Vec<&[u16]> = rows.iter().map(|r| r.as_slice()).collect();
+        let want = flat.execute(&refs).unwrap();
+
+        // Stream in random word sizes; retired words come back in issue
+        // order and flush drains the pipeline remainder.
+        let mut got = Vec::new();
+        let mut off = 0usize;
+        while off < refs.len() {
+            let take = (1 + rng.below(LANES)).min(refs.len() - off);
+            if let Some(preds) = netlist.issue(&refs[off..off + take]).unwrap() {
+                got.extend(preds);
+            }
+            off += take;
+        }
+        for preds in netlist.flush().unwrap() {
+            got.extend(preds);
+        }
+        assert_eq!(got, want, "case {case} pipeline {pipeline:?}");
+    }
 }

@@ -4,8 +4,11 @@
 //! bounded-queue admission control (block / shed-new / shed-oldest) at
 //! overload, the adaptive steal-poll backoff, chaos (shard death mid-load)
 //! containment, shutdown draining, executor-error fan-out, typed
-//! rejection accounting, and the flat-forest executor serving a trained
-//! model bit-exactly.
+//! rejection accounting, the flat-forest executor serving a trained
+//! model bit-exactly, and the lane-coalescing drain (cross-batch word
+//! packing + pipelined cycle-accurate serving: utilization, the
+//! oldest-job deadline anchor, kill-mid-word containment, and the
+//! overfull-word typed-failure regression).
 //!
 //! Every scenario that depends on time runs on the harness's virtual
 //! clock: no sleep-based synchronization anywhere in this file (CI greps
@@ -21,12 +24,13 @@ use treelut::coordinator::testing::{
     ServiceModel,
 };
 use treelut::coordinator::{
-    BatchExecutor, BatchPolicy, CompiledNetlist, DispatchPolicy, FlatExecutor, LaneStats,
-    OverloadPolicy, Server, SubmitError,
+    BatchExecutor, BatchPolicy, CompiledNetlist, DispatchPolicy, FlatExecutor, LaneExecutor,
+    LaneStats, OverloadPolicy, Server, SubmitError,
 };
 use treelut::data::synth;
 use treelut::gbdt::histogram::BinnedMatrix;
 use treelut::gbdt::{train, BoostParams};
+use treelut::netlist::LANES;
 use treelut::quantize::{quantize_leaves, FeatureQuantizer, FlatForest, QuantModel};
 use treelut::rtl::Pipeline;
 
@@ -818,5 +822,199 @@ fn netlist_executor_overload_sheds_deterministically() {
         assert_eq!(reply.class, forest.predict(&rows[i]), "row {i}");
         assert_eq!(reply.latency, 50 * MS, "row {i}");
     }
+    h.server.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// Lane coalescing (cross-batch word packing + pipelined serving)
+// ---------------------------------------------------------------------------
+
+/// The tentpole acceptance scenario: open-loop traffic in small (8-row)
+/// bursts through a single netlist shard. Per-batch serving simulates one
+/// mostly-empty word per burst; the coalescing drain packs jobs across
+/// burst boundaries into full words. Both runs stay bit-exact against the
+/// flat forest.
+#[test]
+fn coalescing_fills_lanes_where_per_batch_serving_cannot() {
+    let (quant, binned) = trained_netlist_model();
+    let forest = FlatForest::compile(&quant).unwrap();
+    // 40 bursts of 8 rows, 1 ms apart: 320 rows = exactly 5 full words.
+    let arrivals: Vec<Duration> = (0..320).map(|i| (i / 8) as u32 * MS).collect();
+    let policy = BatchPolicy { max_batch: 8, max_wait: 20 * MS, ..BatchPolicy::default() };
+
+    // Coalescing ON: words close only when all lanes fill (the 20 ms
+    // oldest-job deadline never fires — a word fills every 8 bursts).
+    let compiled = CompiledNetlist::compile(&quant, Pipeline::new(1, 1, 2)).unwrap();
+    let lanes_on = Arc::new(LaneStats::default());
+    let lanes_f = Arc::clone(&lanes_on);
+    let h = Harness::start_lanes(1, policy, DispatchPolicy::RoundRobin, ChaosPlan::none(), {
+        move |_shard| Ok(compiled.executor(LANES, Arc::clone(&lanes_f)))
+    });
+    let out = h.run_open_loop_rows(&arrivals, |i| binned.row(i % binned.n_rows).to_vec());
+    assert_eq!(out.ok.len(), 320, "every coalesced job must be served");
+    for (id, reply) in &out.ok {
+        let row = binned.row(*id as usize % binned.n_rows);
+        assert_eq!(reply.class, forest.predict(row), "job {id}");
+    }
+    let util_on = lanes_on.utilization();
+    assert!(util_on >= 0.90, "coalescing must fill the lanes: utilization {util_on}");
+    let s = h.server.stats();
+    assert_eq!(s.coalesced_words.load(Ordering::Relaxed), 5, "320 rows pack into 5 full words");
+    assert!(s.pipeline_flushes.load(Ordering::Relaxed) >= 1, "dry queue must flush eagerly");
+    assert!(s.peak_inflight_words.load(Ordering::Relaxed) >= 1);
+    h.server.shutdown();
+
+    // Coalescing OFF (the per-batch loop, same policy): every 8-row burst
+    // becomes its own batch and therefore its own 64-lane word.
+    let compiled = CompiledNetlist::compile(&quant, Pipeline::new(1, 1, 2)).unwrap();
+    let lanes_off = Arc::new(LaneStats::default());
+    let lanes_f = Arc::clone(&lanes_off);
+    let h = Harness::start_real(1, policy, DispatchPolicy::RoundRobin, ChaosPlan::none(), {
+        move |_shard| Ok(compiled.executor(LANES, Arc::clone(&lanes_f)))
+    });
+    let out = h.run_open_loop_rows(&arrivals, |i| binned.row(i % binned.n_rows).to_vec());
+    assert_eq!(out.ok.len(), 320);
+    let util_off = lanes_off.utilization();
+    assert!(
+        util_off <= 0.20,
+        "per-batch serving of 8-row bursts must waste lanes: utilization {util_off}"
+    );
+    h.server.shutdown();
+}
+
+/// Exact-latency deadline anchoring (virtual-time exact): a partial word is
+/// held for stragglers until the *oldest* coalesced job's enqueue-anchored
+/// deadline — not the newest job's, and not worker pickup. Three jobs at
+/// t = 0 and a straggler at 4 ms share one word issued at exactly 20 ms.
+#[test]
+fn coalesced_partial_word_issues_at_oldest_jobs_enqueue_deadline() {
+    let (quant, binned) = trained_netlist_model();
+    let forest = FlatForest::compile(&quant).unwrap();
+    let compiled = CompiledNetlist::compile(&quant, Pipeline::new(0, 1, 1)).unwrap();
+    let h = Harness::start_lanes(
+        1,
+        BatchPolicy { max_batch: 8, max_wait: 20 * MS, ..BatchPolicy::default() },
+        DispatchPolicy::RoundRobin,
+        ChaosPlan::none(),
+        move |_shard| Ok(compiled.executor(LANES, Arc::new(LaneStats::default()))),
+    );
+    let early: Vec<_> =
+        (0..3).map(|i| h.submit_row(binned.row(i).to_vec()).unwrap()).collect();
+    h.advance(4 * MS);
+    let late = h.submit_row(binned.row(3).to_vec()).unwrap();
+    for (i, rx) in early.iter().enumerate() {
+        let reply = h.recv(rx).unwrap();
+        assert_eq!(reply.class, forest.predict(binned.row(i)), "row {i}");
+        // A deadline restarted by the straggler would read 24 ms here.
+        assert_eq!(reply.latency, 20 * MS, "deadline must anchor to the oldest job's enqueue");
+    }
+    let reply = h.recv(&late).unwrap();
+    assert_eq!(reply.class, forest.predict(binned.row(3)));
+    assert_eq!(reply.latency, 16 * MS, "straggler rides the word the oldest job closes");
+    h.server.shutdown();
+}
+
+/// Chaos kill mid-word over a 2-shard coalescing pool: the word in flight
+/// on the dying shard fails all of its coalesced jobs explicitly, the
+/// sibling keeps serving bit-exactly, and post-kill traffic routes around
+/// the dead shard — zero silently lost jobs.
+#[test]
+fn chaos_kill_mid_word_fails_the_word_and_sibling_serves_bit_exact() {
+    let (quant, binned) = trained_netlist_model();
+    let forest = FlatForest::compile(&quant).unwrap();
+    let compiled = CompiledNetlist::compile(&quant, Pipeline::new(1, 1, 2)).unwrap();
+    let h = Harness::start_lanes(
+        2,
+        BatchPolicy { max_batch: 8, max_wait: 10 * MS, ..BatchPolicy::default() },
+        DispatchPolicy::RoundRobin,
+        ChaosPlan::kill(0, 0), // shard 0 dies issuing its first word
+        move |_shard| Ok(compiled.executor(LANES, Arc::new(LaneStats::default()))),
+    );
+    // Five jobs at t = 0 split round-robin (j0/j2/j4 -> shard 0, j1/j3 ->
+    // shard 1) and coalesce into one partial word per shard; both words
+    // issue at the 10 ms deadline, where the kill fires. Five more jobs
+    // arrive after the kill and must land on the survivor.
+    let mut arrivals = vec![Duration::ZERO; 5];
+    arrivals.extend([15 * MS; 5]);
+    let out = h.run_open_loop_rows(&arrivals, |i| binned.row(i).to_vec());
+    let mut failed_ids: Vec<u16> = out.failed.iter().map(|(id, _)| *id).collect();
+    failed_ids.sort_unstable();
+    assert_eq!(failed_ids, vec![0, 2, 4], "exactly the dying word's coalesced jobs fail");
+    for (id, e) in &out.failed {
+        assert!(e.to_string().contains("panicked"), "job {id}: {e}");
+    }
+    assert_eq!(out.ok.len(), 7, "every other job must be served");
+    for (id, reply) in &out.ok {
+        assert_eq!(reply.class, forest.predict(binned.row(*id as usize)), "job {id}");
+    }
+    assert_eq!(h.server.live_shards(), 1);
+    assert_eq!(h.server.stats().rejected.load(Ordering::Relaxed), 3);
+    h.server.shutdown();
+}
+
+/// A lane-lying wrapper: advertises one more lane than the inner executor
+/// packs, so the coalescer builds an overfull word. Regression vehicle for
+/// the `InputBatch` overflow bug — formerly an `assert!` panic that would
+/// kill the shard; now a typed [`treelut::netlist::LaneOverflow`] the
+/// worker turns into an explicit failed batch.
+struct OverPacker<E>(E);
+
+impl<E: BatchExecutor> BatchExecutor for OverPacker<E> {
+    fn max_batch(&self) -> usize {
+        self.0.max_batch()
+    }
+    fn n_features(&self) -> usize {
+        self.0.n_features()
+    }
+    fn execute(&self, rows: &[&[u16]]) -> anyhow::Result<Vec<u32>> {
+        self.0.execute(rows)
+    }
+}
+
+impl<E: LaneExecutor> LaneExecutor for OverPacker<E> {
+    fn lanes(&self) -> usize {
+        self.0.lanes() + 1
+    }
+    fn pipeline_depth(&self) -> usize {
+        self.0.pipeline_depth()
+    }
+    fn issue(&self, rows: &[&[u16]]) -> anyhow::Result<Option<Vec<u32>>> {
+        self.0.issue(rows)
+    }
+    fn flush(&self) -> anyhow::Result<Vec<Vec<u32>>> {
+        self.0.flush()
+    }
+}
+
+/// Overfull-word regression: packing one row past the lane width fails the
+/// whole word with a typed error reply ("batch failed", not a panic), the
+/// worker survives, and the executor — reset per the `LaneExecutor` error
+/// contract — keeps serving correctly.
+#[test]
+fn overfull_word_is_a_failed_batch_not_a_worker_death() {
+    let (quant, binned) = trained_netlist_model();
+    let forest = FlatForest::compile(&quant).unwrap();
+    let compiled = CompiledNetlist::compile(&quant, Pipeline::new(0, 1, 1)).unwrap();
+    let h = Harness::start_lanes(
+        1,
+        BatchPolicy { max_batch: 8, max_wait: 50 * MS, ..BatchPolicy::default() },
+        DispatchPolicy::RoundRobin,
+        ChaosPlan::none(),
+        move |_shard| Ok(OverPacker(compiled.executor(LANES, Arc::new(LaneStats::default())))),
+    );
+    // The lie makes the word close at LANES + 1 jobs; the last push
+    // overflows the `InputBatch` inside `issue`.
+    let rxs: Vec<_> = (0..LANES + 1)
+        .map(|i| h.submit_row(binned.row(i % binned.n_rows).to_vec()).unwrap())
+        .collect();
+    for (i, rx) in rxs.iter().enumerate() {
+        let e = h.recv(rx).expect_err("overfull word must fail every coalesced job");
+        assert!(e.to_string().contains("batch failed"), "job {i}: {e}");
+    }
+    assert_eq!(h.server.live_shards(), 1, "typed overflow must not kill the worker");
+    // The pipeline reset on error; the next job streams correctly.
+    let rx = h.submit_row(binned.row(0).to_vec()).unwrap();
+    let reply = h.recv(&rx).unwrap();
+    assert_eq!(reply.class, forest.predict(binned.row(0)));
     h.server.shutdown();
 }
