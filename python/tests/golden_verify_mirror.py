@@ -1,0 +1,782 @@
+#!/usr/bin/env python3
+"""Independent mirror of the Rust netlist builder + static verifier summary.
+
+The golden vectors in ``rust/tests/vectors/*.json`` freeze a ``verify``
+object (diagnostic counts + duplication census, see ``netlist::verify`` and
+DESIGN.md section 9). This script recomputes that object from scratch — a
+line-for-line Python mirror of ``quantize_leaves``, ``design_from_quant``,
+``build_netlist`` (including structural hashing, constant folding and carry
+chains) and the verifier's well-formed / dead-const / census passes — and
+splices it into the vector files.
+
+The mirror is validated before it writes anything:
+
+* the mirrored quantizer must reproduce the frozen ``quant_biases`` and
+  ``quant_leaves`` exactly;
+* the mirrored netlist, simulated on the frozen ``rows``, must reproduce
+  the frozen ``netlist_classes`` bit-for-bit, and its register-cut count
+  must equal the frozen ``cuts``.
+
+The mapping-legality pass is not mirrored: on a valid build it emits zero
+diagnostics (the Rust test suite asserts this), so it contributes nothing
+to the summary. Rounding note: Rust ``f64::round`` rounds half away from
+zero; Python ``round`` is banker's rounding, so ``round_half_away`` below
+is used everywhere Rust rounds.
+
+Usage:  python3 python/tests/golden_verify_mirror.py [--check]
+
+``--check`` recomputes and compares without rewriting the files (exits
+non-zero on drift). Once a Rust toolchain is available the authoritative
+regeneration is ``UPDATE_GOLDEN=1 cargo test --test conformance``.
+"""
+
+import json
+import math
+import os
+import sys
+
+VECTOR_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "rust", "tests", "vectors")
+
+NO_CHAIN = -1
+
+
+def round_half_away(x):
+    """Rust f64::round — half away from zero (Python round() is banker's)."""
+    return math.floor(x + 0.5) if x >= 0 else math.ceil(x - 0.5)
+
+
+def bits_for(v):
+    """quantize::model::bits_for — bit width of v, minimum 1."""
+    return max(v.bit_length(), 1)
+
+
+# ---------------------------------------------------------------------------
+# Fixture models (mirror of netlist::conform::fixtures)
+# ---------------------------------------------------------------------------
+
+def split(feat, thresh, left, right):
+    return ("split", feat, thresh, left, right)
+
+
+def leaf(value):
+    return ("leaf", value)
+
+
+def stump_model():
+    return {
+        "trees": [
+            [split(0, 2, 1, 2), leaf(0.0), leaf(1.5)],
+            [split(1, 1, 1, 2), leaf(-0.5), leaf(1.0)],
+        ],
+        "n_groups": 1,
+        "base_score": -0.5,
+        "n_features": 2,
+        "w_feature": 2,
+    }
+
+
+FIXTURES = [
+    {"name": "binary_stump", "model": stump_model(), "w_tree": 3, "pipeline": (0, 0, 0)},
+    {"name": "binary_pipelined", "model": stump_model(), "w_tree": 3, "pipeline": (1, 1, 1)},
+    {
+        "name": "deep_binary",
+        "model": {
+            "trees": [
+                [
+                    split(0, 2, 1, 2),
+                    split(1, 1, 3, 4),
+                    split(1, 3, 5, 6),
+                    leaf(0.0),
+                    leaf(0.75),
+                    leaf(1.5),
+                    leaf(3.0),
+                ],
+                [leaf(0.5)],
+            ],
+            "n_groups": 1,
+            "base_score": -1.0,
+            "n_features": 2,
+            "w_feature": 2,
+        },
+        "w_tree": 3,
+        "pipeline": (0, 1, 1),
+    },
+    {
+        "name": "multiclass_trio",
+        "model": {
+            "trees": [
+                [split(0, 1, 1, 2), leaf(0.0), leaf(2.0)],
+                [split(1, 2, 1, 2), leaf(0.4), leaf(-0.4)],
+                [leaf(1.0)],
+            ],
+            "n_groups": 3,
+            "base_score": 0.2,
+            "n_features": 2,
+            "w_feature": 2,
+        },
+        "w_tree": 2,
+        "pipeline": (0, 0, 0),
+    },
+]
+
+
+# ---------------------------------------------------------------------------
+# Leaf quantization (mirror of quantize::leaf::quantize_leaves)
+# ---------------------------------------------------------------------------
+
+def tree_leaves(tree):
+    return [n[1] for n in tree if n[0] == "leaf"]
+
+
+def quantize_leaves(model, w_tree):
+    trees, n_groups = model["trees"], model["n_groups"]
+    min_leaves = [min(tree_leaves(t)) for t in trees]
+    biases = [float(model["base_score"])] * n_groups
+    for i, ml in enumerate(min_leaves):
+        biases[i % n_groups] += ml
+    max_shifted = 0.0
+    for i, t in enumerate(trees):
+        max_shifted = max(max_shifted, max(tree_leaves(t)) - min_leaves[i])
+    scale = ((1 << w_tree) - 1) / max_shifted if max_shifted > 0.0 else 1.0
+
+    q_trees = []
+    for i, t in enumerate(trees):
+        q = []
+        for n in t:
+            if n[0] == "split":
+                q.append(n)
+            else:
+                q.append(("leaf", round_half_away((n[1] - min_leaves[i]) * scale)))
+        q_trees.append(q)
+    q_biases = [round_half_away(b * scale) for b in biases]
+    return {
+        "trees": q_trees,
+        "n_groups": n_groups,
+        "biases": q_biases,
+        "n_features": model["n_features"],
+        "w_feature": model["w_feature"],
+    }
+
+
+# ---------------------------------------------------------------------------
+# Design IR (mirror of rtl::build::design_from_quant)
+# ---------------------------------------------------------------------------
+
+def tree_logic(tree, key_index):
+    """DFS path enumeration grouped by unique non-zero leaf value."""
+    by_value = {}
+
+    def walk(node, stack):
+        n = tree[node]
+        if n[0] == "leaf":
+            if n[1] > 0:
+                by_value.setdefault(n[1], []).append(list(stack))
+            return
+        _, feat, thresh, left, right = n
+        k = key_index[(feat, thresh)]
+        stack.append((k, False))
+        walk(left, stack)
+        stack.pop()
+        stack.append((k, True))
+        walk(right, stack)
+        stack.pop()
+
+    walk(0, [])
+    cases = sorted(by_value.items())
+    max_v = cases[-1][0] if cases else 0
+    return {"cases": cases, "out_bits": bits_for(max_v)}
+
+
+def design_from_quant(quant, pipeline):
+    keys = sorted(
+        {
+            (n[1], n[2])
+            for t in quant["trees"]
+            for n in t
+            if n[0] == "split"
+        }
+    )
+    key_index = {k: i for i, k in enumerate(keys)}
+    trees = [tree_logic(t, key_index) for t in quant["trees"]]
+    if quant["n_groups"] == 1:
+        decision = ("binary", -quant["biases"][0])
+    else:
+        offset = -min(min(quant["biases"]), 0)
+        decision = ("multiclass", [b + offset for b in quant["biases"]])
+    return {
+        "n_features": quant["n_features"],
+        "w_feature": quant["w_feature"],
+        "keys": keys,
+        "trees": trees,
+        "n_groups": quant["n_groups"],
+        "decision": decision,
+        "pipeline": pipeline,
+    }
+
+
+# ---------------------------------------------------------------------------
+# Gate netlist (mirror of netlist::gate::Netlist)
+# ---------------------------------------------------------------------------
+
+class Net:
+    """Gates are tuples: ('in', k), ('const', v), ('not', a), ('and', a, b),
+    ('or', a, b), ('xor', a, b), ('reg', a) — same semantics as gate.rs."""
+
+    def __init__(self, n_inputs):
+        self.gates = []
+        self.outputs = []
+        self.n_inputs = n_inputs
+        self.chains = []  # area_luts per chain
+        self.chain_of = []
+        self.strash = {}
+        self.strash_off = False
+
+    def push(self, g):
+        if not self.strash_off and g in self.strash:
+            return self.strash[g]
+        i = len(self.gates)
+        self.gates.append(g)
+        self.chain_of.append(NO_CHAIN)
+        if not self.strash_off:
+            self.strash[g] = i
+        return i
+
+    def mark(self):
+        return len(self.gates)
+
+    def seal_chain(self, mark, area_luts):
+        if mark == len(self.gates):
+            return
+        cid = len(self.chains)
+        self.chains.append(area_luts)
+        for i in range(mark, len(self.gates)):
+            self.chain_of[i] = cid
+
+    def input(self, i):
+        return self.push(("in", i))
+
+    def constant(self, v):
+        return self.push(("const", bool(v)))
+
+    def const_of(self, i):
+        g = self.gates[i]
+        return g[1] if g[0] == "const" else None
+
+    def not_(self, a):
+        v = self.const_of(a)
+        if v is not None:
+            return self.constant(not v)
+        if self.gates[a][0] == "not":
+            return self.gates[a][1]
+        return self.push(("not", a))
+
+    def and2(self, a, b):
+        ca, cb = self.const_of(a), self.const_of(b)
+        if ca is False or cb is False:
+            return self.constant(False)
+        if ca is True:
+            return b
+        if cb is True:
+            return a
+        if a == b:
+            return a
+        return self.push(("and", min(a, b), max(a, b)))
+
+    def or2(self, a, b):
+        ca, cb = self.const_of(a), self.const_of(b)
+        if ca is True or cb is True:
+            return self.constant(True)
+        if ca is False:
+            return b
+        if cb is False:
+            return a
+        if a == b:
+            return a
+        return self.push(("or", min(a, b), max(a, b)))
+
+    def xor2(self, a, b):
+        ca, cb = self.const_of(a), self.const_of(b)
+        if ca is False:
+            return b
+        if cb is False:
+            return a
+        if ca is True:
+            return self.not_(b)
+        if cb is True:
+            return self.not_(a)
+        if a == b:
+            return self.constant(False)
+        return self.push(("xor", min(a, b), max(a, b)))
+
+    def reg(self, a):
+        if self.const_of(a) is not None:
+            return a
+        return self.push(("reg", a))
+
+    def reg_bits(self, xs):
+        return [self.reg(x) for x in xs]
+
+    def reduce(self, xs, is_and):
+        if not xs:
+            return self.constant(is_and)
+        if len(xs) == 1:
+            return xs[0]
+        layer = list(xs)
+        while len(layer) > 1:
+            nxt = []
+            for c in range(0, len(layer), 6):
+                sub = layer[c : c + 6]
+                while len(sub) > 1:
+                    pairs = []
+                    for p in range(0, len(sub), 2):
+                        pair = sub[p : p + 2]
+                        if len(pair) == 2:
+                            pairs.append(
+                                self.and2(*pair) if is_and else self.or2(*pair)
+                            )
+                        else:
+                            pairs.append(pair[0])
+                    sub = pairs
+                nxt.append(sub[0])
+            layer = nxt
+        return layer[0]
+
+    def and_many(self, xs):
+        return self.reduce(xs, True)
+
+    def or_many(self, xs):
+        return self.reduce(xs, False)
+
+    def const_bits(self, value, width):
+        return [self.constant((value >> i) & 1 == 1) for i in range(width)]
+
+    def add(self, a, b):
+        if not a and not b:
+            return [self.constant(False)]
+        mark = self.mark()
+        self.strash_off = True
+        w = max(len(a), len(b))
+        f = self.constant(False)
+        out = []
+        carry = f
+        for i in range(w):
+            ai = a[i] if i < len(a) else f
+            bi = b[i] if i < len(b) else f
+            axb = self.xor2(ai, bi)
+            out.append(self.xor2(axb, carry))
+            ab = self.and2(ai, bi)
+            ca = self.and2(carry, axb)
+            carry = self.or2(ab, ca)
+        out.append(carry)
+        self.strash_off = False
+        self.seal_chain(mark, w + 1)
+        return out
+
+    def ge_const(self, x, c):
+        if c == 0:
+            return self.constant(True)
+        if len(x) < 64 and c >= (1 << len(x)):
+            return self.constant(False)
+        mark = self.mark()
+        as_chain = len(x) > 6
+        self.strash_off = as_chain
+        terms = []
+        eq_prefix = self.constant(True)
+        for i in reversed(range(len(x))):
+            if (c >> i) & 1 == 0:
+                terms.append(self.and2(eq_prefix, x[i]))
+                nx = self.not_(x[i])
+                eq_prefix = self.and2(eq_prefix, nx)
+            else:
+                eq_prefix = self.and2(eq_prefix, x[i])
+        terms.append(eq_prefix)
+        out = self.or_many(terms)
+        self.strash_off = False
+        if as_chain:
+            self.seal_chain(mark, (len(x) + 1) // 2)
+        return out
+
+    def stages(self):
+        s = [0] * len(self.gates)
+        for i, g in enumerate(self.gates):
+            if g[0] in ("in", "const"):
+                s[i] = 0
+            elif g[0] == "not":
+                s[i] = s[g[1]]
+            elif g[0] == "reg":
+                s[i] = s[g[1]] + 1
+            else:
+                s[i] = max(s[g[1]], s[g[2]])
+        return s
+
+
+def fanins(g):
+    """All fanins, registers included (verify::fanins)."""
+    if g[0] in ("in", "const"):
+        return ()
+    if g[0] in ("not", "reg"):
+        return (g[1],)
+    return (g[1], g[2])
+
+
+# ---------------------------------------------------------------------------
+# Netlist build (mirror of netlist::build::build_netlist)
+# ---------------------------------------------------------------------------
+
+def build_netlist(design):
+    w = design["w_feature"]
+    net = Net(design["n_features"] * w)
+
+    keys = []
+    for feat, thresh in design["keys"]:
+        bits = [net.input(feat * w + j) for j in range(w)]
+        keys.append(net.ge_const(bits, thresh))
+    p0, p1, p2 = design["pipeline"]
+    if p0 == 1:
+        keys = net.reg_bits(keys)
+
+    tree_bits = []
+    for tree in design["trees"]:
+        selectors = []
+        for value, paths in tree["cases"]:
+            ands = []
+            for lits in paths:
+                acc = net.constant(True)
+                for k, pos in lits:
+                    sig = keys[k]
+                    lit = sig if pos else net.not_(sig)
+                    acc = net.and2(acc, lit)
+                ands.append(acc)
+            selectors.append((value, net.or_many(ands)))
+        bits = []
+        for j in range(tree["out_bits"]):
+            sels = [s for v, s in selectors if (v >> j) & 1 == 1]
+            bits.append(net.or_many(sels))
+        tree_bits.append(bits)
+    if p1 == 1:
+        tree_bits = [net.reg_bits(b) for b in tree_bits]
+
+    n_groups = design["n_groups"]
+    group_sums = []
+    max_inserted_p2 = 0
+    for g in range(n_groups):
+        operands = [
+            list(tree_bits[ti])
+            for ti in range(len(design["trees"]))
+            if ti % n_groups == g and tree_bits[ti]
+        ]
+        if design["decision"][0] == "multiclass":
+            b = design["decision"][1][g]
+            if b > 0:
+                operands.append(net.const_bits(b, b.bit_length()))
+        if not operands:
+            operands.append(net.const_bits(0, 1))
+
+        n_ops = len(operands)
+        levels = (n_ops - 1).bit_length()
+        eff = min(p2, levels)
+        in_tree_cuts = [
+            min(max(round_half_away(i * levels / (eff + 1)), 1), levels)
+            for i in range(1, eff + 1)
+        ]
+
+        layer = operands
+        level = 0
+        while len(layer) > 1:
+            level += 1
+            nxt = []
+            for p in range(0, len(layer), 2):
+                pair = layer[p : p + 2]
+                nxt.append(net.add(pair[0], pair[1]) if len(pair) == 2 else list(pair[0]))
+            if level in in_tree_cuts:
+                nxt = [net.reg_bits(b) for b in nxt]
+            layer = nxt
+        total = layer.pop()
+        leftover = max(0, p2 - levels)
+        for _ in range(leftover):
+            total = net.reg_bits(total)
+        max_inserted_p2 = max(max_inserted_p2, len(in_tree_cuts) + leftover)
+        group_sums.append(total)
+
+    if design["decision"][0] == "binary":
+        threshold = design["decision"][1]
+        y = net.constant(True) if threshold <= 0 else net.ge_const(group_sums[0], threshold)
+        net.outputs = [y]
+        group_widths = [1]
+    else:
+        group_widths = [len(s) for s in group_sums]
+        net.outputs = [bit for s in group_sums for bit in s]
+
+    cuts = p0 + p1 + max_inserted_p2
+    return net, cuts, group_widths
+
+
+# ---------------------------------------------------------------------------
+# Scalar simulation + class decode (gate.rs eval / BuiltDesign::class_of)
+# ---------------------------------------------------------------------------
+
+def classify(net, group_widths, row, w):
+    inputs = [False] * net.n_inputs
+    for f, x in enumerate(row):
+        for j in range(w):
+            inputs[f * w + j] = (x >> j) & 1 == 1
+    v = [False] * len(net.gates)
+    for i, g in enumerate(net.gates):
+        if g[0] == "in":
+            v[i] = inputs[g[1]]
+        elif g[0] == "const":
+            v[i] = g[1]
+        elif g[0] == "not":
+            v[i] = not v[g[1]]
+        elif g[0] == "and":
+            v[i] = v[g[1]] and v[g[2]]
+        elif g[0] == "or":
+            v[i] = v[g[1]] or v[g[2]]
+        elif g[0] == "xor":
+            v[i] = v[g[1]] != v[g[2]]
+        else:  # reg: functionally transparent
+            v[i] = v[g[1]]
+    out = [v[o] for o in net.outputs]
+    if group_widths == [1]:
+        return int(out[0])
+    best, best_val, offset = 0, 0, 0
+    for g, width in enumerate(group_widths):
+        val = sum((1 << j) for j in range(width) if out[offset + j])
+        if g == 0 or val > best_val:
+            best, best_val = g, val
+        offset += width
+    return best
+
+
+# ---------------------------------------------------------------------------
+# Verifier summary (mirror of netlist::verify passes 1, 3, 4; pass 2 emits
+# nothing on a valid build — asserted by the Rust test suite)
+# ---------------------------------------------------------------------------
+
+def verify_summary(net, expect_cuts):
+    errors = warnings = infos = 0
+    stages = net.stages()
+
+    # Pass 1: well-formed. Reference/cycle checks hold by construction for
+    # a mirror-built netlist; stage and chain checks are mirrored in full.
+    def is_const(i):
+        return net.gates[i][0] == "const"
+
+    for g in net.gates:
+        if g[0] in ("and", "or", "xor"):
+            a, b = g[1], g[2]
+            if not is_const(a) and not is_const(b) and stages[a] != stages[b]:
+                errors += 1
+    out_stages = [stages[o] for o in net.outputs if not is_const(o)]
+    if out_stages:
+        if any(s != out_stages[0] for s in out_stages):
+            errors += 1
+        elif out_stages[0] != expect_cuts:
+            errors += 1
+    nc = len(net.chains)
+    first, last, count = [None] * nc, [0] * nc, [0] * nc
+    stage_of_chain = [None] * nc
+    for i, c in enumerate(net.chain_of):
+        if c == NO_CHAIN:
+            continue
+        first[c] = i if first[c] is None else min(first[c], i)
+        last[c] = max(last[c], i)
+        count[c] += 1
+        if net.gates[i][0] == "reg":
+            errors += 1
+            continue
+        if net.gates[i][0] in ("in", "const"):
+            continue
+        if stage_of_chain[c] is None:
+            stage_of_chain[c] = stages[i]
+        elif stage_of_chain[c] != stages[i]:
+            errors += 1
+    for c in range(nc):
+        if count[c] > 0 and last[c] - first[c] + 1 != count[c]:
+            warnings += 1
+
+    # Pass 3: dead & constant analysis.
+    n = len(net.gates)
+    live = [False] * n
+    stack = list(net.outputs)
+    while stack:
+        v = stack.pop()
+        if live[v]:
+            continue
+        live[v] = True
+        for f in fanins(net.gates[v]):
+            if not live[f]:
+                stack.append(f)
+    for i, g in enumerate(net.gates):
+        if live[i] or g[0] == "in":
+            continue
+        if g[0] == "const":
+            infos += 1  # orphaned constant (folding residue)
+        else:
+            warnings += 1  # dead gate
+
+    cv = [None] * n
+    for i, g in enumerate(net.gates):
+        if g[0] == "in":
+            cv[i] = None
+        elif g[0] == "const":
+            cv[i] = g[1]
+        elif g[0] == "not":
+            cv[i] = None if cv[g[1]] is None else not cv[g[1]]
+        elif g[0] == "reg":
+            cv[i] = cv[g[1]]
+        elif g[0] == "and":
+            a, b = cv[g[1]], cv[g[2]]
+            cv[i] = False if (a is False or b is False) else (True if a and b else None)
+        elif g[0] == "or":
+            a, b = cv[g[1]], cv[g[2]]
+            cv[i] = True if (a is True or b is True) else (
+                False if (a is False and b is False) else None
+            )
+        else:  # xor
+            a, b = cv[g[1]], cv[g[2]]
+            cv[i] = None if (a is None or b is None) else (a != b)
+
+    def complement(x, y):
+        return net.gates[y][0] == "not" and net.gates[y][1] == x
+
+    for i, g in enumerate(net.gates):
+        if not live[i]:
+            continue
+        if cv[i] is not None and g[0] != "const":
+            warnings += 1  # constant-foldable gate
+            continue
+        if g[0] in ("and", "or", "xor"):
+            if complement(g[1], g[2]) or complement(g[2], g[1]):
+                warnings += 1  # complement merge
+    for o in net.outputs:
+        if cv[o] is not None:
+            warnings += 1  # output pinned to a constant
+
+    # Pass 4: duplication census.
+    interned = {}
+    sid = [0] * n
+    duplicate_gates = 0
+    for i, g in enumerate(net.gates):
+        if g[0] in ("in", "const"):
+            key = g
+        elif g[0] in ("not", "reg"):
+            key = (g[0], sid[g[1]])
+        else:
+            x, y = sid[g[1]], sid[g[2]]
+            key = (g[0], min(x, y), max(x, y))
+        if key in interned:
+            duplicate_gates += 1
+            sid[i] = interned[key]
+        else:
+            sid[i] = len(interned)
+            interned[key] = sid[i]
+    members = [[] for _ in range(nc)]
+    for i, c in enumerate(net.chain_of):
+        if c != NO_CHAIN:
+            members[c].append(sid[i])
+    chain_sigs = set()
+    duplicate_chains = duplicate_chain_luts = 0
+    for c, area in enumerate(net.chains):
+        key = (area, tuple(members[c]))
+        if key in chain_sigs:
+            duplicate_chains += 1
+            duplicate_chain_luts += area
+        else:
+            chain_sigs.add(key)
+    if duplicate_gates > 0:
+        infos += 1  # the census summary diagnostic
+
+    return {
+        "errors": errors,
+        "warnings": warnings,
+        "infos": infos,
+        "gates": n,
+        "unique_gates": len(interned),
+        "duplicate_gates": duplicate_gates,
+        "chains": nc,
+        "duplicate_chains": duplicate_chains,
+        "duplicate_chain_luts": duplicate_chain_luts,
+    }
+
+
+# ---------------------------------------------------------------------------
+# Vector splice
+# ---------------------------------------------------------------------------
+
+VERIFY_FIELDS = [
+    "errors", "warnings", "infos", "gates", "unique_gates",
+    "duplicate_gates", "chains", "duplicate_chains", "duplicate_chain_luts",
+]
+
+
+def verify_line(v):
+    """Exact single-line format of GoldenVector::to_json."""
+    inner = ", ".join(f'"{k}": {v[k]}' for k in VERIFY_FIELDS)
+    return "  \"verify\": {" + inner + "},"
+
+
+def process(fixture, check_only):
+    path = os.path.join(VECTOR_DIR, fixture["name"] + ".json")
+    with open(path) as f:
+        text = f.read()
+    frozen = json.loads(text)
+
+    quant = quantize_leaves(fixture["model"], fixture["w_tree"])
+    assert quant["biases"] == frozen["quant_biases"], (
+        fixture["name"], quant["biases"], frozen["quant_biases"])
+    q_leaves = [tree_leaves(t) for t in quant["trees"]]
+    assert q_leaves == frozen["quant_leaves"], (
+        fixture["name"], q_leaves, frozen["quant_leaves"])
+
+    design = design_from_quant(quant, fixture["pipeline"])
+    net, cuts, group_widths = build_netlist(design)
+    assert cuts == frozen["cuts"], (fixture["name"], cuts, frozen["cuts"])
+    classes = [
+        classify(net, group_widths, row, quant["w_feature"]) for row in frozen["rows"]
+    ]
+    assert classes == frozen["netlist_classes"], (
+        fixture["name"], classes, frozen["netlist_classes"])
+
+    summary = verify_summary(net, cuts)
+    assert summary["errors"] == 0, (fixture["name"], summary)
+    assert summary["unique_gates"] + summary["duplicate_gates"] == summary["gates"]
+
+    lines = text.split("\n")
+    new = verify_line(summary)
+    out, spliced = [], False
+    for line in lines:
+        if line.startswith('  "verify":'):
+            out.append(new)
+            spliced = True
+        elif line.startswith('  "verilog_fnv1a64":') and not spliced:
+            out.append(new)
+            out.append(line)
+            spliced = True
+        else:
+            out.append(line)
+    assert spliced, f"{path}: no splice point found"
+    new_text = "\n".join(out)
+
+    if new_text == text:
+        print(f"{fixture['name']}: up to date  {summary}")
+        return True
+    if check_only:
+        print(f"{fixture['name']}: DRIFT  {summary}")
+        return False
+    with open(path, "w") as f:
+        f.write(new_text)
+    print(f"{fixture['name']}: wrote verify {summary}")
+    return True
+
+
+def main():
+    check_only = "--check" in sys.argv[1:]
+    ok = True
+    for fixture in FIXTURES:
+        ok &= process(fixture, check_only)
+    sys.exit(0 if ok else 1)
+
+
+if __name__ == "__main__":
+    main()

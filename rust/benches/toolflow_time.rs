@@ -11,7 +11,9 @@
 use treelut::exp::configs::{default_rows, design_points};
 use treelut::exp::table::Table;
 use treelut::exp::{run_design_point, RunOptions};
-use treelut::netlist::{build_netlist, map_luts, Simulator};
+use treelut::netlist::conform::fixtures;
+use treelut::netlist::{build_netlist, map_luts, verify_built, Simulator};
+use treelut::quantize::quantize_leaves;
 use treelut::rtl::{design_from_quant, verilog::emit_verilog};
 use treelut::util::{Args, Timer};
 
@@ -21,8 +23,8 @@ fn main() -> anyhow::Result<()> {
     args.finish()?;
 
     let mut t = Table::new(&[
-        "design point", "train(s)", "quantize+IR(s)", "netlist+map(s)", "verilog(s)",
-        "sim rate (Msample-gate/s)", "gates",
+        "design point", "train(s)", "quantize+IR(s)", "netlist+map(s)", "verify(s)",
+        "verilog(s)", "sim rate (Msample-gate/s)", "gates",
     ]);
     for dp in design_points() {
         let rows =
@@ -40,7 +42,14 @@ fn main() -> anyhow::Result<()> {
 
         // Gate-sim throughput: one 64-lane batch over the whole netlist.
         let built = build_netlist(&design);
-        let _map = map_luts(&built.net);
+        let map = map_luts(&built.net);
+
+        // Static verifier wall time (all four passes over the mapped design).
+        let tm = Timer::start();
+        let report = verify_built(&built, Some(&map));
+        let t_verify = tm.secs();
+        std::hint::black_box(report.diagnostics.len());
+
         let mut sim = Simulator::new(&built.net);
         let mut batch = treelut::netlist::simulate::InputBatch::new(built.net.n_inputs);
         for i in 0..64u16 {
@@ -59,6 +68,7 @@ fn main() -> anyhow::Result<()> {
             format!("{:.2}", r.t_train),
             format!("{:.3}", r.t_quantize),
             format!("{:.3}", r.t_map),
+            format!("{t_verify:.3}"),
             format!("{t_verilog:.3}"),
             format!("{rate:.0}"),
             built.net.len().to_string(),
@@ -66,5 +76,28 @@ fn main() -> anyhow::Result<()> {
     }
     println!("== tool-flow wall clock (paper 4.2: 'a few seconds') ==");
     println!("{}", t.render());
+
+    // Verifier wall time over the frozen conformance fixtures — the same
+    // netlists the CI lint job checks, so this tracks lint latency.
+    let mut v = Table::new(&["fixture", "gates", "LUTs", "diags", "verify(s)"]);
+    for fixture in fixtures() {
+        let (quant, _) = quantize_leaves(&fixture.model, fixture.w_tree);
+        let design = design_from_quant(fixture.name, &quant, fixture.pipeline, true);
+        let built = build_netlist(&design);
+        let map = map_luts(&built.net);
+        let tm = Timer::start();
+        let report = verify_built(&built, Some(&map));
+        let t_verify = tm.secs();
+        v.row(&[
+            fixture.name.to_string(),
+            built.net.len().to_string(),
+            map.luts.to_string(),
+            report.diagnostics.len().to_string(),
+            format!("{t_verify:.4}"),
+        ]);
+    }
+    println!();
+    println!("== static verifier wall clock (conformance fixtures) ==");
+    println!("{}", v.render());
     Ok(())
 }

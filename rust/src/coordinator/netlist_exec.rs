@@ -22,6 +22,7 @@
 
 use super::{BatchExecutor, LaneExecutor};
 use crate::netlist::simulate::{InputBatch, OutputBatch, LANES};
+use crate::netlist::verify::{verify_built, VerifySummary};
 use crate::netlist::{build_netlist, map_luts, BuiltDesign, Simulator, StreamingCycleSim};
 use crate::quantize::{FeatureQuantizer, QuantModel};
 use crate::rtl::{design_from_quant, Pipeline};
@@ -127,13 +128,33 @@ struct CompiledShared {
     meta: NetlistMeta,
     n_features: usize,
     w_feature: usize,
+    /// Static-verifier summary; `None` when compiled with verification off.
+    verify: Option<VerifySummary>,
 }
 
 impl CompiledNetlist {
     /// Lower `model` into the keygen-mode architecture, build the gate
     /// netlist with `pipeline` register cuts, and map it onto 6-LUTs for
     /// the metadata.
+    ///
+    /// Debug builds always run the static verifier
+    /// ([`crate::netlist::verify`]) and refuse structurally invalid
+    /// circuits with a typed [`crate::netlist::VerifyFailure`]; release
+    /// builds skip it here (opt in via [`CompiledNetlist::compile_checked`]
+    /// or `treelut serve --verify`).
     pub fn compile(model: &QuantModel, pipeline: Pipeline) -> anyhow::Result<CompiledNetlist> {
+        Self::compile_checked(model, pipeline, cfg!(debug_assertions))
+    }
+
+    /// [`CompiledNetlist::compile`] with explicit control over the static
+    /// verifier. With `verify` on, Error-severity diagnostics abort the
+    /// compile (downcastable [`crate::netlist::VerifyFailure`]) and the
+    /// summary is retained for [`CompiledNetlist::verify_summary`].
+    pub fn compile_checked(
+        model: &QuantModel,
+        pipeline: Pipeline,
+        verify: bool,
+    ) -> anyhow::Result<CompiledNetlist> {
         model.validate()?;
         anyhow::ensure!(
             (1..=16).contains(&model.w_feature),
@@ -155,6 +176,16 @@ impl CompiledNetlist {
         let n_keys = design.keys.len();
         let built = build_netlist(&design);
         let map = map_luts(&built.net);
+        let summary = if verify {
+            let report = verify_built(&built, Some(&map));
+            if let Some(failure) = report.to_failure() {
+                return Err(anyhow::Error::new(failure)
+                    .context("refusing to serve a structurally invalid netlist"));
+            }
+            Some(report.summary())
+        } else {
+            None
+        };
         let meta = NetlistMeta {
             luts: map.luts,
             ffs: map.ffs,
@@ -169,6 +200,7 @@ impl CompiledNetlist {
                 meta,
                 n_features: model.n_features,
                 w_feature: model.w_feature as usize,
+                verify: summary,
             }),
         })
     }
@@ -176,6 +208,13 @@ impl CompiledNetlist {
     /// Circuit metadata for reporting.
     pub fn meta(&self) -> NetlistMeta {
         self.shared.meta
+    }
+
+    /// The static-verifier summary, when this circuit was compiled with
+    /// verification on ([`CompiledNetlist::compile_checked`]; debug builds
+    /// always verify).
+    pub fn verify_summary(&self) -> Option<VerifySummary> {
+        self.shared.verify
     }
 
     /// Materialize a per-shard executor (its own simulator scratch over
@@ -450,6 +489,17 @@ mod tests {
             *err.downcast_ref::<NetlistExecError>().expect("typed error"),
             NetlistExecError::WidthMismatch { row: 0, got: 1, want: 2 }
         );
+    }
+
+    #[test]
+    fn compile_checked_verifies_and_exposes_summary() {
+        let m = model();
+        let c = CompiledNetlist::compile_checked(&m, Pipeline::new(1, 1, 1), true).unwrap();
+        let s = c.verify_summary().expect("summary retained when verifying");
+        assert_eq!(s.errors, 0, "a valid model must verify clean");
+        assert_eq!(s.gates, c.meta().gates);
+        let off = CompiledNetlist::compile_checked(&m, Pipeline::new(1, 1, 1), false).unwrap();
+        assert!(off.verify_summary().is_none());
     }
 
     #[test]

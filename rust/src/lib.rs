@@ -21,6 +21,11 @@
 //! datasets → calibrated synthetic equivalents, XGBoost → [`gbdt`]) and the
 //! per-experiment index mapping every paper table/figure to a bench target.
 
+// The whole substrate is safe Rust: gate IDs are indices, lanes are u64
+// words, and the verifier (netlist::verify) depends on never UB-ing past
+// a corrupted netlist. Enforced, not aspirational.
+#![forbid(unsafe_code)]
+
 pub mod util;
 pub mod data;
 pub mod gbdt;

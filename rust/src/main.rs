@@ -28,7 +28,15 @@
 //!     admission control (0 = unbounded): at capacity the overload policy
 //!     blocks the submitter, sheds the new request (redirecting to a
 //!     non-full sibling first), or sheds the queue head, and shed counts
-//!     appear in the report
+//!     appear in the report. `--verify` (netlist only) runs the static
+//!     verifier on the compiled circuit and refuses to serve on any
+//!     Error-severity diagnostic (debug builds always verify)
+//! treelut lint [--fixtures] [--config <mnist|jsc|nid> [--variant I|II] [--rows N] [--seed S]]
+//!     static verification + lint (netlist::verify): renders every
+//!     diagnostic and the duplication census for the four conformance
+//!     fixtures (default / --fixtures) or a freshly trained design point
+//!     (--config). Exits non-zero if any Error-severity diagnostic is
+//!     found — the CI gate for structural soundness
 //! ```
 
 use std::path::PathBuf;
@@ -41,16 +49,18 @@ use treelut::data::synth;
 use treelut::exp::configs::{default_rows, design_point};
 use treelut::exp::{run_design_point, RunOptions};
 use treelut::gbdt::train;
+use treelut::netlist::{build_netlist, map_luts, verify_built, BuiltDesign, MapResult, Severity};
 use treelut::quantize::{quantize_leaves, FeatureQuantizer, FlatForest};
 use treelut::rtl::{design_from_quant, verilog::emit_verilog};
 use treelut::runtime::{Engine, Manifest, ModelTensors};
 use treelut::util::{Args, Rng, Timer};
 
-const USAGE: &str = "usage: treelut <flow|train|datasets|serve> [options]
+const USAGE: &str = "usage: treelut <flow|train|datasets|serve|lint> [options]
   flow      --dataset <mnist|jsc|nid> [--variant I|II] [--rows N] [--seed S] [--out DIR] [--bypass-keygen]
   train     --dataset <mnist|jsc|nid> [--variant I|II] [--rows N] [--seed S] --out FILE
   datasets
-  serve     [--config jsc] [--requests N] [--rps R] [--rows N] [--max-wait-us U] [--shards S] [--dispatch round-robin|p2c] [--executor auto|flat|netlist] [--coalesce] [--queue-cap C] [--overload block|shed-new|shed-oldest]";
+  serve     [--config jsc] [--requests N] [--rps R] [--rows N] [--max-wait-us U] [--shards S] [--dispatch round-robin|p2c] [--executor auto|flat|netlist] [--coalesce] [--verify] [--queue-cap C] [--overload block|shed-new|shed-oldest]
+  lint      [--fixtures] [--config <mnist|jsc|nid> [--variant I|II] [--rows N] [--seed S]]";
 
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env();
@@ -60,6 +70,7 @@ fn main() -> anyhow::Result<()> {
         "train" => cmd_train(args),
         "datasets" => cmd_datasets(args),
         "serve" => cmd_serve(args),
+        "lint" => cmd_lint(args),
         _ => {
             eprintln!("{USAGE}");
             std::process::exit(2);
@@ -150,6 +161,86 @@ fn cmd_datasets(args: Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Static verification + lint (`netlist::verify`): render every diagnostic
+/// and the duplication census, exit non-zero on Error severity.
+fn cmd_lint(mut args: Args) -> anyhow::Result<()> {
+    let config = args.opt("config");
+    let fixtures_flag = args.flag("fixtures");
+    let variant_arg = args.get("variant", "");
+    let rows_arg = args.get_as::<usize>("rows", 0);
+    let seed = args.get_as::<u64>("seed", 7);
+    args.finish()?;
+    anyhow::ensure!(
+        !(fixtures_flag && config.is_some()),
+        "--fixtures and --config are mutually exclusive"
+    );
+
+    let mut total_errors = 0usize;
+    let mut targets = 0usize;
+    match config {
+        Some(config) => {
+            // Lint a freshly trained design point, the same chain `serve
+            // --executor netlist` compiles.
+            let variant = if variant_arg.is_empty() {
+                if config == "jsc" { "II".to_string() } else { "I".to_string() }
+            } else {
+                variant_arg
+            };
+            let dp = design_point(&config, &variant)
+                .ok_or_else(|| anyhow::anyhow!("no Table 2 config for {config} ({variant})"))?;
+            let rows = if rows_arg == 0 { default_rows(&config) } else { rows_arg };
+            let ds = synth::by_name(&config, rows, seed)
+                .ok_or_else(|| anyhow::anyhow!("unknown dataset {config}"))?;
+            let (train_ds, _) = ds.split(0.2, seed ^ 1);
+            let fq = FeatureQuantizer::fit(&train_ds, dp.w_feature);
+            let btrain = fq.transform(&train_ds);
+            let model =
+                train(&btrain, &train_ds.y, train_ds.n_classes, &dp.params, dp.w_feature)?;
+            let (quant, _) = quantize_leaves(&model, dp.w_tree);
+            let design = design_from_quant(&config, &quant, dp.pipeline, true);
+            let built = build_netlist(&design);
+            let map = map_luts(&built.net);
+            total_errors += lint_target(&format!("{config} ({variant})"), &built, &map);
+            targets += 1;
+        }
+        None => {
+            // Default (and --fixtures): the four conformance fixtures the
+            // golden vectors pin.
+            for fixture in treelut::netlist::conform::fixtures() {
+                let (quant, _) = quantize_leaves(&fixture.model, fixture.w_tree);
+                let design = design_from_quant(fixture.name, &quant, fixture.pipeline, true);
+                let built = build_netlist(&design);
+                let map = map_luts(&built.net);
+                total_errors += lint_target(fixture.name, &built, &map);
+                targets += 1;
+            }
+        }
+    }
+    anyhow::ensure!(
+        total_errors == 0,
+        "lint: {total_errors} error-severity diagnostic(s) across {targets} target(s)"
+    );
+    println!("lint: {targets} target(s), no error-severity diagnostics");
+    Ok(())
+}
+
+/// Verify one built + mapped design, print its report, and return the
+/// number of Error-severity diagnostics.
+fn lint_target(name: &str, built: &BuiltDesign, map: &MapResult) -> usize {
+    let report = verify_built(built, Some(map));
+    println!("== lint {name} ==");
+    println!(
+        "netlist: {} gates, {} LUTs, {} FFs, {} register cuts, critical depth {}",
+        built.net.len(),
+        map.luts,
+        map.ffs,
+        built.cuts,
+        map.max_stage_depth()
+    );
+    print!("{}", report.render());
+    report.count(Severity::Error)
+}
+
 fn cmd_serve(mut args: Args) -> anyhow::Result<()> {
     let config = args.get("config", "jsc");
     let n_requests = args.get_as::<usize>("requests", 1_000);
@@ -167,6 +258,11 @@ fn cmd_serve(mut args: Args) -> anyhow::Result<()> {
     anyhow::ensure!(
         !coalesce || executor == "netlist",
         "--coalesce requires --executor netlist (the pipelined lane path)"
+    );
+    let verify = args.flag("verify");
+    anyhow::ensure!(
+        !verify || executor == "netlist",
+        "--verify requires --executor netlist (the static verifier runs on the compiled circuit)"
     );
     // 0 = unbounded (the default), matching the library's usize::MAX.
     let queue_cap = match args.get_as::<usize>("queue-cap", 0) {
@@ -226,7 +322,18 @@ fn cmd_serve(mut args: Args) -> anyhow::Result<()> {
         // then every shard simulates its own copy 64 rows per word.
         "netlist" => {
             exec_label = "netlist";
-            let compiled = CompiledNetlist::compile(&quant, dp.pipeline)?;
+            // Debug builds always verify; release verifies under --verify
+            // and refuses structurally invalid circuits with a typed error.
+            let compiled =
+                CompiledNetlist::compile_checked(&quant, dp.pipeline, verify || cfg!(debug_assertions))?;
+            if let Some(s) = compiled.verify_summary() {
+                eprintln!(
+                    "verify: {} errors, {} warnings, {} infos; {} gates ({} duplicate), \
+                     {} chains ({} duplicate)",
+                    s.errors, s.warnings, s.infos, s.gates, s.duplicate_gates, s.chains,
+                    s.duplicate_chains
+                );
+            }
             let lanes = std::sync::Arc::new(LaneStats::default());
             netlist_info = Some((compiled.meta(), std::sync::Arc::clone(&lanes)));
             let factory = move |_shard: usize| {

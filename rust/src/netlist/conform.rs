@@ -31,7 +31,9 @@
 use crate::gbdt::{GbdtModel, Tree, TreeNode};
 use crate::netlist::build::{build_netlist, BuiltDesign};
 use crate::netlist::cyclesim::CycleSimulator;
+use crate::netlist::lutmap::map_luts;
 use crate::netlist::simulate::{InputBatch, OutputBatch, Simulator};
+use crate::netlist::verify::{verify_built, VerifySummary};
 use crate::quantize::{quantize_leaves, FlatForest, QuantNode};
 use crate::rtl::verilog::emit_verilog;
 use crate::rtl::{design_from_quant, Pipeline};
@@ -179,6 +181,10 @@ pub struct GoldenVector {
     /// Cycle-accurate simulation class per row (steady state after `cuts`
     /// clock edges).
     pub cycle_classes: Vec<u32>,
+    /// Static-verifier summary (diagnostic counts + duplication census)
+    /// over the built netlist and its LUT mapping — pins the analysis
+    /// results so refactors diff them against committed truth.
+    pub verify: VerifySummary,
     /// FNV-1a (64-bit) of the emitted Verilog text, `0x`-hex.
     pub verilog_fnv1a64: String,
     /// The emitted Verilog, one entry per line (no trailing newline entry).
@@ -256,6 +262,9 @@ pub fn compute(fixture: &Fixture) -> GoldenVector {
         cycle_classes.push(class_from_words(&built, last, 0));
     }
 
+    let map = map_luts(&built.net);
+    let verify = verify_built(&built, Some(&map)).summary();
+
     let verilog_text = emit_verilog(&design);
     let verilog_fnv1a64 = format!("0x{:016x}", fnv1a64(verilog_text.as_bytes()));
     let mut verilog: Vec<String> = verilog_text.split('\n').map(str::to_string).collect();
@@ -277,6 +286,7 @@ pub fn compute(fixture: &Fixture) -> GoldenVector {
         flat_classes,
         netlist_classes,
         cycle_classes,
+        verify,
         verilog_fnv1a64,
         verilog,
     }
@@ -311,6 +321,7 @@ impl GoldenVector {
         check("flat_classes", &self.flat_classes, &frozen.flat_classes)?;
         check("netlist_classes", &self.netlist_classes, &frozen.netlist_classes)?;
         check("cycle_classes", &self.cycle_classes, &frozen.cycle_classes)?;
+        check("verify", &self.verify, &frozen.verify)?;
         for (i, (got, want)) in self.verilog.iter().zip(&frozen.verilog).enumerate() {
             anyhow::ensure!(
                 got == want,
@@ -392,6 +403,14 @@ impl GoldenVector {
         s.push_str(&format!("  \"flat_classes\": {},\n", json_arr(&self.flat_classes)));
         s.push_str(&format!("  \"netlist_classes\": {},\n", json_arr(&self.netlist_classes)));
         s.push_str(&format!("  \"cycle_classes\": {},\n", json_arr(&self.cycle_classes)));
+        let v = &self.verify;
+        s.push_str(&format!(
+            "  \"verify\": {{\"errors\": {}, \"warnings\": {}, \"infos\": {}, \
+             \"gates\": {}, \"unique_gates\": {}, \"duplicate_gates\": {}, \
+             \"chains\": {}, \"duplicate_chains\": {}, \"duplicate_chain_luts\": {}}},\n",
+            v.errors, v.warnings, v.infos, v.gates, v.unique_gates, v.duplicate_gates,
+            v.chains, v.duplicate_chains, v.duplicate_chain_luts
+        ));
         s.push_str(&format!("  \"verilog_fnv1a64\": {},\n", json_str(&self.verilog_fnv1a64)));
         s.push_str("  \"verilog\": [\n");
         for (i, line) in self.verilog.iter().enumerate() {
@@ -429,6 +448,29 @@ impl GoldenVector {
             flat_classes: obj.arr_field("flat_classes")?.nums_as_u32()?,
             netlist_classes: obj.arr_field("netlist_classes")?.nums_as_u32()?,
             cycle_classes: obj.arr_field("cycle_classes")?.nums_as_u32()?,
+            verify: {
+                let v = obj.field("verify")?.as_obj()?;
+                VerifySummary {
+                    errors: fit(v.num_field("errors")?, "verify.errors")?,
+                    warnings: fit(v.num_field("warnings")?, "verify.warnings")?,
+                    infos: fit(v.num_field("infos")?, "verify.infos")?,
+                    gates: fit(v.num_field("gates")?, "verify.gates")?,
+                    unique_gates: fit(v.num_field("unique_gates")?, "verify.unique_gates")?,
+                    duplicate_gates: fit(
+                        v.num_field("duplicate_gates")?,
+                        "verify.duplicate_gates",
+                    )?,
+                    chains: fit(v.num_field("chains")?, "verify.chains")?,
+                    duplicate_chains: fit(
+                        v.num_field("duplicate_chains")?,
+                        "verify.duplicate_chains",
+                    )?,
+                    duplicate_chain_luts: fit(
+                        v.num_field("duplicate_chain_luts")?,
+                        "verify.duplicate_chain_luts",
+                    )?,
+                }
+            },
             verilog_fnv1a64: obj.str_field("verilog_fnv1a64")?,
             verilog: obj.arr_field("verilog")?.strs()?,
         })
@@ -759,6 +801,20 @@ mod tests {
             // These fixtures are constructed with wide quantization margins:
             // the float and integer decisions agree on every pinned row.
             assert_eq!(v.float_classes, v.quant_classes, "{}: float", fixture.name);
+        }
+    }
+
+    #[test]
+    fn fixtures_verify_with_zero_errors() {
+        for fixture in fixtures() {
+            let v = compute(&fixture);
+            assert_eq!(v.verify.errors, 0, "{} must lint clean", fixture.name);
+            assert_eq!(
+                v.verify.unique_gates + v.verify.duplicate_gates,
+                v.verify.gates,
+                "{}: census partition",
+                fixture.name
+            );
         }
     }
 

@@ -247,7 +247,14 @@ impl Netlist {
     /// Unsigned addition; result has `max(w_a, w_b) + 1` bits. Built as a
     /// ripple-carry gate structure, annotated as a carry chain: the FPGA
     /// maps it onto CARRY8 at ~1 LUT/bit and one LUT level of delay.
+    ///
+    /// Edge cases are identities, never out-of-bounds: mismatched widths
+    /// zero-extend the narrower operand, and two empty operands add to the
+    /// 1-bit zero word `[const 0]` (no chain is created).
     pub fn add(&mut self, a: &[NodeId], b: &[NodeId]) -> Vec<NodeId> {
+        if a.is_empty() && b.is_empty() {
+            return vec![self.constant(false)];
+        }
         let mark = self.mark();
         self.strash_off = true;
         let w = a.len().max(b.len());
@@ -275,6 +282,10 @@ impl Netlist {
     ///
     /// Narrow compares (≤ 6 input bits) stay generic logic — they fit one
     /// LUT. Wider ones are annotated as carry chains (~1 LUT / 2 bits).
+    ///
+    /// Degenerate comparisons fold to constants: `c == 0` → const 1,
+    /// `c ≥ 2^len(x)` → const 0 (so an empty `x` yields `c == 0`), never
+    /// an out-of-bounds access.
     pub fn ge_const(&mut self, x: &[NodeId], c: u64) -> NodeId {
         if c == 0 {
             return self.constant(true);
@@ -308,9 +319,14 @@ impl Netlist {
         out
     }
 
-    /// `a > b` for unsigned LSB-first vectors (widths may differ).
-    /// Chain-annotated when more than 6 input bits are involved.
+    /// `a > b` for unsigned LSB-first vectors (widths may differ; the
+    /// narrower operand is zero-extended). Chain-annotated when more than
+    /// 6 input bits are involved. Two empty operands compare equal, so the
+    /// result folds to const 0.
     pub fn gt(&mut self, a: &[NodeId], b: &[NodeId]) -> NodeId {
+        if a.is_empty() && b.is_empty() {
+            return self.constant(false);
+        }
         let mark = self.mark();
         let as_chain = a.len() + b.len() > 6;
         self.strash_off = as_chain;
@@ -336,8 +352,13 @@ impl Netlist {
         gt
     }
 
-    /// Per-bit 2:1 mux: `sel ? a : b` (widths may differ; zero-extended).
+    /// Per-bit 2:1 mux: `sel ? a : b` (widths may differ; the narrower
+    /// word is zero-extended). Two empty words mux to the empty word —
+    /// no gates are created and nothing is indexed out of bounds.
     pub fn mux_bits(&mut self, sel: NodeId, a: &[NodeId], b: &[NodeId]) -> Vec<NodeId> {
+        if a.is_empty() && b.is_empty() {
+            return Vec::new();
+        }
         let w = a.len().max(b.len());
         let f = self.constant(false);
         (0..w)
@@ -537,6 +558,88 @@ mod tests {
         assert_eq!(stages[y as usize], 1);
         assert_eq!(stages[r2 as usize], 2);
         assert_eq!(n.n_regs(), 3);
+    }
+
+    #[test]
+    fn add_empty_operands_is_zero_word() {
+        let mut n = Netlist::new(0);
+        let s = n.add(&[], &[]);
+        assert_eq!(s.len(), 1);
+        assert_eq!(n.const_of(s[0]), Some(false));
+        assert!(n.chains.is_empty(), "empty add must not materialize a chain");
+    }
+
+    #[test]
+    fn add_mismatched_widths_zero_extends() {
+        // 4-bit + 2-bit, exhaustive: narrower operand is zero-extended.
+        let mut n = Netlist::new(6);
+        let a: Vec<_> = (0..4).map(|i| n.input(i)).collect();
+        let b: Vec<_> = (4..6).map(|i| n.input(i)).collect();
+        let sum = n.add(&a, &b);
+        assert_eq!(sum.len(), 5);
+        n.outputs = sum;
+        for x in 0..16u64 {
+            for y in 0..4u64 {
+                let mut inp = vec![false; 6];
+                for i in 0..4 {
+                    inp[i] = (x >> i) & 1 == 1;
+                }
+                for i in 0..2 {
+                    inp[4 + i] = (y >> i) & 1 == 1;
+                }
+                assert_eq!(bits_val(&eval(&n, &inp)), x + y, "{x}+{y}");
+            }
+        }
+    }
+
+    #[test]
+    fn add_one_empty_operand_is_identity_plus_carry() {
+        let mut n = Netlist::new(3);
+        let a: Vec<_> = (0..3).map(|i| n.input(i)).collect();
+        let sum = n.add(&a, &[]);
+        assert_eq!(sum.len(), 4);
+        n.outputs = sum;
+        for x in 0..8u64 {
+            let inp: Vec<bool> = (0..3).map(|i| (x >> i) & 1 == 1).collect();
+            assert_eq!(bits_val(&eval(&n, &inp)), x, "{x}+0");
+        }
+    }
+
+    #[test]
+    fn mux_bits_empty_and_mismatched() {
+        let mut n = Netlist::new(3);
+        let s = n.input(0);
+        assert!(n.mux_bits(s, &[], &[]).is_empty());
+        // 2-bit vs empty: false branch zero-extends.
+        let a: Vec<_> = (1..3).map(|i| n.input(i)).collect();
+        let m = n.mux_bits(s, &a, &[]);
+        assert_eq!(m.len(), 2);
+        n.outputs = m;
+        assert_eq!(eval(&n, &[true, true, true]), vec![true, true]);
+        assert_eq!(eval(&n, &[false, true, true]), vec![false, false]);
+    }
+
+    #[test]
+    fn gt_empty_operands_fold() {
+        let mut n = Netlist::new(2);
+        let g = n.gt(&[], &[]);
+        assert_eq!(n.const_of(g), Some(false));
+        // Non-empty vs empty: a > 0 iff any bit of a is set.
+        let a: Vec<_> = (0..2).map(|i| n.input(i)).collect();
+        let g2 = n.gt(&a, &[]);
+        n.outputs = vec![g2];
+        assert!(!eval(&n, &[false, false])[0]);
+        assert!(eval(&n, &[true, false])[0]);
+        assert!(eval(&n, &[false, true])[0]);
+    }
+
+    #[test]
+    fn ge_const_empty_word() {
+        let mut n = Netlist::new(0);
+        let t = n.ge_const(&[], 0);
+        let f = n.ge_const(&[], 1);
+        assert_eq!(n.const_of(t), Some(true));
+        assert_eq!(n.const_of(f), Some(false));
     }
 
     #[test]

@@ -74,16 +74,38 @@ impl Cut {
     }
 }
 
+/// One LUT chosen by the covering pass: a root gate plus the cut leaves
+/// that become the LUT's physical inputs.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Lut {
+    /// Gate implemented by this LUT (the cut root).
+    pub root: u32,
+    /// Cut leaves (≤ K, sorted ascending): inputs, constants, registers,
+    /// other LUT roots, or carry-chain taps.
+    pub leaves: Vec<u32>,
+}
+
 /// Result of mapping.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct MapResult {
-    /// Number of LUTs in the cover.
+    /// Number of LUTs in the cover (generic cover + carry-chain area).
     pub luts: usize,
     /// Number of flip-flops (register nodes).
     pub ffs: usize,
     /// LUT depth of the deepest combinational segment, per pipeline stage
-    /// (index = stage id; length = cuts + 1).
+    /// (index = stage id; length = cuts + 1). Depths are taken over the
+    /// chosen cover (roots + reachable chain gates), not interior or dead
+    /// gates, so they reflect the mapped network.
     pub stage_depths: Vec<u32>,
+    /// The generic-logic cover: one entry per chosen cut root, in the
+    /// order the covering walk committed them. `luts` = `covers.len()` +
+    /// the `area_luts` of every chain in `chains_used`.
+    pub covers: Vec<Lut>,
+    /// LUTs contributed by carry chains (sum of `area_luts` over
+    /// `chains_used`).
+    pub chain_luts: usize,
+    /// Ids of the carry chains reached by the cover.
+    pub chains_used: Vec<u32>,
 }
 
 impl MapResult {
@@ -196,7 +218,7 @@ pub fn map_luts(net: &Netlist) -> MapResult {
             push(*a, &mut seen, &mut required);
         }
     }
-    let mut luts = 0usize;
+    let mut covers: Vec<Lut> = Vec::new();
     let mut chain_needed = vec![false; net.chains.len()];
     while let Some(v) = required.pop_front() {
         if chain(v) != NO_CHAIN {
@@ -212,30 +234,41 @@ pub fn map_luts(net: &Netlist) -> MapResult {
             }
             continue;
         }
-        luts += 1;
         let cut = best_cut[v as usize].expect("gate node has a cut");
+        covers.push(Lut { root: v, leaves: cut.leaves().to_vec() });
         for &leaf in cut.leaves() {
             push(leaf, &mut seen, &mut required);
         }
     }
-    luts += net
+    let chain_luts = net
         .chains
         .iter()
         .zip(&chain_needed)
         .filter(|(_, &needed)| needed)
         .map(|(c, _)| c.area_luts as usize)
         .sum::<usize>();
+    let luts = covers.len() + chain_luts;
+    let chains_used: Vec<u32> = chain_needed
+        .iter()
+        .enumerate()
+        .filter(|(_, &needed)| needed)
+        .map(|(id, _)| id as u32)
+        .collect();
 
-    // Per-stage depths.
+    // Per-stage depths over the chosen cover (roots + reached chain
+    // gates). Interior gates absorbed into LUTs and dead gates carry
+    // labels too, but they do not exist in the mapped network.
     let stages = net.stages();
     let n_stages = stages.iter().copied().max().unwrap_or(0) as usize + 1;
     let mut stage_depths = vec![0u32; n_stages];
     for i in 0..n {
-        let s = stages[i] as usize;
-        stage_depths[s] = stage_depths[s].max(labels[i]);
+        if seen[i] {
+            let s = stages[i] as usize;
+            stage_depths[s] = stage_depths[s].max(labels[i]);
+        }
     }
 
-    MapResult { luts, ffs: net.n_regs(), stage_depths }
+    MapResult { luts, ffs: net.n_regs(), stage_depths, covers, chain_luts, chains_used }
 }
 
 #[cfg(test)]
@@ -320,6 +353,37 @@ mod tests {
         assert_eq!(m.ffs, 1);
         assert_eq!(m.stage_depths, vec![1, 1]);
         assert_eq!(m.luts, 2); // one per stage
+    }
+
+    #[test]
+    fn cover_is_recorded() {
+        let mut n = Netlist::new(2);
+        let a = n.input(0);
+        let b = n.input(1);
+        let y = n.and2(a, b);
+        n.outputs = vec![y];
+        let m = map_luts(&n);
+        assert_eq!(m.covers.len(), 1);
+        assert_eq!(m.covers[0].root, y);
+        assert_eq!(m.covers[0].leaves, vec![a, b]);
+        assert_eq!(m.chain_luts, 0);
+        assert!(m.chains_used.is_empty());
+        assert_eq!(m.luts, m.covers.len() + m.chain_luts);
+    }
+
+    #[test]
+    fn chain_cover_accounts_area() {
+        // Wide adder forces a carry chain; luts must equal generic covers
+        // plus the used chains' area.
+        let mut n = Netlist::new(16);
+        let a: Vec<_> = (0..8).map(|i| n.input(i)).collect();
+        let b: Vec<_> = (8..16).map(|i| n.input(i)).collect();
+        let s = n.add(&a, &b);
+        n.outputs = s;
+        let m = map_luts(&n);
+        assert!(!m.chains_used.is_empty(), "8-bit add must use a chain");
+        assert!(m.chain_luts > 0);
+        assert_eq!(m.luts, m.covers.len() + m.chain_luts);
     }
 
     #[test]

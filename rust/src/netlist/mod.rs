@@ -18,6 +18,10 @@
 //!   freeze every layer of the lowering chain (float GBDT → quantized
 //!   model → flat forest → gate-level simulation → cycle-accurate
 //!   simulation → Verilog emission hash) for fixed fixture models.
+//! * [`verify`] — static verification and lint: multi-pass analyzer over
+//!   the gate IR and LUT mapping (well-formedness, mapping legality,
+//!   dead/constant analysis, duplication census) returning typed
+//!   [`verify::Diagnostic`]s; the substrate's DRC.
 
 pub mod gate;
 pub mod build;
@@ -26,10 +30,15 @@ pub mod timing;
 pub mod simulate;
 pub mod cyclesim;
 pub mod conform;
+pub mod verify;
 
 pub use build::{build_netlist, BuiltDesign};
 pub use cyclesim::{CycleSimulator, StreamingCycleSim};
-pub use gate::{Gate, Netlist, NodeId};
-pub use lutmap::{map_luts, MapResult};
+pub use gate::{ChainInfo, Gate, Netlist, NodeId, NO_CHAIN};
+pub use lutmap::{map_luts, Lut, MapResult, K};
 pub use timing::{CostReport, TimingModel};
 pub use simulate::{LaneOverflow, Simulator, LANES};
+pub use verify::{
+    verify_built, verify_netlist, Diagnostic, DuplicationCensus, Severity, VerifyFailure,
+    VerifyPass, VerifyReport, VerifySummary,
+};

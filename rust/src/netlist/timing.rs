@@ -103,7 +103,14 @@ mod tests {
     use super::*;
 
     fn map(stage_depths: Vec<u32>, luts: usize, ffs: usize) -> MapResult {
-        MapResult { luts, ffs, stage_depths }
+        MapResult {
+            luts,
+            ffs,
+            stage_depths,
+            covers: Vec::new(),
+            chain_luts: 0,
+            chains_used: Vec::new(),
+        }
     }
 
     #[test]

@@ -1,0 +1,998 @@
+//! Static verification and lint over the gate IR and LUT mapping.
+//!
+//! `build_netlist`/`map_luts` output used to be trusted blindly until a
+//! simulation or golden-vector diff happened to disagree. This module is
+//! the independent checker: a multi-pass analyzer that returns typed,
+//! located [`Diagnostic`]s (never panics on malformed input) and a
+//! [`DuplicationCensus`] baselining the redundancy a hash-consed
+//! optimizing builder would remove (ROADMAP "Hash-consed, optimizing
+//! netlist compilation").
+//!
+//! Passes (see DESIGN.md §9):
+//!
+//! 1. **well-formed** — def-before-use node references, in-range input
+//!    indices, no combinational cycles, chain composition (no register
+//!    inside a carry chain, one pipeline stage per chain), and pipeline
+//!    legality: every merge gate combines operands from the same stage
+//!    (constants are time-invariant and exempt) and every non-constant
+//!    output sits at the declared register-cut count — exactly the
+//!    balanced-path property `StreamingCycleSim`'s II=1 contract rests on.
+//! 2. **mapping** — every `MapResult` LUT respects fan-in ≤ K, the cover
+//!    reaches every live gate exactly once, the LUT count equals the
+//!    recomputed cover + chain area, and `stage_depths` agrees with an
+//!    independently recomputed topological depth over the cover DAG.
+//! 3. **dead-const** — unreachable gates, constant-foldable subgraphs the
+//!    on-construct folder missed, and outputs structurally pinned to a
+//!    constant (a real miscompile signal for degenerate trees — but only
+//!    a warning, because constant-leaf trees legitimately pin multiclass
+//!    score bits).
+//! 4. **duplication** — hash-cons structural keys over the whole netlist
+//!    to count identical gates and identical carry chains (comparator /
+//!    adder subcircuits duplicated across trees and classes by the
+//!    intentional `strash_off` inside chain builders).
+//!
+//! Severity policy: **Error** = the circuit is structurally unsound
+//! (compile refuses it); **Warning** = suspicious but simulable
+//! (degenerate models produce these legitimately); **Info** = expected
+//! builder residue and census observations.
+
+use super::build::BuiltDesign;
+use super::gate::{Gate, Netlist, NodeId, NO_CHAIN};
+use super::lutmap::{MapResult, K};
+use std::collections::HashMap;
+use std::fmt;
+
+/// Which analysis pass produced a diagnostic.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum VerifyPass {
+    WellFormed,
+    Mapping,
+    DeadConst,
+    Duplication,
+}
+
+impl fmt::Display for VerifyPass {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            VerifyPass::WellFormed => "well-formed",
+            VerifyPass::Mapping => "mapping",
+            VerifyPass::DeadConst => "dead-const",
+            VerifyPass::Duplication => "duplication",
+        })
+    }
+}
+
+/// Diagnostic severity. `Error` means the circuit must be refused.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Severity {
+    Error,
+    Warning,
+    Info,
+}
+
+impl fmt::Display for Severity {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            Severity::Error => "error",
+            Severity::Warning => "warning",
+            Severity::Info => "info",
+        })
+    }
+}
+
+/// One typed, located finding.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Diagnostic {
+    pub pass: VerifyPass,
+    pub severity: Severity,
+    /// Offending node, when the finding is anchored to one.
+    pub node: Option<NodeId>,
+    pub message: String,
+}
+
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self.node {
+            Some(n) => write!(f, "{}[{}] node {}: {}", self.severity, self.pass, n, self.message),
+            None => write!(f, "{}[{}]: {}", self.severity, self.pass, self.message),
+        }
+    }
+}
+
+/// Structural-redundancy counts from the duplication pass. "Duplicate"
+/// means an exact structural replica (same operation over operands of the
+/// same structural class) — precisely what a global hash-consing builder
+/// would merge.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct DuplicationCensus {
+    /// Total gates in the netlist (all kinds).
+    pub gates: usize,
+    /// Distinct structural classes among them.
+    pub unique_gates: usize,
+    /// Gates whose structural class already occurred earlier.
+    pub duplicate_gates: usize,
+    /// Total carry chains.
+    pub chains: usize,
+    /// Chains that are exact structural replicas of an earlier chain.
+    pub duplicate_chains: usize,
+    /// LUT area of those duplicate chains (`area_luts` summed) — the
+    /// chain-side headroom for the optimizing builder.
+    pub duplicate_chain_luts: u32,
+}
+
+/// Flat summary of a [`VerifyReport`] — the shape frozen into the golden
+/// vectors (`tests/vectors/*.json`) and surfaced by `CompiledNetlist`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct VerifySummary {
+    pub errors: usize,
+    pub warnings: usize,
+    pub infos: usize,
+    pub gates: usize,
+    pub unique_gates: usize,
+    pub duplicate_gates: usize,
+    pub chains: usize,
+    pub duplicate_chains: usize,
+    pub duplicate_chain_luts: u32,
+}
+
+/// Full verification result: all diagnostics plus the duplication census.
+#[derive(Clone, Debug, Default)]
+pub struct VerifyReport {
+    pub diagnostics: Vec<Diagnostic>,
+    pub census: DuplicationCensus,
+}
+
+impl VerifyReport {
+    /// Diagnostics of one severity.
+    pub fn count(&self, s: Severity) -> usize {
+        self.diagnostics.iter().filter(|d| d.severity == s).count()
+    }
+
+    /// Error-severity diagnostics.
+    pub fn errors(&self) -> impl Iterator<Item = &Diagnostic> {
+        self.diagnostics.iter().filter(|d| d.severity == Severity::Error)
+    }
+
+    pub fn has_errors(&self) -> bool {
+        self.errors().next().is_some()
+    }
+
+    /// The flat summary frozen into golden vectors.
+    pub fn summary(&self) -> VerifySummary {
+        VerifySummary {
+            errors: self.count(Severity::Error),
+            warnings: self.count(Severity::Warning),
+            infos: self.count(Severity::Info),
+            gates: self.census.gates,
+            unique_gates: self.census.unique_gates,
+            duplicate_gates: self.census.duplicate_gates,
+            chains: self.census.chains,
+            duplicate_chains: self.census.duplicate_chains,
+            duplicate_chain_luts: self.census.duplicate_chain_luts,
+        }
+    }
+
+    /// Convert to a typed failure if any Error-severity diagnostic exists.
+    pub fn to_failure(&self) -> Option<VerifyFailure> {
+        if self.has_errors() {
+            Some(VerifyFailure { errors: self.errors().cloned().collect() })
+        } else {
+            None
+        }
+    }
+
+    /// Human-readable rendering: counts, diagnostics (errors first,
+    /// warnings/infos capped), then the census line.
+    pub fn render(&self) -> String {
+        let (e, w, i) =
+            (self.count(Severity::Error), self.count(Severity::Warning), self.count(Severity::Info));
+        let mut out = String::new();
+        if self.diagnostics.is_empty() {
+            out.push_str("verify: clean (no diagnostics)\n");
+        } else {
+            out.push_str(&format!(
+                "verify: {} diagnostics ({e} errors, {w} warnings, {i} infos)\n",
+                self.diagnostics.len()
+            ));
+            let mut sorted: Vec<&Diagnostic> = self.diagnostics.iter().collect();
+            sorted.sort_by_key(|d| d.severity);
+            const CAP: usize = 40;
+            for d in sorted.iter().take(CAP) {
+                out.push_str(&format!("  {d}\n"));
+            }
+            if sorted.len() > CAP {
+                out.push_str(&format!("  ... and {} more\n", sorted.len() - CAP));
+            }
+        }
+        let c = &self.census;
+        out.push_str(&format!(
+            "census: {} gates ({} unique, {} duplicate), {} chains ({} duplicate, ~{} chain LUTs duplicated)\n",
+            c.gates, c.unique_gates, c.duplicate_gates, c.chains, c.duplicate_chains,
+            c.duplicate_chain_luts
+        ));
+        out
+    }
+}
+
+/// Typed rejection: the Error-severity diagnostics that made a circuit
+/// structurally invalid. Returned by `CompiledNetlist::compile` when
+/// verification is on.
+#[derive(Clone, Debug)]
+pub struct VerifyFailure {
+    pub errors: Vec<Diagnostic>,
+}
+
+impl fmt::Display for VerifyFailure {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "netlist verification failed with {} error(s)", self.errors.len())?;
+        for d in self.errors.iter().take(5) {
+            write!(f, "\n  {d}")?;
+        }
+        if self.errors.len() > 5 {
+            write!(f, "\n  ... and {} more", self.errors.len() - 5)?;
+        }
+        Ok(())
+    }
+}
+
+impl std::error::Error for VerifyFailure {}
+
+/// Verify a built design (netlist + declared register-cut count) and, when
+/// given, its LUT mapping.
+pub fn verify_built(built: &BuiltDesign, map: Option<&MapResult>) -> VerifyReport {
+    verify_netlist(&built.net, Some(built.cuts), map)
+}
+
+/// Verify a raw netlist. `expect_cuts` is the declared pipeline depth
+/// (every non-constant output must sit at that stage); `map` enables the
+/// mapping-legality pass.
+pub fn verify_netlist(
+    net: &Netlist,
+    expect_cuts: Option<usize>,
+    map: Option<&MapResult>,
+) -> VerifyReport {
+    let mut diags = Vec::new();
+    let refs_ok = well_formed_pass(net, expect_cuts, &mut diags);
+    let mut census = DuplicationCensus {
+        gates: net.gates.len(),
+        chains: net.chains.len(),
+        ..Default::default()
+    };
+    if refs_ok {
+        let stages = net.stages();
+        if let Some(map) = map {
+            mapping_pass(net, map, &stages, &mut diags);
+        }
+        dead_const_pass(net, &mut diags);
+        census = census_pass(net, &mut diags);
+    } else {
+        diags.push(Diagnostic {
+            pass: VerifyPass::Duplication,
+            severity: Severity::Info,
+            node: None,
+            message: "census and downstream passes skipped: netlist has reference errors"
+                .to_string(),
+        });
+    }
+    VerifyReport { diagnostics: diags, census }
+}
+
+/// Combinational fanins of a gate (registers cut the combinational graph),
+/// restricted to in-range ids so later passes never index out of bounds.
+fn comb_fanins(net: &Netlist, v: usize) -> [Option<NodeId>; 2] {
+    let n = net.gates.len() as u32;
+    let ok = |x: NodeId| if x < n { Some(x) } else { None };
+    match net.gates[v] {
+        Gate::Not(a) => [ok(a), None],
+        Gate::And(a, b) | Gate::Or(a, b) | Gate::Xor(a, b) => [ok(a), ok(b)],
+        _ => [None, None],
+    }
+}
+
+/// All fanins (including through registers), unrestricted.
+fn fanins(g: &Gate) -> [Option<NodeId>; 2] {
+    match *g {
+        Gate::Input(_) | Gate::Const(_) => [None, None],
+        Gate::Not(a) | Gate::Reg(a) => [Some(a), None],
+        Gate::And(a, b) | Gate::Or(a, b) | Gate::Xor(a, b) => [Some(a), Some(b)],
+    }
+}
+
+fn is_leaf(g: &Gate) -> bool {
+    matches!(g, Gate::Input(_) | Gate::Const(_) | Gate::Reg(_))
+}
+
+/// Pass 1: references, input ranges, cycles, chain composition, pipeline
+/// legality. Returns whether node references were sound (downstream passes
+/// index fanins unguarded and are skipped otherwise).
+fn well_formed_pass(
+    net: &Netlist,
+    expect_cuts: Option<usize>,
+    diags: &mut Vec<Diagnostic>,
+) -> bool {
+    let n = net.gates.len();
+    let err = |node, message: String| Diagnostic {
+        pass: VerifyPass::WellFormed,
+        severity: Severity::Error,
+        node,
+        message,
+    };
+
+    let mut refs_ok = true;
+    if net.chain_of.len() != n {
+        refs_ok = false;
+        diags.push(err(
+            None,
+            format!("chain_of has {} entries for {} gates", net.chain_of.len(), n),
+        ));
+    }
+
+    for (i, g) in net.gates.iter().enumerate() {
+        if let Gate::Input(k) = *g {
+            if k as usize >= net.n_inputs {
+                diags.push(err(
+                    Some(i as NodeId),
+                    format!("input index {k} out of range (n_inputs = {})", net.n_inputs),
+                ));
+            }
+        }
+        for f in fanins(g).into_iter().flatten() {
+            if f as usize >= n {
+                refs_ok = false;
+                diags.push(err(
+                    Some(i as NodeId),
+                    format!("references undefined node {f} (netlist has {n} gates)"),
+                ));
+            } else if f as usize >= i {
+                refs_ok = false;
+                diags.push(err(
+                    Some(i as NodeId),
+                    format!("forward reference to node {f} (nodes must be defined before use)"),
+                ));
+            }
+        }
+    }
+    for (j, &o) in net.outputs.iter().enumerate() {
+        if o as usize >= n {
+            refs_ok = false;
+            diags.push(err(None, format!("output {j} references undefined node {o}")));
+        }
+    }
+    if net.outputs.is_empty() {
+        diags.push(Diagnostic {
+            pass: VerifyPass::WellFormed,
+            severity: Severity::Warning,
+            node: None,
+            message: "netlist has no outputs".to_string(),
+        });
+    }
+
+    // Combinational cycles (only possible alongside forward references,
+    // but diagnosed separately: a fabricated cycle should say "cycle").
+    // Iterative tri-color DFS over in-range combinational edges.
+    'cycles: {
+        let mut color = vec![0u8; n]; // 0 white, 1 gray, 2 black
+        for start in 0..n {
+            if color[start] != 0 {
+                continue;
+            }
+            let mut stack: Vec<(usize, usize)> = vec![(start, 0)];
+            color[start] = 1;
+            while let Some(&mut (v, ref mut ei)) = stack.last_mut() {
+                let fs = comb_fanins(net, v);
+                let next = fs.into_iter().flatten().nth(*ei);
+                *ei += 1;
+                match next {
+                    Some(f) => match color[f as usize] {
+                        0 => {
+                            color[f as usize] = 1;
+                            stack.push((f as usize, 0));
+                        }
+                        1 => {
+                            diags.push(err(
+                                Some(f),
+                                format!("combinational cycle (back edge from node {v})"),
+                            ));
+                            break 'cycles; // one cycle is enough evidence
+                        }
+                        _ => {}
+                    },
+                    None => {
+                        color[v] = 2;
+                        stack.pop();
+                    }
+                }
+            }
+        }
+    }
+
+    if !refs_ok {
+        return false;
+    }
+
+    // Stage-based pipeline legality (sound only once references are).
+    let stages = net.stages();
+    let is_const = |x: NodeId| matches!(net.gates[x as usize], Gate::Const(_));
+    for (i, g) in net.gates.iter().enumerate() {
+        if let Gate::And(a, b) | Gate::Or(a, b) | Gate::Xor(a, b) = *g {
+            if !is_const(a) && !is_const(b) && stages[a as usize] != stages[b as usize] {
+                diags.push(err(
+                    Some(i as NodeId),
+                    format!(
+                        "merges operands from different pipeline stages ({} and {}); \
+                         every input→output path must cross the same number of registers",
+                        stages[a as usize], stages[b as usize]
+                    ),
+                ));
+            }
+        }
+    }
+    let out_stages: Vec<u32> = net
+        .outputs
+        .iter()
+        .filter(|&&o| !is_const(o))
+        .map(|&o| stages[o as usize])
+        .collect();
+    if let Some(&first) = out_stages.first() {
+        if out_stages.iter().any(|&s| s != first) {
+            diags.push(err(
+                None,
+                format!("outputs sit at mixed pipeline stages {out_stages:?}"),
+            ));
+        } else if let Some(cuts) = expect_cuts {
+            if first as usize != cuts {
+                diags.push(err(
+                    None,
+                    format!("outputs at stage {first}, but the design declares {cuts} register cuts"),
+                ));
+            }
+        }
+    }
+
+    // Chain composition: ids in range, no register inside a chain, one
+    // pipeline stage per chain, contiguous id range.
+    let nc = net.chains.len();
+    let mut first = vec![usize::MAX; nc];
+    let mut last = vec![0usize; nc];
+    let mut count = vec![0usize; nc];
+    let mut stage_of_chain: Vec<Option<u32>> = vec![None; nc];
+    for (i, &c) in net.chain_of.iter().enumerate() {
+        if c == NO_CHAIN {
+            continue;
+        }
+        if c as usize >= nc {
+            diags.push(err(
+                Some(i as NodeId),
+                format!("chain id {c} out of range ({nc} chains)"),
+            ));
+            continue;
+        }
+        let cu = c as usize;
+        first[cu] = first[cu].min(i);
+        last[cu] = last[cu].max(i);
+        count[cu] += 1;
+        if matches!(net.gates[i], Gate::Reg(_)) {
+            diags.push(err(
+                Some(i as NodeId),
+                format!("register inside carry chain {c}; chains must be purely combinational"),
+            ));
+            continue;
+        }
+        if is_leaf(&net.gates[i]) {
+            continue; // constants inside chains are folding residue, stage-exempt
+        }
+        match stage_of_chain[cu] {
+            None => stage_of_chain[cu] = Some(stages[i]),
+            Some(s) if s != stages[i] => diags.push(err(
+                Some(i as NodeId),
+                format!(
+                    "carry chain {c} spans pipeline stages {s} and {}; a chain must sit \
+                     entirely between two register cuts",
+                    stages[i]
+                ),
+            )),
+            Some(_) => {}
+        }
+    }
+    for c in 0..nc {
+        if count[c] > 0 && last[c] - first[c] + 1 != count[c] {
+            diags.push(Diagnostic {
+                pass: VerifyPass::WellFormed,
+                severity: Severity::Warning,
+                node: Some(first[c] as NodeId),
+                message: format!(
+                    "carry chain {c} is not a contiguous id range ({} gates across ids {}..={})",
+                    count[c], first[c], last[c]
+                ),
+            });
+        }
+    }
+
+    true
+}
+
+/// Pass 2: mapping legality — the `MapResult` cover is replayed and
+/// re-derived independently from the netlist.
+fn mapping_pass(net: &Netlist, map: &MapResult, stages: &[u32], diags: &mut Vec<Diagnostic>) {
+    let n = net.gates.len();
+    let err = |node, message: String| Diagnostic {
+        pass: VerifyPass::Mapping,
+        severity: Severity::Error,
+        node,
+        message,
+    };
+    let chain = |i: usize| net.chain_of[i];
+
+    // Index the cover; each root maps to exactly one LUT.
+    let mut root_of: HashMap<u32, &super::lutmap::Lut> = HashMap::new();
+    let mut cover_ok = true;
+    for lut in &map.covers {
+        if lut.root as usize >= n {
+            cover_ok = false;
+            diags.push(err(Some(lut.root), "LUT root is not a netlist node".to_string()));
+            continue;
+        }
+        if is_leaf(&net.gates[lut.root as usize]) {
+            diags.push(err(
+                Some(lut.root),
+                "LUT root is an input/const/register, which needs no LUT".to_string(),
+            ));
+        }
+        if chain(lut.root as usize) != NO_CHAIN {
+            diags.push(err(
+                Some(lut.root),
+                "LUT root lies inside a carry chain (chain area is priced separately)"
+                    .to_string(),
+            ));
+        }
+        if lut.leaves.len() > K {
+            diags.push(err(
+                Some(lut.root),
+                format!("LUT has {} leaves; fan-in capacity is K = {K}", lut.leaves.len()),
+            ));
+        }
+        for &leaf in &lut.leaves {
+            if leaf as usize >= n {
+                cover_ok = false;
+                diags.push(err(
+                    Some(lut.root),
+                    format!("cut leaf {leaf} is not a netlist node"),
+                ));
+            }
+        }
+        if root_of.insert(lut.root, lut).is_some() {
+            diags.push(err(
+                Some(lut.root),
+                "multiple LUTs share this root; the cover must be exact".to_string(),
+            ));
+        }
+    }
+    if !cover_ok {
+        return; // the walk below would chase out-of-range ids
+    }
+
+    // Replay the covering walk from outputs and register fanins: every
+    // reachable generic gate must be a cover root; reaching a chain gate
+    // requires its external fanins instead.
+    let mut seen = vec![false; n];
+    let mut queue: Vec<u32> = Vec::new();
+    let push = |id: u32, seen: &mut Vec<bool>, queue: &mut Vec<u32>| {
+        if !seen[id as usize] && !is_leaf(&net.gates[id as usize]) {
+            seen[id as usize] = true;
+            queue.push(id);
+        }
+    };
+    for &o in &net.outputs {
+        push(o, &mut seen, &mut queue);
+    }
+    for g in &net.gates {
+        if let Gate::Reg(a) = g {
+            push(*a, &mut seen, &mut queue);
+        }
+    }
+    let mut chain_needed = vec![false; net.chains.len()];
+    let mut used_roots: Vec<bool> = vec![false; n];
+    while let Some(v) = queue.pop() {
+        if chain(v as usize) != NO_CHAIN {
+            chain_needed[chain(v as usize) as usize] = true;
+            for f in comb_fanins(net, v as usize).into_iter().flatten() {
+                push(f, &mut seen, &mut queue);
+            }
+            continue;
+        }
+        match root_of.get(&v) {
+            None => diags.push(err(
+                Some(v),
+                "live gate is not covered by any LUT".to_string(),
+            )),
+            Some(lut) => {
+                used_roots[v as usize] = true;
+                for &leaf in &lut.leaves {
+                    push(leaf, &mut seen, &mut queue);
+                }
+            }
+        }
+    }
+    for lut in &map.covers {
+        if (lut.root as usize) < n && !used_roots[lut.root as usize] {
+            diags.push(Diagnostic {
+                pass: VerifyPass::Mapping,
+                severity: Severity::Warning,
+                node: Some(lut.root),
+                message: "LUT root is unreachable from outputs/registers (wasted LUT)"
+                    .to_string(),
+            });
+        }
+    }
+
+    // Area accounting: luts = generic cover + used chains' area.
+    let chain_luts: usize = net
+        .chains
+        .iter()
+        .zip(&chain_needed)
+        .filter(|(_, &needed)| needed)
+        .map(|(c, _)| c.area_luts as usize)
+        .sum();
+    let chains_used: Vec<u32> = chain_needed
+        .iter()
+        .enumerate()
+        .filter(|(_, &needed)| needed)
+        .map(|(id, _)| id as u32)
+        .collect();
+    if map.chain_luts != chain_luts || map.chains_used != chains_used {
+        diags.push(err(
+            None,
+            format!(
+                "chain accounting disagrees: mapped {} LUTs over chains {:?}, recomputed {} over {:?}",
+                map.chain_luts, map.chains_used, chain_luts, chains_used
+            ),
+        ));
+    }
+    if map.luts != map.covers.len() + chain_luts {
+        diags.push(err(
+            None,
+            format!(
+                "LUT count {} disagrees with cover size {} + chain area {}",
+                map.luts,
+                map.covers.len(),
+                chain_luts
+            ),
+        ));
+    }
+
+    // Depth recomputation over the cover DAG: a root's depth is 1 + the
+    // max over its leaves; chain gates ripple at the entering cost. This
+    // must reproduce `stage_depths` exactly.
+    let mut depth = vec![0u32; n];
+    for v in 0..n {
+        if !seen[v] {
+            continue;
+        }
+        if chain(v) != NO_CHAIN {
+            depth[v] = comb_fanins(net, v)
+                .into_iter()
+                .flatten()
+                .map(|f| {
+                    if chain(f as usize) == chain(v) {
+                        depth[f as usize]
+                    } else {
+                        depth[f as usize] + 1
+                    }
+                })
+                .max()
+                .unwrap_or(1);
+        } else if used_roots[v] {
+            depth[v] = 1 + root_of[&(v as u32)]
+                .leaves
+                .iter()
+                .map(|&l| depth[l as usize])
+                .max()
+                .unwrap_or(0);
+        }
+    }
+    let n_stages = stages.iter().copied().max().unwrap_or(0) as usize + 1;
+    let mut recomputed = vec![0u32; n_stages];
+    for v in 0..n {
+        if seen[v] {
+            let s = stages[v] as usize;
+            recomputed[s] = recomputed[s].max(depth[v]);
+        }
+    }
+    if recomputed != map.stage_depths {
+        diags.push(err(
+            None,
+            format!(
+                "stage depths disagree: mapped {:?}, recomputed {recomputed:?}",
+                map.stage_depths
+            ),
+        ));
+    }
+}
+
+/// Pass 3: dead gates, constant-foldable gates the builder missed, and
+/// constant-pinned outputs.
+fn dead_const_pass(net: &Netlist, diags: &mut Vec<Diagnostic>) {
+    let n = net.gates.len();
+
+    // Liveness from the outputs through all fanins (including registers).
+    let mut live = vec![false; n];
+    let mut stack: Vec<u32> = net.outputs.clone();
+    while let Some(v) = stack.pop() {
+        if live[v as usize] {
+            continue;
+        }
+        live[v as usize] = true;
+        for f in fanins(&net.gates[v as usize]).into_iter().flatten() {
+            if !live[f as usize] {
+                stack.push(f);
+            }
+        }
+    }
+    for (i, g) in net.gates.iter().enumerate() {
+        if live[i] || matches!(g, Gate::Input(_)) {
+            continue; // unused input bits are the model's business, not ours
+        }
+        if matches!(g, Gate::Const(_)) {
+            diags.push(Diagnostic {
+                pass: VerifyPass::DeadConst,
+                severity: Severity::Info,
+                node: Some(i as NodeId),
+                message: "orphaned constant (constant-folding residue)".to_string(),
+            });
+        } else {
+            diags.push(Diagnostic {
+                pass: VerifyPass::DeadConst,
+                severity: Severity::Warning,
+                node: Some(i as NodeId),
+                message: "dead gate: unreachable from every output".to_string(),
+            });
+        }
+    }
+
+    // Three-valued constant propagation; anything the on-construct folder
+    // should have folded but didn't is suspicious.
+    let mut cv: Vec<Option<bool>> = vec![None; n];
+    for (i, g) in net.gates.iter().enumerate() {
+        cv[i] = match *g {
+            Gate::Input(_) => None,
+            Gate::Const(v) => Some(v),
+            Gate::Not(a) => cv[a as usize].map(|v| !v),
+            Gate::Reg(a) => cv[a as usize],
+            Gate::And(a, b) => match (cv[a as usize], cv[b as usize]) {
+                (Some(false), _) | (_, Some(false)) => Some(false),
+                (Some(true), Some(true)) => Some(true),
+                _ => None,
+            },
+            Gate::Or(a, b) => match (cv[a as usize], cv[b as usize]) {
+                (Some(true), _) | (_, Some(true)) => Some(true),
+                (Some(false), Some(false)) => Some(false),
+                _ => None,
+            },
+            Gate::Xor(a, b) => match (cv[a as usize], cv[b as usize]) {
+                (Some(x), Some(y)) => Some(x ^ y),
+                _ => None,
+            },
+        };
+    }
+    let complement =
+        |x: NodeId, y: NodeId| matches!(net.gates[y as usize], Gate::Not(inner) if inner == x);
+    for (i, g) in net.gates.iter().enumerate() {
+        if !live[i] {
+            continue;
+        }
+        if let (Some(v), false) = (cv[i], matches!(g, Gate::Const(_))) {
+            diags.push(Diagnostic {
+                pass: VerifyPass::DeadConst,
+                severity: Severity::Warning,
+                node: Some(i as NodeId),
+                message: format!("constant-foldable gate (always {v})"),
+            });
+            continue;
+        }
+        if let Gate::And(a, b) | Gate::Or(a, b) | Gate::Xor(a, b) = *g {
+            if complement(a, b) || complement(b, a) {
+                diags.push(Diagnostic {
+                    pass: VerifyPass::DeadConst,
+                    severity: Severity::Warning,
+                    node: Some(i as NodeId),
+                    message: "combines a signal with its own complement (constant result)"
+                        .to_string(),
+                });
+            }
+        }
+    }
+    for (j, &o) in net.outputs.iter().enumerate() {
+        if let Some(v) = cv[o as usize] {
+            diags.push(Diagnostic {
+                pass: VerifyPass::DeadConst,
+                severity: Severity::Warning,
+                node: Some(o),
+                message: format!(
+                    "output {j} is structurally pinned to constant {v} \
+                     (legitimate for constant-leaf trees; a miscompile signal otherwise)"
+                ),
+            });
+        }
+    }
+}
+
+/// Pass 4: the duplication census. Gates are interned by structural class
+/// (operation + operand classes, commutative operands sorted); chains by
+/// the class sequence of their member gates.
+fn census_pass(net: &Netlist, diags: &mut Vec<Diagnostic>) -> DuplicationCensus {
+    let n = net.gates.len();
+    #[derive(Clone, Copy, PartialEq, Eq, Hash)]
+    enum Key {
+        Input(u32),
+        Const(bool),
+        Not(u32),
+        And(u32, u32),
+        Or(u32, u32),
+        Xor(u32, u32),
+        Reg(u32),
+    }
+    let mut interned: HashMap<Key, u32> = HashMap::new();
+    let mut sid = vec![0u32; n];
+    let mut duplicate_gates = 0usize;
+    for (i, g) in net.gates.iter().enumerate() {
+        let comm = |a: NodeId, b: NodeId, sid: &[u32]| {
+            let (x, y) = (sid[a as usize], sid[b as usize]);
+            if x <= y { (x, y) } else { (y, x) }
+        };
+        let key = match *g {
+            Gate::Input(k) => Key::Input(k),
+            Gate::Const(v) => Key::Const(v),
+            Gate::Not(a) => Key::Not(sid[a as usize]),
+            Gate::Reg(a) => Key::Reg(sid[a as usize]),
+            Gate::And(a, b) => {
+                let (x, y) = comm(a, b, &sid);
+                Key::And(x, y)
+            }
+            Gate::Or(a, b) => {
+                let (x, y) = comm(a, b, &sid);
+                Key::Or(x, y)
+            }
+            Gate::Xor(a, b) => {
+                let (x, y) = comm(a, b, &sid);
+                Key::Xor(x, y)
+            }
+        };
+        let next = interned.len() as u32;
+        match interned.entry(key) {
+            std::collections::hash_map::Entry::Occupied(e) => {
+                duplicate_gates += 1;
+                sid[i] = *e.get();
+            }
+            std::collections::hash_map::Entry::Vacant(e) => {
+                e.insert(next);
+                sid[i] = next;
+            }
+        }
+    }
+
+    // Chain signatures: the sid sequence of each chain's members. Two
+    // chains with equal signatures are exact replicas (same structure over
+    // the same external signals) — the strash is off inside chain
+    // builders by design, so this is where real duplication lives.
+    let nc = net.chains.len();
+    let mut members: Vec<Vec<u32>> = vec![Vec::new(); nc];
+    for (i, &c) in net.chain_of.iter().enumerate() {
+        if c != NO_CHAIN && (c as usize) < nc {
+            members[c as usize].push(sid[i]);
+        }
+    }
+    let mut chain_sigs: HashMap<(u32, Vec<u32>), u32> = HashMap::new();
+    let mut duplicate_chains = 0usize;
+    let mut duplicate_chain_luts = 0u32;
+    for (c, info) in net.chains.iter().enumerate() {
+        let key = (info.area_luts, members[c].clone());
+        if chain_sigs.insert(key, c as u32).is_some() {
+            duplicate_chains += 1;
+            duplicate_chain_luts += info.area_luts;
+        }
+    }
+
+    let census = DuplicationCensus {
+        gates: n,
+        unique_gates: interned.len(),
+        duplicate_gates,
+        chains: nc,
+        duplicate_chains,
+        duplicate_chain_luts,
+    };
+    if census.duplicate_gates > 0 {
+        diags.push(Diagnostic {
+            pass: VerifyPass::Duplication,
+            severity: Severity::Info,
+            node: None,
+            message: format!(
+                "{} of {} gates are structural duplicates ({} duplicate chains, ~{} chain LUTs); \
+                 headroom for a hash-consed optimizing builder",
+                census.duplicate_gates, census.gates, census.duplicate_chains,
+                census.duplicate_chain_luts
+            ),
+        });
+    }
+    census
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netlist::lutmap::map_luts;
+
+    fn clean_net() -> Netlist {
+        let mut n = Netlist::new(4);
+        let a = n.input(0);
+        let b = n.input(1);
+        let c = n.input(2);
+        let d = n.input(3);
+        let x = n.and2(a, b);
+        let y = n.or2(c, d);
+        let z = n.xor2(x, y);
+        n.outputs = vec![z];
+        n
+    }
+
+    #[test]
+    fn clean_netlist_verifies_clean() {
+        let n = clean_net();
+        let map = map_luts(&n);
+        let r = verify_netlist(&n, Some(0), Some(&map));
+        assert!(!r.has_errors(), "{}", r.render());
+        assert_eq!(r.summary().errors, 0);
+        assert_eq!(r.census.gates, n.gates.len());
+    }
+
+    #[test]
+    fn duplicate_chains_are_counted() {
+        // Two structurally identical adders over the same inputs: the
+        // strash is off inside `add`, so every chain gate duplicates.
+        let mut n = Netlist::new(16);
+        let a: Vec<_> = (0..8).map(|i| n.input(i)).collect();
+        let b: Vec<_> = (8..16).map(|i| n.input(i)).collect();
+        let s1 = n.add(&a, &b);
+        let s2 = n.add(&a, &b);
+        let mut outs = s1;
+        outs.extend(s2);
+        n.outputs = outs;
+        let r = verify_netlist(&n, Some(0), None);
+        assert!(!r.has_errors(), "{}", r.render());
+        assert_eq!(r.census.chains, 2);
+        assert_eq!(r.census.duplicate_chains, 1);
+        assert!(r.census.duplicate_chain_luts > 0);
+        assert!(r.census.duplicate_gates > 0);
+    }
+
+    #[test]
+    fn summary_counts_match_diagnostics() {
+        let n = clean_net();
+        let r = verify_netlist(&n, Some(0), None);
+        let s = r.summary();
+        assert_eq!(s.errors, r.count(Severity::Error));
+        assert_eq!(s.warnings, r.count(Severity::Warning));
+        assert_eq!(s.infos, r.count(Severity::Info));
+        assert_eq!(s.unique_gates + s.duplicate_gates, s.gates);
+    }
+
+    #[test]
+    fn wrong_expected_cuts_is_an_error() {
+        let mut n = Netlist::new(2);
+        let a = n.input(0);
+        let b = n.input(1);
+        let x = n.and2(a, b);
+        let r = n.reg(x);
+        n.outputs = vec![r];
+        let rep = verify_netlist(&n, Some(3), None);
+        assert!(rep.has_errors());
+        assert!(rep.errors().any(|d| d.message.contains("register cuts")), "{}", rep.render());
+    }
+
+    #[test]
+    fn render_mentions_census() {
+        let n = clean_net();
+        let r = verify_netlist(&n, Some(0), None);
+        let text = r.render();
+        assert!(text.contains("census:"), "{text}");
+    }
+}

@@ -1,0 +1,474 @@
+//! Static-verifier tests (`netlist::verify`).
+//!
+//! Two halves:
+//!
+//! * **Corrupt-netlist suite** — hand-corrupted netlists and mappings
+//!   (forward reference, fabricated cycle, out-of-range input, over-fan-in
+//!   LUT, stage-order violation, constant output, chain violations) must
+//!   each produce exactly the expected typed [`Diagnostic`], never a
+//!   panic. Every implemented pass is triggered here.
+//! * **Clean property** — all shipped conformance fixtures and a batch of
+//!   random trained models verify with zero Error-severity diagnostics,
+//!   at every pipeline configuration.
+
+use treelut::gbdt::{GbdtModel, Tree, TreeNode};
+use treelut::netlist::conform::fixtures;
+use treelut::netlist::verify::{verify_built, verify_netlist, Severity, VerifyPass};
+use treelut::netlist::{build_netlist, map_luts, Gate, Netlist, K, NO_CHAIN};
+use treelut::quantize::quantize_leaves;
+use treelut::rtl::{design_from_quant, Pipeline};
+use treelut::util::Rng;
+
+/// A small valid netlist with one register cut, used as the corruption
+/// substrate: and/or cones feeding a register, then a merge.
+fn base_net() -> Netlist {
+    let mut n = Netlist::new(4);
+    let a = n.input(0);
+    let b = n.input(1);
+    let c = n.input(2);
+    let d = n.input(3);
+    let x = n.and2(a, b);
+    let y = n.or2(c, d);
+    let rx = n.reg(x);
+    let ry = n.reg(y);
+    let z = n.xor2(rx, ry);
+    n.outputs = vec![z];
+    n
+}
+
+fn diags_of(
+    net: &Netlist,
+    cuts: usize,
+    pass: VerifyPass,
+    severity: Severity,
+) -> Vec<String> {
+    verify_netlist(net, Some(cuts), None)
+        .diagnostics
+        .into_iter()
+        .filter(|d| d.pass == pass && d.severity == severity)
+        .map(|d| d.message)
+        .collect()
+}
+
+#[test]
+fn base_net_is_clean() {
+    let n = base_net();
+    let map = map_luts(&n);
+    let r = verify_netlist(&n, Some(1), Some(&map));
+    assert!(!r.has_errors(), "{}", r.render());
+}
+
+// ---------------------------------------------------------------------------
+// Pass 1: well-formedness
+// ---------------------------------------------------------------------------
+
+#[test]
+fn forward_reference_is_an_error() {
+    let mut n = base_net();
+    // Corrupt the first AND gate to reference a node defined later.
+    let victim = n.gates.iter().position(|g| matches!(g, Gate::And(_, _))).unwrap();
+    n.gates[victim] = Gate::And(0, (n.gates.len() - 1) as u32);
+    let errs = diags_of(&n, 1, VerifyPass::WellFormed, Severity::Error);
+    assert!(
+        errs.iter().any(|m| m.contains("forward reference")),
+        "expected a forward-reference diagnostic, got {errs:?}"
+    );
+}
+
+#[test]
+fn undefined_node_reference_is_an_error() {
+    let mut n = base_net();
+    let victim = n.gates.iter().position(|g| matches!(g, Gate::And(_, _))).unwrap();
+    n.gates[victim] = Gate::And(0, 9999);
+    let errs = diags_of(&n, 1, VerifyPass::WellFormed, Severity::Error);
+    assert!(
+        errs.iter().any(|m| m.contains("undefined node")),
+        "expected an undefined-node diagnostic, got {errs:?}"
+    );
+}
+
+#[test]
+fn fabricated_cycle_is_an_error() {
+    let mut n = base_net();
+    // Fabricate a 2-gate combinational cycle at the end of the netlist.
+    let id0 = n.gates.len() as u32;
+    n.gates.push(Gate::And(id0 + 1, 0));
+    n.chain_of.push(NO_CHAIN);
+    n.gates.push(Gate::Or(id0, 1));
+    n.chain_of.push(NO_CHAIN);
+    let errs = diags_of(&n, 1, VerifyPass::WellFormed, Severity::Error);
+    assert!(
+        errs.iter().any(|m| m.contains("combinational cycle")),
+        "expected a cycle diagnostic, got {errs:?}"
+    );
+}
+
+#[test]
+fn out_of_range_input_index_is_an_error() {
+    let mut n = base_net();
+    let victim = n.gates.iter().position(|g| matches!(g, Gate::Input(_))).unwrap();
+    n.gates[victim] = Gate::Input(77);
+    let errs = diags_of(&n, 1, VerifyPass::WellFormed, Severity::Error);
+    assert!(
+        errs.iter().any(|m| m.contains("input index 77 out of range")),
+        "expected an input-range diagnostic, got {errs:?}"
+    );
+}
+
+#[test]
+fn stage_order_violation_is_an_error() {
+    // A merge gate combining a stage-1 register output with a stage-0
+    // input breaks the balanced-path property behind II=1 streaming.
+    let mut n = Netlist::new(2);
+    let a = n.input(0);
+    let b = n.input(1);
+    let r = n.reg(a);
+    let bad = n.and2(r, b);
+    n.outputs = vec![bad];
+    let errs = diags_of(&n, 1, VerifyPass::WellFormed, Severity::Error);
+    assert!(
+        errs.iter().any(|m| m.contains("different pipeline stages")),
+        "expected a stage-merge diagnostic, got {errs:?}"
+    );
+}
+
+#[test]
+fn output_stage_must_match_declared_cuts() {
+    let n = base_net(); // outputs at stage 1
+    let errs = diags_of(&n, 2, VerifyPass::WellFormed, Severity::Error);
+    assert!(
+        errs.iter().any(|m| m.contains("declares 2 register cuts")),
+        "expected a cuts-mismatch diagnostic, got {errs:?}"
+    );
+}
+
+#[test]
+fn register_inside_chain_is_an_error() {
+    let mut n = Netlist::new(8);
+    let a: Vec<_> = (0..4).map(|i| n.input(i)).collect();
+    let b: Vec<_> = (4..8).map(|i| n.input(i)).collect();
+    let s = n.add(&a, &b);
+    n.outputs = s;
+    // Corrupt: claim a register is part of the adder's carry chain.
+    let r = n.reg(n.outputs[0]);
+    n.outputs = vec![r];
+    n.chain_of[r as usize] = 0;
+    let errs = diags_of(&n, 1, VerifyPass::WellFormed, Severity::Error);
+    assert!(
+        errs.iter().any(|m| m.contains("register inside carry chain")),
+        "expected a register-in-chain diagnostic, got {errs:?}"
+    );
+}
+
+#[test]
+fn chain_spanning_register_cut_is_an_error() {
+    // Two separate stages, then corrupt chain_of so one "chain" contains
+    // gates on both sides of the register cut.
+    let mut n = Netlist::new(4);
+    let a = n.input(0);
+    let b = n.input(1);
+    let c = n.input(2);
+    let d = n.input(3);
+    let x = n.and2(a, b); // stage 0
+    let rx = n.reg(x);
+    let ry = n.reg(c);
+    let rd = n.reg(d);
+    let y = n.or2(ry, rd); // stage 1
+    let z = n.xor2(rx, y);
+    n.outputs = vec![z];
+    n.chains.push(treelut::netlist::ChainInfo { area_luts: 2 });
+    n.chain_of[x as usize] = 0;
+    n.chain_of[y as usize] = 0;
+    let errs = diags_of(&n, 1, VerifyPass::WellFormed, Severity::Error);
+    assert!(
+        errs.iter().any(|m| m.contains("spans pipeline stages")),
+        "expected a chain-spans-cut diagnostic, got {errs:?}"
+    );
+}
+
+#[test]
+fn chain_id_out_of_range_is_an_error() {
+    let mut n = base_net();
+    n.chain_of[0] = 5; // no chains exist
+    let errs = diags_of(&n, 1, VerifyPass::WellFormed, Severity::Error);
+    assert!(
+        errs.iter().any(|m| m.contains("chain id 5 out of range")),
+        "expected a chain-id diagnostic, got {errs:?}"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Pass 2: mapping legality
+// ---------------------------------------------------------------------------
+
+#[test]
+fn over_fan_in_lut_is_an_error() {
+    let n = base_net();
+    let mut map = map_luts(&n);
+    // Corrupt one LUT to claim more leaves than a 6-LUT has pins, by
+    // repeating its existing leaves (the walk itself stays intact).
+    let lut = &mut map.covers[0];
+    while lut.leaves.len() <= K {
+        let extra = lut.leaves[0];
+        lut.leaves.push(extra);
+    }
+    let r = verify_netlist(&n, Some(1), Some(&map));
+    let errs: Vec<_> = r
+        .errors()
+        .filter(|d| d.pass == VerifyPass::Mapping)
+        .map(|d| d.message.clone())
+        .collect();
+    assert!(
+        errs.iter().any(|m| m.contains("fan-in capacity")),
+        "expected a fan-in diagnostic, got {errs:?}"
+    );
+}
+
+#[test]
+fn uncovered_live_gate_is_an_error() {
+    let n = base_net();
+    let mut map = map_luts(&n);
+    let dropped = map.covers.pop().expect("base net maps to at least one LUT");
+    let r = verify_netlist(&n, Some(1), Some(&map));
+    let errs: Vec<_> = r
+        .errors()
+        .filter(|d| d.pass == VerifyPass::Mapping)
+        .map(|d| (d.node, d.message.clone()))
+        .collect();
+    assert!(
+        errs.iter().any(|(node, m)| *node == Some(dropped.root) && m.contains("not covered")),
+        "expected an uncovered-gate diagnostic at node {}, got {errs:?}",
+        dropped.root
+    );
+}
+
+#[test]
+fn lut_count_mismatch_is_an_error() {
+    let n = base_net();
+    let mut map = map_luts(&n);
+    map.luts += 3;
+    let r = verify_netlist(&n, Some(1), Some(&map));
+    assert!(
+        r.errors().any(|d| d.message.contains("LUT count")),
+        "{}",
+        r.render()
+    );
+}
+
+#[test]
+fn stage_depth_mismatch_is_an_error() {
+    let n = base_net();
+    let mut map = map_luts(&n);
+    map.stage_depths[0] += 1;
+    let r = verify_netlist(&n, Some(1), Some(&map));
+    assert!(
+        r.errors().any(|d| d.message.contains("stage depths disagree")),
+        "{}",
+        r.render()
+    );
+}
+
+#[test]
+fn duplicate_cover_root_is_an_error() {
+    let n = base_net();
+    let mut map = map_luts(&n);
+    let dup = map.covers[0].clone();
+    map.covers.push(dup);
+    let r = verify_netlist(&n, Some(1), Some(&map));
+    assert!(
+        r.errors().any(|d| d.message.contains("multiple LUTs share this root")),
+        "{}",
+        r.render()
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Pass 3: dead & constant analysis
+// ---------------------------------------------------------------------------
+
+#[test]
+fn constant_output_is_a_warning_not_an_error() {
+    let mut n = Netlist::new(1);
+    let a = n.input(0);
+    let x = n.and2(a, a); // = a (folded), keep a live
+    let k = n.constant(true);
+    n.outputs = vec![x, k];
+    let r = verify_netlist(&n, Some(0), None);
+    assert!(!r.has_errors(), "{}", r.render());
+    let warns: Vec<_> = r
+        .diagnostics
+        .iter()
+        .filter(|d| d.pass == VerifyPass::DeadConst && d.severity == Severity::Warning)
+        .collect();
+    assert!(
+        warns.iter().any(|d| d.message.contains("pinned to constant true")),
+        "expected a pinned-output warning, got {}",
+        r.render()
+    );
+}
+
+#[test]
+fn dead_gate_is_a_warning() {
+    let mut n = base_net();
+    // Fabricate a gate no output reaches.
+    let dead = n.gates.len() as u32;
+    n.gates.push(Gate::And(0, 1));
+    n.chain_of.push(NO_CHAIN);
+    let r = verify_netlist(&n, Some(1), None);
+    assert!(!r.has_errors(), "{}", r.render());
+    assert!(
+        r.diagnostics.iter().any(|d| {
+            d.pass == VerifyPass::DeadConst
+                && d.severity == Severity::Warning
+                && d.node == Some(dead)
+                && d.message.contains("dead gate")
+        }),
+        "expected a dead-gate warning, got {}",
+        r.render()
+    );
+}
+
+#[test]
+fn complement_merge_is_a_warning() {
+    let mut n = Netlist::new(1);
+    let a = n.input(0);
+    let na = n.not(a);
+    // and2 would not fold a ∧ ¬a (no complement rule on construct) —
+    // the verifier flags what the builder misses.
+    let x = n.and2(a, na);
+    n.outputs = vec![x];
+    let r = verify_netlist(&n, Some(0), None);
+    assert!(!r.has_errors(), "{}", r.render());
+    assert!(
+        r.diagnostics
+            .iter()
+            .any(|d| d.message.contains("complement")),
+        "expected a complement warning, got {}",
+        r.render()
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Pass 4: duplication census
+// ---------------------------------------------------------------------------
+
+#[test]
+fn census_counts_identical_comparator_chains() {
+    // Two wide comparators with the same threshold over the same bits:
+    // chain builders run with the strash off, so the gates duplicate and
+    // the census must see exactly one duplicate chain.
+    let mut n = Netlist::new(8);
+    let x: Vec<_> = (0..8).map(|i| n.input(i)).collect();
+    let c1 = n.ge_const(&x, 100);
+    let c2 = n.ge_const(&x, 100);
+    n.outputs = vec![c1, c2];
+    let r = verify_netlist(&n, Some(0), None);
+    assert!(!r.has_errors(), "{}", r.render());
+    assert_eq!(r.census.chains, 2);
+    assert_eq!(r.census.duplicate_chains, 1);
+    assert!(r.census.duplicate_gates > 0);
+    assert_eq!(r.census.duplicate_chain_luts, 4); // 8 bits / 2 per LUT
+    assert_eq!(r.census.unique_gates + r.census.duplicate_gates, r.census.gates);
+}
+
+#[test]
+fn census_skipped_on_reference_errors() {
+    let mut n = base_net();
+    n.gates[4] = Gate::And(0, 9999);
+    let r = verify_netlist(&n, Some(1), None);
+    assert!(r.has_errors());
+    assert_eq!(r.census.unique_gates, 0, "census must not run over broken references");
+    assert!(
+        r.diagnostics
+            .iter()
+            .any(|d| d.pass == VerifyPass::Duplication && d.message.contains("skipped")),
+        "{}",
+        r.render()
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Clean property: fixtures + random trained models
+// ---------------------------------------------------------------------------
+
+#[test]
+fn shipped_fixtures_verify_with_zero_errors() {
+    for fixture in fixtures() {
+        let (quant, _) = quantize_leaves(&fixture.model, fixture.w_tree);
+        let design = design_from_quant(fixture.name, &quant, fixture.pipeline, true);
+        let built = build_netlist(&design);
+        let map = map_luts(&built.net);
+        let r = verify_built(&built, Some(&map));
+        assert_eq!(
+            r.summary().errors,
+            0,
+            "fixture {} must verify clean:\n{}",
+            fixture.name,
+            r.render()
+        );
+    }
+}
+
+fn random_tree(rng: &mut Rng, n_features: usize, n_bins: u32, depth: usize) -> Tree {
+    fn grow(
+        rng: &mut Rng,
+        n_features: usize,
+        n_bins: u32,
+        depth: usize,
+        nodes: &mut Vec<TreeNode>,
+    ) -> u32 {
+        let idx = nodes.len() as u32;
+        if depth == 0 || rng.bool(0.3) {
+            let value = (rng.f64() * 4.0 - 2.0) as f32;
+            nodes.push(TreeNode::Leaf { value });
+            return idx;
+        }
+        nodes.push(TreeNode::Leaf { value: 0.0 }); // placeholder
+        let feat = rng.below(n_features) as u32;
+        let thresh = 1 + rng.below((n_bins - 1) as usize) as u32;
+        let left = grow(rng, n_features, n_bins, depth - 1, nodes);
+        let right = grow(rng, n_features, n_bins, depth - 1, nodes);
+        nodes[idx as usize] = TreeNode::Split { feat, thresh, left, right };
+        idx
+    }
+    let mut nodes = Vec::new();
+    grow(rng, n_features, n_bins, depth, &mut nodes);
+    Tree { nodes }
+}
+
+#[test]
+fn prop_random_models_verify_clean() {
+    let mut rng = Rng::new(0x5EED_11);
+    for case in 0..10 {
+        let n_features = 2 + rng.below(6);
+        let w_feature = 1 + rng.below(4) as u8;
+        let n_bins = 1u32 << w_feature;
+        let n_groups = if case % 2 == 0 { 1 } else { 2 + rng.below(3) };
+        let rounds = 1 + rng.below(4);
+        let depth = 1 + rng.below(4);
+        let trees: Vec<Tree> = (0..rounds * n_groups)
+            .map(|_| random_tree(&mut rng, n_features, n_bins, depth))
+            .collect();
+        let model = GbdtModel {
+            trees,
+            n_groups,
+            base_score: (rng.f64() - 0.5) as f32,
+            n_features,
+            w_feature,
+        };
+        model.validate().unwrap();
+        let w_tree = 1 + rng.below(5) as u8;
+        let (quant, _) = quantize_leaves(&model, w_tree);
+        let pipeline = Pipeline::new(rng.below(2), rng.below(2), rng.below(3));
+        let design = design_from_quant("prop_verify", &quant, pipeline, true);
+        let built = build_netlist(&design);
+        let map = map_luts(&built.net);
+        let r = verify_built(&built, Some(&map));
+        assert_eq!(
+            r.summary().errors,
+            0,
+            "case {case} (groups={n_groups}, pipeline={pipeline:?}) must verify clean:\n{}",
+            r.render()
+        );
+    }
+}
