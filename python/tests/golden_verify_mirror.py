@@ -3,11 +3,21 @@
 
 The golden vectors in ``rust/tests/vectors/*.json`` freeze a ``verify``
 object (diagnostic counts + duplication census, see ``netlist::verify`` and
-DESIGN.md section 9). This script recomputes that object from scratch — a
-line-for-line Python mirror of ``quantize_leaves``, ``design_from_quant``,
-``build_netlist`` (including structural hashing, constant folding and carry
-chains) and the verifier's well-formed / dead-const / census passes — and
-splices it into the vector files.
+DESIGN.md section 9), a ``verify_opt`` object (the same summary over the
+hash-consed optimizing rebuild, ``netlist::opt`` — frozen at zero
+duplicates) and an ``equiv`` object (``netlist::equiv`` verdict counts for
+the optimized-vs-naive pair). This script recomputes all three from
+scratch — a line-for-line Python mirror of ``quantize_leaves``,
+``design_from_quant``, ``build_netlist`` (including structural hashing,
+constant folding and carry chains), the ``optimize_built`` replay, the
+verifier's well-formed / dead-const / census passes and an exhaustive
+equivalence sweep — and splices them into the vector files.
+
+The equivalence mirror is exact, not probabilistic: every fixture has four
+input bits, so each output's support cone is far below the Rust checker's
+``EXACT_SUPPORT_LIMIT`` (16) and ``check_equiv`` settles every output by
+exhaustive sweep — ``probable`` is structurally zero and the mirror simply
+sweeps all input assignments of the whole net.
 
 The mirror is validated before it writes anything:
 
@@ -15,7 +25,10 @@ The mirror is validated before it writes anything:
   ``quant_leaves`` exactly;
 * the mirrored netlist, simulated on the frozen ``rows``, must reproduce
   the frozen ``netlist_classes`` bit-for-bit, and its register-cut count
-  must equal the frozen ``cuts``.
+  must equal the frozen ``cuts``;
+* the mirrored optimized rebuild must also reproduce ``netlist_classes``,
+  must never grow the netlist, and must census to zero duplicate gates
+  and chains (the invariant ``verify_built_deduped`` enforces).
 
 The mapping-legality pass is not mirrored: on a valid build it emits zero
 diagnostics (the Rust test suite asserts this), so it contributes nothing
@@ -420,6 +433,56 @@ def fanins(g):
 
 
 # ---------------------------------------------------------------------------
+# Optimizing rebuild (mirror of netlist::opt::optimize_built)
+# ---------------------------------------------------------------------------
+
+def optimize_net(net):
+    """Replay every gate through the builders with the strash always on.
+
+    Mirrors ``optimize_built``: operands are remapped through the growing
+    old->new substitution (old node order is topological), so on-construct
+    folding re-applies to canonicalized operands and hash-consing leaves
+    zero structural duplicates. Chains re-seal with their original LUT
+    area; chains whose every gate strash-hit earlier logic vanish.
+    """
+    new = Net(net.n_inputs)
+    mapping = []
+    chain_members = [[] for _ in net.chains]
+    for i, g in enumerate(net.gates):
+        before = len(new.gates)
+        k = g[0]
+        if k == "in":
+            nid = new.input(g[1])
+        elif k == "const":
+            nid = new.constant(g[1])
+        elif k == "not":
+            nid = new.not_(mapping[g[1]])
+        elif k == "and":
+            nid = new.and2(mapping[g[1]], mapping[g[2]])
+        elif k == "or":
+            nid = new.or2(mapping[g[1]], mapping[g[2]])
+        elif k == "xor":
+            nid = new.xor2(mapping[g[1]], mapping[g[2]])
+        else:  # reg
+            nid = new.reg(mapping[g[1]])
+        mapping.append(nid)
+        c = net.chain_of[i]
+        if c != NO_CHAIN:
+            # Freshly appended gates (strash misses) inherit the old
+            # chain; strash hits keep their original classification.
+            chain_members[c].extend(range(before, len(new.gates)))
+    for c, members in enumerate(chain_members):
+        if not members:
+            continue  # fully deduplicated/folded: the chain vanishes
+        cid = len(new.chains)
+        new.chains.append(net.chains[c])
+        for m in members:
+            new.chain_of[m] = cid
+    new.outputs = [mapping[o] for o in net.outputs]
+    return new
+
+
+# ---------------------------------------------------------------------------
 # Netlist build (mirror of netlist::build::build_netlist)
 # ---------------------------------------------------------------------------
 
@@ -515,11 +578,8 @@ def build_netlist(design):
 # Scalar simulation + class decode (gate.rs eval / BuiltDesign::class_of)
 # ---------------------------------------------------------------------------
 
-def classify(net, group_widths, row, w):
-    inputs = [False] * net.n_inputs
-    for f, x in enumerate(row):
-        for j in range(w):
-            inputs[f * w + j] = (x >> j) & 1 == 1
+def eval_outputs(net, inputs):
+    """Scalar combinational evaluation, registers transparent."""
     v = [False] * len(net.gates)
     for i, g in enumerate(net.gates):
         if g[0] == "in":
@@ -536,7 +596,15 @@ def classify(net, group_widths, row, w):
             v[i] = v[g[1]] != v[g[2]]
         else:  # reg: functionally transparent
             v[i] = v[g[1]]
-    out = [v[o] for o in net.outputs]
+    return [v[o] for o in net.outputs]
+
+
+def classify(net, group_widths, row, w):
+    inputs = [False] * net.n_inputs
+    for f, x in enumerate(row):
+        for j in range(w):
+            inputs[f * w + j] = (x >> j) & 1 == 1
+    out = eval_outputs(net, inputs)
     if group_widths == [1]:
         return int(out[0])
     best, best_val, offset = 0, 0, 0
@@ -546,6 +614,31 @@ def classify(net, group_widths, row, w):
             best, best_val = g, val
         offset += width
     return best
+
+
+# ---------------------------------------------------------------------------
+# Equivalence verdict counts (mirror of netlist::equiv::check_equiv on
+# fixture-sized nets: every support cone is <= EXACT_SUPPORT_LIMIT, so each
+# output pair settles by exhaustive sweep — Proved or a located failure,
+# never Probable)
+# ---------------------------------------------------------------------------
+
+EXACT_SUPPORT_LIMIT = 16
+
+
+def equiv_counts(a, b):
+    assert a.n_inputs == b.n_inputs, "input interface mismatch"
+    assert len(a.outputs) == len(b.outputs), "output interface mismatch"
+    assert a.n_inputs <= EXACT_SUPPORT_LIMIT, "mirror only sweeps small nets"
+    ok = [True] * len(a.outputs)
+    for x in range(1 << a.n_inputs):
+        inputs = [(x >> i) & 1 == 1 for i in range(a.n_inputs)]
+        va, vb = eval_outputs(a, inputs), eval_outputs(b, inputs)
+        for o in range(len(ok)):
+            if va[o] != vb[o]:
+                ok[o] = False
+    proved = sum(ok)
+    return {"proved": proved, "probable": 0, "failed": len(ok) - proved}
 
 
 # ---------------------------------------------------------------------------
@@ -710,10 +803,17 @@ VERIFY_FIELDS = [
 ]
 
 
-def verify_line(v):
-    """Exact single-line format of GoldenVector::to_json."""
+def summary_line(key, v):
+    """Exact single-line format of conform.rs `summary_line`."""
     inner = ", ".join(f'"{k}": {v[k]}' for k in VERIFY_FIELDS)
-    return "  \"verify\": {" + inner + "},"
+    return f'  "{key}": {{{inner}}},'
+
+
+def equiv_line(e):
+    """Exact single-line format of the `equiv` object in to_json."""
+    return '  "equiv": {{"proved": {}, "probable": {}, "failed": {}}},'.format(
+        e["proved"], e["probable"], e["failed"]
+    )
 
 
 def process(fixture, check_only):
@@ -742,15 +842,37 @@ def process(fixture, check_only):
     assert summary["errors"] == 0, (fixture["name"], summary)
     assert summary["unique_gates"] + summary["duplicate_gates"] == summary["gates"]
 
+    # Optimizing rebuild: must preserve classes, never grow, census clean.
+    opt = optimize_net(net)
+    opt_classes = [
+        classify(opt, group_widths, row, quant["w_feature"]) for row in frozen["rows"]
+    ]
+    assert opt_classes == frozen["netlist_classes"], (
+        fixture["name"], opt_classes, frozen["netlist_classes"])
+    assert len(opt.gates) <= len(net.gates), fixture["name"]
+    # verify_built_deduped only differs from verify_built when duplicates
+    # survive; with the census at zero the summaries coincide.
+    opt_summary = verify_summary(opt, cuts)
+    assert opt_summary["errors"] == 0, (fixture["name"], opt_summary)
+    assert opt_summary["duplicate_gates"] == 0, (fixture["name"], opt_summary)
+    assert opt_summary["duplicate_chains"] == 0, (fixture["name"], opt_summary)
+
+    eq = equiv_counts(net, opt)
+    assert eq["failed"] == 0, (fixture["name"], eq)
+    assert eq["proved"] == len(net.outputs), (fixture["name"], eq)
+
     lines = text.split("\n")
-    new = verify_line(summary)
+    block = [summary_line("verify", summary), summary_line("verify_opt", opt_summary),
+             equiv_line(eq)]
     out, spliced = [], False
     for line in lines:
         if line.startswith('  "verify":'):
-            out.append(new)
+            out.extend(block)
             spliced = True
+        elif line.startswith('  "verify_opt":') or line.startswith('  "equiv":'):
+            continue  # superseded by the spliced block above
         elif line.startswith('  "verilog_fnv1a64":') and not spliced:
-            out.append(new)
+            out.extend(block)
             out.append(line)
             spliced = True
         else:
@@ -766,7 +888,10 @@ def process(fixture, check_only):
         return False
     with open(path, "w") as f:
         f.write(new_text)
-    print(f"{fixture['name']}: wrote verify {summary}")
+    print(
+        f"{fixture['name']}: wrote verify {summary}\n"
+        f"  verify_opt {opt_summary}\n  equiv {eq}"
+    )
     return True
 
 

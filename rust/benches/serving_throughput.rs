@@ -43,7 +43,7 @@ use treelut::exp::configs::design_point;
 use treelut::exp::table::Table;
 use treelut::gbdt::histogram::BinnedMatrix;
 use treelut::gbdt::train;
-use treelut::netlist::LANES;
+use treelut::netlist::{BuildOpts, LANES};
 use treelut::quantize::{quantize_leaves, FeatureQuantizer, FlatForest, QuantModel};
 use treelut::runtime::{Engine, Manifest, ModelTensors};
 use treelut::util::{Args, Rng, Summary, Timer};
@@ -460,18 +460,28 @@ fn main() -> anyhow::Result<()> {
     // and how much of the 64-lane word real traffic filled.
     let netlist_requests = n_requests.min(4_000);
     let compiled = CompiledNetlist::compile(&quant, dp.pipeline)?;
+    let compiled_naive =
+        CompiledNetlist::compile_with(&quant, dp.pipeline, false, BuildOpts::default())?;
     let meta = compiled.meta();
     println!(
         "\n== netlist executor sweep: {} LUTs, {} FFs, {} cuts, depth {} \
-         ({} gates, {} keys) ==",
-        meta.luts, meta.ffs, meta.cuts, meta.levels, meta.gates, meta.keys
+         ({} gates, {} keys; optimizer removed {} gates / {} LUTs vs naive) ==",
+        meta.luts,
+        meta.ffs,
+        meta.cuts,
+        meta.levels,
+        meta.gates,
+        meta.keys,
+        meta.gates_saved(),
+        meta.luts_saved()
     );
     let mut t = Table::new(&["executor", "shards", "rows/s", "batch", "p50", "p99", "lanes"]);
     let mut flat_equal_load = 0.0f64;
     let mut netlist_rate = 0.0f64;
+    let mut netlist_naive_rate = 0.0f64;
     let mut netlist_util = 0.0f64;
     for &shards in &[1usize, 4] {
-        for kind in ["flat", "netlist"] {
+        for kind in ["flat", "netlist", "netlist-naive"] {
             let policy = BatchPolicy {
                 max_batch: MAX_BATCH,
                 max_wait: Duration::from_micros(500),
@@ -487,7 +497,10 @@ fn main() -> anyhow::Result<()> {
                     DispatchPolicy::P2c,
                 )?
             } else {
-                let cn = compiled.clone();
+                // "netlist" serves the optimized circuit; "netlist-naive"
+                // the pre-rebuild one — same traffic, so the rows/s gap is
+                // the serving payoff of the eliminated gates.
+                let cn = if kind == "netlist" { compiled.clone() } else { compiled_naive.clone() };
                 let lf = Arc::clone(&lanes);
                 Server::start_pool_dispatch(
                     move |_shard| Ok(cn.executor(MAX_BATCH, Arc::clone(&lf))),
@@ -500,11 +513,13 @@ fn main() -> anyhow::Result<()> {
             let lat = poisson_run(&server, &btest, netlist_requests.min(2_000), rps)?;
             let util = lanes.utilization();
             if shards == 4 {
-                if kind == "flat" {
-                    flat_equal_load = cap.throughput;
-                } else {
-                    netlist_rate = cap.throughput;
-                    netlist_util = util;
+                match kind {
+                    "flat" => flat_equal_load = cap.throughput,
+                    "netlist" => {
+                        netlist_rate = cap.throughput;
+                        netlist_util = util;
+                    }
+                    _ => netlist_naive_rate = cap.throughput,
                 }
             }
             t.row(&[
@@ -514,7 +529,7 @@ fn main() -> anyhow::Result<()> {
                 format!("{:.1}", cap.mean_batch),
                 format!("{:.0}us", lat.latency.p50 * 1e6),
                 format!("{:.0}us", lat.latency.p99 * 1e6),
-                if kind == "netlist" { format!("{:.0}%", util * 100.0) } else { "-".into() },
+                if kind == "flat" { "-".into() } else { format!("{:.0}%", util * 100.0) },
             ]);
             server.shutdown();
         }
@@ -522,9 +537,11 @@ fn main() -> anyhow::Result<()> {
     println!("{}", t.render());
     println!(
         "headline: netlist executor {netlist_rate:.0} rows/s vs flat {flat_equal_load:.0} \
-         rows/s at equal load (4 shards) -> {:.3}x; lanes utilization {:.0}% \
+         rows/s at equal load (4 shards) -> {:.3}x; optimized vs naive netlist -> {:.3}x \
+         ({netlist_naive_rate:.0} rows/s naive); lanes utilization {:.0}% \
          (rows mod 64 padding waste {:.0}%)",
         netlist_rate / flat_equal_load,
+        netlist_rate / netlist_naive_rate,
         netlist_util * 100.0,
         (1.0 - netlist_util) * 100.0
     );

@@ -12,7 +12,9 @@ use treelut::exp::configs::{default_rows, design_points};
 use treelut::exp::table::Table;
 use treelut::exp::{run_design_point, RunOptions};
 use treelut::netlist::conform::fixtures;
-use treelut::netlist::{build_netlist, map_luts, verify_built, Simulator};
+use treelut::netlist::{
+    build_netlist, check_equiv, map_luts, optimize_built, verify_built, Simulator,
+};
 use treelut::quantize::quantize_leaves;
 use treelut::rtl::{design_from_quant, verilog::emit_verilog};
 use treelut::util::{Args, Timer};
@@ -23,8 +25,9 @@ fn main() -> anyhow::Result<()> {
     args.finish()?;
 
     let mut t = Table::new(&[
-        "design point", "train(s)", "quantize+IR(s)", "netlist+map(s)", "verify(s)",
-        "verilog(s)", "sim rate (Msample-gate/s)", "gates",
+        "design point", "train(s)", "quantize+IR(s)", "netlist+map(s)", "opt(s)", "equiv(s)",
+        "verify(s)", "verilog(s)", "sim rate (Msample-gate/s)", "gates pre>post",
+        "LUTs pre>post",
     ]);
     for dp in design_points() {
         let rows =
@@ -43,6 +46,16 @@ fn main() -> anyhow::Result<()> {
         // Gate-sim throughput: one 64-lane batch over the whole netlist.
         let built = build_netlist(&design);
         let map = map_luts(&built.net);
+
+        // Hash-consed optimizing rebuild + the equivalence gate over it.
+        let tm = Timer::start();
+        let opt = optimize_built(&built);
+        let t_opt = tm.secs();
+        let map_opt = map_luts(&opt.net);
+        let tm = Timer::start();
+        let eq = check_equiv(&built, &opt)?;
+        let t_equiv = tm.secs();
+        anyhow::ensure!(eq.equivalent(), "{} {}: optimizer broke the circuit", dp.dataset, dp.label);
 
         // Static verifier wall time (all four passes over the mapped design).
         let tm = Timer::start();
@@ -68,10 +81,13 @@ fn main() -> anyhow::Result<()> {
             format!("{:.2}", r.t_train),
             format!("{:.3}", r.t_quantize),
             format!("{:.3}", r.t_map),
+            format!("{t_opt:.3}"),
+            format!("{t_equiv:.3}"),
             format!("{t_verify:.3}"),
             format!("{t_verilog:.3}"),
             format!("{rate:.0}"),
-            built.net.len().to_string(),
+            format!("{}>{}", built.net.len(), opt.net.len()),
+            format!("{}>{}", map.luts, map_opt.luts),
         ]);
     }
     println!("== tool-flow wall clock (paper 4.2: 'a few seconds') ==");
@@ -79,7 +95,9 @@ fn main() -> anyhow::Result<()> {
 
     // Verifier wall time over the frozen conformance fixtures — the same
     // netlists the CI lint job checks, so this tracks lint latency.
-    let mut v = Table::new(&["fixture", "gates", "LUTs", "diags", "verify(s)"]);
+    let mut v = Table::new(&[
+        "fixture", "gates pre>post", "LUTs pre>post", "diags", "verify(s)", "equiv(s)",
+    ]);
     for fixture in fixtures() {
         let (quant, _) = quantize_leaves(&fixture.model, fixture.w_tree);
         let design = design_from_quant(fixture.name, &quant, fixture.pipeline, true);
@@ -88,12 +106,19 @@ fn main() -> anyhow::Result<()> {
         let tm = Timer::start();
         let report = verify_built(&built, Some(&map));
         let t_verify = tm.secs();
+        let opt = optimize_built(&built);
+        let map_opt = map_luts(&opt.net);
+        let tm = Timer::start();
+        let eq = check_equiv(&built, &opt)?;
+        let t_equiv = tm.secs();
+        anyhow::ensure!(eq.equivalent(), "{}: optimizer broke the fixture", fixture.name);
         v.row(&[
             fixture.name.to_string(),
-            built.net.len().to_string(),
-            map.luts.to_string(),
+            format!("{}>{}", built.net.len(), opt.net.len()),
+            format!("{}>{}", map.luts, map_opt.luts),
             report.diagnostics.len().to_string(),
             format!("{t_verify:.4}"),
+            format!("{t_equiv:.4}"),
         ]);
     }
     println!();

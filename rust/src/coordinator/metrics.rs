@@ -164,8 +164,15 @@ impl ServingReport {
         let netlist = self
             .netlist
             .map(|m| {
+                // Only show the optimizer delta when the rebuild actually
+                // ran (pre != post); a `--no-optimize` run reads clean.
+                let opt = if m.gates_pre != m.gates || m.luts_pre != m.luts {
+                    format!(" opt[-{}g -{}l]", m.gates_saved(), m.luts_saved())
+                } else {
+                    String::new()
+                };
                 format!(
-                    " netlist[luts={} ffs={} cuts={} depth={}]",
+                    " netlist[luts={} ffs={} cuts={} depth={}{opt}]",
                     m.luts, m.ffs, m.cuts, m.levels
                 )
             })
@@ -251,7 +258,16 @@ mod tests {
         assert!(!r.render().contains("exec="));
         assert!(!r.render().contains("netlist["));
         assert!(!r.render().contains("lanes="));
-        let meta = NetlistMeta { luts: 120, ffs: 30, cuts: 2, levels: 4, gates: 900, keys: 17 };
+        let meta = NetlistMeta {
+            luts: 120,
+            ffs: 30,
+            cuts: 2,
+            levels: 4,
+            gates: 900,
+            keys: 17,
+            gates_pre: 900,
+            luts_pre: 120,
+        };
         let r = r.with_executor("netlist").with_netlist(meta).with_lanes_utilization(0.43);
         assert_eq!(r.executor.as_deref(), Some("netlist"));
         assert_eq!(r.netlist, Some(meta));
@@ -259,6 +275,25 @@ mod tests {
         assert!(s.contains("exec=netlist"), "{s}");
         assert!(s.contains("netlist[luts=120 ffs=30 cuts=2 depth=4]"), "{s}");
         assert!(s.contains("lanes=43%"), "{s}");
+    }
+
+    #[test]
+    fn optimizer_delta_rendering() {
+        let r = ServingReport::from_latencies(&[0.001; 10], 1.0, 2.0, None);
+        let meta = NetlistMeta {
+            luts: 100,
+            ffs: 30,
+            cuts: 2,
+            levels: 4,
+            gates: 700,
+            keys: 17,
+            gates_pre: 900,
+            luts_pre: 120,
+        };
+        assert_eq!(meta.gates_saved(), 200);
+        assert_eq!(meta.luts_saved(), 20);
+        let s = r.with_netlist(meta).render();
+        assert!(s.contains("netlist[luts=100 ffs=30 cuts=2 depth=4 opt[-200g -20l]]"), "{s}");
     }
 
     #[test]

@@ -15,15 +15,21 @@
 //! `tests/conformance.rs`).
 //!
 //! Construction is split in two so pools can share the expensive part:
-//! [`CompiledNetlist`] (design lowering + netlist build + LUT mapping) is
-//! `Send + Sync` and built once, then each shard materializes its own
-//! [`NetlistExecutor`] (simulator scratch is per-shard state) via
-//! [`CompiledNetlist::executor`].
+//! [`CompiledNetlist`] (design lowering + netlist build + hash-consed
+//! optimizing rebuild + LUT mapping) is `Send + Sync` and built once, then
+//! each shard materializes its own [`NetlistExecutor`] (simulator scratch
+//! is per-shard state) via [`CompiledNetlist::executor`]. The optimizer is
+//! on by default and gated by the static equivalence checker
+//! ([`crate::netlist::equiv`]); [`CompiledNetlist::compile_with`] turns it
+//! off for A/B measurement (`treelut serve --no-optimize`).
 
 use super::{BatchExecutor, LaneExecutor};
 use crate::netlist::simulate::{InputBatch, OutputBatch, LANES};
-use crate::netlist::verify::{verify_built, VerifySummary};
-use crate::netlist::{build_netlist, map_luts, BuiltDesign, Simulator, StreamingCycleSim};
+use crate::netlist::verify::{verify_built, verify_built_deduped, VerifySummary};
+use crate::netlist::{
+    build_netlist, check_equiv, map_luts, optimize_built, BuildOpts, BuiltDesign, Simulator,
+    StreamingCycleSim,
+};
 use crate::quantize::{FeatureQuantizer, QuantModel};
 use crate::rtl::{design_from_quant, Pipeline};
 use std::cell::RefCell;
@@ -42,6 +48,11 @@ pub enum NetlistExecError {
     /// predictor could still satisfy it on out-of-domain inputs, so the
     /// input clamp could no longer guarantee executor agreement.
     ThresholdOutOfDomain { feat: u32, thresh: u32, max: u32 },
+    /// The equivalence checker ([`crate::netlist::equiv`]) found outputs
+    /// where the optimized rebuild disagrees with the naive build: the
+    /// compile refuses to serve the optimized circuit. The error context
+    /// carries the located counterexamples.
+    OptimizerMismatch { failed: usize },
 }
 
 impl std::fmt::Display for NetlistExecError {
@@ -57,6 +68,13 @@ impl std::fmt::Display for NetlistExecError {
                      w_feature input domain (max {max})"
                 )
             }
+            NetlistExecError::OptimizerMismatch { failed } => {
+                write!(
+                    f,
+                    "optimized netlist disagrees with the naive build on {failed} \
+                     output(s); refusing to serve it"
+                )
+            }
         }
     }
 }
@@ -70,7 +88,7 @@ impl std::error::Error for NetlistExecError {}
 /// [`crate::netlist::BuiltDesign`]).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct NetlistMeta {
-    /// LUTs in the technology-mapped cover.
+    /// LUTs in the technology-mapped cover of the *served* netlist.
     pub luts: usize,
     /// Flip-flops (pipeline register bits).
     pub ffs: usize,
@@ -78,10 +96,29 @@ pub struct NetlistMeta {
     pub cuts: usize,
     /// LUT depth of the critical pipeline stage.
     pub levels: u32,
-    /// Gate count of the netlist before mapping.
+    /// Gate count of the served netlist before mapping.
     pub gates: usize,
     /// Key-generator comparators.
     pub keys: usize,
+    /// Gate count of the naive (pre-optimization) build. Equal to `gates`
+    /// when compiled with `BuildOpts { optimize: false }`; the difference
+    /// is the duplicate logic the hash-consed rebuild eliminated.
+    pub gates_pre: usize,
+    /// LUT count of the naive build's mapping. Equal to `luts` when the
+    /// optimizer is off.
+    pub luts_pre: usize,
+}
+
+impl NetlistMeta {
+    /// Gates eliminated by the optimizing rebuild (0 when it was off).
+    pub fn gates_saved(&self) -> usize {
+        self.gates_pre.saturating_sub(self.gates)
+    }
+
+    /// LUTs eliminated by the optimizing rebuild (0 when it was off).
+    pub fn luts_saved(&self) -> usize {
+        self.luts_pre.saturating_sub(self.luts)
+    }
 }
 
 /// Lane-occupancy counters for the [`LANES`]-wide simulation words. Shared
@@ -155,6 +192,26 @@ impl CompiledNetlist {
         pipeline: Pipeline,
         verify: bool,
     ) -> anyhow::Result<CompiledNetlist> {
+        Self::compile_with(model, pipeline, verify, BuildOpts::optimized())
+    }
+
+    /// The fully explicit compile: `verify` controls the static verifier,
+    /// `opts` controls the hash-consed optimizing rebuild
+    /// ([`crate::netlist::opt`], on by default in the other constructors;
+    /// `treelut serve --no-optimize` turns it off).
+    ///
+    /// When optimizing, the rebuild is gated by the static equivalence
+    /// checker ([`crate::netlist::equiv`]) in debug builds and whenever
+    /// `verify` is on: a non-equivalent rebuild is refused with a typed
+    /// [`NetlistExecError::OptimizerMismatch`] whose context carries the
+    /// located counterexamples, and the verifier then runs in deduped mode
+    /// ([`verify_built_deduped`]) so any surviving duplicate is an Error.
+    pub fn compile_with(
+        model: &QuantModel,
+        pipeline: Pipeline,
+        verify: bool,
+        opts: BuildOpts,
+    ) -> anyhow::Result<CompiledNetlist> {
         model.validate()?;
         anyhow::ensure!(
             (1..=16).contains(&model.w_feature),
@@ -174,10 +231,32 @@ impl CompiledNetlist {
             );
         }
         let n_keys = design.keys.len();
-        let built = build_netlist(&design);
-        let map = map_luts(&built.net);
+        let naive = build_netlist(&design);
+        let map_naive = map_luts(&naive.net);
+        let gates_pre = naive.net.len();
+        let luts_pre = map_naive.luts;
+        let (built, map) = if opts.optimize {
+            let opt = optimize_built(&naive);
+            if verify || cfg!(debug_assertions) {
+                let report = check_equiv(&naive, &opt).map_err(anyhow::Error::new)?;
+                if !report.equivalent() {
+                    return Err(anyhow::Error::new(NetlistExecError::OptimizerMismatch {
+                        failed: report.failed.len(),
+                    })
+                    .context(report.render()));
+                }
+            }
+            let map_opt = map_luts(&opt.net);
+            (opt, map_opt)
+        } else {
+            (naive, map_naive)
+        };
         let summary = if verify {
-            let report = verify_built(&built, Some(&map));
+            let report = if opts.optimize {
+                verify_built_deduped(&built, Some(&map))
+            } else {
+                verify_built(&built, Some(&map))
+            };
             if let Some(failure) = report.to_failure() {
                 return Err(anyhow::Error::new(failure)
                     .context("refusing to serve a structurally invalid netlist"));
@@ -193,6 +272,8 @@ impl CompiledNetlist {
             levels: map.max_stage_depth(),
             gates: built.net.len(),
             keys: n_keys,
+            gates_pre,
+            luts_pre,
         };
         Ok(CompiledNetlist {
             shared: Arc::new(CompiledShared {
@@ -463,6 +544,39 @@ mod tests {
         assert!(meta.levels >= 1);
         assert!(meta.gates > 0);
         assert_eq!(meta.keys, 2);
+        assert!(meta.gates_pre >= meta.gates, "rebuild never grows the netlist");
+        assert_eq!(meta.gates_saved(), meta.gates_pre - meta.gates);
+    }
+
+    #[test]
+    fn optimizer_default_on_and_explicit_off_agree() {
+        let m = model();
+        let p = Pipeline::new(1, 1, 1);
+        let on = CompiledNetlist::compile(&m, p).unwrap();
+        let off = CompiledNetlist::compile_with(&m, p, false, BuildOpts::default()).unwrap();
+        // Off = the naive build: its meta carries no delta.
+        assert_eq!(off.meta().gates, off.meta().gates_pre);
+        assert_eq!(off.meta().luts, off.meta().luts_pre);
+        assert_eq!(off.meta().gates_saved(), 0);
+        // On serves a netlist no larger than naive, against the same baseline.
+        assert_eq!(on.meta().gates_pre, off.meta().gates);
+        assert!(on.meta().gates <= on.meta().gates_pre);
+        // Both executors classify identically.
+        let rows: Vec<Vec<u16>> = (0..16).map(|v| vec![v % 4, v / 4]).collect();
+        let refs: Vec<&[u16]> = rows.iter().map(|r| r.as_slice()).collect();
+        let lanes = || Arc::new(LaneStats::default());
+        let got_on = on.executor(64, lanes()).execute(&refs).unwrap();
+        let got_off = off.executor(64, lanes()).execute(&refs).unwrap();
+        assert_eq!(got_on, got_off);
+    }
+
+    #[test]
+    fn verified_optimized_compile_has_zero_duplicates() {
+        let m = model();
+        let c = CompiledNetlist::compile_checked(&m, Pipeline::new(1, 1, 1), true).unwrap();
+        let s = c.verify_summary().unwrap();
+        assert_eq!(s.duplicate_gates, 0, "deduped verify must hold post-opt");
+        assert_eq!(s.duplicate_chains, 0);
     }
 
     #[test]

@@ -30,13 +30,26 @@
 //!     non-full sibling first), or sheds the queue head, and shed counts
 //!     appear in the report. `--verify` (netlist only) runs the static
 //!     verifier on the compiled circuit and refuses to serve on any
-//!     Error-severity diagnostic (debug builds always verify)
-//! treelut lint [--fixtures] [--config <mnist|jsc|nid> [--variant I|II] [--rows N] [--seed S]]
+//!     Error-severity diagnostic (debug builds always verify). The compile
+//!     runs the hash-consed optimizing rebuild (netlist::opt) by default,
+//!     gated by the equivalence checker; `--no-optimize` serves the naive
+//!     build for A/B measurement, and the report's netlist[...] block
+//!     shows the gates/LUTs the optimizer removed
+//! treelut lint [--fixtures] [--equiv] [--config <mnist|jsc|nid> [--variant I|II] [--rows N] [--seed S]]
 //!     static verification + lint (netlist::verify): renders every
 //!     diagnostic and the duplication census for the four conformance
 //!     fixtures (default / --fixtures) or a freshly trained design point
-//!     (--config). Exits non-zero if any Error-severity diagnostic is
-//!     found — the CI gate for structural soundness
+//!     (--config). `--equiv` additionally runs the hash-consed optimizing
+//!     rebuild on every target, lints it in deduped mode (any surviving
+//!     duplicate gate/chain is an Error) and proves it equivalent to the
+//!     naive build with netlist::equiv. Exits non-zero if any
+//!     Error-severity diagnostic or equivalence failure is found — the CI
+//!     gate for structural soundness
+//! treelut equiv
+//!     static combinational equivalence check (netlist::equiv) over the
+//!     four conformance fixtures: each naive build vs its hash-consed
+//!     optimized rebuild, output by output, with located counterexamples
+//!     on mismatch. Exits non-zero unless every pair checks out
 //! ```
 
 use std::path::PathBuf;
@@ -49,18 +62,22 @@ use treelut::data::synth;
 use treelut::exp::configs::{default_rows, design_point};
 use treelut::exp::{run_design_point, RunOptions};
 use treelut::gbdt::train;
-use treelut::netlist::{build_netlist, map_luts, verify_built, BuiltDesign, MapResult, Severity};
+use treelut::netlist::{
+    build_netlist, check_equiv, map_luts, optimize_built, verify_built, verify_built_deduped,
+    BuildOpts, BuiltDesign, MapResult, Severity,
+};
 use treelut::quantize::{quantize_leaves, FeatureQuantizer, FlatForest};
 use treelut::rtl::{design_from_quant, verilog::emit_verilog};
 use treelut::runtime::{Engine, Manifest, ModelTensors};
 use treelut::util::{Args, Rng, Timer};
 
-const USAGE: &str = "usage: treelut <flow|train|datasets|serve|lint> [options]
+const USAGE: &str = "usage: treelut <flow|train|datasets|serve|lint|equiv> [options]
   flow      --dataset <mnist|jsc|nid> [--variant I|II] [--rows N] [--seed S] [--out DIR] [--bypass-keygen]
   train     --dataset <mnist|jsc|nid> [--variant I|II] [--rows N] [--seed S] --out FILE
   datasets
-  serve     [--config jsc] [--requests N] [--rps R] [--rows N] [--max-wait-us U] [--shards S] [--dispatch round-robin|p2c] [--executor auto|flat|netlist] [--coalesce] [--verify] [--queue-cap C] [--overload block|shed-new|shed-oldest]
-  lint      [--fixtures] [--config <mnist|jsc|nid> [--variant I|II] [--rows N] [--seed S]]";
+  serve     [--config jsc] [--requests N] [--rps R] [--rows N] [--max-wait-us U] [--shards S] [--dispatch round-robin|p2c] [--executor auto|flat|netlist] [--coalesce] [--verify] [--no-optimize] [--queue-cap C] [--overload block|shed-new|shed-oldest]
+  lint      [--fixtures] [--equiv] [--config <mnist|jsc|nid> [--variant I|II] [--rows N] [--seed S]]
+  equiv";
 
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env();
@@ -71,6 +88,7 @@ fn main() -> anyhow::Result<()> {
         "datasets" => cmd_datasets(args),
         "serve" => cmd_serve(args),
         "lint" => cmd_lint(args),
+        "equiv" => cmd_equiv(args),
         _ => {
             eprintln!("{USAGE}");
             std::process::exit(2);
@@ -166,6 +184,7 @@ fn cmd_datasets(args: Args) -> anyhow::Result<()> {
 fn cmd_lint(mut args: Args) -> anyhow::Result<()> {
     let config = args.opt("config");
     let fixtures_flag = args.flag("fixtures");
+    let equiv_flag = args.flag("equiv");
     let variant_arg = args.get("variant", "");
     let rows_arg = args.get_as::<usize>("rows", 0);
     let seed = args.get_as::<u64>("seed", 7);
@@ -201,6 +220,9 @@ fn cmd_lint(mut args: Args) -> anyhow::Result<()> {
             let built = build_netlist(&design);
             let map = map_luts(&built.net);
             total_errors += lint_target(&format!("{config} ({variant})"), &built, &map);
+            if equiv_flag {
+                total_errors += lint_equiv_target(&format!("{config} ({variant})"), &built);
+            }
             targets += 1;
         }
         None => {
@@ -212,6 +234,9 @@ fn cmd_lint(mut args: Args) -> anyhow::Result<()> {
                 let built = build_netlist(&design);
                 let map = map_luts(&built.net);
                 total_errors += lint_target(fixture.name, &built, &map);
+                if equiv_flag {
+                    total_errors += lint_equiv_target(fixture.name, &built);
+                }
                 targets += 1;
             }
         }
@@ -241,6 +266,68 @@ fn lint_target(name: &str, built: &BuiltDesign, map: &MapResult) -> usize {
     report.count(Severity::Error)
 }
 
+/// `lint --equiv`: run the hash-consed optimizing rebuild on `built`, lint
+/// the result in deduped mode (surviving duplicates are Errors), and prove
+/// it equivalent to the naive build. Returns Error-severity diagnostics
+/// plus mismatching outputs, so any failure fails the lint gate.
+fn lint_equiv_target(name: &str, built: &BuiltDesign) -> usize {
+    let opt = optimize_built(built);
+    let map = map_luts(&opt.net);
+    println!("== lint {name} (optimized) ==");
+    println!(
+        "optimized: {} gates ({} removed), {} LUTs, critical depth {}",
+        opt.net.len(),
+        built.net.len() - opt.net.len(),
+        map.luts,
+        map.max_stage_depth()
+    );
+    let report = verify_built_deduped(&opt, Some(&map));
+    print!("{}", report.render());
+    let mut failures = report.count(Severity::Error);
+    match check_equiv(built, &opt) {
+        Ok(eq) => {
+            print!("{}", eq.render());
+            failures += eq.failed.len();
+        }
+        Err(e) => {
+            println!("equiv: {e}");
+            failures += 1;
+        }
+    }
+    failures
+}
+
+/// `treelut equiv`: static combinational equivalence check over the four
+/// conformance fixtures — each naive build against its hash-consed
+/// optimized rebuild. Exits non-zero unless every output of every pair is
+/// proved (or at least survives the probabilistic fallback).
+fn cmd_equiv(mut args: Args) -> anyhow::Result<()> {
+    args.finish()?;
+    let mut failed = 0usize;
+    let mut proved = 0usize;
+    let mut probable = 0usize;
+    for fixture in treelut::netlist::conform::fixtures() {
+        let (quant, _) = quantize_leaves(&fixture.model, fixture.w_tree);
+        let design = design_from_quant(fixture.name, &quant, fixture.pipeline, true);
+        let built = build_netlist(&design);
+        let opt = optimize_built(&built);
+        let report = check_equiv(&built, &opt)?;
+        println!("== equiv {} ==", fixture.name);
+        println!(
+            "naive {} gates vs optimized {} gates",
+            built.net.len(),
+            opt.net.len()
+        );
+        print!("{}", report.render());
+        proved += report.proved;
+        probable += report.probable;
+        failed += report.failed.len();
+    }
+    anyhow::ensure!(failed == 0, "equiv: {failed} mismatching output(s)");
+    println!("equiv: all fixture pairs equivalent ({proved} proved, {probable} probable)");
+    Ok(())
+}
+
 fn cmd_serve(mut args: Args) -> anyhow::Result<()> {
     let config = args.get("config", "jsc");
     let n_requests = args.get_as::<usize>("requests", 1_000);
@@ -263,6 +350,11 @@ fn cmd_serve(mut args: Args) -> anyhow::Result<()> {
     anyhow::ensure!(
         !verify || executor == "netlist",
         "--verify requires --executor netlist (the static verifier runs on the compiled circuit)"
+    );
+    let no_optimize = args.flag("no-optimize");
+    anyhow::ensure!(
+        !no_optimize || executor == "netlist",
+        "--no-optimize requires --executor netlist (it disables the hash-consed rebuild)"
     );
     // 0 = unbounded (the default), matching the library's usize::MAX.
     let queue_cap = match args.get_as::<usize>("queue-cap", 0) {
@@ -324,8 +416,14 @@ fn cmd_serve(mut args: Args) -> anyhow::Result<()> {
             exec_label = "netlist";
             // Debug builds always verify; release verifies under --verify
             // and refuses structurally invalid circuits with a typed error.
-            let compiled =
-                CompiledNetlist::compile_checked(&quant, dp.pipeline, verify || cfg!(debug_assertions))?;
+            // The hash-consed optimizing rebuild is on unless --no-optimize
+            // asks for the naive-build A/B baseline.
+            let compiled = CompiledNetlist::compile_with(
+                &quant,
+                dp.pipeline,
+                verify || cfg!(debug_assertions),
+                BuildOpts { optimize: !no_optimize },
+            )?;
             if let Some(s) = compiled.verify_summary() {
                 eprintln!(
                     "verify: {} errors, {} warnings, {} infos; {} gates ({} duplicate), \

@@ -31,9 +31,11 @@
 use crate::gbdt::{GbdtModel, Tree, TreeNode};
 use crate::netlist::build::{build_netlist, BuiltDesign};
 use crate::netlist::cyclesim::CycleSimulator;
+use crate::netlist::equiv::check_equiv;
 use crate::netlist::lutmap::map_luts;
+use crate::netlist::opt::optimize_built;
 use crate::netlist::simulate::{InputBatch, OutputBatch, Simulator};
-use crate::netlist::verify::{verify_built, VerifySummary};
+use crate::netlist::verify::{verify_built, verify_built_deduped, VerifySummary};
 use crate::quantize::{quantize_leaves, FlatForest, QuantNode};
 use crate::rtl::verilog::emit_verilog;
 use crate::rtl::{design_from_quant, Pipeline};
@@ -185,6 +187,15 @@ pub struct GoldenVector {
     /// over the built netlist and its LUT mapping — pins the analysis
     /// results so refactors diff them against committed truth.
     pub verify: VerifySummary,
+    /// Static-verifier summary over the **optimized** build (hash-consed
+    /// rebuild, `netlist::opt`) and its remapping, in deduped mode: zero
+    /// duplicate gates/chains is frozen truth. The naive `verify` above
+    /// stays as the duplication baseline, so the eliminated-duplicate
+    /// delta is itself frozen.
+    pub verify_opt: VerifySummary,
+    /// `netlist::equiv` verdict counts for the optimized-vs-naive pair,
+    /// `[proved, probable, failed]` — every fixture output must be proved.
+    pub equiv: [usize; 3],
     /// FNV-1a (64-bit) of the emitted Verilog text, `0x`-hex.
     pub verilog_fnv1a64: String,
     /// The emitted Verilog, one entry per line (no trailing newline entry).
@@ -265,6 +276,12 @@ pub fn compute(fixture: &Fixture) -> GoldenVector {
     let map = map_luts(&built.net);
     let verify = verify_built(&built, Some(&map)).summary();
 
+    let opt = optimize_built(&built);
+    let map_opt = map_luts(&opt.net);
+    let verify_opt = verify_built_deduped(&opt, Some(&map_opt)).summary();
+    let eq = check_equiv(&built, &opt).expect("optimized build preserves the interface");
+    let equiv = [eq.proved, eq.probable, eq.failed.len()];
+
     let verilog_text = emit_verilog(&design);
     let verilog_fnv1a64 = format!("0x{:016x}", fnv1a64(verilog_text.as_bytes()));
     let mut verilog: Vec<String> = verilog_text.split('\n').map(str::to_string).collect();
@@ -287,6 +304,8 @@ pub fn compute(fixture: &Fixture) -> GoldenVector {
         netlist_classes,
         cycle_classes,
         verify,
+        verify_opt,
+        equiv,
         verilog_fnv1a64,
         verilog,
     }
@@ -322,6 +341,8 @@ impl GoldenVector {
         check("netlist_classes", &self.netlist_classes, &frozen.netlist_classes)?;
         check("cycle_classes", &self.cycle_classes, &frozen.cycle_classes)?;
         check("verify", &self.verify, &frozen.verify)?;
+        check("verify_opt", &self.verify_opt, &frozen.verify_opt)?;
+        check("equiv", &self.equiv, &frozen.equiv)?;
         for (i, (got, want)) in self.verilog.iter().zip(&frozen.verilog).enumerate() {
             anyhow::ensure!(
                 got == want,
@@ -403,13 +424,11 @@ impl GoldenVector {
         s.push_str(&format!("  \"flat_classes\": {},\n", json_arr(&self.flat_classes)));
         s.push_str(&format!("  \"netlist_classes\": {},\n", json_arr(&self.netlist_classes)));
         s.push_str(&format!("  \"cycle_classes\": {},\n", json_arr(&self.cycle_classes)));
-        let v = &self.verify;
+        s.push_str(&summary_line("verify", &self.verify));
+        s.push_str(&summary_line("verify_opt", &self.verify_opt));
         s.push_str(&format!(
-            "  \"verify\": {{\"errors\": {}, \"warnings\": {}, \"infos\": {}, \
-             \"gates\": {}, \"unique_gates\": {}, \"duplicate_gates\": {}, \
-             \"chains\": {}, \"duplicate_chains\": {}, \"duplicate_chain_luts\": {}}},\n",
-            v.errors, v.warnings, v.infos, v.gates, v.unique_gates, v.duplicate_gates,
-            v.chains, v.duplicate_chains, v.duplicate_chain_luts
+            "  \"equiv\": {{\"proved\": {}, \"probable\": {}, \"failed\": {}}},\n",
+            self.equiv[0], self.equiv[1], self.equiv[2]
         ));
         s.push_str(&format!("  \"verilog_fnv1a64\": {},\n", json_str(&self.verilog_fnv1a64)));
         s.push_str("  \"verilog\": [\n");
@@ -448,33 +467,54 @@ impl GoldenVector {
             flat_classes: obj.arr_field("flat_classes")?.nums_as_u32()?,
             netlist_classes: obj.arr_field("netlist_classes")?.nums_as_u32()?,
             cycle_classes: obj.arr_field("cycle_classes")?.nums_as_u32()?,
-            verify: {
-                let v = obj.field("verify")?.as_obj()?;
-                VerifySummary {
-                    errors: fit(v.num_field("errors")?, "verify.errors")?,
-                    warnings: fit(v.num_field("warnings")?, "verify.warnings")?,
-                    infos: fit(v.num_field("infos")?, "verify.infos")?,
-                    gates: fit(v.num_field("gates")?, "verify.gates")?,
-                    unique_gates: fit(v.num_field("unique_gates")?, "verify.unique_gates")?,
-                    duplicate_gates: fit(
-                        v.num_field("duplicate_gates")?,
-                        "verify.duplicate_gates",
-                    )?,
-                    chains: fit(v.num_field("chains")?, "verify.chains")?,
-                    duplicate_chains: fit(
-                        v.num_field("duplicate_chains")?,
-                        "verify.duplicate_chains",
-                    )?,
-                    duplicate_chain_luts: fit(
-                        v.num_field("duplicate_chain_luts")?,
-                        "verify.duplicate_chain_luts",
-                    )?,
-                }
+            verify: parse_summary(obj.field("verify")?.as_obj()?, "verify")?,
+            verify_opt: parse_summary(obj.field("verify_opt")?.as_obj()?, "verify_opt")?,
+            equiv: {
+                let e = obj.field("equiv")?.as_obj()?;
+                [
+                    fit(e.num_field("proved")?, "equiv.proved")?,
+                    fit(e.num_field("probable")?, "equiv.probable")?,
+                    fit(e.num_field("failed")?, "equiv.failed")?,
+                ]
             },
             verilog_fnv1a64: obj.str_field("verilog_fnv1a64")?,
             verilog: obj.arr_field("verilog")?.strs()?,
         })
     }
+}
+
+/// One committed-JSON line for a [`VerifySummary`] field (`verify` for the
+/// naive build, `verify_opt` for the hash-consed rebuild).
+fn summary_line(key: &str, v: &VerifySummary) -> String {
+    format!(
+        "  \"{key}\": {{\"errors\": {}, \"warnings\": {}, \"infos\": {}, \
+         \"gates\": {}, \"unique_gates\": {}, \"duplicate_gates\": {}, \
+         \"chains\": {}, \"duplicate_chains\": {}, \"duplicate_chain_luts\": {}}},\n",
+        v.errors, v.warnings, v.infos, v.gates, v.unique_gates, v.duplicate_gates,
+        v.chains, v.duplicate_chains, v.duplicate_chain_luts
+    )
+}
+
+/// Strict inverse of [`summary_line`]: every field required, checked
+/// narrowing on each count.
+fn parse_summary(v: &[(String, Json)], key: &str) -> anyhow::Result<VerifySummary> {
+    Ok(VerifySummary {
+        errors: fit(v.num_field("errors")?, &format!("{key}.errors"))?,
+        warnings: fit(v.num_field("warnings")?, &format!("{key}.warnings"))?,
+        infos: fit(v.num_field("infos")?, &format!("{key}.infos"))?,
+        gates: fit(v.num_field("gates")?, &format!("{key}.gates"))?,
+        unique_gates: fit(v.num_field("unique_gates")?, &format!("{key}.unique_gates"))?,
+        duplicate_gates: fit(v.num_field("duplicate_gates")?, &format!("{key}.duplicate_gates"))?,
+        chains: fit(v.num_field("chains")?, &format!("{key}.chains"))?,
+        duplicate_chains: fit(
+            v.num_field("duplicate_chains")?,
+            &format!("{key}.duplicate_chains"),
+        )?,
+        duplicate_chain_luts: fit(
+            v.num_field("duplicate_chain_luts")?,
+            &format!("{key}.duplicate_chain_luts"),
+        )?,
+    })
 }
 
 /// Checked narrowing from the parser's `i64` — the strict half of the
@@ -555,7 +595,7 @@ trait ObjExt {
     fn arr_field(&self, key: &str) -> anyhow::Result<&Vec<Json>>;
 }
 
-impl ObjExt for Vec<(String, Json)> {
+impl ObjExt for [(String, Json)] {
     fn field(&self, key: &str) -> anyhow::Result<&Json> {
         self.iter()
             .find(|(k, _)| k == key)
@@ -815,6 +855,24 @@ mod tests {
                 "{}: census partition",
                 fixture.name
             );
+        }
+    }
+
+    #[test]
+    fn optimized_fixtures_dedupe_and_prove_equivalent() {
+        for fixture in fixtures() {
+            let v = compute(&fixture);
+            assert_eq!(v.verify_opt.errors, 0, "{}: deduped lint clean", fixture.name);
+            assert_eq!(v.verify_opt.duplicate_gates, 0, "{}: no dup gates", fixture.name);
+            assert_eq!(v.verify_opt.duplicate_chains, 0, "{}: no dup chains", fixture.name);
+            assert!(
+                v.verify_opt.gates <= v.verify.gates,
+                "{}: rebuild never grows the netlist",
+                fixture.name
+            );
+            assert_eq!(v.equiv[1], 0, "{}: fixture cones are small, all exact", fixture.name);
+            assert_eq!(v.equiv[2], 0, "{}: optimized != naive", fixture.name);
+            assert!(v.equiv[0] > 0, "{}: at least one output proved", fixture.name);
         }
     }
 

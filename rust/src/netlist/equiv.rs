@@ -1,0 +1,680 @@
+//! Static combinational equivalence checking between two built designs.
+//!
+//! The checker proves, without running traffic, that two netlists with
+//! matching inputs/outputs compute the same function — the gate that makes
+//! the hash-consed optimizing rebuild ([`crate::netlist::opt`]), and every
+//! future netlist refactor, statically safe to land. Three escalating
+//! phases per output pair (DESIGN.md §10):
+//!
+//! 1. **Structural hashing.** Both netlists are interned into one shared
+//!    hash-cons table (operation + canonical operand classes, commutative
+//!    operands sorted, registers transparent — they are functionally wires
+//!    here, as in `simulate`). Output pairs landing in the same class are
+//!    `Proved` for free; since the optimizer *is* a hash-cons rebuild,
+//!    optimized-vs-naive pairs all discharge in this phase.
+//! 2. **Exhaustive truth-table sweep.** Otherwise the checker extracts
+//!    each output's support cone (new static analyses: cone extraction +
+//!    support computation) and, when the union support has ≤
+//!    [`EXACT_SUPPORT_LIMIT`] inputs, sweeps every assignment 64 lanes per
+//!    machine word over just the cone gates. A differing lane decodes into
+//!    a located, replayable counterexample; a clean sweep is `Proved`.
+//! 3. **Random + corner sweep.** Cones with wider support fall back to a
+//!    deterministic simulation sweep (all-zero, all-ones, every one-hot,
+//!    then seeded random words). A clean sweep is only `Probable` — the
+//!    verdict enum keeps the distinction honest — while any differing lane
+//!    is still a definite, located `Mismatch`.
+//!
+//! The checker never panics: shape mismatches and malformed references
+//! come back as typed [`EquivError`]s.
+
+use super::build::BuiltDesign;
+use super::gate::{Gate, Netlist, NodeId};
+use super::simulate::LANES;
+use crate::util::Rng;
+use std::collections::HashMap;
+use std::fmt;
+
+/// Largest union-support size decided by the exhaustive truth-table sweep
+/// (2^16 assignments = 1024 words per cone gate); larger cones fall back
+/// to the random+corner sweep and at best a [`Verdict::Probable`].
+pub const EXACT_SUPPORT_LIMIT: usize = 16;
+
+/// 64-lane random blocks tried in the fallback sweep (after the corner
+/// block(s)): 4096 random assignments per output pair.
+const RANDOM_BLOCKS: usize = 64;
+
+/// How an output pair was shown equivalent.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Verdict {
+    /// Equivalence is exact: structural-hash identity or an exhaustive
+    /// sweep of the full support cone.
+    Proved,
+    /// The random+corner sweep found no difference, but the support was
+    /// too wide to enumerate — not a proof.
+    Probable,
+}
+
+/// A located counterexample: a concrete input assignment under which the
+/// two designs' output `output` differ. `assignment` lists `(input index,
+/// value)` for the union support of both cones; inputs outside it are
+/// irrelevant to either output (replay them as 0).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Mismatch {
+    /// Index into `outputs` of the differing bit.
+    pub output: usize,
+    /// Support assignment exhibiting the difference, `(input index, value)`.
+    pub assignment: Vec<(u32, bool)>,
+}
+
+impl fmt::Display for Mismatch {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "output {} differs under {{", self.output)?;
+        for (i, (k, v)) in self.assignment.iter().enumerate() {
+            if i > 0 {
+                f.write_str(", ")?;
+            }
+            write!(f, "x{k}={}", u8::from(*v))?;
+        }
+        f.write_str("}")
+    }
+}
+
+/// Per-output verdict tally plus every located counterexample.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct EquivReport {
+    /// Outputs proved equivalent (structural hash or exhaustive sweep).
+    pub proved: usize,
+    /// Outputs equivalent under the random+corner sweep only.
+    pub probable: usize,
+    /// Outputs with a concrete differing assignment.
+    pub failed: Vec<Mismatch>,
+}
+
+impl EquivReport {
+    /// No counterexample was found (all outputs `Proved` or `Probable`).
+    pub fn equivalent(&self) -> bool {
+        self.failed.is_empty()
+    }
+
+    /// Every output pair is exactly `Proved`.
+    pub fn all_proved(&self) -> bool {
+        self.failed.is_empty() && self.probable == 0
+    }
+
+    /// One-line summary plus one line per counterexample.
+    pub fn render(&self) -> String {
+        let mut out = format!(
+            "equiv: {} proved, {} probable, {} failed\n",
+            self.proved,
+            self.probable,
+            self.failed.len()
+        );
+        for m in &self.failed {
+            out.push_str(&format!("  {m}\n"));
+        }
+        out
+    }
+}
+
+/// Typed rejection: the two designs cannot be compared (or one of them is
+/// not a well-formed DAG). Distinct from a `Mismatch`, which is a definite
+/// functional difference between comparable designs.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum EquivError {
+    /// The designs declare different external input counts.
+    InputCountMismatch { left: usize, right: usize },
+    /// The designs declare different output counts.
+    OutputCountMismatch { left: usize, right: usize },
+    /// A node reference escapes the netlist or points forward (`side` is
+    /// "left" or "right"); equivalence over a malformed DAG is undefined.
+    MalformedNetlist { side: &'static str, node: NodeId },
+}
+
+impl fmt::Display for EquivError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            EquivError::InputCountMismatch { left, right } => {
+                write!(f, "input count mismatch: left has {left}, right has {right}")
+            }
+            EquivError::OutputCountMismatch { left, right } => {
+                write!(f, "output count mismatch: left has {left}, right has {right}")
+            }
+            EquivError::MalformedNetlist { side, node } => {
+                write!(f, "{side} netlist is malformed at node {node} (undefined or forward reference)")
+            }
+        }
+    }
+}
+
+impl std::error::Error for EquivError {}
+
+/// Check two built designs for combinational equivalence, output by
+/// output. See the module docs for the phase structure.
+pub fn check_equiv(left: &BuiltDesign, right: &BuiltDesign) -> Result<EquivReport, EquivError> {
+    check_equiv_nets(&left.net, &right.net)
+}
+
+/// [`check_equiv`] over raw netlists.
+pub fn check_equiv_nets(left: &Netlist, right: &Netlist) -> Result<EquivReport, EquivError> {
+    if left.n_inputs != right.n_inputs {
+        return Err(EquivError::InputCountMismatch { left: left.n_inputs, right: right.n_inputs });
+    }
+    if left.outputs.len() != right.outputs.len() {
+        return Err(EquivError::OutputCountMismatch {
+            left: left.outputs.len(),
+            right: right.outputs.len(),
+        });
+    }
+    check_refs(left, "left")?;
+    check_refs(right, "right")?;
+
+    // Phase 1: one interner across both sides; equal classes ⇒ equal
+    // functions (registers are transparent, commutative operands sorted).
+    let mut interner: HashMap<StructKey, u32> = HashMap::new();
+    let sid_l = structural_ids(left, &mut interner);
+    let sid_r = structural_ids(right, &mut interner);
+
+    let mut report = EquivReport::default();
+    let mut rng = Rng::new(0x1517_EC_u64);
+    for (j, (&ol, &or)) in left.outputs.iter().zip(&right.outputs).enumerate() {
+        if sid_l[ol as usize] == sid_r[or as usize] {
+            report.proved += 1;
+            continue;
+        }
+        // Phase 2/3: cone extraction + union support.
+        let (cone_l, sup_l) = cone_and_support(left, ol);
+        let (cone_r, sup_r) = cone_and_support(right, or);
+        let mut sup: Vec<u32> = sup_l;
+        for k in sup_r {
+            if !sup.contains(&k) {
+                sup.push(k);
+            }
+        }
+        sup.sort_unstable();
+        if sup.len() <= EXACT_SUPPORT_LIMIT {
+            match exhaustive_sweep(left, right, ol, or, &cone_l, &cone_r, &sup, j) {
+                Some(m) => report.failed.push(m),
+                None => report.proved += 1,
+            }
+        } else {
+            match fallback_sweep(left, right, ol, or, &cone_l, &cone_r, &sup, j, &mut rng) {
+                Some(m) => report.failed.push(m),
+                None => report.probable += 1,
+            }
+        }
+    }
+    Ok(report)
+}
+
+/// Scalar replay of one output under a support assignment (inputs not
+/// listed are 0) — lets tests and the CLI confirm a [`Mismatch`] is a real
+/// functional difference. `None` if `output` is out of range.
+pub fn replay(net: &Netlist, output: usize, assignment: &[(u32, bool)]) -> Option<bool> {
+    let &root = net.outputs.get(output)?;
+    let lookup: HashMap<u32, bool> = assignment.iter().copied().collect();
+    let mut v = vec![false; net.gates.len()];
+    for (i, g) in net.gates.iter().enumerate() {
+        v[i] = match *g {
+            Gate::Input(k) => lookup.get(&k).copied().unwrap_or(false),
+            Gate::Const(c) => c,
+            Gate::Not(a) => !v[a as usize],
+            Gate::And(a, b) => v[a as usize] & v[b as usize],
+            Gate::Or(a, b) => v[a as usize] | v[b as usize],
+            Gate::Xor(a, b) => v[a as usize] ^ v[b as usize],
+            Gate::Reg(a) => v[a as usize],
+        };
+    }
+    Some(v[root as usize])
+}
+
+/// Def-before-use / in-range reference check (the checker's well-formed
+/// guard; the full analyzer lives in `verify`).
+fn check_refs(net: &Netlist, side: &'static str) -> Result<(), EquivError> {
+    let n = net.gates.len();
+    for (i, g) in net.gates.iter().enumerate() {
+        for f in g.fanins() {
+            if f as usize >= i {
+                return Err(EquivError::MalformedNetlist { side, node: i as NodeId });
+            }
+        }
+    }
+    for &o in &net.outputs {
+        if o as usize >= n {
+            return Err(EquivError::MalformedNetlist { side, node: o });
+        }
+    }
+    Ok(())
+}
+
+/// Structural class key: operation over canonical operand classes.
+/// Registers are intentionally absent — they pass their driver's class
+/// through (combinationally transparent).
+#[derive(Clone, Copy, PartialEq, Eq, Hash)]
+enum StructKey {
+    Input(u32),
+    Const(bool),
+    Not(u32),
+    And(u32, u32),
+    Or(u32, u32),
+    Xor(u32, u32),
+}
+
+/// Canonical class per node, interned into the shared table (forward pass;
+/// node order is topological, so operand classes already exist).
+fn structural_ids(net: &Netlist, interner: &mut HashMap<StructKey, u32>) -> Vec<u32> {
+    let mut sid = vec![0u32; net.gates.len()];
+    for (i, g) in net.gates.iter().enumerate() {
+        let comm = |a: NodeId, b: NodeId, sid: &[u32]| {
+            let (x, y) = (sid[a as usize], sid[b as usize]);
+            if x <= y {
+                (x, y)
+            } else {
+                (y, x)
+            }
+        };
+        let key = match *g {
+            Gate::Input(k) => StructKey::Input(k),
+            Gate::Const(v) => StructKey::Const(v),
+            Gate::Not(a) => StructKey::Not(sid[a as usize]),
+            Gate::Reg(a) => {
+                sid[i] = sid[a as usize];
+                continue;
+            }
+            Gate::And(a, b) => {
+                let (x, y) = comm(a, b, &sid);
+                StructKey::And(x, y)
+            }
+            Gate::Or(a, b) => {
+                let (x, y) = comm(a, b, &sid);
+                StructKey::Or(x, y)
+            }
+            Gate::Xor(a, b) => {
+                let (x, y) = comm(a, b, &sid);
+                StructKey::Xor(x, y)
+            }
+        };
+        let next = interner.len() as u32;
+        sid[i] = *interner.entry(key).or_insert(next);
+    }
+    sid
+}
+
+/// Extract the support cone of `root`: every node it transitively reads
+/// (ascending id order = topological order) and the external input indices
+/// among them (the output's support, sorted).
+fn cone_and_support(net: &Netlist, root: NodeId) -> (Vec<NodeId>, Vec<u32>) {
+    let mut in_cone = vec![false; net.gates.len()];
+    let mut stack = vec![root];
+    in_cone[root as usize] = true;
+    let mut support = Vec::new();
+    while let Some(v) = stack.pop() {
+        if let Gate::Input(k) = net.gates[v as usize] {
+            support.push(k);
+        }
+        for f in net.gates[v as usize].fanins() {
+            if !in_cone[f as usize] {
+                in_cone[f as usize] = true;
+                stack.push(f);
+            }
+        }
+    }
+    let cone: Vec<NodeId> =
+        (0..net.gates.len() as NodeId).filter(|&v| in_cone[v as usize]).collect();
+    support.sort_unstable();
+    support.dedup();
+    (cone, support)
+}
+
+/// Bit-parallel evaluation of one cone under per-support-variable input
+/// words; returns the root's word. Registers are transparent wires, as in
+/// the functional simulator.
+fn eval_cone(
+    net: &Netlist,
+    cone: &[NodeId],
+    root: NodeId,
+    sup: &[u32],
+    words: &[u64],
+    scratch: &mut [u64],
+) -> u64 {
+    for &v in cone {
+        scratch[v as usize] = match net.gates[v as usize] {
+            Gate::Input(k) => match sup.binary_search(&k) {
+                Ok(pos) => words[pos],
+                Err(_) => 0, // outside the union support: constant 0 on both sides
+            },
+            Gate::Const(c) => {
+                if c {
+                    !0u64
+                } else {
+                    0
+                }
+            }
+            Gate::Not(a) => !scratch[a as usize],
+            Gate::And(a, b) => scratch[a as usize] & scratch[b as usize],
+            Gate::Or(a, b) => scratch[a as usize] | scratch[b as usize],
+            Gate::Xor(a, b) => scratch[a as usize] ^ scratch[b as usize],
+            Gate::Reg(a) => scratch[a as usize],
+        };
+    }
+    scratch[root as usize]
+}
+
+/// Decode lane `lane` of per-variable words into a concrete assignment.
+fn decode_lane(sup: &[u32], words: &[u64], lane: u32) -> Vec<(u32, bool)> {
+    sup.iter()
+        .zip(words)
+        .map(|(&k, &w)| (k, (w >> lane) & 1 == 1))
+        .collect()
+}
+
+/// Compare one block of assignments; `mask` limits valid lanes.
+#[allow(clippy::too_many_arguments)]
+fn diff_block(
+    left: &Netlist,
+    right: &Netlist,
+    ol: NodeId,
+    or: NodeId,
+    cone_l: &[NodeId],
+    cone_r: &[NodeId],
+    sup: &[u32],
+    words: &[u64],
+    mask: u64,
+    output: usize,
+    scratch_l: &mut [u64],
+    scratch_r: &mut [u64],
+) -> Option<Mismatch> {
+    let wl = eval_cone(left, cone_l, ol, sup, words, scratch_l);
+    let wr = eval_cone(right, cone_r, or, sup, words, scratch_r);
+    let diff = (wl ^ wr) & mask;
+    if diff == 0 {
+        return None;
+    }
+    let lane = diff.trailing_zeros();
+    Some(Mismatch { output, assignment: decode_lane(sup, words, lane) })
+}
+
+/// Phase 2: enumerate all `2^|sup|` assignments, [`LANES`] per word.
+#[allow(clippy::too_many_arguments)]
+fn exhaustive_sweep(
+    left: &Netlist,
+    right: &Netlist,
+    ol: NodeId,
+    or: NodeId,
+    cone_l: &[NodeId],
+    cone_r: &[NodeId],
+    sup: &[u32],
+    output: usize,
+) -> Option<Mismatch> {
+    let total: u64 = 1u64 << sup.len();
+    let mut scratch_l = vec![0u64; left.gates.len()];
+    let mut scratch_r = vec![0u64; right.gates.len()];
+    let mut words = vec![0u64; sup.len()];
+    let mut base = 0u64;
+    while base < total {
+        let valid = (total - base).min(LANES as u64);
+        let mask = if valid == LANES as u64 { !0u64 } else { (1u64 << valid) - 1 };
+        for (v, w) in words.iter_mut().enumerate() {
+            let mut word = 0u64;
+            for lane in 0..valid {
+                word |= (((base + lane) >> v) & 1) << lane;
+            }
+            *w = word;
+        }
+        if let Some(m) = diff_block(
+            left, right, ol, or, cone_l, cone_r, sup, &words, mask, output, &mut scratch_l,
+            &mut scratch_r,
+        ) {
+            return Some(m);
+        }
+        base += LANES as u64;
+    }
+    None
+}
+
+/// Phase 3: corners (all-zero, all-ones, every one-hot) then seeded random
+/// blocks. Finding a difference is definite; not finding one is only
+/// `Probable`.
+#[allow(clippy::too_many_arguments)]
+fn fallback_sweep(
+    left: &Netlist,
+    right: &Netlist,
+    ol: NodeId,
+    or: NodeId,
+    cone_l: &[NodeId],
+    cone_r: &[NodeId],
+    sup: &[u32],
+    output: usize,
+    rng: &mut Rng,
+) -> Option<Mismatch> {
+    let s = sup.len();
+    let mut scratch_l = vec![0u64; left.gates.len()];
+    let mut scratch_r = vec![0u64; right.gates.len()];
+    let mut words = vec![0u64; s];
+
+    // Corner blocks: lane 0 = all-zero, lane 1 = all-ones, lanes 2.. =
+    // one-hot per support variable (spilling into further blocks when the
+    // support outgrows one word).
+    let mut hot = 0usize;
+    let mut first = true;
+    while first || hot < s {
+        let base_lane = if first { 2u32 } else { 0 };
+        let hots = ((LANES as u32 - base_lane) as usize).min(s - hot);
+        for (v, w) in words.iter_mut().enumerate() {
+            let mut word = 0u64;
+            if first {
+                word |= 1u64 << 1; // all-ones assignment in lane 1
+            }
+            for h in 0..hots {
+                if hot + h == v {
+                    word |= 1u64 << (base_lane + h as u32);
+                }
+            }
+            *w = word;
+        }
+        let lanes = base_lane as u64 + hots as u64;
+        let mask = if lanes >= LANES as u64 { !0u64 } else { (1u64 << lanes) - 1 };
+        if let Some(m) = diff_block(
+            left, right, ol, or, cone_l, cone_r, sup, &words, mask, output, &mut scratch_l,
+            &mut scratch_r,
+        ) {
+            return Some(m);
+        }
+        hot += hots;
+        first = false;
+    }
+
+    for _ in 0..RANDOM_BLOCKS {
+        for w in words.iter_mut() {
+            *w = rng.next_u64();
+        }
+        if let Some(m) = diff_block(
+            left, right, ol, or, cone_l, cone_r, sup, &words, !0u64, output, &mut scratch_l,
+            &mut scratch_r,
+        ) {
+            return Some(m);
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identical_netlists_prove_structurally() {
+        let build = || {
+            let mut n = Netlist::new(3);
+            let a = n.input(0);
+            let b = n.input(1);
+            let c = n.input(2);
+            let x = n.and2(a, b);
+            let y = n.or2(x, c);
+            n.outputs = vec![y];
+            n
+        };
+        let r = check_equiv_nets(&build(), &build()).unwrap();
+        assert_eq!(r.proved, 1);
+        assert!(r.all_proved());
+    }
+
+    #[test]
+    fn de_morgan_forms_prove_by_exhaustive_sweep() {
+        // ¬(¬a ∨ ¬b) vs a ∧ b: structurally different, functionally equal.
+        let mut l = Netlist::new(2);
+        let a = l.input(0);
+        let b = l.input(1);
+        let na = l.not(a);
+        let nb = l.not(b);
+        let o = l.or2(na, nb);
+        let y = l.not(o);
+        l.outputs = vec![y];
+        let mut r = Netlist::new(2);
+        let a = r.input(0);
+        let b = r.input(1);
+        let y = r.and2(a, b);
+        r.outputs = vec![y];
+        let rep = check_equiv_nets(&l, &r).unwrap();
+        assert_eq!(rep.proved, 1, "{}", rep.render());
+        assert!(rep.all_proved());
+    }
+
+    #[test]
+    fn and_vs_or_yields_located_counterexample() {
+        let mut l = Netlist::new(2);
+        let a = l.input(0);
+        let b = l.input(1);
+        let y = l.and2(a, b);
+        l.outputs = vec![y];
+        let mut r = Netlist::new(2);
+        let a = r.input(0);
+        let b = r.input(1);
+        let y = r.or2(a, b);
+        r.outputs = vec![y];
+        let rep = check_equiv_nets(&l, &r).unwrap();
+        assert_eq!(rep.failed.len(), 1);
+        let m = &rep.failed[0];
+        assert_eq!(m.output, 0);
+        let vl = replay(&l, 0, &m.assignment).unwrap();
+        let vr = replay(&r, 0, &m.assignment).unwrap();
+        assert_ne!(vl, vr, "counterexample must replay to a real difference");
+    }
+
+    #[test]
+    fn shape_mismatches_are_typed_errors() {
+        let mut l = Netlist::new(2);
+        let a = l.input(0);
+        l.outputs = vec![a];
+        let mut r = Netlist::new(3);
+        let a = r.input(0);
+        r.outputs = vec![a];
+        assert!(matches!(
+            check_equiv_nets(&l, &r),
+            Err(EquivError::InputCountMismatch { left: 2, right: 3 })
+        ));
+        let mut r2 = Netlist::new(2);
+        let a2 = r2.input(0);
+        let b2 = r2.input(1);
+        r2.outputs = vec![a2, b2];
+        assert!(matches!(
+            check_equiv_nets(&l, &r2),
+            Err(EquivError::OutputCountMismatch { left: 1, right: 2 })
+        ));
+    }
+
+    #[test]
+    fn malformed_reference_is_an_error_not_a_panic() {
+        let mut l = Netlist::new(1);
+        let a = l.input(0);
+        l.outputs = vec![a];
+        let mut r = l.clone();
+        r.outputs = vec![99];
+        assert!(matches!(
+            check_equiv_nets(&l, &r),
+            Err(EquivError::MalformedNetlist { side: "right", .. })
+        ));
+    }
+
+    #[test]
+    fn registers_are_transparent_to_the_checker() {
+        let mut l = Netlist::new(2);
+        let a = l.input(0);
+        let b = l.input(1);
+        let x = l.and2(a, b);
+        let rg = l.reg(x);
+        l.outputs = vec![rg];
+        let mut r = Netlist::new(2);
+        let a = r.input(0);
+        let b = r.input(1);
+        let y = r.and2(a, b);
+        r.outputs = vec![y];
+        let rep = check_equiv_nets(&l, &r).unwrap();
+        assert_eq!(rep.proved, 1);
+    }
+
+    /// Wide-support equivalent pair: the checker cannot enumerate 2^20
+    /// assignments, so the verdict degrades honestly to Probable.
+    #[test]
+    fn wide_support_equivalent_pair_is_probable() {
+        let n_in = EXACT_SUPPORT_LIMIT + 4;
+        let mut l = Netlist::new(n_in);
+        let xs: Vec<_> = (0..n_in as u32).map(|i| l.input(i)).collect();
+        let y = l.and_many(&xs);
+        l.outputs = vec![y];
+        // Right: same AND but folded right-to-left — structurally distinct.
+        let mut r = Netlist::new(n_in);
+        let xs: Vec<_> = (0..n_in as u32).map(|i| r.input(i)).collect();
+        let mut acc = xs[n_in - 1];
+        for &x in xs[..n_in - 1].iter().rev() {
+            acc = r.and2(x, acc);
+        }
+        r.outputs = vec![acc];
+        let rep = check_equiv_nets(&l, &r).unwrap();
+        assert_eq!(rep.probable, 1, "{}", rep.render());
+        assert!(rep.equivalent());
+        assert!(!rep.all_proved());
+    }
+
+    /// Wide-support broken pair: the one-hot corner block finds the flip.
+    #[test]
+    fn wide_support_mismatch_is_still_located() {
+        let n_in = EXACT_SUPPORT_LIMIT + 4;
+        let mut l = Netlist::new(n_in);
+        let xs: Vec<_> = (0..n_in as u32).map(|i| l.input(i)).collect();
+        let y = l.or_many(&xs);
+        l.outputs = vec![y];
+        let mut r = Netlist::new(n_in);
+        let xs: Vec<_> = (0..n_in as u32).map(|i| r.input(i)).collect();
+        // Drop the last input from the OR: differs exactly on assignments
+        // where only x_{n-1} is set.
+        let y = r.or_many(&xs[..n_in - 1]);
+        r.outputs = vec![y];
+        let rep = check_equiv_nets(&l, &r).unwrap();
+        assert_eq!(rep.failed.len(), 1, "{}", rep.render());
+        let m = &rep.failed[0];
+        let vl = replay(&l, 0, &m.assignment).unwrap();
+        let vr = replay(&r, 0, &m.assignment).unwrap();
+        assert_ne!(vl, vr);
+    }
+
+    #[test]
+    fn multi_output_tallies_split_per_output() {
+        // Output 0 equal, output 1 differs.
+        let mut l = Netlist::new(2);
+        let a = l.input(0);
+        let b = l.input(1);
+        let x = l.and2(a, b);
+        let y = l.xor2(a, b);
+        l.outputs = vec![x, y];
+        let mut r = Netlist::new(2);
+        let a = r.input(0);
+        let b = r.input(1);
+        let x = r.and2(a, b);
+        let y = r.or2(a, b);
+        r.outputs = vec![x, y];
+        let rep = check_equiv_nets(&l, &r).unwrap();
+        assert_eq!(rep.proved, 1);
+        assert_eq!(rep.failed.len(), 1);
+        assert_eq!(rep.failed[0].output, 1);
+    }
+}

@@ -25,6 +25,24 @@ pub enum Gate {
     Reg(NodeId),
 }
 
+impl Gate {
+    /// Fan-in node ids (0, 1, or 2 of them), in operand order. The shared
+    /// traversal primitive for the static analyses (`verify`, `equiv`,
+    /// `opt`) and the LUT mapper.
+    pub fn fanins(&self) -> Vec<NodeId> {
+        match *self {
+            Gate::Input(_) | Gate::Const(_) => Vec::new(),
+            Gate::Not(a) | Gate::Reg(a) => vec![a],
+            Gate::And(a, b) | Gate::Or(a, b) | Gate::Xor(a, b) => vec![a, b],
+        }
+    }
+
+    /// True for nodes with no fan-ins (external inputs and constants).
+    pub fn is_leaf(&self) -> bool {
+        matches!(self, Gate::Input(_) | Gate::Const(_))
+    }
+}
+
 /// A carry-chain annotation: a group of gates that synthesis would map to
 /// the FPGA's dedicated fast-carry logic (CARRY8 on UltraScale+) instead of
 /// generic LUT levels. The gates still exist (simulation is unchanged);

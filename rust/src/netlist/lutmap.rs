@@ -128,7 +128,9 @@ pub fn map_luts(net: &Netlist) -> MapResult {
     let mut best_cut: Vec<Option<Cut>> = vec![None; n];
     let mut cuts: Vec<Vec<Cut>> = vec![Vec::new(); n];
 
-    let is_leaf = |g: &Gate| matches!(g, Gate::Input(_) | Gate::Const(_) | Gate::Reg(_));
+    // Cut leaves: the true leaves (Gate::is_leaf) plus registers, which
+    // terminate cuts at pipeline-stage boundaries.
+    let is_leaf = |g: &Gate| g.is_leaf() || matches!(g, Gate::Reg(_));
     let chain = |i: u32| net.chain_of[i as usize];
 
     // Forward pass: compute priority cuts and labels.
@@ -140,12 +142,8 @@ pub fn map_luts(net: &Netlist) -> MapResult {
             // Carry-chain gate: entering the chain from outside costs one
             // LUT level (the LUT feeding/computing with the carry element);
             // rippling within the chain is free.
-            let fanins: Vec<u32> = match *g {
-                Gate::Not(a) => vec![a],
-                Gate::And(a, b) | Gate::Or(a, b) | Gate::Xor(a, b) => vec![a, b],
-                _ => unreachable!(),
-            };
-            labels[i] = fanins
+            labels[i] = g
+                .fanins()
                 .iter()
                 .map(|&f| {
                     if chain(f) == chain(i as u32) {
@@ -158,11 +156,6 @@ pub fn map_luts(net: &Netlist) -> MapResult {
                 .unwrap_or(1);
             continue; // no cuts: consumers use the singleton leaf
         }
-        let fanins: [Option<u32>; 2] = match *g {
-            Gate::Not(a) => [Some(a), None],
-            Gate::And(a, b) | Gate::Or(a, b) | Gate::Xor(a, b) => [Some(a), Some(b)],
-            _ => unreachable!(),
-        };
         let mut cand: Vec<Cut> = Vec::with_capacity(C * C + 1);
         let fanin_cuts = |f: u32, cuts: &Vec<Vec<Cut>>, labels: &Vec<u32>| -> Vec<Cut> {
             let mut v = Vec::with_capacity(C + 1);
@@ -170,14 +163,14 @@ pub fn map_luts(net: &Netlist) -> MapResult {
             v.extend(cuts[f as usize].iter().copied());
             v
         };
-        match fanins {
-            [Some(a), None] => {
+        match *g.fanins().as_slice() {
+            [a] => {
                 // 1-input gate: a LUT absorbing the NOT has the same cuts.
                 for ca in fanin_cuts(a, &cuts, &labels) {
                     cand.push(ca);
                 }
             }
-            [Some(a), Some(b)] => {
+            [a, b] => {
                 let ca = fanin_cuts(a, &cuts, &labels);
                 let cb = fanin_cuts(b, &cuts, &labels);
                 for x in &ca {
@@ -188,7 +181,7 @@ pub fn map_luts(net: &Netlist) -> MapResult {
                     }
                 }
             }
-            _ => unreachable!(),
+            _ => unreachable!("leaves were skipped above"),
         }
         cand.sort_by_key(|c| (c.arrival, c.len));
         cand.dedup_by(|a, b| a.leaves() == b.leaves());
@@ -224,12 +217,7 @@ pub fn map_luts(net: &Netlist) -> MapResult {
         if chain(v) != NO_CHAIN {
             chain_needed[chain(v) as usize] = true;
             // Walk to the chain's external fanins.
-            let fanins: Vec<u32> = match net.gates[v as usize] {
-                Gate::Not(a) => vec![a],
-                Gate::And(a, b) | Gate::Or(a, b) | Gate::Xor(a, b) => vec![a, b],
-                _ => vec![],
-            };
-            for f in fanins {
+            for f in net.gates[v as usize].fanins() {
                 push(f, &mut seen, &mut required);
             }
             continue;

