@@ -36,7 +36,8 @@ use std::time::Duration;
 
 use treelut::coordinator::{
     BatchExecutor, BatchPolicy, CompiledNetlist, CpuExecutor, DispatchPolicy, FlatExecutor,
-    LaneStats, OverloadPolicy, Server, ServingReport, SubmitError,
+    LaneStats, ModelArtifact, ModelRegistry, OverloadPolicy, RegistryServer, Server, ServingReport,
+    SubmitError, SwapCheck,
 };
 use treelut::data::synth;
 use treelut::exp::configs::design_point;
@@ -602,6 +603,125 @@ fn main() -> anyhow::Result<()> {
         coalesce_util[1] * 100.0,
         coalesce_util[0] * 100.0
     );
+
+    // --- Multi-model registry sweep: two tenants behind one pool ----------
+    // The registry tags every row with its tenant and re-groups per batch;
+    // this sweep measures what that costs against a single-model pool at
+    // the same policy, then hot-swaps tenant 0 under live load through the
+    // equivalence gate (which itself samples the model before installing).
+    let registry_requests = n_requests.min(8_000);
+    {
+        let single = {
+            let fo = forest.clone();
+            let server = Server::start_pool_dispatch(
+                move |_shard| Ok(FlatExecutor { forest: fo.clone(), max_batch: MAX_BATCH }),
+                BatchPolicy {
+                    max_batch: MAX_BATCH,
+                    max_wait: Duration::from_micros(500),
+                    ..BatchPolicy::default()
+                },
+                2,
+                DispatchPolicy::P2c,
+            )?;
+            let cap = firehose_run(&server, &btest, registry_requests)?.throughput;
+            server.shutdown();
+            cap
+        };
+        let reg = Arc::new(ModelRegistry::new());
+        reg.register("mnist-a", ModelArtifact::Flat(Arc::new(forest.clone())))?;
+        reg.register("mnist-b", ModelArtifact::Flat(Arc::new(forest.clone())))?;
+        let srv = RegistryServer::start(
+            Arc::clone(&reg),
+            BatchPolicy {
+                max_batch: MAX_BATCH,
+                max_wait: Duration::from_micros(500),
+                ..BatchPolicy::default()
+            },
+            2,
+            DispatchPolicy::P2c,
+        )?;
+        let before = snapshot(srv.server());
+        let t0 = Timer::start();
+        let mut pending = Vec::with_capacity(registry_requests);
+        for i in 0..registry_requests {
+            pending.push(srv.submit(i % 2, btest.row(i % btest.n_rows))?);
+        }
+        // Swap tenant 0 while the backlog drains: a fresh compile of the
+        // same model must clear the gate without disturbing its sibling.
+        let swap_t = Timer::start();
+        let v = srv.swap(
+            0,
+            ModelArtifact::Flat(Arc::new(FlatForest::compile(&quant)?)),
+            SwapCheck::Equiv,
+        )?;
+        let swap_secs = swap_t.secs();
+        let mut lats = Vec::with_capacity(registry_requests);
+        for rx in pending {
+            lats.push(rx.recv()??.latency.as_secs_f64());
+        }
+        let rep =
+            ServingReport::from_latencies(&lats, t0.secs(), mean_batch_since(srv.server(), &before), None)
+                .with_shards(2)
+                .with_models(reg.model_lines());
+        println!(
+            "\n== registry sweep: 2 tenants, 2 shards, firehose + equiv-gated swap under load =="
+        );
+        println!("{}", rep.render());
+        println!(
+            "headline: registry {:.0} rows/s vs single-model pool {single:.0} rows/s at equal \
+             policy -> {:.2}x tagging+grouping overhead; swap to v{v} cleared the equivalence \
+             gate in {:.1}ms under live load",
+            rep.throughput,
+            single / rep.throughput.max(1.0),
+            swap_secs * 1e3
+        );
+        srv.shutdown();
+    }
+
+    // --- Elastic resize sweep: capacity tracks the shard count ------------
+    // One pool, resized live: firehose capacity at 1 shard, after growing
+    // to 4 (fresh queues join the dispatch rotation), and after shrinking
+    // back to 1 (retired queues drain + redispatch their stragglers).
+    {
+        let fo = forest.clone();
+        let server = Server::start_pool_dispatch(
+            move |_shard| Ok(FlatExecutor { forest: fo.clone(), max_batch: MAX_BATCH }),
+            BatchPolicy {
+                max_batch: MAX_BATCH,
+                max_wait: Duration::from_micros(500),
+                ..BatchPolicy::default()
+            },
+            1,
+            DispatchPolicy::P2c,
+        )?;
+        let resize_requests = n_requests.min(8_000);
+        let mut t = Table::new(&["shards", "rows/s", "batch", "p50", "p99", "redispatched"]);
+        let mut caps = Vec::new();
+        for &shards in &[1usize, 4, 1] {
+            server.resize(shards)?;
+            let rep = firehose_run(&server, &btest, resize_requests)?;
+            caps.push(rep.throughput);
+            t.row(&[
+                shards.to_string(),
+                format!("{:.0}", rep.throughput),
+                format!("{:.1}", rep.mean_batch),
+                format!("{:.0}us", rep.latency.p50 * 1e6),
+                format!("{:.0}us", rep.latency.p99 * 1e6),
+                server.stats().redispatched.load(Ordering::Relaxed).to_string(),
+            ]);
+        }
+        server.shutdown();
+        println!("\n== elastic resize sweep: one pool, live 1 -> 4 -> 1 shards, firehose ==");
+        println!("{}", t.render());
+        println!(
+            "headline: grow 1->4 scaled capacity {:.2}x ({:.0} -> {:.0} rows/s); shrink back \
+             returned to {:.0} rows/s on the same pool",
+            caps[1] / caps[0].max(1.0),
+            caps[0],
+            caps[1],
+            caps[2]
+        );
+    }
 
     // --- PJRT engine section (artifact-gated) -----------------------------
     let artifacts = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");

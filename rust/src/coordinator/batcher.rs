@@ -70,12 +70,33 @@
 //! error (the batch still counts in `batches`/`rows_executed`), a typed
 //! shed ([`SubmitError::Shed`], counted in `sheds`), or a worker-death
 //! error counted in [`ServerStats::rejected`]. Nothing is silently dropped.
+//!
+//! Mutex poisoning follows the same containment policy: a panic *under a
+//! queue's lock* must not cascade. Every acquisition goes through
+//! [`ShardQueue::lock_jobs`], which recovers the guard
+//! (`PoisonError::into_inner` — the queue state is a plain `VecDeque` plus
+//! gauges every path re-derives under the lock, so it is consistent
+//! regardless of where the holder panicked) and treats *observed* poisoning
+//! as shard retirement: the shard reads dead to dispatch, its worker exits
+//! through the unwind guard at the next loop edge, and queued jobs
+//! re-dispatch to siblings. One poisoned queue degrades exactly like one
+//! dead shard instead of panicking every submitter, worker, and stealer
+//! that touches it.
+//!
+//! Elastic resize ([`Server::resize`]) grows or shrinks the pool at
+//! runtime: growth spawns workers on fresh queues through the pool's
+//! factory; shrink closes a queue, lets its worker finish the batch in
+//! hand, and re-dispatches the stragglers still queued — the dead-shard
+//! inheritance machinery reused for a voluntary retirement. Shard *labels*
+//! are stable and never reused, so per-shard identity in errors, stats,
+//! and the harness survives membership churn. An optional [`AutoScaler`]
+//! drives resize from a queue-depth EWMA.
 
 use super::{BatchExecutor, LaneExecutor};
 use crate::util::rng::{splitmix64, SPLITMIX64_GAMMA};
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc, Condvar, Mutex, MutexGuard, OnceLock};
+use std::sync::{mpsc, Arc, Condvar, Mutex, MutexGuard, OnceLock, PoisonError, RwLock};
 use std::time::{Duration, Instant};
 
 /// A served answer: the class plus the queue+execute latency, measured by
@@ -315,7 +336,10 @@ impl Clock for WallClock {
         guard: MutexGuard<'a, VecDeque<Job>>,
         timeout: Duration,
     ) -> MutexGuard<'a, VecDeque<Job>> {
-        cv.wait_timeout(guard, timeout).unwrap().0
+        // Re-acquiring a mutex another thread poisoned must not panic the
+        // waiter (same containment policy as `ShardQueue::lock_jobs`; the
+        // next `lock_jobs` on the queue flags the poisoning).
+        cv.wait_timeout(guard, timeout).unwrap_or_else(PoisonError::into_inner).0
     }
 }
 
@@ -347,6 +371,9 @@ pub struct ServerStats {
     /// turning a would-be shed into served work. Counted on the shard
     /// that accepted the job.
     pub redirects: AtomicU64,
+    /// Executed batches. Coalescing pools bump this once per issued
+    /// *word*, so `rows_executed / batches` is word fill there, not batch
+    /// size — [`super::ServingReport::render`] labels it accordingly.
     pub batches: AtomicU64,
     pub rows_executed: AtomicU64,
     pub exec_nanos: AtomicU64,
@@ -415,6 +442,10 @@ enum Admit {
 /// One shard's submission queue: a shared structure that outlives its
 /// worker, so queued jobs survive a worker panic and siblings can steal.
 struct ShardQueue {
+    /// Stable shard label, assigned at spawn and never reused. Resize
+    /// removes queues from the pool, so the label — not the position in
+    /// the shard set — identifies a shard in errors, stats, and gauges.
+    id: usize,
     jobs: Mutex<VecDeque<Job>>,
     /// Jobs-available / shutdown / virtual-time signal for the worker.
     cv: Arc<Condvar>,
@@ -434,11 +465,16 @@ struct ShardQueue {
     alive: AtomicBool,
     /// Server shutting down: no further pushes, workers drain and exit.
     closed: AtomicBool,
+    /// A lock acquisition observed mutex poisoning (a panic while the
+    /// guard was held). Set once by [`ShardQueue::lock_jobs`], which also
+    /// retires the shard; the worker exits at its next loop edge.
+    poisoned: AtomicBool,
 }
 
 impl ShardQueue {
-    fn new(cap: usize, overload: OverloadPolicy) -> ShardQueue {
+    fn new(id: usize, cap: usize, overload: OverloadPolicy) -> ShardQueue {
         ShardQueue {
+            id,
             jobs: Mutex::new(VecDeque::new()),
             cv: Arc::new(Condvar::new()),
             space: Arc::new(Condvar::new()),
@@ -448,7 +484,25 @@ impl ShardQueue {
             inflight: AtomicUsize::new(0),
             alive: AtomicBool::new(false),
             closed: AtomicBool::new(false),
+            poisoned: AtomicBool::new(false),
         }
+    }
+
+    /// Lock the job queue, recovering from mutex poisoning instead of
+    /// cascading the panic pool-wide. The guarded state is a plain
+    /// `VecDeque` plus gauges every path re-derives under the lock, so it
+    /// is consistent no matter where a previous holder panicked. Observed
+    /// poisoning retires the shard — dispatch skips it, the worker exits
+    /// through its unwind guard (re-dispatching queued jobs) at the next
+    /// loop edge — which is the single-shard containment story the
+    /// dead-shard machinery already implements.
+    fn lock_jobs(&self) -> MutexGuard<'_, VecDeque<Job>> {
+        self.jobs.lock().unwrap_or_else(|e| {
+            if !self.poisoned.swap(true, Ordering::Relaxed) {
+                self.alive.store(false, Ordering::Relaxed);
+            }
+            PoisonError::into_inner(e)
+        })
     }
 
     fn depth(&self) -> usize {
@@ -481,7 +535,7 @@ impl ShardQueue {
     /// (waiting on `space` via the clock), refusing the new job, and
     /// dropping the queue head.
     fn push(&self, job: Job, clock: &dyn Clock) -> Admit {
-        let mut q = self.jobs.lock().unwrap();
+        let mut q = self.lock_jobs();
         let mut waited = false;
         loop {
             if !self.alive.load(Ordering::Relaxed) || self.closed.load(Ordering::Relaxed) {
@@ -519,7 +573,7 @@ impl ShardQueue {
     /// re-dispatches onto a sibling: they were already admitted once, so
     /// admission control must not double-charge (or deadlock a guard).
     fn push_inherited(&self, job: Job) -> Result<usize, Job> {
-        let mut q = self.jobs.lock().unwrap();
+        let mut q = self.lock_jobs();
         if !self.alive.load(Ordering::Relaxed) || self.closed.load(Ordering::Relaxed) {
             return Err(job);
         }
@@ -531,7 +585,7 @@ impl ShardQueue {
     }
 
     fn try_pop(&self) -> Option<Job> {
-        let mut q = self.jobs.lock().unwrap();
+        let mut q = self.lock_jobs();
         let j = q.pop_front();
         if j.is_some() {
             self.depth.store(q.len(), Ordering::Relaxed);
@@ -545,7 +599,7 @@ impl ShardQueue {
     /// still drains.
     fn pop_wait(&self, timeout: Duration, clock: &dyn Clock) -> Pop {
         let deadline = clock.now() + timeout;
-        let mut q = self.jobs.lock().unwrap();
+        let mut q = self.lock_jobs();
         loop {
             if let Some(j) = q.pop_front() {
                 self.depth.store(q.len(), Ordering::Relaxed);
@@ -565,7 +619,7 @@ impl ShardQueue {
 
     /// Steal about half the queue (at most `max_n` jobs), oldest first.
     fn steal(&self, max_n: usize) -> Vec<Job> {
-        let mut q = self.jobs.lock().unwrap();
+        let mut q = self.lock_jobs();
         let n = q.len().div_ceil(2).min(max_n);
         let out: Vec<Job> = q.drain(..n).collect();
         if !out.is_empty() {
@@ -578,7 +632,7 @@ impl ShardQueue {
     /// Mark the shard dead and take every queued job (the dying worker's
     /// guard disposes of them). Atomic with respect to `push`.
     fn retire(&self) -> Vec<Job> {
-        let mut q = self.jobs.lock().unwrap();
+        let mut q = self.lock_jobs();
         self.alive.store(false, Ordering::Relaxed);
         let out: Vec<Job> = q.drain(..).collect();
         self.depth.store(0, Ordering::Relaxed);
@@ -590,7 +644,7 @@ impl ShardQueue {
     /// Begin shutdown: refuse new pushes, wake the worker to drain and any
     /// blocked submitters to bail out.
     fn close(&self) {
-        let _q = self.jobs.lock().unwrap();
+        let _q = self.lock_jobs();
         self.closed.store(true, Ordering::Relaxed);
         self.cv.notify_all();
         self.space.notify_all();
@@ -604,12 +658,44 @@ struct ShardHandle {
     stats: Arc<ServerStats>,
 }
 
+/// The live queue set, shared with every worker (steal targets) and with
+/// dying workers' guards (re-dispatch targets). Behind a `RwLock` because
+/// [`Server::resize`] mutates membership under live traffic; steady-state
+/// access is read-only.
+type ShardSet = RwLock<Vec<Arc<ShardQueue>>>;
+
+/// Read-lock ignoring poisoning: the guarded data is a vector of `Arc`s
+/// (or handles), valid wherever a panicking holder stopped.
+pub(crate) fn rlock<T>(lock: &RwLock<T>) -> std::sync::RwLockReadGuard<'_, T> {
+    lock.read().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Write-lock ignoring poisoning (see [`rlock`]).
+pub(crate) fn wlock<T>(lock: &RwLock<T>) -> std::sync::RwLockWriteGuard<'_, T> {
+    lock.write().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Respawn capability for [`Server::resize`] growth: builds queue + worker
+/// for a fresh shard label and returns the handle plus the executor's
+/// feature count. Pools built from a single-shot factory
+/// ([`Server::start_with`]) have none and cannot grow.
+type Spawner = dyn Fn(usize) -> anyhow::Result<(ShardHandle, usize)> + Send + Sync;
+
 /// A running serving pool with per-shard submission queues.
 pub struct Server {
-    shards: Vec<ShardHandle>,
+    /// Shard handles (queue + worker thread + counters) in current pool
+    /// order; mutated only by [`Server::resize`] and shutdown.
+    shards: RwLock<Vec<ShardHandle>>,
     /// Same queues the shard handles own, shared with every worker (for
     /// stealing) and with dying workers' guards (for re-dispatch).
-    queues: Arc<Vec<Arc<ShardQueue>>>,
+    shard_set: Arc<ShardSet>,
+    /// Worker threads of shrunk-away shards, joined at shutdown (shrink
+    /// must not block on a batch in flight).
+    retired: Mutex<Vec<std::thread::JoinHandle<()>>>,
+    /// Respawn capability for growth (`None` = single-shot pool).
+    spawner: Option<Box<Spawner>>,
+    /// Next fresh shard label (monotonic; labels are never reused).
+    next_shard_id: AtomicUsize,
     dispatch: DispatchPolicy,
     /// Round-robin dispatch cursor.
     next: AtomicUsize,
@@ -637,24 +723,27 @@ impl Server {
         anyhow::ensure!(policy.queue_cap >= 1, "queue cap must be at least 1");
         let clock: Arc<dyn Clock> = Arc::new(WallClock);
         let stats = Arc::new(ServerStats::default());
-        let queues: Arc<Vec<Arc<ShardQueue>>> =
-            Arc::new(vec![Arc::new(ShardQueue::new(policy.queue_cap, policy.overload))]);
-        for q in queues.iter() {
-            clock.register_condvar(&q.cv);
-            clock.register_condvar(&q.space);
-        }
+        let shard_set: Arc<ShardSet> = Arc::new(RwLock::new(Vec::new()));
+        let queue = Arc::new(ShardQueue::new(0, policy.queue_cap, policy.overload));
+        clock.register_condvar(&queue.cv);
+        clock.register_condvar(&queue.space);
+        wlock(&shard_set).push(Arc::clone(&queue));
         let (shard, n_features) = spawn_shard::<E>(
             Box::new(factory),
             0,
-            Arc::clone(&queues),
+            queue,
+            Arc::clone(&shard_set),
             policy,
             Arc::clone(&stats),
             Arc::clone(&clock),
             worker_loop::<E>,
         )?;
         Ok(Server {
-            shards: vec![shard],
-            queues,
+            shards: RwLock::new(vec![shard]),
+            shard_set,
+            retired: Mutex::new(Vec::new()),
+            spawner: None,
+            next_shard_id: AtomicUsize::new(1),
             dispatch: DispatchPolicy::RoundRobin,
             next: AtomicUsize::new(0),
             p2c_seed: AtomicU64::new(P2C_SEED),
@@ -776,29 +865,43 @@ impl Server {
         anyhow::ensure!(policy.queue_cap >= 1, "queue cap must be at least 1");
         let factory = Arc::new(factory);
         let stats = Arc::new(ServerStats::default());
-        let queues: Arc<Vec<Arc<ShardQueue>>> = Arc::new(
-            (0..n_shards)
-                .map(|_| Arc::new(ShardQueue::new(policy.queue_cap, policy.overload)))
-                .collect(),
-        );
-        for q in queues.iter() {
-            clock.register_condvar(&q.cv);
-            clock.register_condvar(&q.space);
-        }
+        let shard_set: Arc<ShardSet> = Arc::new(RwLock::new(Vec::new()));
+        // The spawner is the one place a shard is born — initial
+        // construction and `resize` growth share it, so a grown shard is
+        // indistinguishable from an original one.
+        let spawner: Box<Spawner> = {
+            let factory = Arc::clone(&factory);
+            let stats = Arc::clone(&stats);
+            let clock = Arc::clone(&clock);
+            let shard_set = Arc::clone(&shard_set);
+            Box::new(move |id: usize| {
+                let queue = Arc::new(ShardQueue::new(id, policy.queue_cap, policy.overload));
+                clock.register_condvar(&queue.cv);
+                clock.register_condvar(&queue.space);
+                // Visible to siblings (steal scans, guard re-dispatch) from
+                // birth; removed again if construction fails.
+                wlock(&shard_set).push(Arc::clone(&queue));
+                let f = Arc::clone(&factory);
+                let spawned = spawn_shard::<E>(
+                    Box::new(move || (&*f)(id)),
+                    id,
+                    Arc::clone(&queue),
+                    Arc::clone(&shard_set),
+                    policy,
+                    Arc::clone(&stats),
+                    Arc::clone(&clock),
+                    run,
+                );
+                if spawned.is_err() {
+                    wlock(&shard_set).retain(|q| !Arc::ptr_eq(q, &queue));
+                }
+                spawned
+            })
+        };
         let mut shards: Vec<ShardHandle> = Vec::with_capacity(n_shards);
         let mut n_features = 0usize;
         for s in 0..n_shards {
-            let f = Arc::clone(&factory);
-            let spawned = spawn_shard::<E>(
-                Box::new(move || (&*f)(s)),
-                s,
-                Arc::clone(&queues),
-                policy,
-                Arc::clone(&stats),
-                Arc::clone(&clock),
-                run,
-            );
-            match spawned {
+            match spawner(s) {
                 Ok((shard, nf)) => {
                     if s > 0 && nf != n_features {
                         shards.push(shard);
@@ -817,8 +920,11 @@ impl Server {
             }
         }
         Ok(Server {
-            shards,
-            queues,
+            shards: RwLock::new(shards),
+            shard_set,
+            retired: Mutex::new(Vec::new()),
+            spawner: Some(spawner),
+            next_shard_id: AtomicUsize::new(n_shards),
             dispatch,
             next: AtomicUsize::new(0),
             p2c_seed: AtomicU64::new(P2C_SEED),
@@ -855,7 +961,11 @@ impl Server {
     /// count in [`ServerStats::rejected`]; `shed-new` refusals count in
     /// [`ServerStats::sheds`].
     pub fn submit(&self, row: Vec<u16>) -> anyhow::Result<mpsc::Receiver<anyhow::Result<Reply>>> {
-        assert!(!self.shards.is_empty(), "server already shut down");
+        // Snapshot the shard list for the whole admission scan; a
+        // concurrent `resize` waits for in-progress submits to clear
+        // before restructuring the pool.
+        let shards = rlock(&self.shards);
+        assert!(!shards.is_empty(), "server already shut down");
         // Validate before touching the dispatch cursor so rejected rows
         // neither skew round-robin balance nor get charged to a shard they
         // never reached (width rejections are aggregate-only by design).
@@ -864,14 +974,14 @@ impl Server {
             return Err(SubmitError::WidthMismatch { got: row.len(), want: self.n_features }.into());
         }
         // Fast path for a fully dead pool: typed, immediate, no scan.
-        if self.queues.iter().all(|q| !q.is_alive()) {
+        if shards.iter().all(|s| !s.queue.is_alive()) {
             self.stats.rejected.fetch_add(1, Ordering::Relaxed);
             return Err(SubmitError::AllShardsDead.into());
         }
-        let n = self.shards.len();
+        let n = shards.len();
         let start = match self.dispatch {
             DispatchPolicy::RoundRobin => self.next.fetch_add(1, Ordering::Relaxed) % n,
-            DispatchPolicy::P2c => self.p2c_pick(),
+            DispatchPolicy::P2c => self.p2c_pick(&shards),
         };
         let (resp_tx, resp_rx) = mpsc::channel();
         let mut job = Job { row, enqueued: self.clock.now(), resp: resp_tx };
@@ -883,7 +993,7 @@ impl Server {
         let mut first_full: Option<usize> = None;
         for k in 0..n {
             let idx = (start + k) % n;
-            let shard = &self.shards[idx];
+            let shard = &shards[idx];
             if !shard.queue.is_alive() {
                 continue;
             }
@@ -908,7 +1018,7 @@ impl Server {
                         stats.queue_full.fetch_add(1, Ordering::Relaxed);
                         stats.sheds.fetch_add(1, Ordering::Relaxed);
                     }
-                    let _ = dropped.resp.send(Err(SubmitError::Shed { shard: idx }.into()));
+                    let _ = dropped.resp.send(Err(SubmitError::Shed { shard: shard.queue.id }.into()));
                     return Ok(resp_rx);
                 }
                 // `shed-new` at capacity: count the encounter, remember the
@@ -937,10 +1047,10 @@ impl Server {
         if let Some(full) = first_full {
             // Every live queue was at capacity: shed, blaming the shard the
             // dispatch policy originally picked.
-            for stats in [&self.stats, &self.shards[full].stats] {
+            for stats in [&self.stats, &shards[full].stats] {
                 stats.sheds.fetch_add(1, Ordering::Relaxed);
             }
-            return Err(SubmitError::QueueFull { shard: full }.into());
+            return Err(SubmitError::QueueFull { shard: shards[full].queue.id }.into());
         }
         self.stats.rejected.fetch_add(1, Ordering::Relaxed);
         Err(SubmitError::AllShardsDead.into())
@@ -949,8 +1059,8 @@ impl Server {
     /// Power-of-two-choices: sample two distinct shards, prefer the live
     /// one with the shallower queue. A dead pick is fine — `submit`'s scan
     /// fails over from it.
-    fn p2c_pick(&self) -> usize {
-        let n = self.shards.len();
+    fn p2c_pick(&self, shards: &[ShardHandle]) -> usize {
+        let n = shards.len();
         if n == 1 {
             return 0;
         }
@@ -960,7 +1070,7 @@ impl Server {
         if b >= a {
             b += 1;
         }
-        let (qa, qb) = (&self.queues[a], &self.queues[b]);
+        let (qa, qb) = (&shards[a].queue, &shards[b].queue);
         match (qa.is_alive(), qb.is_alive()) {
             (true, false) => a,
             (false, true) => b,
@@ -993,23 +1103,30 @@ impl Server {
 
     /// Number of shards in the pool.
     pub fn n_shards(&self) -> usize {
-        self.shards.len()
+        rlock(&self.shards).len()
     }
 
     /// Number of shards whose worker is running and accepting work.
     pub fn live_shards(&self) -> usize {
-        self.queues.iter().filter(|q| q.is_alive()).count()
+        rlock(&self.shard_set).iter().filter(|q| q.is_alive()).count()
     }
 
     /// Instantaneous queue-depth gauges, in shard order.
     pub fn queue_depths(&self) -> Vec<usize> {
-        self.queues.iter().map(|q| q.depth()).collect()
+        rlock(&self.shard_set).iter().map(|q| q.depth()).collect()
+    }
+
+    /// Instantaneous `(stable shard label, queue depth)` gauges — the
+    /// resize-safe variant of [`Server::queue_depths`]: labels survive
+    /// pool membership changes, positions do not.
+    pub fn queue_depths_by_id(&self) -> Vec<(usize, usize)> {
+        rlock(&self.shard_set).iter().map(|q| (q.id, q.depth())).collect()
     }
 
     /// Gauge: live shards whose queue currently sits at the admission cap
     /// (always 0 for unbounded pools).
     pub fn shards_at_cap(&self) -> usize {
-        self.queues
+        rlock(&self.shard_set)
             .iter()
             .filter(|q| q.cap != usize::MAX && q.is_alive() && q.depth() >= q.cap)
             .count()
@@ -1026,9 +1143,73 @@ impl Server {
         self.coalesced
     }
 
-    /// Per-shard counters, in shard order.
-    pub fn shard_stats(&self) -> impl Iterator<Item = &ServerStats> + '_ {
-        self.shards.iter().map(|s| &*s.stats)
+    /// Per-shard counters, a snapshot in current pool order.
+    pub fn shard_stats(&self) -> Vec<Arc<ServerStats>> {
+        rlock(&self.shards).iter().map(|s| Arc::clone(&s.stats)).collect()
+    }
+
+    /// Grow or shrink the pool to `n_shards` worker shards at runtime.
+    ///
+    /// Growth spawns fresh queues and workers through the pool's shared
+    /// factory; pools built from a single-shot factory
+    /// ([`Server::start_with`] / [`Server::start`]) cannot grow and return
+    /// a typed error. Shrink retires shards from the back of the pool:
+    /// each retiring queue leaves the dispatch/steal set, is closed (the
+    /// worker finishes the batch in hand, drains nothing further, and
+    /// exits), and every job still queued on it is re-dispatched onto live
+    /// siblings (counted in [`ServerStats::redispatched`]) — or failed
+    /// explicitly if none remain, exactly the dead-shard inheritance
+    /// protocol run voluntarily. The retiring worker's thread is joined at
+    /// shutdown, not here, so shrink never blocks behind an executing
+    /// batch. Concurrent `submit`s hold the shard-list read lock for their
+    /// admission scan (including across a `block` overload wait), so a
+    /// resize may wait for admission traffic to clear before
+    /// restructuring.
+    pub fn resize(&self, n_shards: usize) -> anyhow::Result<()> {
+        anyhow::ensure!(n_shards >= 1, "need at least one shard");
+        while rlock(&self.shards).len() < n_shards {
+            let spawner = self.spawner.as_deref().ok_or_else(|| {
+                anyhow::anyhow!("pool built from a single-shot factory cannot grow")
+            })?;
+            let id = self.next_shard_id.fetch_add(1, Ordering::Relaxed);
+            let (shard, nf) =
+                spawner(id).map_err(|e| e.context(format!("growing shard {id}")))?;
+            if nf != self.n_features {
+                wlock(&self.shard_set).retain(|q| !Arc::ptr_eq(q, &shard.queue));
+                teardown(vec![shard]);
+                anyhow::bail!(
+                    "grown shard {id} expects {nf} features, pool expects {}",
+                    self.n_features
+                );
+            }
+            wlock(&self.shards).push(shard);
+        }
+        while rlock(&self.shards).len() > n_shards {
+            let handle = match wlock(&self.shards).pop() {
+                Some(h) => h,
+                None => break,
+            };
+            // Out of the steal/dispatch set first, then closed: a push that
+            // races the removal either lands before `retire` drains the
+            // queue (so the job is re-dispatched below) or bounces back to
+            // its submitter's failover scan. Nothing is stranded.
+            wlock(&self.shard_set).retain(|q| !Arc::ptr_eq(q, &handle.queue));
+            handle.queue.close();
+            let stragglers = handle.queue.retire();
+            redispatch_jobs(
+                stragglers,
+                &self.shard_set,
+                &handle.queue,
+                &self.stats,
+                &handle.stats,
+                "retired by resize with no live sibling",
+            );
+            self.retired
+                .lock()
+                .unwrap_or_else(PoisonError::into_inner)
+                .push(handle.worker);
+        }
+        Ok(())
     }
 
     /// Drain and stop every worker. Queued jobs are still executed and
@@ -1038,7 +1219,12 @@ impl Server {
     }
 
     fn shutdown_inner(&mut self) {
-        teardown(std::mem::take(&mut self.shards));
+        teardown(std::mem::take(&mut *wlock(&self.shards)));
+        let retired = std::mem::take(&mut *self.retired.lock().unwrap_or_else(PoisonError::into_inner));
+        for worker in retired {
+            let _ = worker.join();
+        }
+        wlock(&self.shard_set).clear();
     }
 }
 
@@ -1081,7 +1267,11 @@ fn teardown(shards: Vec<ShardHandle>) {
 /// per-batch and lane-coalescing loops share one spawn path.
 struct WorkerCtx {
     shard_id: usize,
-    queues: Arc<Vec<Arc<ShardQueue>>>,
+    /// The worker's own queue (workers identify themselves by queue
+    /// pointer, not by position — resize reshuffles positions).
+    own: Arc<ShardQueue>,
+    /// The pool's live queue set, for steal scans and guard re-dispatch.
+    shards: Arc<ShardSet>,
     /// Policy batch cap, *not yet* clamped to the executor (loops clamp
     /// against `executor.max_batch()` themselves).
     max_batch: usize,
@@ -1094,10 +1284,12 @@ struct WorkerCtx {
 /// Spawn one shard worker; blocks until its executor is constructed and
 /// returns the shard handle plus the executor's feature count. `run` is
 /// the loop the worker thread enters with the built executor.
+#[allow(clippy::too_many_arguments)]
 fn spawn_shard<E: BatchExecutor>(
     factory: Box<dyn FnOnce() -> anyhow::Result<E> + Send>,
     shard_id: usize,
-    queues: Arc<Vec<Arc<ShardQueue>>>,
+    own: Arc<ShardQueue>,
+    shards: Arc<ShardSet>,
     policy: BatchPolicy,
     aggregate: Arc<ServerStats>,
     clock: Arc<dyn Clock>,
@@ -1105,7 +1297,7 @@ fn spawn_shard<E: BatchExecutor>(
 ) -> anyhow::Result<(ShardHandle, usize)> {
     let stats = Arc::new(ServerStats::default());
     let stats_w = Arc::clone(&stats);
-    let queue = Arc::clone(&queues[shard_id]);
+    let queue = Arc::clone(&own);
     let (ready_tx, ready_rx) = mpsc::channel::<anyhow::Result<(usize, usize)>>();
     let max_wait = policy.max_wait;
     let policy_max = policy.max_batch;
@@ -1125,7 +1317,8 @@ fn spawn_shard<E: BatchExecutor>(
         };
         let ctx = WorkerCtx {
             shard_id,
-            queues,
+            own,
+            shards,
             max_batch: policy_max,
             max_wait,
             aggregate,
@@ -1159,7 +1352,8 @@ fn spawn_shard<E: BatchExecutor>(
 /// silent job loss into observable degradation.
 struct WorkerGuard {
     shard_id: usize,
-    queues: Arc<Vec<Arc<ShardQueue>>>,
+    own: Arc<ShardQueue>,
+    shards: Arc<ShardSet>,
     aggregate: Arc<ServerStats>,
     shard: Arc<ServerStats>,
     clock: Arc<dyn Clock>,
@@ -1178,33 +1372,61 @@ impl WorkerGuard {
 
 impl Drop for WorkerGuard {
     fn drop(&mut self) {
-        let stranded = self.queues[self.shard_id].retire();
+        let stranded = self.own.retire();
         for job in std::mem::take(&mut self.in_flight) {
             self.fail(job, "worker panicked mid-batch");
         }
-        // Shallowest-live-first inheritance order; one pass, no rescans (a
-        // push can only fail if the target died meanwhile, which the next
-        // candidate handles). Inherited jobs bypass the admission cap:
-        // they were admitted once already, and a blocking push here could
-        // deadlock the unwind.
-        let mut targets: Vec<usize> = (0..self.queues.len())
-            .filter(|&i| i != self.shard_id && self.queues[i].is_alive())
-            .collect();
-        targets.sort_by_key(|&i| self.queues[i].depth());
-        'jobs: for mut job in stranded {
-            for &t in &targets {
-                match self.queues[t].push_inherited(job) {
-                    Ok(_) => {
-                        self.aggregate.redispatched.fetch_add(1, Ordering::Relaxed);
-                        self.shard.redispatched.fetch_add(1, Ordering::Relaxed);
-                        continue 'jobs;
-                    }
-                    Err(j) => job = j,
-                }
-            }
-            self.fail(job, "worker died with the job queued and no live sibling");
-        }
+        redispatch_jobs(
+            stranded,
+            &self.shards,
+            &self.own,
+            &self.aggregate,
+            &self.shard,
+            "worker died with the job queued and no live sibling",
+        );
         self.clock.worker_stopped(self.shard_id);
+    }
+}
+
+/// Move jobs stranded on `source` (retired by a dying worker or a resize
+/// shrink) onto live sibling queues, shallowest first; one pass, no
+/// rescans (a push can only fail if the target died meanwhile, which the
+/// next candidate handles). Inherited jobs bypass the admission cap: they
+/// were admitted once already, and a blocking push here could deadlock an
+/// unwind. Jobs no live sibling can take are failed explicitly with
+/// `why`, counted in [`ServerStats::rejected`].
+fn redispatch_jobs(
+    jobs: Vec<Job>,
+    shards: &ShardSet,
+    source: &Arc<ShardQueue>,
+    aggregate: &ServerStats,
+    shard: &ServerStats,
+    why: &str,
+) {
+    if jobs.is_empty() {
+        return;
+    }
+    let mut targets: Vec<Arc<ShardQueue>> = rlock(shards)
+        .iter()
+        .filter(|q| !Arc::ptr_eq(q, source) && q.is_alive())
+        .cloned()
+        .collect();
+    targets.sort_by_key(|q| q.depth());
+    let shard_id = source.id;
+    'jobs: for mut job in jobs {
+        for t in &targets {
+            match t.push_inherited(job) {
+                Ok(_) => {
+                    aggregate.redispatched.fetch_add(1, Ordering::Relaxed);
+                    shard.redispatched.fetch_add(1, Ordering::Relaxed);
+                    continue 'jobs;
+                }
+                Err(j) => job = j,
+            }
+        }
+        aggregate.rejected.fetch_add(1, Ordering::Relaxed);
+        shard.rejected.fetch_add(1, Ordering::Relaxed);
+        let _ = job.resp.send(Err(anyhow::anyhow!("shard {shard_id} {why}")));
     }
 }
 
@@ -1220,17 +1442,17 @@ fn idle_poll_floor(n_queues: usize, max_wait: Duration) -> Duration {
 }
 
 fn worker_loop<E: BatchExecutor>(executor: E, ctx: WorkerCtx) {
-    let WorkerCtx { shard_id, queues, max_batch, max_wait, aggregate, shard, clock } = ctx;
+    let WorkerCtx { shard_id, own, shards, max_batch, max_wait, aggregate, shard, clock } = ctx;
     let max_batch = max_batch.min(executor.max_batch()).max(1);
     let mut guard = WorkerGuard {
         shard_id,
-        queues: Arc::clone(&queues),
+        own: Arc::clone(&own),
+        shards: Arc::clone(&shards),
         aggregate: Arc::clone(&aggregate),
         shard: Arc::clone(&shard),
         clock: Arc::clone(&clock),
         in_flight: Vec::new(),
     };
-    let own = &queues[shard_id];
     // Adaptive idle poll: how long to block on an empty queue before
     // checking sibling depths for stealable work. The floor tracks the
     // latency budget (`max_wait`) on multi-shard pools so stolen jobs
@@ -1238,9 +1460,15 @@ fn worker_loop<E: BatchExecutor>(executor: E, ctx: WorkerCtx) {
     // to STEAL_POLL_MAX, and any successful pop or steal snaps it back.
     // The condvar still wakes a parked worker instantly on push or close,
     // so backoff only delays *stealing*, never direct dispatch.
-    let min_poll = idle_poll_floor(queues.len(), max_wait);
+    let min_poll = idle_poll_floor(rlock(&shards).len(), max_wait);
     let mut poll = min_poll;
     loop {
+        // A panic under the queue lock poisoned the mutex; the shard is
+        // already marked dead. Exit through the guard so queued jobs
+        // re-dispatch to live siblings instead of cascading the panic.
+        if own.poisoned.load(Ordering::Relaxed) {
+            return;
+        }
         let jobs: Vec<Job> = match own.pop_wait(poll, &*clock) {
             Pop::Job(first) => {
                 poll = min_poll;
@@ -1276,7 +1504,7 @@ fn worker_loop<E: BatchExecutor>(executor: E, ctx: WorkerCtx) {
                 for stats in [&aggregate, &shard] {
                     stats.steal_scans.fetch_add(1, Ordering::Relaxed);
                 }
-                let jobs = steal_batch(&queues, shard_id, max_batch);
+                let jobs = steal_batch(&shards, &own, max_batch);
                 if jobs.is_empty() {
                     poll = (poll * 2).min(STEAL_POLL_MAX);
                     continue;
@@ -1479,30 +1707,30 @@ fn lane_flush_pipe<E: LaneExecutor>(
 /// the existing [`WorkerGuard`] unwind path, and queued-behind jobs
 /// re-dispatch to live siblings — kill-mid-word loses nothing silently.
 fn lane_worker_loop<E: LaneExecutor>(executor: E, ctx: WorkerCtx) {
-    let WorkerCtx { shard_id, queues, max_batch, max_wait, aggregate, shard, clock } = ctx;
+    let WorkerCtx { shard_id, own, shards, max_batch, max_wait, aggregate, shard, clock } = ctx;
     // Steal runs still respect conventional batch sizing; word size is the
     // executor's lane width.
     let steal_cap = max_batch.min(executor.max_batch()).max(1);
     let lanes = executor.lanes().max(1);
     let mut guard = WorkerGuard {
         shard_id,
-        queues: Arc::clone(&queues),
+        own: Arc::clone(&own),
+        shards: Arc::clone(&shards),
         aggregate: Arc::clone(&aggregate),
         shard: Arc::clone(&shard),
         clock: Arc::clone(&clock),
         in_flight: Vec::new(),
     };
-    let own = &queues[shard_id];
     let mut word_lens: VecDeque<usize> = VecDeque::new();
     let mut open = 0usize;
-    let min_poll = idle_poll_floor(queues.len(), max_wait);
+    let min_poll = idle_poll_floor(rlock(&shards).len(), max_wait);
     let mut poll = min_poll;
 
     macro_rules! issue_open {
         () => {
             lane_issue_open(
                 &executor,
-                own,
+                &own,
                 &mut guard,
                 &mut word_lens,
                 &mut open,
@@ -1516,7 +1744,7 @@ fn lane_worker_loop<E: LaneExecutor>(executor: E, ctx: WorkerCtx) {
         () => {
             lane_flush_pipe(
                 &executor,
-                own,
+                &own,
                 &mut guard,
                 &mut word_lens,
                 &mut open,
@@ -1538,6 +1766,12 @@ fn lane_worker_loop<E: LaneExecutor>(executor: E, ctx: WorkerCtx) {
     }
 
     loop {
+        // Observed mutex poisoning retires the shard (see `worker_loop`);
+        // exit through the guard, which fails the in-flight words
+        // explicitly and re-dispatches queued jobs.
+        if own.poisoned.load(Ordering::Relaxed) {
+            return;
+        }
         // 1. Greedy drain: pack everything queued, issuing each word the
         //    moment it fills.
         while let Some(job) = own.try_pop() {
@@ -1559,7 +1793,7 @@ fn lane_worker_loop<E: LaneExecutor>(executor: E, ctx: WorkerCtx) {
                     for stats in [&aggregate, &shard] {
                         stats.steal_scans.fetch_add(1, Ordering::Relaxed);
                     }
-                    let stolen = steal_batch(&queues, shard_id, steal_cap);
+                    let stolen = steal_batch(&shards, &own, steal_cap);
                     if stolen.is_empty() {
                         poll = (poll * 2).min(STEAL_POLL_MAX);
                         continue;
@@ -1605,23 +1839,124 @@ fn lane_worker_loop<E: LaneExecutor>(executor: E, ctx: WorkerCtx) {
     }
 }
 
-/// Pick the deepest sibling queue and steal about half of it.
-fn steal_batch(queues: &[Arc<ShardQueue>], thief: usize, max_batch: usize) -> Vec<Job> {
-    let mut victim = None;
-    let mut deepest = 0usize;
-    for (i, q) in queues.iter().enumerate() {
-        if i == thief {
-            continue;
+/// Pick the deepest sibling queue and steal about half of it. The set
+/// read lock is released before the steal itself so a pending resize is
+/// never blocked behind a sibling's queue mutex.
+fn steal_batch(shards: &ShardSet, thief: &Arc<ShardQueue>, max_batch: usize) -> Vec<Job> {
+    let victim = {
+        let queues = rlock(shards);
+        let mut victim: Option<Arc<ShardQueue>> = None;
+        let mut deepest = 0usize;
+        for q in queues.iter() {
+            if Arc::ptr_eq(q, thief) {
+                continue;
+            }
+            let d = q.depth();
+            if d > deepest {
+                deepest = d;
+                victim = Some(Arc::clone(q));
+            }
         }
-        let d = q.depth();
-        if d > deepest {
-            deepest = d;
-            victim = Some(i);
-        }
-    }
+        victim
+    };
     match victim {
-        Some(v) => queues[v].steal(max_batch),
+        Some(v) => v.steal(max_batch),
         None => Vec::new(),
+    }
+}
+
+/// Queue-depth band for [`AutoScaler`]: grow when the EWMA of the pool's
+/// mean queue depth exceeds `high`, shrink when it falls below `low`.
+#[derive(Clone, Copy, Debug)]
+pub struct ScalePolicy {
+    /// Shrink threshold (EWMA of mean queue depth).
+    pub low: f64,
+    /// Grow threshold (EWMA of mean queue depth).
+    pub high: f64,
+    /// Never shrink below this many shards (clamped to ≥ 1).
+    pub min_shards: usize,
+    /// Never grow beyond this many shards.
+    pub max_shards: usize,
+    /// EWMA smoothing factor in (0, 1]: the weight of the newest
+    /// observation. 1.0 = no smoothing (track the instantaneous mean).
+    pub alpha: f64,
+}
+
+impl Default for ScalePolicy {
+    fn default() -> Self {
+        ScalePolicy { low: 0.5, high: 4.0, min_shards: 1, max_shards: 16, alpha: 0.3 }
+    }
+}
+
+/// Optional load-watching resize driver: folds queue-depth observations
+/// into an EWMA and steps the pool's shard count by one whenever the EWMA
+/// leaves the [`ScalePolicy`] band. One step per tick keeps resize churn
+/// bounded regardless of how noisy the load is. The arithmetic
+/// ([`AutoScaler::observe`] / [`AutoScaler::target`]) is pure so the
+/// policy is unit-testable without a pool; [`AutoScaler::tick`] applies it
+/// to a live [`Server`].
+pub struct AutoScaler {
+    policy: ScalePolicy,
+    ewma: Option<f64>,
+}
+
+impl AutoScaler {
+    pub fn new(policy: ScalePolicy) -> AutoScaler {
+        AutoScaler { policy, ewma: None }
+    }
+
+    /// Fold one mean-queue-depth observation into the EWMA; returns the
+    /// updated value.
+    pub fn observe(&mut self, mean_depth: f64) -> f64 {
+        let a = self.policy.alpha.clamp(f64::MIN_POSITIVE, 1.0);
+        let e = match self.ewma {
+            Some(prev) => prev + a * (mean_depth - prev),
+            None => mean_depth,
+        };
+        self.ewma = Some(e);
+        e
+    }
+
+    /// Current EWMA, if any observation has been folded in.
+    pub fn ewma(&self) -> Option<f64> {
+        self.ewma
+    }
+
+    /// Shard-count recommendation for the current EWMA: `current` ± 1,
+    /// clamped to the policy's `[min_shards, max_shards]` band. With no
+    /// observations yet, recommends no change.
+    pub fn target(&self, current: usize) -> usize {
+        let e = match self.ewma {
+            Some(e) => e,
+            None => return current,
+        };
+        let want = if e > self.policy.high {
+            current.saturating_add(1)
+        } else if e < self.policy.low {
+            current.saturating_sub(1)
+        } else {
+            current
+        };
+        want.clamp(self.policy.min_shards.max(1), self.policy.max_shards.max(1))
+    }
+
+    /// Observe the pool's current mean queue depth and resize by at most
+    /// one shard if the EWMA left the band. Returns the (possibly
+    /// unchanged) shard count.
+    pub fn tick(&mut self, server: &Server) -> anyhow::Result<usize> {
+        let depths = server.queue_depths();
+        let mean = if depths.is_empty() {
+            0.0
+        } else {
+            depths.iter().sum::<usize>() as f64 / depths.len() as f64
+        };
+        self.observe(mean);
+        let current = server.n_shards();
+        let want = self.target(current);
+        if want != current {
+            server.resize(want)?;
+        }
+        Ok(want)
     }
 }
 
@@ -1847,7 +2182,8 @@ mod tests {
         }
         assert_eq!(srv.stats().requests.load(Ordering::Relaxed), 80);
         // Dispatch counts sum to the total (steals move jobs, not credit).
-        let dispatched: u64 = srv.shard_stats().map(|s| s.requests.load(Ordering::Relaxed)).sum();
+        let dispatched: u64 =
+            srv.shard_stats().iter().map(|s| s.requests.load(Ordering::Relaxed)).sum();
         assert_eq!(dispatched, 80);
         srv.shutdown();
     }
@@ -2035,6 +2371,138 @@ mod tests {
         let srv = Server::start(CpuExecutor { model, max_batch: 4 }, BatchPolicy::default());
         assert_eq!(srv.classify(vec![0]).unwrap(), 0); // 0 - 2 < 0
         assert_eq!(srv.classify(vec![1]).unwrap(), 1); // 3 - 2 >= 0
+        srv.shutdown();
+    }
+
+    #[test]
+    fn poisoned_queue_is_contained_not_cascaded() {
+        let srv = Server::start_pool(
+            |_shard| mock(4).0,
+            BatchPolicy { max_wait: Duration::from_micros(10), ..BatchPolicy::default() },
+            2,
+        )
+        .unwrap();
+        // Poison shard 0's queue mutex: panic while holding the guard,
+        // under a scoped hook so the expected panic doesn't spam test
+        // output.
+        let q = Arc::clone(&rlock(&srv.shard_set)[0]);
+        let prev = std::panic::take_hook();
+        std::panic::set_hook(Box::new(|_| {}));
+        let poisoner = std::thread::spawn(move || {
+            let _guard = q.jobs.lock().unwrap();
+            panic!("simulated panic under the queue lock");
+        });
+        assert!(poisoner.join().is_err(), "poisoner must have panicked");
+        std::panic::set_hook(prev);
+        // Regression: before `lock_jobs`, the next submit to shard 0 would
+        // unwrap the poisoned mutex and panic the *submitter*, and every
+        // worker/stealer touching the queue would follow — a pool-wide
+        // cascade. Now the first observer retires the shard and traffic
+        // fails over, exactly the dead-shard degradation.
+        for v in 0..10u16 {
+            let rx = srv.submit(vec![v, 0]).unwrap();
+            let reply = rx
+                .recv_timeout(Duration::from_secs(5))
+                .expect("request lost after queue poisoning")
+                .expect("sibling shard must serve");
+            assert_eq!(reply.class, (v % 3) as u32);
+        }
+        // The poisoned shard reads dead; its worker exits via the guard.
+        wait_for("poisoned shard to retire", || srv.live_shards() == 1);
+        assert!(rlock(&srv.shard_set)[0].poisoned.load(Ordering::Relaxed));
+        assert!(!rlock(&srv.shard_set)[0].is_alive());
+        srv.shutdown();
+    }
+
+    #[test]
+    fn resize_grows_and_shrinks_under_wall_clock() {
+        let srv = Server::start_pool(|_shard| mock(8).0, BatchPolicy::default(), 1).unwrap();
+        assert_eq!(srv.n_shards(), 1);
+        srv.resize(3).unwrap();
+        assert_eq!(srv.n_shards(), 3);
+        assert_eq!(srv.live_shards(), 3);
+        for v in 0..12u16 {
+            assert_eq!(srv.classify(vec![v, 0]).unwrap(), (v % 3) as u32);
+        }
+        // Labels are stable: the grown shards are 1 and 2.
+        let ids: Vec<usize> = srv.queue_depths_by_id().iter().map(|&(id, _)| id).collect();
+        assert_eq!(ids, vec![0, 1, 2]);
+        srv.resize(1).unwrap();
+        assert_eq!(srv.n_shards(), 1);
+        for v in 0..6u16 {
+            assert_eq!(srv.classify(vec![v, 0]).unwrap(), (v % 3) as u32);
+        }
+        // Grow again: retired labels are never reused.
+        srv.resize(2).unwrap();
+        let ids: Vec<usize> = srv.queue_depths_by_id().iter().map(|&(id, _)| id).collect();
+        assert_eq!(ids, vec![0, 3]);
+        srv.shutdown();
+    }
+
+    #[test]
+    fn single_shot_pool_cannot_grow() {
+        let (m, _) = mock(4);
+        let srv = Server::start(m, BatchPolicy::default());
+        let err = srv.resize(2).unwrap_err();
+        assert!(err.to_string().contains("single-shot"), "{err}");
+        // Resizing to the current size is a no-op, not an error.
+        srv.resize(1).unwrap();
+        assert_eq!(srv.classify(vec![2, 0]).unwrap(), 2);
+        srv.shutdown();
+    }
+
+    #[test]
+    fn autoscaler_steps_within_band() {
+        let mut a = AutoScaler::new(ScalePolicy {
+            low: 1.0,
+            high: 4.0,
+            min_shards: 1,
+            max_shards: 4,
+            alpha: 1.0,
+        });
+        assert_eq!(a.target(2), 2, "no observation yet: no change");
+        a.observe(10.0);
+        assert_eq!(a.target(2), 3, "above band: grow by one");
+        assert_eq!(a.target(4), 4, "clamped at max_shards");
+        a.observe(0.0);
+        assert_eq!(a.target(3), 2, "below band: shrink by one");
+        assert_eq!(a.target(1), 1, "clamped at min_shards");
+        // alpha < 1 smooths: one quiet tick after a burst must not
+        // immediately recommend a shrink.
+        let mut s = AutoScaler::new(ScalePolicy { alpha: 0.5, ..ScalePolicy::default() });
+        s.observe(8.0);
+        s.observe(0.0); // EWMA 4.0, inside the default [0.5, 4.0] band
+        assert_eq!(s.target(2), 2);
+    }
+
+    #[test]
+    fn autoscaler_tick_grows_on_backlog() {
+        let srv = Server::start_pool(
+            |_shard| Mock {
+                batches: Arc::new(Mutex::new(Vec::new())),
+                max: 1,
+                delay: Duration::from_millis(10), // slow singleton batches
+                poison: false,
+            },
+            BatchPolicy { max_batch: 1, max_wait: Duration::ZERO, ..BatchPolicy::default() },
+            1,
+        )
+        .unwrap();
+        let mut a = AutoScaler::new(ScalePolicy {
+            low: 0.5,
+            high: 2.0,
+            min_shards: 1,
+            max_shards: 2,
+            alpha: 1.0,
+        });
+        // Flood the single shard; at 10 ms per row the backlog is still
+        // deep when the scaler ticks.
+        let rxs: Vec<_> = (0..40u16).map(|v| srv.submit(vec![v, 0]).unwrap()).collect();
+        assert_eq!(a.tick(&srv).unwrap(), 2);
+        assert_eq!(srv.n_shards(), 2);
+        for rx in rxs {
+            rx.recv().unwrap().unwrap();
+        }
         srv.shutdown();
     }
 }

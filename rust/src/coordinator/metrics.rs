@@ -18,6 +18,25 @@ pub struct CoalesceReport {
     pub peak_inflight: u64,
 }
 
+/// Per-model line of a multi-tenant ([`super::registry`], `--models`)
+/// run, rendered under the pool-wide summary.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelLine {
+    /// Registered model name.
+    pub name: String,
+    /// Version that was serving when the report was taken.
+    pub version: u64,
+    /// Requests tagged for this model.
+    pub requests: u64,
+    /// Rows this model's artifact executed.
+    pub rows: u64,
+    /// Width-mismatch rejections at the registry door.
+    pub rejected: u64,
+    /// Per-model p99 latency in microseconds, when the load generator
+    /// tracked replies per tenant.
+    pub p99_us: Option<f64>,
+}
+
 /// One load-test run's results.
 #[derive(Clone, Debug)]
 pub struct ServingReport {
@@ -25,7 +44,10 @@ pub struct ServingReport {
     pub latency: Summary,
     /// Requests completed per second (one row per request: also rows/sec).
     pub throughput: f64,
-    /// Mean rows per executed batch.
+    /// Mean rows per executed batch. Coalescing pools count one batch per
+    /// issued *word*, so there this is mean lanes per word and
+    /// [`ServingReport::render`] labels it `word_fill=` instead of
+    /// `batch=`.
     pub mean_batch: f64,
     /// Offered load (requests per second), if known.
     pub offered_rps: Option<f64>,
@@ -58,6 +80,8 @@ pub struct ServingReport {
     pub lanes_utilization: Option<f64>,
     /// Lane-coalescing counters, when the pool ran the coalescing drain.
     pub coalesce: Option<CoalesceReport>,
+    /// Per-model lines, when the run served a model registry.
+    pub models: Vec<ModelLine>,
 }
 
 impl ServingReport {
@@ -85,6 +109,7 @@ impl ServingReport {
             netlist: None,
             lanes_utilization: None,
             coalesce: None,
+            models: Vec::new(),
         }
     }
 
@@ -139,6 +164,12 @@ impl ServingReport {
         self
     }
 
+    /// Record the per-model lines of a registry (`--models`) run.
+    pub fn with_models(mut self, models: Vec<ModelLine>) -> ServingReport {
+        self.models = models;
+        self
+    }
+
     /// One-line human-readable rendering (microsecond latencies).
     pub fn render(&self) -> String {
         let us = |s: f64| s * 1e6;
@@ -179,7 +210,9 @@ impl ServingReport {
             .unwrap_or_default();
         let lanes = self
             .lanes_utilization
-            .map(|u| format!(" lanes={:.0}%", u * 100.0))
+            // Floor, don't round: `lanes=100%` must mean every word was
+            // full, so 0.995..1.0 reads 99%, not a false 100%.
+            .map(|u| format!(" lanes={}%", ((u * 100.0).floor() as u32).min(100)))
             .unwrap_or_default();
         let coalesce = self
             .coalesce
@@ -190,11 +223,35 @@ impl ServingReport {
                 )
             })
             .unwrap_or_default();
+        // Coalescing pools count one batch per issued word: the same
+        // counter is honest only as a word-fill figure, not "rows per
+        // batch" (a full word reads word_fill=64.0, a mean batch of 64
+        // would be wrong).
+        let batch = if self.coalesce.is_some() {
+            format!(" word_fill={:.1}", self.mean_batch)
+        } else {
+            format!(" batch={:.1}", self.mean_batch)
+        };
+        let models: String = self
+            .models
+            .iter()
+            .map(|m| {
+                let rej = if m.rejected > 0 {
+                    format!(" rejected={}", m.rejected)
+                } else {
+                    String::new()
+                };
+                let p99 = m.p99_us.map(|p| format!(" p99={p:.0}us")).unwrap_or_default();
+                format!(
+                    "\n  model {} v{} req={} rows={}{rej}{p99}",
+                    m.name, m.version, m.requests, m.rows
+                )
+            })
+            .collect();
         format!(
-            "thru={:.0} rows/s{}{executor}{shards}{dispatch} batch={:.1} lat p50={:.0}us p90={:.0}us p99={:.0}us max={:.0}us{steals}{sheds}{netlist}{lanes}{coalesce}",
+            "thru={:.0} rows/s{}{executor}{shards}{dispatch}{batch} lat p50={:.0}us p90={:.0}us p99={:.0}us max={:.0}us{steals}{sheds}{netlist}{lanes}{coalesce}{models}",
             self.throughput,
             self.offered_rps.map(|r| format!(" (offered {r:.0})")).unwrap_or_default(),
-            self.mean_batch,
             us(self.latency.p50),
             us(self.latency.p90),
             us(self.latency.p99),
@@ -304,6 +361,57 @@ mod tests {
         let r = r.with_coalescing(c);
         assert_eq!(r.coalesce, Some(c));
         assert!(r.render().contains("coalesce[words=40 flushes=5 peak=3]"), "{}", r.render());
+    }
+
+    #[test]
+    fn lane_utilization_floors_instead_of_rounding_up() {
+        let near = ServingReport::from_latencies(&[0.001; 10], 1.0, 2.0, None)
+            .with_lanes_utilization(0.996);
+        // 99.6% of lanes full is NOT full words: must not read 100%.
+        assert!(near.render().contains("lanes=99%"), "{}", near.render());
+        let full = ServingReport::from_latencies(&[0.001; 10], 1.0, 2.0, None)
+            .with_lanes_utilization(1.0);
+        assert!(full.render().contains("lanes=100%"), "{}", full.render());
+    }
+
+    #[test]
+    fn coalesced_runs_render_word_fill_not_batch() {
+        let plain = ServingReport::from_latencies(&[0.001; 10], 1.0, 37.5, None);
+        assert!(plain.render().contains(" batch=37.5"), "{}", plain.render());
+        assert!(!plain.render().contains("word_fill="));
+        // The same counter under coalescing is lanes-per-word, not batch
+        // size — the label must say so.
+        let coal = plain.with_coalescing(CoalesceReport { words: 4, flushes: 1, peak_inflight: 2 });
+        assert!(coal.render().contains(" word_fill=37.5"), "{}", coal.render());
+        assert!(!coal.render().contains(" batch="), "{}", coal.render());
+    }
+
+    #[test]
+    fn model_lines_render_per_tenant() {
+        let r = ServingReport::from_latencies(&[0.001; 10], 1.0, 2.0, None);
+        assert!(!r.render().contains("model "));
+        let r = r.with_models(vec![
+            ModelLine {
+                name: "mnist".into(),
+                version: 3,
+                requests: 100,
+                rows: 98,
+                rejected: 0,
+                p99_us: Some(420.0),
+            },
+            ModelLine {
+                name: "nid".into(),
+                version: 1,
+                requests: 50,
+                rows: 49,
+                rejected: 2,
+                p99_us: None,
+            },
+        ]);
+        let s = r.render();
+        assert!(s.contains("\n  model mnist v3 req=100 rows=98 p99=420us"), "{s}");
+        assert!(s.contains("\n  model nid v1 req=50 rows=49 rejected=2"), "{s}");
+        assert!(!s.contains("nid v1 req=50 rows=49 rejected=2 p99="), "{s}");
     }
 
     #[test]

@@ -18,6 +18,11 @@
 //! buffering without limit, which is what keeps the enqueue-anchored
 //! latency bound meaningful at 2x saturation (DESIGN.md §4).
 //!
+//! Multi-tenancy lives one layer up: [`registry`] serves N independently
+//! versioned models behind one pool (tagged rows, per-model stats, atomic
+//! hot swap gated by the static equivalence checker, elastic
+//! [`Server::resize`]).
+//!
 //! The coordinator is generic over [`BatchExecutor`] so unit tests run
 //! against a deterministic mock and the serving path runs against
 //! [`FlatExecutor`] (the flat-forest CPU engine), [`NetlistExecutor`]
@@ -30,16 +35,21 @@
 pub mod batcher;
 pub mod metrics;
 pub mod netlist_exec;
+pub mod registry;
 #[cfg(any(test, feature = "test-harness"))]
 pub mod testing;
 
 pub use batcher::{
-    BatchPolicy, Clock, DispatchPolicy, OverloadPolicy, Reply, Server, ServerStats,
-    SubmitError, WallClock,
+    AutoScaler, BatchPolicy, Clock, DispatchPolicy, OverloadPolicy, Reply, ScalePolicy, Server,
+    ServerStats, SubmitError, WallClock,
 };
-pub use metrics::{CoalesceReport, ServingReport};
+pub use metrics::{CoalesceReport, ModelLine, ServingReport};
 pub use netlist_exec::{
     CompiledNetlist, LaneStats, NetlistExecError, NetlistExecutor, NetlistMeta,
+};
+pub use registry::{
+    ArtifactEngine, ModelArtifact, ModelId, ModelRegistry, RegistryError, RegistryExecutor,
+    RegistryServer, SwapCheck,
 };
 
 /// Anything that can classify a batch of quantized rows.

@@ -291,6 +291,22 @@ impl CompiledNetlist {
         self.shared.meta
     }
 
+    /// The built gate netlist — what [`crate::netlist::equiv::check_equiv`]
+    /// consumes when a registry hot swap claims equivalence.
+    pub fn built(&self) -> &BuiltDesign {
+        &self.shared.built
+    }
+
+    /// The circuit's input contract: features per row.
+    pub fn n_features(&self) -> usize {
+        self.shared.n_features
+    }
+
+    /// Bits per feature — the comparator input domain.
+    pub fn w_feature(&self) -> usize {
+        self.shared.w_feature
+    }
+
     /// The static-verifier summary, when this circuit was compiled with
     /// verification on ([`CompiledNetlist::compile_checked`]; debug builds
     /// always verify).

@@ -1,0 +1,751 @@
+//! Multi-model serving: a [`ModelRegistry`] of independently versioned
+//! compiled artifacts behind one shard pool.
+//!
+//! TreeLUT's economics are many small per-task circuits, not one monolith
+//! (the paper evaluates distinct models per dataset; PolyLUT-Add and
+//! NeuraLUT-Assemble assume per-task circuits that get rebuilt and
+//! redeployed as models retrain). The registry is the serving shape for
+//! that: N models — software [`FlatForest`]s, hardware-accurate
+//! [`CompiledNetlist`]s, or anything implementing [`ArtifactEngine`] —
+//! share the existing dispatch/admission/steal machinery of
+//! [`super::batcher::Server`] by riding a one-lane *model tag* in front of
+//! each row. [`RegistryServer::submit`] stamps the tag and pads the row to
+//! the pool's frozen width; [`RegistryExecutor`] groups each batch by tag
+//! on the worker and scatters predictions back into submit order, so
+//! mixed-tenant batches cost one artifact dereference per model per batch.
+//!
+//! **Atomic hot swap.** Each model's current artifact lives behind an
+//! `Arc` swapped under a pointer-sized critical section
+//! ([`ModelRegistry::swap`]): the executor clones the `Arc` *once per
+//! batch group*, so an in-flight batch finishes — and replies — on the
+//! version that was current when it started, while the next batch sees the
+//! new version. No job is lost and no reply is misrouted across a swap
+//! (proved on the virtual clock in `tests/serving.rs`). A swap that claims
+//! equivalence is gated: netlist→netlist pairs go through the static
+//! equivalence checker ([`crate::netlist::equiv`]); heterogeneous pairs
+//! are cross-checked on a deterministic input sample.
+//!
+//! **Elastic shards.** Pool capacity is orthogonal to the registry —
+//! [`RegistryServer::resize`] delegates to [`super::batcher::Server::resize`]
+//! (grow = spawn fresh labeled queues, shrink = close + drain + re-dispatch
+//! stragglers), optionally driven by [`super::batcher::AutoScaler`].
+
+use super::batcher::{rlock, wlock, BatchPolicy, Clock, DispatchPolicy, Reply, Server, ServerStats, WallClock};
+use super::metrics::ModelLine;
+use super::netlist_exec::{CompiledNetlist, LaneStats};
+use super::BatchExecutor;
+use crate::netlist::check_equiv;
+use crate::quantize::FlatForest;
+use crate::util::Rng;
+use std::sync::atomic::Ordering;
+use std::sync::{mpsc, Arc, RwLock};
+
+/// Index of a model in its registry (stable: slots are never removed).
+pub type ModelId = usize;
+
+/// Sample size of the heterogeneous swap-equivalence cross-check.
+const EQUIV_SAMPLES: usize = 512;
+
+/// Typed registry failures, downcastable from returned `anyhow::Error`s.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RegistryError {
+    /// No model registered under this id.
+    UnknownModel { model: ModelId },
+    /// A submitted row does not match the model's feature contract.
+    WidthMismatch { model: ModelId, got: usize, want: usize },
+    /// A replacement artifact changed the model's feature contract —
+    /// swaps replace *versions*, not interfaces.
+    SwapWidthMismatch { model: ModelId, got: usize, want: usize },
+    /// The equivalence gate found inputs where the replacement disagrees
+    /// with the serving version; the swap was refused.
+    NotEquivalent { model: ModelId, failed: usize },
+}
+
+impl std::fmt::Display for RegistryError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RegistryError::UnknownModel { model } => {
+                write!(f, "no model registered under id {model}")
+            }
+            RegistryError::WidthMismatch { model, got, want } => {
+                write!(f, "model {model}: row has {got} features, model expects {want}")
+            }
+            RegistryError::SwapWidthMismatch { model, got, want } => {
+                write!(
+                    f,
+                    "model {model}: replacement artifact has {got} features, serving \
+                     version has {want}; a swap must preserve the feature contract"
+                )
+            }
+            RegistryError::NotEquivalent { model, failed } => {
+                write!(
+                    f,
+                    "model {model}: replacement disagrees with the serving version on \
+                     {failed} input(s); refusing the swap"
+                )
+            }
+        }
+    }
+}
+
+impl std::error::Error for RegistryError {}
+
+/// Anything a registry slot can serve besides the built-in artifact kinds
+/// — e.g. [`crate::runtime::Engine`]-style backends, or test doubles that
+/// park on a virtual clock. Unlike [`BatchExecutor`], artifacts are shared
+/// across worker threads, so `Send + Sync` is required.
+pub trait ArtifactEngine: Send + Sync + 'static {
+    /// Features per row.
+    fn n_features(&self) -> usize;
+    /// Classify `rows` (each of length `n_features`).
+    fn predict_batch(&self, rows: &[&[u16]]) -> anyhow::Result<Vec<u32>>;
+}
+
+/// One compiled, immutable, shareable model version.
+#[derive(Clone)]
+pub enum ModelArtifact {
+    /// The SoA branchless software engine.
+    Flat(Arc<FlatForest>),
+    /// The LUT-mapped gate-level circuit (hardware-accurate path). Each
+    /// batch materializes a throwaway simulator over the shared circuit —
+    /// correct but costlier per batch than a resident
+    /// [`super::NetlistExecutor`]; single-model pools that care should
+    /// keep using `serve --executor netlist`.
+    Netlist(Arc<CompiledNetlist>),
+    /// A custom engine (see [`ArtifactEngine`]).
+    Engine(Arc<dyn ArtifactEngine>),
+}
+
+impl ModelArtifact {
+    /// The artifact's feature contract.
+    pub fn n_features(&self) -> usize {
+        match self {
+            ModelArtifact::Flat(f) => f.n_features(),
+            ModelArtifact::Netlist(c) => c.n_features(),
+            ModelArtifact::Engine(e) => e.n_features(),
+        }
+    }
+
+    /// Bits of input domain the artifact is defined over (the sampling
+    /// equivalence gate draws inputs from the narrower of the two sides).
+    fn domain_bits(&self) -> u32 {
+        match self {
+            ModelArtifact::Netlist(c) => c.w_feature() as u32,
+            ModelArtifact::Flat(_) | ModelArtifact::Engine(_) => 16,
+        }
+    }
+
+    /// Classify `rows`, recording netlist lane occupancy into `lanes`.
+    fn predict(&self, rows: &[&[u16]], lanes: &Arc<LaneStats>) -> anyhow::Result<Vec<u32>> {
+        match self {
+            ModelArtifact::Flat(f) => Ok(f.predict_batch(rows)),
+            ModelArtifact::Netlist(c) => {
+                c.executor(rows.len().max(1), Arc::clone(lanes)).execute(rows)
+            }
+            ModelArtifact::Engine(e) => e.predict_batch(rows),
+        }
+    }
+}
+
+/// An artifact plus the monotonic version that installed it.
+struct Versioned {
+    version: u64,
+    artifact: ModelArtifact,
+}
+
+/// One registered model: name, frozen feature contract, the current
+/// version behind a pointer-swap lock, and per-model accounting.
+struct Slot {
+    name: String,
+    n_features: usize,
+    current: RwLock<Arc<Versioned>>,
+    stats: Arc<ServerStats>,
+    lanes: Arc<LaneStats>,
+}
+
+/// What a swap must prove before it installs.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum SwapCheck {
+    /// Install unconditionally (a retrained model is *supposed* to differ).
+    #[default]
+    None,
+    /// The replacement claims to compute the same function (e.g. a
+    /// re-optimized build of the same model): netlist→netlist pairs run
+    /// the static equivalence checker, heterogeneous pairs a
+    /// deterministic input-sample cross-check. Refused with a typed
+    /// [`RegistryError::NotEquivalent`] on any disagreement.
+    Equiv,
+}
+
+/// N independently versioned models sharing one serving pool. Slots are
+/// append-only; ids are stable for the registry's lifetime.
+#[derive(Default)]
+pub struct ModelRegistry {
+    slots: RwLock<Vec<Arc<Slot>>>,
+}
+
+impl ModelRegistry {
+    pub fn new() -> ModelRegistry {
+        ModelRegistry::default()
+    }
+
+    /// Register a model under the next free id. Register every model
+    /// *before* starting a [`RegistryServer`]: the pool freezes its row
+    /// width at start, so a later-registered model only fits if its
+    /// feature count does not exceed the widest model at start time.
+    pub fn register(
+        &self,
+        name: impl Into<String>,
+        artifact: ModelArtifact,
+    ) -> anyhow::Result<ModelId> {
+        let mut slots = wlock(&self.slots);
+        // The model tag travels as the row's leading u16 lane.
+        anyhow::ensure!(
+            slots.len() < u16::MAX as usize,
+            "registry full: model ids must fit a u16 row tag"
+        );
+        let id = slots.len();
+        slots.push(Arc::new(Slot {
+            name: name.into(),
+            n_features: artifact.n_features(),
+            current: RwLock::new(Arc::new(Versioned { version: 1, artifact })),
+            stats: Arc::new(ServerStats::default()),
+            lanes: Arc::new(LaneStats::default()),
+        }));
+        Ok(id)
+    }
+
+    pub fn len(&self) -> usize {
+        rlock(&self.slots).len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        rlock(&self.slots).is_empty()
+    }
+
+    fn slot(&self, model: ModelId) -> Result<Arc<Slot>, RegistryError> {
+        rlock(&self.slots)
+            .get(model)
+            .cloned()
+            .ok_or(RegistryError::UnknownModel { model })
+    }
+
+    /// Registered name of `model`.
+    pub fn name(&self, model: ModelId) -> Option<String> {
+        self.slot(model).ok().map(|s| s.name.clone())
+    }
+
+    /// Currently serving version of `model` (starts at 1, bumps per swap).
+    pub fn version(&self, model: ModelId) -> Option<u64> {
+        self.slot(model).ok().map(|s| rlock(&s.current).version)
+    }
+
+    /// Feature contract of `model`.
+    pub fn n_features(&self, model: ModelId) -> Option<usize> {
+        self.slot(model).ok().map(|s| s.n_features)
+    }
+
+    /// Per-model serving counters.
+    pub fn stats(&self, model: ModelId) -> Option<Arc<ServerStats>> {
+        self.slot(model).ok().map(|s| Arc::clone(&s.stats))
+    }
+
+    /// Per-model netlist lane-occupancy counters.
+    pub fn lane_stats(&self, model: ModelId) -> Option<Arc<LaneStats>> {
+        self.slot(model).ok().map(|s| Arc::clone(&s.lanes))
+    }
+
+    /// Row width a pool over this registry needs: one tag lane plus the
+    /// widest model's features (narrower models ride zero-padded).
+    pub fn row_width(&self) -> usize {
+        1 + rlock(&self.slots).iter().map(|s| s.n_features).max().unwrap_or(0)
+    }
+
+    /// Build the tagged, padded pool row for a `model` request:
+    /// `[tag, features.., 0..]` of length `width`. Counts the request (or
+    /// the width rejection) on the model's stats.
+    pub fn tagged_row(
+        &self,
+        model: ModelId,
+        row: &[u16],
+        width: usize,
+    ) -> Result<Vec<u16>, RegistryError> {
+        let slot = self.slot(model)?;
+        if row.len() != slot.n_features || 1 + slot.n_features > width {
+            slot.stats.rejected.fetch_add(1, Ordering::Relaxed);
+            return Err(RegistryError::WidthMismatch {
+                model,
+                got: row.len(),
+                want: slot.n_features.min(width.saturating_sub(1)),
+            });
+        }
+        slot.stats.requests.fetch_add(1, Ordering::Relaxed);
+        let mut tagged = Vec::with_capacity(width);
+        tagged.push(model as u16);
+        tagged.extend_from_slice(row);
+        tagged.resize(width, 0);
+        Ok(tagged)
+    }
+
+    /// Atomically install `new` as the next version of `model` and return
+    /// that version number.
+    ///
+    /// The exchange is a pointer swap under the slot's write lock: batches
+    /// already holding the old `Arc` finish (and reply) on the old
+    /// version; every batch grouped after the swap sees the new one.
+    /// `check` optionally gates the install on equivalence (see
+    /// [`SwapCheck`]); the gate runs *before* the exchange, so a refused
+    /// swap leaves the serving version untouched.
+    pub fn swap(
+        &self,
+        model: ModelId,
+        new: ModelArtifact,
+        check: SwapCheck,
+    ) -> anyhow::Result<u64> {
+        let slot = self.slot(model).map_err(anyhow::Error::new)?;
+        anyhow::ensure!(
+            new.n_features() == slot.n_features,
+            RegistryError::SwapWidthMismatch {
+                model,
+                got: new.n_features(),
+                want: slot.n_features,
+            }
+        );
+        if check == SwapCheck::Equiv {
+            let old = Arc::clone(&rlock(&slot.current));
+            self.check_equivalent(model, &old.artifact, &new)?;
+        }
+        let mut cur = wlock(&slot.current);
+        let version = cur.version + 1;
+        *cur = Arc::new(Versioned { version, artifact: new });
+        Ok(version)
+    }
+
+    /// The swap-equivalence gate. Netlist pairs get the static checker
+    /// (structural discharge, exhaustive cone sweep, corner+random
+    /// fallback — `crate::netlist::equiv`); any other pairing is
+    /// cross-checked on [`EQUIV_SAMPLES`] deterministic rows drawn from
+    /// the narrower input domain of the two sides.
+    fn check_equivalent(
+        &self,
+        model: ModelId,
+        old: &ModelArtifact,
+        new: &ModelArtifact,
+    ) -> anyhow::Result<()> {
+        if let (ModelArtifact::Netlist(a), ModelArtifact::Netlist(b)) = (old, new) {
+            let report = check_equiv(a.built(), b.built()).map_err(anyhow::Error::new)?;
+            if !report.equivalent() {
+                return Err(anyhow::Error::new(RegistryError::NotEquivalent {
+                    model,
+                    failed: report.failed.len(),
+                })
+                .context(report.render()));
+            }
+            return Ok(());
+        }
+        let slot = self.slot(model).map_err(anyhow::Error::new)?;
+        let bits = old.domain_bits().min(new.domain_bits());
+        let mask: u16 = if bits >= 16 { u16::MAX } else { (1u16 << bits) - 1 };
+        let mut rng = Rng::new(0x5eed ^ model as u64);
+        let rows: Vec<Vec<u16>> = (0..EQUIV_SAMPLES)
+            .map(|_| (0..slot.n_features).map(|_| rng.next_u64() as u16 & mask).collect())
+            .collect();
+        let refs: Vec<&[u16]> = rows.iter().map(|r| r.as_slice()).collect();
+        // Scratch lane counters: gate traffic must not pollute serving stats.
+        let scratch = Arc::new(LaneStats::default());
+        let a = old.predict(&refs, &scratch).map_err(|e| e.context("serving version"))?;
+        let b = new.predict(&refs, &scratch).map_err(|e| e.context("replacement"))?;
+        let failed = a.iter().zip(&b).filter(|(x, y)| x != y).count();
+        anyhow::ensure!(failed == 0, RegistryError::NotEquivalent { model, failed });
+        Ok(())
+    }
+
+    /// Per-model report lines (latency percentiles are filled in by the
+    /// caller, which owns the reply stream).
+    pub fn model_lines(&self) -> Vec<ModelLine> {
+        rlock(&self.slots)
+            .iter()
+            .map(|s| {
+                let version = rlock(&s.current).version;
+                ModelLine {
+                    name: s.name.clone(),
+                    version,
+                    requests: s.stats.requests.load(Ordering::Relaxed),
+                    rows: s.stats.rows_executed.load(Ordering::Relaxed),
+                    rejected: s.stats.rejected.load(Ordering::Relaxed),
+                    p99_us: None,
+                }
+            })
+            .collect()
+    }
+}
+
+/// The pool-side half: a [`BatchExecutor`] that demultiplexes tagged rows
+/// onto registry slots. One instance per shard; the registry itself is
+/// shared.
+pub struct RegistryExecutor {
+    registry: Arc<ModelRegistry>,
+    max_batch: usize,
+    width: usize,
+}
+
+impl RegistryExecutor {
+    /// Build an executor over `registry`, freezing the pool row width at
+    /// the registry's current widest model.
+    pub fn new(registry: Arc<ModelRegistry>, max_batch: usize) -> RegistryExecutor {
+        let width = registry.row_width();
+        RegistryExecutor { registry, max_batch, width }
+    }
+}
+
+impl BatchExecutor for RegistryExecutor {
+    fn max_batch(&self) -> usize {
+        self.max_batch
+    }
+
+    fn n_features(&self) -> usize {
+        self.width
+    }
+
+    fn execute(&self, rows: &[&[u16]]) -> anyhow::Result<Vec<u32>> {
+        // Group row indices by model tag, preserving arrival order within
+        // each group. Tag cardinality per batch is tiny (≤ registered
+        // models), so a linear scan beats a hash map.
+        let mut groups: Vec<(u16, Vec<usize>)> = Vec::new();
+        for (i, row) in rows.iter().enumerate() {
+            anyhow::ensure!(!row.is_empty(), "registry row missing its model tag");
+            let tag = row[0];
+            match groups.iter_mut().find(|(t, _)| *t == tag) {
+                Some((_, idxs)) => idxs.push(i),
+                None => groups.push((tag, vec![i])),
+            }
+        }
+        let mut out = vec![0u32; rows.len()];
+        for (tag, idxs) in groups {
+            let slot = self.registry.slot(tag as usize).map_err(anyhow::Error::new)?;
+            // Swap atomicity hinges on this single clone: the whole group
+            // executes — and replies — on the version current *now*, no
+            // matter when a concurrent swap lands.
+            let current = Arc::clone(&rlock(&slot.current));
+            let sub: Vec<&[u16]> = idxs.iter().map(|&i| &rows[i][1..1 + slot.n_features]).collect();
+            let preds = current.artifact.predict(&sub, &slot.lanes)?;
+            anyhow::ensure!(
+                preds.len() == idxs.len(),
+                "model {tag} returned {} predictions for {} rows",
+                preds.len(),
+                idxs.len()
+            );
+            for (&i, p) in idxs.iter().zip(&preds) {
+                out[i] = *p;
+            }
+            slot.stats.batches.fetch_add(1, Ordering::Relaxed);
+            slot.stats.rows_executed.fetch_add(idxs.len() as u64, Ordering::Relaxed);
+        }
+        Ok(out)
+    }
+}
+
+/// A [`super::batcher::Server`] pool wired to a [`ModelRegistry`]: the
+/// top-level multi-tenant serving object (`treelut serve --models ...`).
+pub struct RegistryServer {
+    registry: Arc<ModelRegistry>,
+    server: Server,
+    /// Pool row width, frozen at start.
+    width: usize,
+}
+
+impl RegistryServer {
+    /// Start an `n_shards` pool serving `registry` on the wall clock.
+    pub fn start(
+        registry: Arc<ModelRegistry>,
+        policy: BatchPolicy,
+        n_shards: usize,
+        dispatch: DispatchPolicy,
+    ) -> anyhow::Result<RegistryServer> {
+        Self::start_clocked(registry, policy, n_shards, dispatch, Arc::new(WallClock))
+    }
+
+    /// [`RegistryServer::start`] on an explicit clock (the harness passes
+    /// its virtual clock).
+    pub fn start_clocked(
+        registry: Arc<ModelRegistry>,
+        policy: BatchPolicy,
+        n_shards: usize,
+        dispatch: DispatchPolicy,
+        clock: Arc<dyn Clock>,
+    ) -> anyhow::Result<RegistryServer> {
+        anyhow::ensure!(!registry.is_empty(), "registry has no models to serve");
+        let width = registry.row_width();
+        let reg = Arc::clone(&registry);
+        let server = Server::start_pool_clocked(
+            move |_shard| Ok(RegistryExecutor::new(Arc::clone(&reg), usize::MAX)),
+            policy,
+            n_shards,
+            dispatch,
+            clock,
+        )?;
+        Ok(RegistryServer { registry, server, width })
+    }
+
+    /// Submit one row for `model`; returns the reply receiver. Typed
+    /// [`RegistryError`]s for unknown models and width mismatches, then
+    /// the pool's own admission errors ([`super::batcher::SubmitError`]).
+    pub fn submit(
+        &self,
+        model: ModelId,
+        row: &[u16],
+    ) -> anyhow::Result<mpsc::Receiver<anyhow::Result<Reply>>> {
+        let tagged = self.registry.tagged_row(model, row, self.width).map_err(anyhow::Error::new)?;
+        self.server.submit(tagged)
+    }
+
+    /// Blocking convenience: submit and wait for the reply.
+    pub fn classify(&self, model: ModelId, row: &[u16]) -> anyhow::Result<Reply> {
+        let rx = self.submit(model, row)?;
+        rx.recv().map_err(|_| anyhow::anyhow!("server dropped the reply channel"))?
+    }
+
+    /// Hot-swap `model` to `new` under live traffic (see
+    /// [`ModelRegistry::swap`]).
+    pub fn swap(&self, model: ModelId, new: ModelArtifact, check: SwapCheck) -> anyhow::Result<u64> {
+        self.registry.swap(model, new, check)
+    }
+
+    /// Grow or shrink the pool at runtime (see
+    /// [`super::batcher::Server::resize`]).
+    pub fn resize(&self, n_shards: usize) -> anyhow::Result<()> {
+        self.server.resize(n_shards)
+    }
+
+    pub fn registry(&self) -> &Arc<ModelRegistry> {
+        &self.registry
+    }
+
+    pub fn server(&self) -> &Server {
+        &self.server
+    }
+
+    /// Drain and stop the pool.
+    pub fn shutdown(self) {
+        self.server.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quantize::{QuantModel, QuantNode as N, QuantTree};
+
+    /// One-split binary model: class 1 iff `feat0 > 1` (or the flipped
+    /// variant). Distinct enough that cross-model routing is detectable on
+    /// almost any row.
+    fn model(flipped: bool) -> QuantModel {
+        let (lo, hi) = if flipped { (5, 0) } else { (0, 5) };
+        QuantModel {
+            trees: vec![QuantTree {
+                nodes: vec![
+                    N::Split { feat: 0, thresh: 1, left: 1, right: 2 },
+                    N::Leaf { value: lo },
+                    N::Leaf { value: hi },
+                ],
+            }],
+            n_groups: 1,
+            biases: vec![-4],
+            n_features: 2,
+            w_feature: 2,
+            w_tree: 3,
+            scale: 1.0,
+        }
+    }
+
+    fn flat(flipped: bool) -> ModelArtifact {
+        ModelArtifact::Flat(Arc::new(FlatForest::compile(&model(flipped)).unwrap()))
+    }
+
+    fn two_model_registry() -> Arc<ModelRegistry> {
+        let reg = Arc::new(ModelRegistry::new());
+        assert_eq!(reg.register("a", flat(false)).unwrap(), 0);
+        assert_eq!(reg.register("b", flat(true)).unwrap(), 1);
+        reg
+    }
+
+    #[test]
+    fn tagged_rows_route_to_their_own_model() {
+        let reg = two_model_registry();
+        assert_eq!(reg.row_width(), 3);
+        let exec = RegistryExecutor::new(Arc::clone(&reg), usize::MAX);
+        // Interleaved tenants in one batch, every 2-bit input point.
+        let rows: Vec<Vec<u16>> = (0..16u16)
+            .map(|v| reg.tagged_row((v % 2) as usize, &[v % 4, v / 4], 3).unwrap())
+            .collect();
+        let refs: Vec<&[u16]> = rows.iter().map(|r| r.as_slice()).collect();
+        let got = exec.execute(&refs).unwrap();
+        for (i, row) in rows.iter().enumerate() {
+            let truth = model(row[0] == 1).predict_class(&row[1..]);
+            assert_eq!(got[i], truth, "row {row:?} must be served by model {}", row[0]);
+        }
+        // Per-model accounting split the batch.
+        for id in 0..2 {
+            let stats = reg.stats(id).unwrap();
+            assert_eq!(stats.requests.load(Ordering::Relaxed), 8);
+            assert_eq!(stats.rows_executed.load(Ordering::Relaxed), 8);
+            assert_eq!(stats.batches.load(Ordering::Relaxed), 1);
+        }
+    }
+
+    #[test]
+    fn narrow_models_ride_padded_rows() {
+        let reg = Arc::new(ModelRegistry::new());
+        reg.register("narrow", flat(false)).unwrap();
+        // A 3-feature engine widens the pool rows to 4.
+        struct Wide;
+        impl ArtifactEngine for Wide {
+            fn n_features(&self) -> usize {
+                3
+            }
+            fn predict_batch(&self, rows: &[&[u16]]) -> anyhow::Result<Vec<u32>> {
+                Ok(rows.iter().map(|r| (r[0] + r[1] + r[2]) as u32).collect())
+            }
+        }
+        reg.register("wide", ModelArtifact::Engine(Arc::new(Wide))).unwrap();
+        assert_eq!(reg.row_width(), 4);
+        let tagged = reg.tagged_row(0, &[3, 1], 4).unwrap();
+        assert_eq!(tagged, vec![0, 3, 1, 0], "tag + features + zero pad");
+        let exec = RegistryExecutor::new(Arc::clone(&reg), usize::MAX);
+        let wide_row = reg.tagged_row(1, &[2, 2, 2], 4).unwrap();
+        let refs: Vec<&[u16]> = vec![&tagged, &wide_row];
+        let got = exec.execute(&refs).unwrap();
+        assert_eq!(got[0], model(false).predict_class(&[3, 1]));
+        assert_eq!(got[1], 6);
+    }
+
+    #[test]
+    fn registry_errors_are_typed() {
+        let reg = two_model_registry();
+        let err = reg.tagged_row(7, &[0, 0], 3).unwrap_err();
+        assert_eq!(err, RegistryError::UnknownModel { model: 7 });
+        let err = reg.tagged_row(0, &[0], 3).unwrap_err();
+        assert_eq!(err, RegistryError::WidthMismatch { model: 0, got: 1, want: 2 });
+        assert_eq!(reg.stats(0).unwrap().rejected.load(Ordering::Relaxed), 1);
+        // Swap cannot change the feature contract.
+        struct Mono;
+        impl ArtifactEngine for Mono {
+            fn n_features(&self) -> usize {
+                1
+            }
+            fn predict_batch(&self, rows: &[&[u16]]) -> anyhow::Result<Vec<u32>> {
+                Ok(vec![0; rows.len()])
+            }
+        }
+        let err = reg
+            .swap(0, ModelArtifact::Engine(Arc::new(Mono)), SwapCheck::None)
+            .unwrap_err();
+        assert_eq!(
+            *err.downcast_ref::<RegistryError>().expect("typed error"),
+            RegistryError::SwapWidthMismatch { model: 0, got: 1, want: 2 }
+        );
+    }
+
+    #[test]
+    fn swap_bumps_version_and_serves_the_new_artifact() {
+        let reg = two_model_registry();
+        assert_eq!(reg.version(0), Some(1));
+        let exec = RegistryExecutor::new(Arc::clone(&reg), usize::MAX);
+        let probe = reg.tagged_row(0, &[3, 0], 3).unwrap();
+        assert_eq!(exec.execute(&[&probe]).unwrap(), vec![1], "v1 is the unflipped model");
+        let v = reg.swap(0, flat(true), SwapCheck::None).unwrap();
+        assert_eq!(v, 2);
+        assert_eq!(reg.version(0), Some(2));
+        let probe = reg.tagged_row(0, &[3, 0], 3).unwrap();
+        assert_eq!(exec.execute(&[&probe]).unwrap(), vec![0], "v2 is the flipped model");
+    }
+
+    #[test]
+    fn equiv_gate_passes_identical_and_refuses_different_models() {
+        let reg = two_model_registry();
+        // Same function, freshly compiled: the sampling gate must pass.
+        reg.swap(0, flat(false), SwapCheck::Equiv).expect("identical model is equivalent");
+        assert_eq!(reg.version(0), Some(2));
+        // A genuinely different model must be refused, leaving v2 serving.
+        let err = reg.swap(0, flat(true), SwapCheck::Equiv).unwrap_err();
+        match err.downcast_ref::<RegistryError>() {
+            Some(RegistryError::NotEquivalent { model: 0, failed }) => {
+                assert!(*failed > 0)
+            }
+            other => panic!("expected NotEquivalent, got {other:?}"),
+        }
+        assert_eq!(reg.version(0), Some(2), "refused swap must not install");
+    }
+
+    #[test]
+    fn netlist_swap_uses_the_static_equiv_checker() {
+        use crate::rtl::Pipeline;
+        let m = model(false);
+        let compile = |optimize: bool| {
+            let opts = if optimize {
+                crate::netlist::BuildOpts::optimized()
+            } else {
+                crate::netlist::BuildOpts::default()
+            };
+            Arc::new(CompiledNetlist::compile_with(&m, Pipeline::new(0, 1, 1), false, opts).unwrap())
+        };
+        let reg = Arc::new(ModelRegistry::new());
+        reg.register("hw", ModelArtifact::Netlist(compile(false))).unwrap();
+        // Optimized rebuild of the same circuit: statically equivalent.
+        reg.swap(0, ModelArtifact::Netlist(compile(true)), SwapCheck::Equiv)
+            .expect("optimized rebuild is provably equivalent");
+        // A different model's netlist: statically refused.
+        let other = Arc::new(
+            CompiledNetlist::compile_with(
+                &model(true),
+                Pipeline::new(0, 1, 1),
+                false,
+                crate::netlist::BuildOpts::default(),
+            )
+            .unwrap(),
+        );
+        let err = reg.swap(0, ModelArtifact::Netlist(other), SwapCheck::Equiv).unwrap_err();
+        assert!(matches!(
+            err.downcast_ref::<RegistryError>(),
+            Some(RegistryError::NotEquivalent { model: 0, .. })
+        ));
+    }
+
+    #[test]
+    fn registry_server_serves_both_tenants_end_to_end() {
+        let reg = two_model_registry();
+        let srv = RegistryServer::start(
+            Arc::clone(&reg),
+            BatchPolicy::default(),
+            2,
+            DispatchPolicy::RoundRobin,
+        )
+        .unwrap();
+        for v in 0..8u16 {
+            let row = [v % 4, v / 4];
+            let a = srv.classify(0, &row).unwrap();
+            let b = srv.classify(1, &row).unwrap();
+            assert_eq!(a.class, model(false).predict_class(&row));
+            assert_eq!(b.class, model(true).predict_class(&row));
+        }
+        let lines = reg.model_lines();
+        assert_eq!(lines.len(), 2);
+        assert_eq!(lines[0].name, "a");
+        assert_eq!(lines[0].version, 1);
+        assert_eq!(lines[0].requests, 8);
+        assert_eq!(lines[0].rows, 8);
+        srv.shutdown();
+    }
+
+    #[test]
+    fn empty_registry_cannot_start_a_server() {
+        let err = RegistryServer::start(
+            Arc::new(ModelRegistry::new()),
+            BatchPolicy::default(),
+            1,
+            DispatchPolicy::RoundRobin,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("no models"));
+    }
+}

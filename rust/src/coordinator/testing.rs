@@ -30,11 +30,12 @@
 use super::batcher::{
     BatchPolicy, Clock, DispatchPolicy, Job, OverloadPolicy, Reply, Server, SubmitError,
 };
+use super::registry::{ModelArtifact, ModelId, ModelRegistry, RegistryExecutor, SwapCheck};
 use super::{BatchExecutor, LaneExecutor};
 use crate::util::Rng;
 use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc, Condvar, Mutex, MutexGuard, Weak};
+use std::sync::{mpsc, Arc, Condvar, Mutex, MutexGuard, PoisonError, Weak};
 use std::thread::ThreadId;
 use std::time::{Duration, Instant};
 
@@ -220,7 +221,10 @@ impl Clock for VirtualClock {
         // The virtual `timeout` is NOT a real wait bound: wakes come from
         // pushes/close (cv) and ticks (every registered cv); the short
         // real timeout below only guards against a lost notification.
-        let (guard, _) = cv.wait_timeout(guard, SAFETY_RECHECK).unwrap();
+        // Poison recovery mirrors `WallClock`: a sibling panicking under
+        // the queue lock retires that shard, it must not panic waiters.
+        let (guard, _) =
+            cv.wait_timeout(guard, SAFETY_RECHECK).unwrap_or_else(PoisonError::into_inner);
         self.set_worker_state(WorkerState::Running, None);
         guard
     }
@@ -547,6 +551,8 @@ pub struct Harness {
     pub server: Server,
     policy: BatchPolicy,
     log: Arc<Mutex<Vec<BatchRecord>>>,
+    /// Present on pools started with [`Harness::start_registry`].
+    registry: Option<Arc<ModelRegistry>>,
 }
 
 impl Harness {
@@ -576,7 +582,7 @@ impl Harness {
             Arc::clone(&clock) as Arc<dyn Clock>,
         )
         .expect("harness pool must start");
-        Harness { clock, server, policy: cfg.policy, log }
+        Harness { clock, server, policy: cfg.policy, log, registry: None }
     }
 
     /// Start a pool of *real* executors (built by `factory(shard)`) on the
@@ -619,7 +625,7 @@ impl Harness {
             Arc::clone(&clock) as Arc<dyn Clock>,
         )
         .expect("harness pool must start");
-        Harness { clock, server, policy, log }
+        Harness { clock, server, policy, log, registry: None }
     }
 
     /// [`Harness::start_real`] over the lane-coalescing worker loop
@@ -658,7 +664,92 @@ impl Harness {
             Arc::clone(&clock) as Arc<dyn Clock>,
         )
         .expect("harness pool must start");
-        Harness { clock, server, policy, log }
+        Harness { clock, server, policy, log, registry: None }
+    }
+
+    /// Start a pool serving a multi-model [`ModelRegistry`] on the
+    /// virtual clock, each shard's [`RegistryExecutor`] wrapped in
+    /// [`ChaosWrapped`] so hot-swap and resize scenarios compose with
+    /// kill/stall chaos. Submit with [`Harness::submit_model`], swap with
+    /// [`Harness::swap`]; `BatchRecord::jobs` carries each row's model
+    /// tag.
+    pub fn start_registry(
+        registry: Arc<ModelRegistry>,
+        n_shards: usize,
+        policy: BatchPolicy,
+        dispatch: DispatchPolicy,
+        chaos: ChaosPlan,
+    ) -> Harness {
+        assert!(!registry.is_empty(), "registry has no models to serve");
+        let clock = Arc::new(VirtualClock::new());
+        let log = Arc::new(Mutex::new(Vec::new()));
+        let chaos = Arc::new(chaos);
+        let (clock_f, log_f) = (Arc::clone(&clock), Arc::clone(&log));
+        let reg_f = Arc::clone(&registry);
+        let server = Server::start_pool_clocked(
+            move |shard| {
+                Ok(ChaosWrapped {
+                    inner: RegistryExecutor::new(Arc::clone(&reg_f), usize::MAX),
+                    shard,
+                    clock: Arc::clone(&clock_f),
+                    chaos: Arc::clone(&chaos),
+                    step: AtomicUsize::new(0),
+                    log: Arc::clone(&log_f),
+                })
+            },
+            policy,
+            n_shards,
+            dispatch,
+            Arc::clone(&clock) as Arc<dyn Clock>,
+        )
+        .expect("harness pool must start");
+        Harness { clock, server, policy, log, registry: Some(registry) }
+    }
+
+    /// The served registry (panics unless started with
+    /// [`Harness::start_registry`]).
+    pub fn registry(&self) -> &Arc<ModelRegistry> {
+        self.registry.as_ref().expect("not a registry pool")
+    }
+
+    /// Submit one row for `model` on a registry pool once the pool has
+    /// quiesced. The reply will come from whatever version of the model
+    /// is current when its batch *starts*.
+    pub fn submit_model(
+        &self,
+        model: ModelId,
+        row: &[u16],
+    ) -> anyhow::Result<mpsc::Receiver<anyhow::Result<Reply>>> {
+        let registry = self.registry();
+        let tagged = registry
+            .tagged_row(model, row, registry.row_width())
+            .map_err(anyhow::Error::new)?;
+        self.submit_row(tagged)
+    }
+
+    /// Atomically hot-swap `model` once the pool has quiesced, pinning
+    /// the swap point relative to worker progress: batches already parked
+    /// in a service sleep finish on the old version, the next batch sees
+    /// the new one. Returns the installed version.
+    pub fn swap(
+        &self,
+        model: ModelId,
+        new: ModelArtifact,
+        check: SwapCheck,
+    ) -> anyhow::Result<u64> {
+        let registry = Arc::clone(self.registry());
+        self.wait_quiesced();
+        registry.swap(model, new, check)
+    }
+
+    /// Grow or shrink the pool once it has quiesced, so the resize point
+    /// relative to queued work is deterministic; waits for the new shape
+    /// to settle before returning.
+    pub fn resize(&self, n_shards: usize) -> anyhow::Result<()> {
+        self.wait_quiesced();
+        self.server.resize(n_shards)?;
+        self.wait_quiesced();
+        Ok(())
     }
 
     /// Guard against a driver-thread livelock: a `block`-policy submit on a
@@ -687,12 +778,17 @@ impl Harness {
     /// in which advancing time cannot race worker progress.
     fn quiesced(&self) -> bool {
         let (seq, workers) = self.clock.worker_snapshot();
-        let depths = self.server.queue_depths();
+        // Depths are keyed by stable shard *label*, not pool position:
+        // after a resize the labels in worker slots no longer coincide
+        // with positions in the depth vector (labels are never reused),
+        // so positional lookup would consult the wrong queue.
+        let depths: HashMap<usize, usize> =
+            self.server.queue_depths_by_id().into_iter().collect();
         workers.iter().all(|&(shard, state, parked_seq)| match state {
             WorkerState::Running => false,
             WorkerState::ParkedSleep => parked_seq == seq,
             WorkerState::ParkedPop => {
-                parked_seq == seq && depths.get(shard).copied().unwrap_or(0) == 0
+                parked_seq == seq && depths.get(&shard).copied().unwrap_or(0) == 0
             }
         })
     }
@@ -708,7 +804,7 @@ impl Harness {
                 Instant::now() < deadline,
                 "harness: pool failed to quiesce: workers={:?} depths={:?}",
                 self.clock.worker_snapshot(),
-                self.server.queue_depths()
+                self.server.queue_depths_by_id()
             );
             self.clock.wait_state_change(Duration::from_millis(2));
         }
@@ -846,7 +942,7 @@ impl Harness {
     /// flowing, so workers can drain their queues (scripted service sleeps
     /// need ticks to finish). Returns the batch log.
     pub fn shutdown_draining(self) -> Vec<BatchRecord> {
-        let Harness { clock, server, log } = self;
+        let Harness { clock, server, log, .. } = self;
         let stop = Arc::new(AtomicBool::new(false));
         let (clock_t, stop_t) = (Arc::clone(&clock), Arc::clone(&stop));
         let advancer = std::thread::spawn(move || {

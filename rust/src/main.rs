@@ -34,7 +34,18 @@
 //!     runs the hash-consed optimizing rebuild (netlist::opt) by default,
 //!     gated by the equivalence checker; `--no-optimize` serves the naive
 //!     build for A/B measurement, and the report's netlist[...] block
-//!     shows the gates/LUTs the optimizer removed
+//!     shows the gates/LUTs the optimizer removed.
+//!     `--models a.txt,b.txt` serves a *multi-model registry* instead of a
+//!     single trained config: each file (saved by `treelut train`) becomes
+//!     an independently versioned tenant behind the same pool, requests
+//!     round-robin across tenants, and the report gains per-model lines
+//!     (requests, rows, version, p99). `--swap-mid FILE` hot-swaps model 0
+//!     to FILE's artifact halfway through the run — atomically, under
+//!     live traffic (add `--check-equiv` to gate the swap on the
+//!     equivalence checker when the replacement claims to compute the
+//!     same function). `--resize-mid S` elastically grows/shrinks the
+//!     pool to S shards halfway through (queued jobs on retiring shards
+//!     re-dispatch; none are lost)
 //! treelut lint [--fixtures] [--equiv] [--config <mnist|jsc|nid> [--variant I|II] [--rows N] [--seed S]]
 //!     static verification + lint (netlist::verify): renders every
 //!     diagnostic and the duplication census for the four conformance
@@ -55,8 +66,9 @@
 use std::path::PathBuf;
 
 use treelut::coordinator::{
-    BatchPolicy, CompiledNetlist, DispatchPolicy, FlatExecutor, LaneStats, NetlistMeta,
-    OverloadPolicy, Server, ServingReport, SubmitError,
+    BatchPolicy, CompiledNetlist, DispatchPolicy, FlatExecutor, LaneStats, ModelArtifact,
+    ModelRegistry, NetlistMeta, OverloadPolicy, RegistryServer, Server, ServingReport,
+    SubmitError, SwapCheck,
 };
 use treelut::data::synth;
 use treelut::exp::configs::{default_rows, design_point};
@@ -76,6 +88,7 @@ const USAGE: &str = "usage: treelut <flow|train|datasets|serve|lint|equiv> [opti
   train     --dataset <mnist|jsc|nid> [--variant I|II] [--rows N] [--seed S] --out FILE
   datasets
   serve     [--config jsc] [--requests N] [--rps R] [--rows N] [--max-wait-us U] [--shards S] [--dispatch round-robin|p2c] [--executor auto|flat|netlist] [--coalesce] [--verify] [--no-optimize] [--queue-cap C] [--overload block|shed-new|shed-oldest]
+            [--models a.txt,b.txt [--swap-mid FILE [--check-equiv]] [--resize-mid S]]
   lint      [--fixtures] [--equiv] [--config <mnist|jsc|nid> [--variant I|II] [--rows N] [--seed S]]
   equiv";
 
@@ -362,7 +375,47 @@ fn cmd_serve(mut args: Args) -> anyhow::Result<()> {
         cap => cap,
     };
     let overload = args.get("overload", "block").parse::<OverloadPolicy>()?;
+    let models = args.opt("models");
+    let swap_mid = args.opt("swap-mid");
+    let check_equiv = args.flag("check-equiv");
+    let resize_mid = args.get_as::<usize>("resize-mid", 0);
     args.finish()?;
+    anyhow::ensure!(
+        models.is_none() || executor == "auto",
+        "--models serves registry artifacts through its own executor; drop --executor"
+    );
+    anyhow::ensure!(
+        models.is_none() || !coalesce,
+        "--models and --coalesce are mutually exclusive (the registry path is not lane-coalesced)"
+    );
+    anyhow::ensure!(
+        swap_mid.is_none() || models.is_some(),
+        "--swap-mid requires --models (it hot-swaps registry model 0)"
+    );
+    anyhow::ensure!(
+        !check_equiv || swap_mid.is_some(),
+        "--check-equiv gates a --swap-mid hot swap"
+    );
+    anyhow::ensure!(
+        resize_mid == 0 || models.is_some(),
+        "--resize-mid requires --models (elastic resize of the registry pool)"
+    );
+
+    let max_wait = std::time::Duration::from_micros(max_wait_us);
+    if let Some(models) = models {
+        let policy = BatchPolicy { max_batch: 64, max_wait, queue_cap, overload };
+        return serve_registry(
+            &models,
+            swap_mid.as_deref(),
+            check_equiv,
+            resize_mid,
+            n_requests,
+            offered_rps,
+            policy,
+            shards,
+            dispatch,
+        );
+    }
 
     let artifacts = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     // Under `--executor auto`, the AOT PJRT engine serves when artifacts
@@ -389,12 +442,7 @@ fn cmd_serve(mut args: Args) -> anyhow::Result<()> {
     let btest = fq.transform(&test_ds);
 
     let max_batch = engine_cfg.as_ref().map(|c| c.batch).unwrap_or(64);
-    let policy = BatchPolicy {
-        max_batch,
-        max_wait: std::time::Duration::from_micros(max_wait_us),
-        queue_cap,
-        overload,
-    };
+    let policy = BatchPolicy { max_batch, max_wait, queue_cap, overload };
     // Flat pool: compile the flat forest once, then each shard clones the
     // finished tables.
     let quant_flat = quant.clone();
@@ -544,6 +592,132 @@ fn cmd_serve(mut args: Args) -> anyhow::Result<()> {
             peak_inflight: stats.peak_inflight_words.load(std::sync::atomic::Ordering::Relaxed),
         });
     }
+    println!("{}", report.render());
+    server.shutdown();
+    Ok(())
+}
+
+/// Load a model saved by `treelut train`, quantize its leaves, and compile
+/// the flat-forest artifact a registry slot serves. The slot name is the
+/// file stem.
+fn load_flat_artifact(path: &str) -> anyhow::Result<(String, ModelArtifact)> {
+    let p = std::path::Path::new(path);
+    let model = treelut::gbdt::io::load(p)?;
+    let (quant, _) = quantize_leaves(&model, 3);
+    let forest = FlatForest::compile(&quant)?;
+    let name = p.file_stem().and_then(|s| s.to_str()).unwrap_or(path).to_string();
+    Ok((name, ModelArtifact::Flat(std::sync::Arc::new(forest))))
+}
+
+/// Nearest-rank p99 in microseconds over per-reply latencies (seconds).
+fn p99_us(lats: &mut [f64]) -> Option<f64> {
+    if lats.is_empty() {
+        return None;
+    }
+    lats.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
+    Some(lats[((lats.len() as f64 - 1.0) * 0.99).round() as usize] * 1e6)
+}
+
+/// `serve --models a.txt,b.txt`: mixed-tenant load over a multi-model
+/// registry, with optional mid-run hot swap (`--swap-mid`, gated by
+/// `--check-equiv`) and elastic resize (`--resize-mid`).
+#[allow(clippy::too_many_arguments)]
+fn serve_registry(
+    models: &str,
+    swap_mid: Option<&str>,
+    check_equiv: bool,
+    resize_mid: usize,
+    n_requests: usize,
+    offered_rps: f64,
+    policy: BatchPolicy,
+    shards: usize,
+    dispatch: DispatchPolicy,
+) -> anyhow::Result<()> {
+    let registry = std::sync::Arc::new(ModelRegistry::new());
+    for path in models.split(',').filter(|p| !p.is_empty()) {
+        let (name, artifact) = load_flat_artifact(path)?;
+        let id = registry.register(name, artifact)?;
+        println!(
+            "model {id}: {path} ({} features)",
+            registry.n_features(id).unwrap_or(0)
+        );
+    }
+    let server = RegistryServer::start(std::sync::Arc::clone(&registry), policy, shards, dispatch)?;
+    let n_models = registry.len();
+
+    let mut rng = Rng::new(3);
+    let t0 = Timer::start();
+    let mut pending = Vec::with_capacity(n_requests);
+    for i in 0..n_requests {
+        // Mid-run dynamics: the whole point of the registry is that these
+        // land under live traffic without losing or misrouting a job.
+        if i == n_requests / 2 {
+            if resize_mid > 0 && resize_mid != server.server().n_shards() {
+                server.resize(resize_mid)?;
+                eprintln!("resized pool to {resize_mid} shard(s) mid-run");
+            }
+            if let Some(path) = swap_mid {
+                let (_, artifact) = load_flat_artifact(path)?;
+                let check = if check_equiv { SwapCheck::Equiv } else { SwapCheck::None };
+                let v = server.swap(0, artifact, check)?;
+                eprintln!("hot-swapped model 0 to {path} (now v{v})");
+            }
+        }
+        std::thread::sleep(std::time::Duration::from_secs_f64(rng.exp(offered_rps)));
+        let model = i % n_models;
+        let nf = registry.n_features(model).unwrap_or(0);
+        let row: Vec<u16> = (0..nf).map(|_| (rng.next_u64() & 0xf) as u16).collect();
+        match server.submit(model, &row) {
+            Ok(rx) => pending.push((model, rx)),
+            Err(e)
+                if matches!(
+                    e.downcast_ref::<SubmitError>(),
+                    Some(SubmitError::QueueFull { .. })
+                ) => {}
+            Err(e) => return Err(e),
+        }
+    }
+    let mut lats = Vec::with_capacity(n_requests);
+    let mut per_model: Vec<Vec<f64>> = vec![Vec::new(); n_models];
+    for (model, rx) in pending {
+        match rx.recv()? {
+            Ok(reply) => {
+                let secs = reply.latency.as_secs_f64();
+                lats.push(secs);
+                per_model[model].push(secs);
+            }
+            Err(e)
+                if matches!(
+                    e.downcast_ref::<SubmitError>(),
+                    Some(SubmitError::Shed { .. })
+                ) => {}
+            Err(e) => return Err(e),
+        }
+    }
+    let stats = server.server().stats();
+    let mut lines = registry.model_lines();
+    for (id, line) in lines.iter_mut().enumerate() {
+        line.p99_us = p99_us(&mut per_model[id]);
+    }
+    let report = ServingReport::from_latencies(
+        &lats,
+        t0.secs(),
+        stats.mean_batch(),
+        Some(offered_rps),
+    )
+    .with_shards(server.server().n_shards())
+    .with_dispatch(server.server().dispatch())
+    .with_executor("registry")
+    .with_steals(
+        stats.steals.load(std::sync::atomic::Ordering::Relaxed),
+        stats.stolen_jobs.load(std::sync::atomic::Ordering::Relaxed),
+    )
+    .with_admission(
+        stats.sheds.load(std::sync::atomic::Ordering::Relaxed),
+        stats.queue_full.load(std::sync::atomic::Ordering::Relaxed),
+        stats.redirects.load(std::sync::atomic::Ordering::Relaxed),
+    )
+    .with_models(lines);
     println!("{}", report.render());
     server.shutdown();
     Ok(())

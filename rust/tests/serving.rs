@@ -5,10 +5,13 @@
 //! overload, the adaptive steal-poll backoff, chaos (shard death mid-load)
 //! containment, shutdown draining, executor-error fan-out, typed
 //! rejection accounting, the flat-forest executor serving a trained
-//! model bit-exactly, and the lane-coalescing drain (cross-batch word
+//! model bit-exactly, the lane-coalescing drain (cross-batch word
 //! packing + pipelined cycle-accurate serving: utilization, the
 //! oldest-job deadline anchor, kill-mid-word containment, and the
-//! overfull-word typed-failure regression).
+//! overfull-word typed-failure regression), the multi-model registry
+//! (atomic hot swap mid-batch, per-tenant bit-exactness, the
+//! equivalence-gated swap), and elastic resize (shrink-while-queued,
+//! grow-under-load).
 //!
 //! Every scenario that depends on time runs on the harness's virtual
 //! clock: no sleep-based synchronization anywhere in this file (CI greps
@@ -16,16 +19,17 @@
 //! durations, not racy bounds.
 
 use std::sync::atomic::Ordering;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, OnceLock};
 use std::time::Duration;
 
 use treelut::coordinator::testing::{
     poisson_arrivals, scripted_class, uniform_arrivals, ChaosPlan, Harness, HarnessConfig,
-    ServiceModel,
+    ServiceModel, VirtualClock,
 };
 use treelut::coordinator::{
-    BatchExecutor, BatchPolicy, CompiledNetlist, DispatchPolicy, FlatExecutor, LaneExecutor,
-    LaneStats, OverloadPolicy, Server, SubmitError,
+    ArtifactEngine, BatchExecutor, BatchPolicy, CoalesceReport, CompiledNetlist, DispatchPolicy,
+    FlatExecutor, LaneExecutor, LaneStats, ModelArtifact, ModelRegistry, OverloadPolicy,
+    RegistryServer, Server, ServingReport, SubmitError, SwapCheck,
 };
 use treelut::data::synth;
 use treelut::gbdt::histogram::BinnedMatrix;
@@ -133,7 +137,7 @@ fn p2c_routes_around_slow_shard_where_round_robin_does_not() {
             assert_eq!(reply.class, scripted_class(&[*id, 0]), "job {id}");
         }
         let per_shard: Vec<u64> =
-            h.server.shard_stats().map(|s| s.requests.load(Ordering::Relaxed)).collect();
+            h.server.shard_stats().iter().map(|s| s.requests.load(Ordering::Relaxed)).collect();
         let stolen = h.server.stats().stolen_jobs.load(Ordering::Relaxed);
         h.server.shutdown();
         (per_shard, stolen)
@@ -572,9 +576,10 @@ fn pool_replies_match_requests() {
     assert_eq!(srv.stats().rows_executed.load(Ordering::Relaxed), 200);
     // Round-robin dispatch: every shard saw exactly its share.
     let per_shard: Vec<u64> =
-        srv.shard_stats().map(|s| s.requests.load(Ordering::Relaxed)).collect();
+        srv.shard_stats().iter().map(|s| s.requests.load(Ordering::Relaxed)).collect();
     assert_eq!(per_shard, vec![50, 50, 50, 50]);
-    let rolled: u64 = srv.shard_stats().map(|s| s.rows_executed.load(Ordering::Relaxed)).sum();
+    let rolled: u64 =
+        srv.shard_stats().iter().map(|s| s.rows_executed.load(Ordering::Relaxed)).sum();
     assert_eq!(rolled, 200);
     srv.shutdown();
 }
@@ -700,7 +705,7 @@ fn shed_new_redirects_to_nonfull_sibling_before_refusing() {
     assert_eq!(s.sheds.load(Ordering::Relaxed), 0, "nothing was shed");
     assert_eq!(s.queue_full.load(Ordering::Relaxed), 1, "one full-queue encounter");
     let per_shard: Vec<u64> =
-        h.server.shard_stats().map(|st| st.redirects.load(Ordering::Relaxed)).collect();
+        h.server.shard_stats().iter().map(|st| st.redirects.load(Ordering::Relaxed)).collect();
     assert_eq!(per_shard, vec![0, 1], "redirect credit lands on the accepting sibling");
     // Shard 1 serves j6 behind j3 (5..10 ms) and j5 (10..15 ms): executed
     // 15..20 ms, enqueued at 5 ms — exactly 15 ms of latency.
@@ -862,6 +867,20 @@ fn coalescing_fills_lanes_where_per_batch_serving_cannot() {
     assert_eq!(s.coalesced_words.load(Ordering::Relaxed), 5, "320 rows pack into 5 full words");
     assert!(s.pipeline_flushes.load(Ordering::Relaxed) >= 1, "dry queue must flush eagerly");
     assert!(s.peak_inflight_words.load(Ordering::Relaxed) >= 1);
+    // A coalesced pool bumps `batches` once per *word*, so the mean is
+    // rows-per-word (64.0 here) — the report must label it word_fill, not
+    // pass it off as a 64-row mean batch.
+    assert_eq!(s.mean_batch(), 64.0, "320 rows over 5 words");
+    let lat_secs: Vec<f64> = out.latencies().iter().map(|d| d.as_secs_f64()).collect();
+    let rendered = ServingReport::from_latencies(&lat_secs, 1.0, s.mean_batch(), None)
+        .with_coalescing(CoalesceReport {
+            words: s.coalesced_words.load(Ordering::Relaxed),
+            flushes: s.pipeline_flushes.load(Ordering::Relaxed),
+            peak_inflight: s.peak_inflight_words.load(Ordering::Relaxed),
+        })
+        .render();
+    assert!(rendered.contains(" word_fill=64.0"), "coalesced mean is lanes per word: {rendered}");
+    assert!(!rendered.contains(" batch="), "coalesced runs must not claim a batch size: {rendered}");
     h.server.shutdown();
 
     // Coalescing OFF (the per-batch loop, same policy): every 8-row burst
@@ -1016,5 +1035,257 @@ fn overfull_word_is_a_failed_batch_not_a_worker_death() {
     let rx = h.submit_row(binned.row(0).to_vec()).unwrap();
     let reply = h.recv(&rx).unwrap();
     assert_eq!(reply.class, forest.predict(binned.row(0)));
+    h.server.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// Multi-model registry: atomic hot swap + elastic shards
+// ---------------------------------------------------------------------------
+
+/// An [`ArtifactEngine`] with a *virtual* service time: each batch parks in
+/// [`VirtualClock::sleep_until`] (the clock is injected after the harness
+/// starts), then answers a constant class — so a hot swap can land while a
+/// batch is provably mid-service, and the reply's class identifies which
+/// version served it.
+struct SlowConst {
+    clock: Arc<OnceLock<Arc<VirtualClock>>>,
+    service: Duration,
+    class: u32,
+}
+
+impl ArtifactEngine for SlowConst {
+    fn n_features(&self) -> usize {
+        2
+    }
+    fn predict_batch(&self, rows: &[&[u16]]) -> anyhow::Result<Vec<u32>> {
+        if !self.service.is_zero() {
+            let clock = self.clock.get().expect("clock injected after harness start");
+            let target = clock.now() + self.service;
+            clock.sleep_until(target);
+        }
+        Ok(vec![self.class; rows.len()])
+    }
+}
+
+/// The tentpole acceptance scenario (virtual-time exact): a hot swap lands
+/// while a batch is parked mid-service on v1. The in-flight batch finishes
+/// — and replies — on v1; the job queued behind it is served by v2. Zero
+/// jobs lost, zero replies misrouted, and each reply is bit-exact against
+/// the version that actually served it.
+#[test]
+fn hot_swap_mid_batch_finishes_in_flight_on_old_version_and_loses_nothing() {
+    let clock_cell = Arc::new(OnceLock::new());
+    let registry = Arc::new(ModelRegistry::new());
+    let m = registry
+        .register(
+            "hot",
+            ModelArtifact::Engine(Arc::new(SlowConst {
+                clock: Arc::clone(&clock_cell),
+                service: 10 * MS,
+                class: 1,
+            })),
+        )
+        .unwrap();
+    let h = Harness::start_registry(
+        Arc::clone(&registry),
+        1,
+        BatchPolicy { max_batch: 1, max_wait: Duration::ZERO, ..BatchPolicy::default() },
+        DispatchPolicy::RoundRobin,
+        ChaosPlan::none(),
+    );
+    assert!(clock_cell.set(Arc::clone(&h.clock)).is_ok());
+
+    let j0 = h.submit_model(m, &[3, 0]).unwrap();
+    // `Harness::swap` waits for quiescence, and the only parked state
+    // reachable with j0 admitted is v1's service sleep: the swap lands
+    // mid-batch by construction, not by racy luck.
+    let v = h
+        .swap(
+            m,
+            ModelArtifact::Engine(Arc::new(SlowConst {
+                clock: Arc::new(OnceLock::new()),
+                service: Duration::ZERO,
+                class: 2,
+            })),
+            SwapCheck::None,
+        )
+        .unwrap();
+    assert_eq!(v, 2);
+    assert_eq!(registry.version(m), Some(2));
+    let j1 = h.submit_model(m, &[3, 0]).unwrap();
+
+    let r0 = h.recv(&j0).unwrap();
+    assert_eq!(r0.class, 1, "in-flight batch must finish on the version that started it");
+    assert_eq!(r0.latency, 10 * MS, "v1's full service time, uninterrupted by the swap");
+    let r1 = h.recv(&j1).unwrap();
+    assert_eq!(r1.class, 2, "the next batch must see the new version");
+    assert_eq!(r1.latency, 10 * MS, "queued at t = 0, served the instant v1's batch retired");
+
+    // Nothing lost, nothing misrouted: both jobs resolved, the accounting
+    // agrees, and no failure path fired.
+    let stats = registry.stats(m).unwrap();
+    assert_eq!(stats.requests.load(Ordering::Relaxed), 2);
+    assert_eq!(stats.rows_executed.load(Ordering::Relaxed), 2);
+    assert_eq!(stats.batches.load(Ordering::Relaxed), 2);
+    assert_eq!(h.server.stats().rejected.load(Ordering::Relaxed), 0);
+    h.server.shutdown();
+}
+
+/// A deliberately wrong replacement for the equivalence gate: right width,
+/// constant class no trained forest ever emits.
+struct Const99;
+
+impl ArtifactEngine for Const99 {
+    fn n_features(&self) -> usize {
+        4
+    }
+    fn predict_batch(&self, rows: &[&[u16]]) -> anyhow::Result<Vec<u32>> {
+        Ok(vec![99; rows.len()])
+    }
+}
+
+/// Registry property test over the production (wall-clock) path: three
+/// genuinely different trained forests behind one pool, 180 interleaved
+/// requests — every reply must match the submitting tenant's *own*
+/// [`FlatForest`] ground truth, never a sibling's. Then the swap gate: an
+/// equivalent recompile installs, a disagreeing artifact is refused.
+#[test]
+fn registry_tenants_are_bit_exact_and_swaps_are_equiv_gated() {
+    let reg = Arc::new(ModelRegistry::new());
+    let mut truths = Vec::new();
+    let mut quants = Vec::new();
+    for k in 0..3u64 {
+        let ds = synth::tiny_multiclass(150, 4, 3, 11 + k);
+        let fq = FeatureQuantizer::fit(&ds, 3);
+        let binned = fq.transform(&ds);
+        let params =
+            BoostParams::default().n_estimators(3 + k as usize).max_depth(3).eta(0.5);
+        let model = train(&binned, &ds.y, 3, &params, 3).unwrap();
+        let (quant, _) = quantize_leaves(&model, 3);
+        truths.push(FlatForest::compile(&quant).unwrap());
+        reg.register(
+            format!("m{k}"),
+            ModelArtifact::Flat(Arc::new(FlatForest::compile(&quant).unwrap())),
+        )
+        .unwrap();
+        quants.push(quant);
+    }
+    let srv = RegistryServer::start(
+        Arc::clone(&reg),
+        BatchPolicy {
+            max_batch: 16,
+            max_wait: Duration::from_micros(100),
+            ..BatchPolicy::default()
+        },
+        2,
+        DispatchPolicy::P2c,
+    )
+    .unwrap();
+    let rows: Vec<(usize, Vec<u16>)> = (0..180usize)
+        .map(|i| {
+            let f = |a: usize| (i * a % 8) as u16;
+            (i % 3, vec![f(1), f(3), f(5), f(7)])
+        })
+        .collect();
+    let rxs: Vec<_> = rows.iter().map(|(m, row)| srv.submit(*m, row).unwrap()).collect();
+    for ((m, row), rx) in rows.iter().zip(rxs) {
+        let reply = rx.recv().unwrap().unwrap();
+        assert_eq!(reply.class, truths[*m].predict(row), "model {m} row {row:?}");
+    }
+    for m in 0..3 {
+        let stats = reg.stats(m).unwrap();
+        assert_eq!(stats.requests.load(Ordering::Relaxed), 60, "model {m}");
+        assert_eq!(stats.rows_executed.load(Ordering::Relaxed), 60, "model {m}");
+    }
+
+    // A fresh compile of the same model is equivalent: installs as v2.
+    let same = ModelArtifact::Flat(Arc::new(FlatForest::compile(&quants[0]).unwrap()));
+    assert_eq!(srv.swap(0, same, SwapCheck::Equiv).unwrap(), 2);
+    // A disagreeing artifact is refused, leaving v2 serving.
+    let err = srv.swap(0, ModelArtifact::Engine(Arc::new(Const99)), SwapCheck::Equiv).unwrap_err();
+    assert!(err.to_string().contains("disagrees"), "{err}");
+    assert_eq!(reg.version(0), Some(2), "refused swap must not install");
+    let reply = srv.classify(0, &rows[0].1).unwrap();
+    assert_eq!(reply.class, truths[0].predict(&rows[0].1), "v2 still serves bit-exactly");
+    srv.shutdown();
+}
+
+/// Elastic shrink under queued load (virtual-time exact): the retiring
+/// shard leaves the dispatch set mid-batch, its in-flight job finishes and
+/// replies, its queued stragglers are re-dispatched onto the survivor
+/// (counted), and shard *labels* — not positions — identify the remaining
+/// queue. Every job resolves on the exact schedule.
+#[test]
+fn shrink_while_queued_redispatches_stragglers_and_keeps_labels() {
+    let h = Harness::start(HarnessConfig {
+        n_shards: 2,
+        service: ServiceModel::Fixed(10 * MS),
+        policy: BatchPolicy { max_batch: 1, max_wait: Duration::ZERO, ..BatchPolicy::default() },
+        ..HarnessConfig::default()
+    });
+    // Round-robin at t = 0: j0/j2/j4 -> shard 0, j1/j3/j5 -> shard 1. Both
+    // workers go busy on j0/j1; two jobs queue behind each.
+    let rxs: Vec<_> = (0..6u16).map(|id| h.submit(id, 0).unwrap()).collect();
+    assert_eq!(h.server.queue_depths(), vec![2, 2]);
+    h.resize(1).unwrap();
+    assert_eq!(h.server.n_shards(), 1);
+    assert_eq!(
+        h.server.queue_depths_by_id(),
+        vec![(0, 4)],
+        "label 0 survives, holding its own queue plus the inherited stragglers"
+    );
+    assert_eq!(
+        h.server.stats().redispatched.load(Ordering::Relaxed),
+        2,
+        "exactly the two stragglers (j3, j5) moved"
+    );
+    // j0/j1 finish their in-flight batches at 10 ms; the survivor then
+    // drains its own queue (j2, j4) before the inherited jobs (j3, j5).
+    let expect_ms: [u32; 6] = [10, 10, 20, 40, 30, 50];
+    for (id, rx) in rxs.iter().enumerate() {
+        let reply = h.recv(rx).unwrap();
+        assert_eq!(reply.class, scripted_class(&[id as u16, 0]), "job {id}");
+        assert_eq!(reply.latency, expect_ms[id] * MS, "job {id}");
+    }
+    assert_eq!(h.server.live_shards(), 1);
+    h.server.shutdown();
+}
+
+/// Elastic grow under a backlog: fresh workers come up on never-reused
+/// labels, immediately steal from the original shard's queue, and join the
+/// dispatch rotation for subsequent traffic.
+#[test]
+fn grow_under_load_spawns_stealing_capacity_on_fresh_labels() {
+    let h = Harness::start(HarnessConfig {
+        service: ServiceModel::Fixed(5 * MS),
+        policy: BatchPolicy { max_batch: 1, max_wait: Duration::ZERO, ..BatchPolicy::default() },
+        ..HarnessConfig::default()
+    });
+    let rxs: Vec<_> = (0..4u16).map(|id| h.submit(id, 0).unwrap()).collect();
+    assert_eq!(h.server.queue_depths(), vec![3], "one busy shard, three queued");
+    h.resize(3).unwrap();
+    assert_eq!(h.server.n_shards(), 3);
+    assert_eq!(h.server.live_shards(), 3);
+    for (id, rx) in rxs.iter().enumerate() {
+        let reply = h.recv(rx).unwrap();
+        assert_eq!(reply.class, scripted_class(&[id as u16, 0]), "job {id}");
+    }
+    // Both grown workers were idle while shard 0 slept through its batch:
+    // each stole exactly one queued job at its first idle poll.
+    assert_eq!(h.server.stats().stolen_jobs.load(Ordering::Relaxed), 2);
+    let served: Vec<usize> = h.batches().iter().map(|b| b.shard).collect();
+    assert!(
+        served.contains(&1) && served.contains(&2),
+        "grown labels must serve stolen work: {served:?}"
+    );
+    // Round-robin dispatch resumes over the grown set.
+    let more: Vec<_> = (4..7u16).map(|id| h.submit(id, 0).unwrap()).collect();
+    for (i, rx) in more.iter().enumerate() {
+        let reply = h.recv(rx).unwrap();
+        assert_eq!(reply.class, scripted_class(&[(i + 4) as u16, 0]));
+    }
+    let per_shard: Vec<u64> =
+        h.server.shard_stats().iter().map(|st| st.requests.load(Ordering::Relaxed)).collect();
+    assert_eq!(per_shard, vec![5, 1, 1], "post-growth traffic lands on the new shards too");
     h.server.shutdown();
 }
