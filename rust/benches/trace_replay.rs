@@ -1,0 +1,255 @@
+//! Open-loop trace replay through the network ingress: the full
+//! wire path (frame encode → TCP → `run_listener` → admission →
+//! registry pool → reply frame) under realistic arrival processes,
+//! targeting the 10^5–10^6 rows/s regime of the paper's serving
+//! motivation.
+//!
+//! Two trace shapes, both pre-generated so the replay measures the
+//! server and not the generator:
+//! * **poisson** — memoryless arrivals at a fixed offered rate (the
+//!   steady-state baseline);
+//! * **diurnal** — a bursty sinusoidal rate sweep between 0.25x and
+//!   1.75x of the nominal rate over three periods (the load-tracking
+//!   shape: admission and batching see sustained troughs and peaks,
+//!   not an average).
+//!
+//! The driver is bucketed: arrivals are grouped into 1 ms buckets and
+//! each bucket's frames are written in one burst at its deadline —
+//! per-frame sleep/wake cannot pace 10^5+ rows/s, and the bucket write
+//! is exactly the coalesced shape a real high-rate client produces.
+//!
+//! Reported per shape: offered vs achieved rows/s, server-side
+//! latency (enqueue → reply, from the reply frame) and end-to-end
+//! client latency, NACK counts by the ingress ladder, and the pool's
+//! mean batch size.
+//!
+//! Run: `cargo bench --bench trace_replay [-- --requests N --rps R]`
+
+use std::collections::VecDeque;
+use std::io::Write;
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use treelut::coordinator::ingress::{
+    self, encode_submit, AdmissionConfig, FrameClient, Ingress, Response,
+};
+use treelut::coordinator::{
+    BatchPolicy, DispatchPolicy, ModelArtifact, ModelRegistry, OverloadPolicy, RegistryServer,
+};
+use treelut::data::synth;
+use treelut::exp::configs::design_point;
+use treelut::gbdt::train;
+use treelut::quantize::{quantize_leaves, FeatureQuantizer, FlatForest, QuantModel};
+use treelut::util::{Args, Rng, Summary};
+
+/// One pre-generated request: arrival offset, tenant, row.
+struct Event {
+    at: Duration,
+    tenant: u16,
+    row: usize,
+}
+
+/// Memoryless arrivals at `rate` rows/s.
+fn poisson_trace(n: usize, rate: f64, n_rows: usize, seed: u64) -> Vec<Event> {
+    let mut rng = Rng::new(seed);
+    let mut t = 0.0f64;
+    (0..n)
+        .map(|i| {
+            t += -(1.0 - rng.f64()).ln() / rate;
+            Event {
+                at: Duration::from_secs_f64(t),
+                tenant: (i % 2) as u16,
+                row: rng.below(n_rows),
+            }
+        })
+        .collect()
+}
+
+/// Bursty diurnal arrivals: instantaneous rate `rate * (1 + 0.75 sin)`
+/// swept over three full periods across the nominal replay window, so
+/// the pool sees troughs at 0.25x and peaks at 1.75x — same mean offered
+/// load as the Poisson trace, very different instantaneous shape.
+fn diurnal_trace(n: usize, rate: f64, n_rows: usize, seed: u64) -> Vec<Event> {
+    let mut rng = Rng::new(seed);
+    let window = n as f64 / rate;
+    let period = window / 3.0;
+    let mut t = 0.0f64;
+    (0..n)
+        .map(|i| {
+            let inst =
+                rate * (1.0 + 0.75 * (2.0 * std::f64::consts::PI * t / period).sin()).max(0.05);
+            t += -(1.0 - rng.f64()).ln() / inst;
+            Event {
+                at: Duration::from_secs_f64(t),
+                tenant: (i % 2) as u16,
+                row: rng.below(n_rows),
+            }
+        })
+        .collect()
+}
+
+struct ReplayOutcome {
+    wall: f64,
+    replies: usize,
+    nacks: usize,
+    server_lat: Summary,
+    e2e_lat: Summary,
+}
+
+/// Replay `trace` against the listener at `addr` and collect every
+/// response. Writer thread paces 1 ms buckets; reader thread drains.
+fn replay(
+    addr: std::net::SocketAddr,
+    trace: &[Event],
+    rows: &Arc<Vec<Vec<u16>>>,
+) -> anyhow::Result<ReplayOutcome> {
+    // Pre-encode each 1 ms bucket's frames into one write buffer.
+    let mut buckets: VecDeque<(Duration, Vec<u8>)> = VecDeque::new();
+    let mut sent_at: Vec<Duration> = Vec::with_capacity(trace.len());
+    for (req_id, ev) in trace.iter().enumerate() {
+        let slot = Duration::from_millis(ev.at.as_millis() as u64);
+        if buckets.back().map(|(t, _)| *t != slot).unwrap_or(true) {
+            buckets.push_back((slot, Vec::new()));
+        }
+        encode_submit(&mut buckets.back_mut().unwrap().1, req_id as u64, ev.tenant, &rows[ev.row]);
+        sent_at.push(slot); // the bucket deadline is the intended send time
+    }
+
+    let mut client = FrameClient::connect(addr)?;
+    let mut wstream: TcpStream = client.stream().try_clone()?;
+    let t0 = Instant::now();
+    let writer = std::thread::spawn(move || -> anyhow::Result<Duration> {
+        let mut lag = Duration::ZERO;
+        while let Some((at, buf)) = buckets.pop_front() {
+            let now = t0.elapsed();
+            if at > now {
+                std::thread::sleep(at - now);
+            } else {
+                lag = lag.max(now - at);
+            }
+            wstream.write_all(&buf)?;
+        }
+        Ok(lag)
+    });
+
+    let mut server_lat = Vec::with_capacity(trace.len());
+    let mut e2e_lat = Vec::with_capacity(trace.len());
+    let mut nacks = 0usize;
+    for _ in 0..trace.len() {
+        match client.recv()? {
+            Response::Reply { req_id, latency_us, .. } => {
+                server_lat.push(latency_us as f64 * 1e-6);
+                e2e_lat.push((t0.elapsed() - sent_at[req_id as usize]).as_secs_f64());
+            }
+            Response::Nack { .. } => nacks += 1,
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let lag = writer.join().expect("writer thread")?;
+    if lag > Duration::from_millis(50) {
+        println!("  (writer fell {lag:?} behind the trace at peak)");
+    }
+    Ok(ReplayOutcome {
+        wall,
+        replies: server_lat.len(),
+        nacks,
+        server_lat: Summary::of(&server_lat),
+        e2e_lat: Summary::of(&e2e_lat),
+    })
+}
+
+fn main() -> anyhow::Result<()> {
+    let mut args = Args::from_env();
+    let requests = args.get_as::<usize>("requests", 200_000);
+    let rps = args.get_as::<f64>("rps", 200_000.0);
+    let shards = args.get_as::<usize>("shards", 4);
+    let seed = args.get_as::<u64>("seed", 1);
+    args.finish()?;
+
+    // A light model (jsc II: 16 features) so the wire path — not tree
+    // descent — is the bottleneck under test.
+    let dp = design_point("jsc", "II").unwrap();
+    let ds = synth::jsc_like(10_000, 7);
+    let (train_ds, test_ds) = ds.split(0.2, 1);
+    let fq = FeatureQuantizer::fit(&train_ds, dp.w_feature);
+    let btrain = fq.transform(&train_ds);
+    println!("training jsc (II) model ({} rows)...", train_ds.n_rows);
+    let model = train(&btrain, &train_ds.y, train_ds.n_classes, &dp.params, dp.w_feature)?;
+    let (quant, _): (QuantModel, _) = quantize_leaves(&model, dp.w_tree);
+    let btest = fq.transform(&test_ds);
+    let rows: Arc<Vec<Vec<u16>>> =
+        Arc::new((0..btest.n_rows).map(|i| btest.row(i).to_vec()).collect());
+
+    // Two tenants of the same trained model behind one pool.
+    let registry = Arc::new(ModelRegistry::new());
+    registry.register("jsc-a", ModelArtifact::Flat(Arc::new(FlatForest::compile(&quant)?)))?;
+    registry.register("jsc-b", ModelArtifact::Flat(Arc::new(FlatForest::compile(&quant)?)))?;
+    let policy = BatchPolicy {
+        max_batch: 256,
+        max_wait: Duration::from_micros(200),
+        queue_cap: usize::MAX,
+        overload: OverloadPolicy::Block,
+    };
+    let server = Arc::new(RegistryServer::start(
+        Arc::clone(&registry),
+        policy,
+        shards,
+        DispatchPolicy::P2c,
+    )?);
+    let listener = TcpListener::bind("127.0.0.1:0")?;
+    let addr = listener.local_addr()?;
+    let ing = Arc::new(Ingress::new(AdmissionConfig::default()));
+    let stop = Arc::new(AtomicBool::new(false));
+    let lt = {
+        let (backend, ing, stop) = (
+            Arc::clone(&server) as Arc<dyn ingress::IngressBackend>,
+            Arc::clone(&ing),
+            Arc::clone(&stop),
+        );
+        std::thread::spawn(move || ingress::run_listener(listener, backend, ing, stop))
+    };
+
+    println!(
+        "\n== trace replay: {requests} rows @ nominal {rps:.0} rows/s, {shards} shards, 2 \
+         tenants =="
+    );
+    for shape in ["poisson", "diurnal"] {
+        let trace = match shape {
+            "poisson" => poisson_trace(requests, rps, rows.len(), seed),
+            _ => diurnal_trace(requests, rps, rows.len(), seed ^ 0xd1a2),
+        };
+        let out = replay(addr, &trace, &rows)?;
+        let srv = &out.server_lat;
+        let e2e = &out.e2e_lat;
+        println!(
+            "{shape:>8}: {:.0} rows/s achieved ({:.0} offered), {} replies, {} nacks\n          \
+             server p50 {:.0}us p99 {:.0}us | e2e p50 {:.0}us p99 {:.0}us max {:.1}ms",
+            out.replies as f64 / out.wall,
+            rps,
+            out.replies,
+            out.nacks,
+            srv.p50 * 1e6,
+            srv.p99 * 1e6,
+            e2e.p50 * 1e6,
+            e2e.p99 * 1e6,
+            e2e.max * 1e3,
+        );
+        anyhow::ensure!(out.replies + out.nacks == requests, "response for every frame");
+        anyhow::ensure!(out.nacks == 0, "un-throttled replay must not shed");
+    }
+    let s = server.server().stats();
+    println!(
+        "pool: {} batches, mean batch {:.1} rows; ingress: {} frames, {} accepted",
+        s.batches.load(Ordering::Relaxed),
+        s.mean_batch(),
+        ing.stats.frames.load(Ordering::Relaxed),
+        ing.stats.accepted.load(Ordering::Relaxed),
+    );
+
+    stop.store(true, Ordering::Relaxed);
+    lt.join().expect("listener thread")?;
+    Arc::try_unwrap(server).unwrap_or_else(|_| panic!("pool still shared")).shutdown();
+    Ok(())
+}

@@ -171,6 +171,12 @@ pub enum SubmitError {
     Shed { shard: usize },
     /// Every shard's worker has terminated; the pool can accept nothing.
     AllShardsDead,
+    /// The reply channel's sender side vanished without an answer: the
+    /// pool (or the worker being waited on) was torn down between
+    /// submission and reply. Previously this surfaced as an opaque
+    /// `RecvError`; typed so callers can tell a shutdown race from a
+    /// genuine execution failure.
+    ShutDown,
 }
 
 impl std::fmt::Display for SubmitError {
@@ -186,11 +192,21 @@ impl std::fmt::Display for SubmitError {
                 write!(f, "job shed from shard {shard} queue head to admit newer work")
             }
             SubmitError::AllShardsDead => f.write_str("all server workers terminated"),
+            SubmitError::ShutDown => f.write_str("pool shut down before reply"),
         }
     }
 }
 
 impl std::error::Error for SubmitError {}
+
+/// Block on a submit reply receiver, mapping a dropped sender to the typed
+/// [`SubmitError::ShutDown`] instead of an opaque `RecvError`. Every
+/// blocking reply wait in the crate ([`Server::classify`],
+/// [`super::registry::RegistryServer::classify`], the ingress reply pump)
+/// goes through this one mapping.
+pub fn recv_reply(rx: &mpsc::Receiver<anyhow::Result<Reply>>) -> anyhow::Result<Reply> {
+    rx.recv().map_err(|_| anyhow::Error::new(SubmitError::ShutDown))?
+}
 
 /// Batching + admission knobs (applied independently by every shard).
 #[derive(Clone, Copy, Debug)]
@@ -1087,18 +1103,22 @@ impl Server {
         }
     }
 
-    /// Convenience: submit and block for the class.
+    /// Convenience: submit and block for the class. A pool torn down
+    /// between submit and reply surfaces as [`SubmitError::ShutDown`].
     pub fn classify(&self, row: Vec<u16>) -> anyhow::Result<u32> {
-        Ok(self
-            .submit(row)?
-            .recv()
-            .map_err(|_| anyhow::anyhow!("response dropped"))??
-            .class)
+        Ok(recv_reply(&self.submit(row)?)?.class)
     }
 
     /// Aggregate counters across all shards.
     pub fn stats(&self) -> &ServerStats {
         &self.stats
+    }
+
+    /// Shared handle to the aggregate counters, for observers that outlive
+    /// a borrow of the pool (the `/metrics` side listener renders from
+    /// this while the serving threads keep running).
+    pub fn stats_handle(&self) -> Arc<ServerStats> {
+        Arc::clone(&self.stats)
     }
 
     /// Number of shards in the pool.
@@ -1327,9 +1347,13 @@ fn spawn_shard<E: BatchExecutor>(
         };
         run(executor, ctx);
     });
+    // A dropped sender here means the worker thread died (factory panic)
+    // before signalling readiness — the construction-time flavor of the
+    // pool vanishing between a request and its reply. Same typed error as
+    // the reply path, not an opaque RecvError.
     let ready = ready_rx
         .recv()
-        .map_err(|_| anyhow::anyhow!("worker died during construction"))
+        .map_err(|_| anyhow::Error::new(SubmitError::ShutDown))
         .and_then(|r| r);
     match ready {
         Ok((n_features, _max_batch)) => {
@@ -2504,5 +2528,36 @@ mod tests {
             rx.recv().unwrap().unwrap();
         }
         srv.shutdown();
+    }
+
+    #[test]
+    fn dropped_reply_sender_is_typed_shutdown_not_opaque_recv_error() {
+        // Regression: a pool torn down between submit and reply used to
+        // surface as an anonymous "response dropped" anyhow string. The
+        // shared recv_reply mapping must yield the typed variant.
+        let (tx, rx) = mpsc::channel::<anyhow::Result<Reply>>();
+        drop(tx);
+        let err = recv_reply(&rx).unwrap_err();
+        assert!(matches!(err.downcast_ref::<SubmitError>(), Some(SubmitError::ShutDown)));
+        assert_eq!(err.to_string(), "pool shut down before reply");
+        // A sender that answers first still delivers the answer.
+        let (tx, rx) = mpsc::channel::<anyhow::Result<Reply>>();
+        tx.send(Ok(Reply { class: 3, latency: Duration::ZERO })).unwrap();
+        drop(tx);
+        assert_eq!(recv_reply(&rx).unwrap().class, 3);
+    }
+
+    #[test]
+    fn factory_panic_surfaces_typed_shutdown_at_start() {
+        // The construction-time recv: a factory that panics kills the
+        // worker thread before it signals readiness, dropping the ready
+        // sender. That must come back typed, not as a RecvError string.
+        let err = Server::start_pool(
+            |_shard| -> Mock { panic!("simulated factory crash") },
+            BatchPolicy::default(),
+            1,
+        )
+        .unwrap_err();
+        assert!(matches!(err.downcast_ref::<SubmitError>(), Some(SubmitError::ShutDown)));
     }
 }

@@ -1,0 +1,1274 @@
+//! Network ingress: the front door between real clients and the serving
+//! pool (ROADMAP "Async network ingress at production scale").
+//!
+//! The paper's accelerators are always fronted by a feed mechanism that
+//! keeps the fabric saturated (FINN/hls4ml stream drivers); this module is
+//! the software analogue for the shard pool — a non-blocking,
+//! length-prefixed-TCP ingress that decodes framed rows straight off the
+//! receive buffer into [`super::batcher::Server::submit`] /
+//! [`super::registry::RegistryServer::submit`] (one copy from wire bytes
+//! to the submitted row, no intermediate framing allocations), so the
+//! lane-coalescing drain sees full words under open-loop traffic.
+//!
+//! **Layering.** Everything protocol-shaped lives in [`Conn`], a
+//! socket-free state machine fed raw bytes and an explicit `now`. The TCP
+//! loop ([`run_listener`]) is a thin readiness poll around it, which is
+//! what lets the virtual-clock harness drive the identical code path —
+//! partial reads, slow readers, mid-batch disconnects — deterministically
+//! (`coordinator::testing::SimConn`, tests/ingress.rs).
+//!
+//! **Admission ladder.** A submit frame passes, in order: drain gate
+//! (refused once [`Ingress::begin_drain`] ran), per-connection in-flight
+//! cap, per-tenant token bucket ([`Admission`]), then the pool's own
+//! `queue_cap`/[`super::batcher::OverloadPolicy`]. Every refusal is a
+//! typed NACK frame ([`NackCode`]) on the same connection — socket-level
+//! overload never silently stalls the client. Malformed and oversized
+//! frames NACK too and the connection survives: length-prefix framing
+//! means the parser can always resynchronize on the next frame boundary.
+//!
+//! **Drain protocol.** Shutdown stops accepting connections, NACKs new
+//! submit frames with [`NackCode::Draining`], lets every already-accepted
+//! row flush through the pool (the coalescer's deadline flush included),
+//! writes the replies, and only then closes — zero accepted-row loss
+//! (DESIGN.md §12).
+//!
+//! **Observability.** [`IngressStats`] counts the ladder's outcomes, and a
+//! side listener ([`MetricsServer`]) serves them — with the pool's
+//! [`super::batcher::ServerStats`] and per-model lines — as Prometheus
+//! text (`serve --metrics-addr`, renderer in [`super::metrics`]).
+//!
+//! The loop is hand-rolled over `std::net` non-blocking sockets (the
+//! crate deliberately vendors no mio/tokio; a readiness poll with a short
+//! park is plenty at the frame sizes involved, and the protocol core is
+//! transport-independent anyway).
+
+use super::batcher::{Reply, Server, SubmitError};
+use super::registry::{RegistryError, RegistryServer};
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::Duration;
+
+/// Largest accepted frame payload, bytes. Bounds per-connection buffering;
+/// an oversized length prefix is NACKed and the payload discarded without
+/// buffering it (the connection survives).
+pub const MAX_FRAME: usize = 64 * 1024;
+
+/// Frame kinds (first payload byte).
+pub const FRAME_SUBMIT: u8 = 1;
+pub const FRAME_REPLY: u8 = 2;
+pub const FRAME_NACK: u8 = 3;
+
+/// Fixed bytes of a submit payload before the features: kind (1) +
+/// request id (8) + tenant (2) + feature count (2).
+const SUBMIT_HEADER: usize = 13;
+
+/// Pending-output watermark above which a connection stops parsing new
+/// frames — the slow-reader backpressure point: a client that does not
+/// read its replies eventually stops being served, instead of growing an
+/// unbounded reply buffer server-side.
+pub const DEFAULT_OUT_WATERMARK: usize = 256 * 1024;
+
+/// Why a frame was refused, carried in the NACK frame's code byte.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum NackCode {
+    /// Frame failed to decode (bad kind, truncated or oversized payload).
+    /// The connection stays open; the parser resynchronized on the next
+    /// length prefix.
+    Malformed = 1,
+    /// No model registered under the frame's tenant id.
+    UnknownModel = 2,
+    /// The row does not match the tenant's feature contract.
+    WidthMismatch = 3,
+    /// The tenant's token bucket is empty (per-tenant admission).
+    Throttled = 4,
+    /// The connection's in-flight cap is reached; read replies first.
+    InflightCap = 5,
+    /// The pool refused the row (queue at capacity / shed / shards dead)
+    /// or failed it after admission.
+    Overloaded = 6,
+    /// The ingress is draining for shutdown; no new rows are accepted.
+    Draining = 7,
+}
+
+impl NackCode {
+    pub fn from_u8(v: u8) -> Option<NackCode> {
+        Some(match v {
+            1 => NackCode::Malformed,
+            2 => NackCode::UnknownModel,
+            3 => NackCode::WidthMismatch,
+            4 => NackCode::Throttled,
+            5 => NackCode::InflightCap,
+            6 => NackCode::Overloaded,
+            7 => NackCode::Draining,
+            _ => return None,
+        })
+    }
+
+    /// Stable label, used as the Prometheus `code` label value.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            NackCode::Malformed => "malformed",
+            NackCode::UnknownModel => "unknown_model",
+            NackCode::WidthMismatch => "width_mismatch",
+            NackCode::Throttled => "throttled",
+            NackCode::InflightCap => "inflight_cap",
+            NackCode::Overloaded => "overloaded",
+            NackCode::Draining => "draining",
+        }
+    }
+}
+
+/// Map a pool/registry submission error onto the wire code. Typed errors
+/// get their own codes; anything unrecognized is reported as overload
+/// (the detail string still carries the original message).
+pub fn nack_code_for(err: &anyhow::Error) -> NackCode {
+    if let Some(re) = err.downcast_ref::<RegistryError>() {
+        return match re {
+            RegistryError::UnknownModel { .. } => NackCode::UnknownModel,
+            RegistryError::WidthMismatch { .. } => NackCode::WidthMismatch,
+            _ => NackCode::Overloaded,
+        };
+    }
+    if let Some(se) = err.downcast_ref::<SubmitError>() {
+        return match se {
+            SubmitError::WidthMismatch { .. } => NackCode::WidthMismatch,
+            SubmitError::QueueFull { .. }
+            | SubmitError::Shed { .. }
+            | SubmitError::AllShardsDead
+            | SubmitError::ShutDown => NackCode::Overloaded,
+        };
+    }
+    NackCode::Overloaded
+}
+
+// ---------------------------------------------------------------------------
+// Wire encoding
+// ---------------------------------------------------------------------------
+
+/// Append a framed submit request: `[u32 len][kind=1][u64 req_id]
+/// [u16 tenant][u16 n][n × u16 feature]`, all little-endian.
+pub fn encode_submit(out: &mut Vec<u8>, req_id: u64, tenant: u16, features: &[u16]) {
+    debug_assert!(features.len() <= (MAX_FRAME - SUBMIT_HEADER) / 2, "row exceeds MAX_FRAME");
+    let len = SUBMIT_HEADER + 2 * features.len();
+    out.extend_from_slice(&(len as u32).to_le_bytes());
+    out.push(FRAME_SUBMIT);
+    out.extend_from_slice(&req_id.to_le_bytes());
+    out.extend_from_slice(&tenant.to_le_bytes());
+    out.extend_from_slice(&(features.len() as u16).to_le_bytes());
+    for f in features {
+        out.extend_from_slice(&f.to_le_bytes());
+    }
+}
+
+/// Append a framed reply: `[u32 len][kind=2][u64 req_id][u32 class]
+/// [u64 latency_us]`.
+pub fn encode_reply(out: &mut Vec<u8>, req_id: u64, class: u32, latency_us: u64) {
+    out.extend_from_slice(&21u32.to_le_bytes());
+    out.push(FRAME_REPLY);
+    out.extend_from_slice(&req_id.to_le_bytes());
+    out.extend_from_slice(&class.to_le_bytes());
+    out.extend_from_slice(&latency_us.to_le_bytes());
+}
+
+/// Append a framed NACK: `[u32 len][kind=3][u64 req_id][u8 code]
+/// [u16 detail_len][detail utf-8]`. Details are truncated to 200 bytes.
+pub fn encode_nack(out: &mut Vec<u8>, req_id: u64, code: NackCode, detail: &str) {
+    let detail = if detail.len() > 200 {
+        let mut end = 200;
+        while !detail.is_char_boundary(end) {
+            end -= 1;
+        }
+        &detail[..end]
+    } else {
+        detail
+    };
+    let len = 1 + 8 + 1 + 2 + detail.len();
+    out.extend_from_slice(&(len as u32).to_le_bytes());
+    out.push(FRAME_NACK);
+    out.extend_from_slice(&req_id.to_le_bytes());
+    out.push(code as u8);
+    out.extend_from_slice(&(detail.len() as u16).to_le_bytes());
+    out.extend_from_slice(detail.as_bytes());
+}
+
+/// A server→client frame, as decoded by clients and tests.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Response {
+    Reply { req_id: u64, class: u32, latency_us: u64 },
+    Nack { req_id: u64, code: NackCode, detail: String },
+}
+
+impl Response {
+    pub fn req_id(&self) -> u64 {
+        match self {
+            Response::Reply { req_id, .. } | Response::Nack { req_id, .. } => *req_id,
+        }
+    }
+}
+
+/// Pop every complete response frame off the front of `buf` (a client's
+/// read accumulator), leaving any trailing partial frame in place.
+pub fn decode_responses(buf: &mut Vec<u8>) -> anyhow::Result<Vec<Response>> {
+    let mut out = Vec::new();
+    let mut pos = 0usize;
+    loop {
+        let avail = buf.len() - pos;
+        if avail < 4 {
+            break;
+        }
+        let len = u32::from_le_bytes(buf[pos..pos + 4].try_into().unwrap()) as usize;
+        anyhow::ensure!(len <= MAX_FRAME, "oversized response frame ({len} bytes)");
+        if avail < 4 + len {
+            break;
+        }
+        let p = &buf[pos + 4..pos + 4 + len];
+        anyhow::ensure!(!p.is_empty(), "empty response frame");
+        match p[0] {
+            FRAME_REPLY => {
+                anyhow::ensure!(p.len() == 21, "reply frame is {} bytes, want 21", p.len());
+                out.push(Response::Reply {
+                    req_id: u64::from_le_bytes(p[1..9].try_into().unwrap()),
+                    class: u32::from_le_bytes(p[9..13].try_into().unwrap()),
+                    latency_us: u64::from_le_bytes(p[13..21].try_into().unwrap()),
+                });
+            }
+            FRAME_NACK => {
+                anyhow::ensure!(p.len() >= 12, "truncated NACK frame ({} bytes)", p.len());
+                let code = NackCode::from_u8(p[9])
+                    .ok_or_else(|| anyhow::anyhow!("unknown NACK code {}", p[9]))?;
+                let dlen = u16::from_le_bytes(p[10..12].try_into().unwrap()) as usize;
+                anyhow::ensure!(p.len() == 12 + dlen, "NACK detail length mismatch");
+                out.push(Response::Nack {
+                    req_id: u64::from_le_bytes(p[1..9].try_into().unwrap()),
+                    code,
+                    detail: String::from_utf8_lossy(&p[12..]).into_owned(),
+                });
+            }
+            k => anyhow::bail!("unknown response frame kind {k}"),
+        }
+        pos += 4 + len;
+    }
+    buf.drain(..pos);
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// Admission
+// ---------------------------------------------------------------------------
+
+/// Knobs of the ingress admission ladder (the layers *above* the pool's
+/// own `queue_cap`/overload policy).
+#[derive(Clone, Copy, Debug)]
+pub struct AdmissionConfig {
+    /// Token-bucket refill per tenant, rows/second. Non-finite or zero
+    /// disables per-tenant throttling.
+    pub tenant_rps: f64,
+    /// Token-bucket capacity (burst allowance), rows.
+    pub tenant_burst: f64,
+    /// Per-connection in-flight cap: submit frames outstanding (accepted,
+    /// not yet replied) before the connection is NACKed.
+    pub conn_inflight: usize,
+}
+
+impl Default for AdmissionConfig {
+    fn default() -> Self {
+        AdmissionConfig {
+            tenant_rps: f64::INFINITY,
+            tenant_burst: 1.0,
+            conn_inflight: usize::MAX,
+        }
+    }
+}
+
+struct Bucket {
+    tokens: f64,
+    last: Duration,
+}
+
+/// Per-tenant token buckets, shared across every connection of one
+/// listener. Time is an explicit argument, so the virtual-clock harness
+/// refills deterministically.
+pub struct Admission {
+    cfg: AdmissionConfig,
+    buckets: Mutex<HashMap<u16, Bucket>>,
+}
+
+impl Admission {
+    pub fn new(cfg: AdmissionConfig) -> Admission {
+        Admission { cfg, buckets: Mutex::new(HashMap::new()) }
+    }
+
+    pub fn config(&self) -> &AdmissionConfig {
+        &self.cfg
+    }
+
+    fn throttling(&self) -> bool {
+        self.cfg.tenant_rps.is_finite() && self.cfg.tenant_rps > 0.0
+    }
+
+    /// Take one token from `tenant`'s bucket at time `now`; `false` means
+    /// the frame must be NACKed [`NackCode::Throttled`]. A fresh tenant
+    /// starts with a full bucket.
+    pub fn try_take(&self, tenant: u16, now: Duration) -> bool {
+        if !self.throttling() {
+            return true;
+        }
+        let mut buckets = self.buckets.lock().unwrap();
+        let b = buckets
+            .entry(tenant)
+            .or_insert(Bucket { tokens: self.cfg.tenant_burst, last: now });
+        let dt = now.saturating_sub(b.last).as_secs_f64();
+        b.tokens = (b.tokens + dt * self.cfg.tenant_rps).min(self.cfg.tenant_burst);
+        b.last = now;
+        if b.tokens >= 1.0 {
+            b.tokens -= 1.0;
+            true
+        } else {
+            false
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Engine + counters
+// ---------------------------------------------------------------------------
+
+/// Ladder outcome counters, rendered on `/metrics`.
+#[derive(Default)]
+pub struct IngressStats {
+    /// Connections ever accepted.
+    pub connections: AtomicU64,
+    /// Complete frames handled (including malformed and oversized ones).
+    pub frames: AtomicU64,
+    /// Submit frames admitted to the pool.
+    pub accepted: AtomicU64,
+    /// Replies delivered to clients.
+    pub replied: AtomicU64,
+    /// NACK frames sent, any code.
+    pub nacked: AtomicU64,
+    /// NACKs by cause (the `code` label of `treelut_ingress_nacks_total`).
+    pub malformed: AtomicU64,
+    pub throttled: AtomicU64,
+    pub inflight_capped: AtomicU64,
+    pub overloaded: AtomicU64,
+    pub drain_rejects: AtomicU64,
+    /// Connections that closed or errored away.
+    pub disconnects: AtomicU64,
+}
+
+/// Shared ingress engine: admission state + drain flag + counters. One per
+/// listener; every [`Conn`] borrows it per call, so ownership stays with
+/// whoever runs the loop (the TCP listener or the test harness).
+pub struct Ingress {
+    pub admission: Admission,
+    pub stats: Arc<IngressStats>,
+    draining: AtomicBool,
+}
+
+impl Ingress {
+    pub fn new(cfg: AdmissionConfig) -> Ingress {
+        Ingress {
+            admission: Admission::new(cfg),
+            stats: Arc::new(IngressStats::default()),
+            draining: AtomicBool::new(false),
+        }
+    }
+
+    /// Enter drain: new submit frames NACK [`NackCode::Draining`] from now
+    /// on; already-accepted rows keep flowing to their replies.
+    pub fn begin_drain(&self) {
+        self.draining.store(true, Ordering::Relaxed);
+    }
+
+    pub fn draining(&self) -> bool {
+        self.draining.load(Ordering::Relaxed)
+    }
+}
+
+/// What the ingress feeds rows into. `tenant` is the frame's model id: a
+/// registry pool routes it, a single-model pool accepts only tenant 0.
+/// (Named to avoid colliding with the inherent `submit_row` helpers on
+/// pools and the test harness.)
+pub trait IngressBackend: Send + Sync {
+    fn submit_tenant_row(
+        &self,
+        tenant: u16,
+        features: &[u16],
+    ) -> anyhow::Result<mpsc::Receiver<anyhow::Result<Reply>>>;
+}
+
+impl IngressBackend for Server {
+    fn submit_tenant_row(
+        &self,
+        tenant: u16,
+        features: &[u16],
+    ) -> anyhow::Result<mpsc::Receiver<anyhow::Result<Reply>>> {
+        if tenant != 0 {
+            return Err(anyhow::Error::new(RegistryError::UnknownModel {
+                model: tenant as usize,
+            }));
+        }
+        self.submit(features.to_vec())
+    }
+}
+
+impl IngressBackend for RegistryServer {
+    fn submit_tenant_row(
+        &self,
+        tenant: u16,
+        features: &[u16],
+    ) -> anyhow::Result<mpsc::Receiver<anyhow::Result<Reply>>> {
+        self.submit(tenant as usize, features)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Connection state machine (transport-free)
+// ---------------------------------------------------------------------------
+
+/// One parsed inbound frame.
+enum Parsed {
+    Submit { req_id: u64, tenant: u16, features: Vec<u16> },
+    Bad { req_id: u64, detail: String },
+}
+
+fn parse_frame(payload: &[u8]) -> Parsed {
+    // Best-effort request-id recovery so even malformed frames NACK with
+    // a usable correlation id when the header got that far.
+    let req_of = |p: &[u8]| {
+        if p.len() >= 9 { u64::from_le_bytes(p[1..9].try_into().unwrap()) } else { 0 }
+    };
+    if payload.is_empty() {
+        return Parsed::Bad { req_id: 0, detail: "empty frame".into() };
+    }
+    if payload[0] != FRAME_SUBMIT {
+        return Parsed::Bad {
+            req_id: req_of(payload),
+            detail: format!("unknown frame kind {}", payload[0]),
+        };
+    }
+    if payload.len() < SUBMIT_HEADER {
+        return Parsed::Bad {
+            req_id: req_of(payload),
+            detail: format!("truncated submit header ({} bytes)", payload.len()),
+        };
+    }
+    let req_id = req_of(payload);
+    let tenant = u16::from_le_bytes(payload[9..11].try_into().unwrap());
+    let nf = u16::from_le_bytes(payload[11..13].try_into().unwrap()) as usize;
+    if payload.len() != SUBMIT_HEADER + 2 * nf {
+        return Parsed::Bad {
+            req_id,
+            detail: format!(
+                "submit frame declares {nf} features but carries {} payload bytes",
+                payload.len()
+            ),
+        };
+    }
+    // The one copy: wire bytes → the row vector the pool will own.
+    let features = payload[SUBMIT_HEADER..]
+        .chunks_exact(2)
+        .map(|c| u16::from_le_bytes([c[0], c[1]]))
+        .collect();
+    Parsed::Submit { req_id, tenant, features }
+}
+
+/// Per-connection protocol state: inbound reassembly buffer, outbound
+/// frame buffer, and the in-flight request set. Knows nothing about
+/// sockets — the TCP loop and the virtual-clock connection model both
+/// drive it through [`Conn::feed`]/[`Conn::poll`]/[`Conn::take_output`].
+pub struct Conn {
+    pub id: u64,
+    rx: Vec<u8>,
+    pos: usize,
+    /// Remaining payload bytes of an oversized frame being discarded.
+    skip: usize,
+    out: Vec<u8>,
+    out_pos: usize,
+    inflight: Vec<(u64, mpsc::Receiver<anyhow::Result<Reply>>)>,
+    /// Parsing pauses while pending output exceeds this (slow-reader
+    /// backpressure).
+    pub out_watermark: usize,
+}
+
+impl Conn {
+    pub fn new(id: u64) -> Conn {
+        Conn {
+            id,
+            rx: Vec::new(),
+            pos: 0,
+            skip: 0,
+            out: Vec::new(),
+            out_pos: 0,
+            inflight: Vec::new(),
+            out_watermark: DEFAULT_OUT_WATERMARK,
+        }
+    }
+
+    /// Accept inbound bytes (any framing: partial frames accumulate) and
+    /// parse whatever is now complete.
+    pub fn feed(
+        &mut self,
+        ingress: &Ingress,
+        backend: &dyn IngressBackend,
+        bytes: &[u8],
+        now: Duration,
+    ) {
+        self.rx.extend_from_slice(bytes);
+        self.pump(ingress, backend, now);
+    }
+
+    /// Parse complete frames while under the output watermark. Called by
+    /// `feed`, and again by the loop after output drains (so a slow
+    /// reader's backlog resumes parsing once read).
+    pub fn pump(&mut self, ingress: &Ingress, backend: &dyn IngressBackend, now: Duration) {
+        loop {
+            if self.pending_output() >= self.out_watermark {
+                break;
+            }
+            if self.skip > 0 {
+                let take = self.skip.min(self.rx.len() - self.pos);
+                self.pos += take;
+                self.skip -= take;
+                if self.skip > 0 {
+                    break;
+                }
+                continue;
+            }
+            let avail = self.rx.len() - self.pos;
+            if avail < 4 {
+                break;
+            }
+            let len =
+                u32::from_le_bytes(self.rx[self.pos..self.pos + 4].try_into().unwrap()) as usize;
+            if len > MAX_FRAME {
+                // Typed reject without buffering or killing the
+                // connection: skip exactly the declared payload, then
+                // the parser is back on a frame boundary.
+                ingress.stats.frames.fetch_add(1, Ordering::Relaxed);
+                ingress.stats.malformed.fetch_add(1, Ordering::Relaxed);
+                self.nack(
+                    ingress,
+                    0,
+                    NackCode::Malformed,
+                    &format!("oversized frame: {len} bytes (max {MAX_FRAME})"),
+                );
+                self.pos += 4;
+                self.skip = len;
+                continue;
+            }
+            if avail < 4 + len {
+                break;
+            }
+            let parsed = parse_frame(&self.rx[self.pos + 4..self.pos + 4 + len]);
+            self.pos += 4 + len;
+            ingress.stats.frames.fetch_add(1, Ordering::Relaxed);
+            self.on_parsed(ingress, backend, parsed, now);
+        }
+        if self.pos > 0 {
+            self.rx.drain(..self.pos);
+            self.pos = 0;
+        }
+    }
+
+    /// Run one submit frame down the admission ladder.
+    fn on_parsed(
+        &mut self,
+        ingress: &Ingress,
+        backend: &dyn IngressBackend,
+        parsed: Parsed,
+        now: Duration,
+    ) {
+        let (req_id, tenant, features) = match parsed {
+            Parsed::Bad { req_id, detail } => {
+                ingress.stats.malformed.fetch_add(1, Ordering::Relaxed);
+                self.nack(ingress, req_id, NackCode::Malformed, &detail);
+                return;
+            }
+            Parsed::Submit { req_id, tenant, features } => (req_id, tenant, features),
+        };
+        if ingress.draining() {
+            ingress.stats.drain_rejects.fetch_add(1, Ordering::Relaxed);
+            self.nack(ingress, req_id, NackCode::Draining, "ingress draining for shutdown");
+            return;
+        }
+        if self.inflight.len() >= ingress.admission.config().conn_inflight {
+            ingress.stats.inflight_capped.fetch_add(1, Ordering::Relaxed);
+            self.nack(
+                ingress,
+                req_id,
+                NackCode::InflightCap,
+                &format!(
+                    "connection has {} requests in flight (cap {})",
+                    self.inflight.len(),
+                    ingress.admission.config().conn_inflight
+                ),
+            );
+            return;
+        }
+        if !ingress.admission.try_take(tenant, now) {
+            ingress.stats.throttled.fetch_add(1, Ordering::Relaxed);
+            self.nack(
+                ingress,
+                req_id,
+                NackCode::Throttled,
+                &format!("tenant {tenant} token bucket empty"),
+            );
+            return;
+        }
+        match backend.submit_tenant_row(tenant, &features) {
+            Ok(rx) => {
+                ingress.stats.accepted.fetch_add(1, Ordering::Relaxed);
+                self.inflight.push((req_id, rx));
+            }
+            Err(e) => {
+                let code = nack_code_for(&e);
+                if code == NackCode::Overloaded {
+                    ingress.stats.overloaded.fetch_add(1, Ordering::Relaxed);
+                }
+                self.nack(ingress, req_id, code, &e.to_string());
+            }
+        }
+    }
+
+    /// Collect finished in-flight replies into the output buffer. Returns
+    /// how many requests resolved this call.
+    pub fn poll(&mut self, ingress: &Ingress, _now: Duration) -> usize {
+        let mut done = 0usize;
+        let mut i = 0usize;
+        while i < self.inflight.len() {
+            let outcome = self.inflight[i].1.try_recv();
+            match outcome {
+                Err(mpsc::TryRecvError::Empty) => {
+                    i += 1;
+                    continue;
+                }
+                Ok(Ok(reply)) => {
+                    let req_id = self.inflight[i].0;
+                    ingress.stats.replied.fetch_add(1, Ordering::Relaxed);
+                    encode_reply(
+                        &mut self.out,
+                        req_id,
+                        reply.class,
+                        reply.latency.as_micros() as u64,
+                    );
+                }
+                Ok(Err(e)) => {
+                    let req_id = self.inflight[i].0;
+                    let code = nack_code_for(&e);
+                    if code == NackCode::Overloaded {
+                        ingress.stats.overloaded.fetch_add(1, Ordering::Relaxed);
+                    }
+                    self.nack(ingress, req_id, code, &e.to_string());
+                }
+                Err(mpsc::TryRecvError::Disconnected) => {
+                    // Same typed cause as the blocking paths: the pool was
+                    // torn down between submit and reply.
+                    let req_id = self.inflight[i].0;
+                    ingress.stats.overloaded.fetch_add(1, Ordering::Relaxed);
+                    self.nack(
+                        ingress,
+                        req_id,
+                        NackCode::Overloaded,
+                        &SubmitError::ShutDown.to_string(),
+                    );
+                }
+            }
+            self.inflight.swap_remove(i);
+            done += 1;
+        }
+        done
+    }
+
+    fn nack(&mut self, ingress: &Ingress, req_id: u64, code: NackCode, detail: &str) {
+        ingress.stats.nacked.fetch_add(1, Ordering::Relaxed);
+        encode_nack(&mut self.out, req_id, code, detail);
+    }
+
+    /// Bytes waiting for the transport to write.
+    pub fn output(&self) -> &[u8] {
+        &self.out[self.out_pos..]
+    }
+
+    pub fn pending_output(&self) -> usize {
+        self.out.len() - self.out_pos
+    }
+
+    /// The transport wrote `n` bytes of [`Conn::output`].
+    pub fn consume_output(&mut self, n: usize) {
+        self.out_pos += n;
+        debug_assert!(self.out_pos <= self.out.len());
+        if self.out_pos == self.out.len() {
+            self.out.clear();
+            self.out_pos = 0;
+        }
+    }
+
+    /// Read up to `max` output bytes (the scripted transport's read step;
+    /// a small `max` models a slow reader).
+    pub fn take_output(&mut self, max: usize) -> Vec<u8> {
+        let n = self.pending_output().min(max);
+        let chunk = self.out[self.out_pos..self.out_pos + n].to_vec();
+        self.consume_output(n);
+        chunk
+    }
+
+    /// Requests accepted and not yet replied.
+    pub fn inflight(&self) -> usize {
+        self.inflight.len()
+    }
+
+    /// Drained: nothing in flight, nothing left to write, and no complete
+    /// unhandled frame in the reassembly buffer (a trailing partial frame
+    /// does not hold up drain — the client never finished sending it).
+    pub fn idle(&self) -> bool {
+        self.inflight.is_empty() && self.pending_output() == 0 && !self.has_complete_frame()
+    }
+
+    fn has_complete_frame(&self) -> bool {
+        let avail = self.rx.len() - self.pos;
+        if self.skip > 0 {
+            return avail >= self.skip;
+        }
+        if avail < 4 {
+            return false;
+        }
+        let len =
+            u32::from_le_bytes(self.rx[self.pos..self.pos + 4].try_into().unwrap()) as usize;
+        len > MAX_FRAME || avail >= 4 + len
+    }
+}
+
+// ---------------------------------------------------------------------------
+// TCP listener loop
+// ---------------------------------------------------------------------------
+
+/// Park interval of the readiness poll when a turn moved no bytes.
+const IDLE_PARK: Duration = Duration::from_micros(200);
+
+/// Serve `listener` until `stop` is set, then drain and return. Each loop
+/// turn accepts pending connections, reads what every socket has, runs
+/// the protocol state machine, and writes what fits — all non-blocking.
+/// On `stop`: accepting ends, new frames NACK [`NackCode::Draining`],
+/// accepted rows flush through the pool and their replies are written,
+/// then sockets close. Returns the number of connections served.
+pub fn run_listener(
+    listener: TcpListener,
+    backend: Arc<dyn IngressBackend>,
+    ingress: Arc<Ingress>,
+    stop: Arc<AtomicBool>,
+) -> anyhow::Result<u64> {
+    listener.set_nonblocking(true)?;
+    let t0 = std::time::Instant::now();
+    let mut conns: Vec<(TcpStream, Conn, bool)> = Vec::new();
+    let mut next_id = 0u64;
+    let mut buf = vec![0u8; 64 * 1024];
+    loop {
+        let draining = stop.load(Ordering::Relaxed);
+        if draining && !ingress.draining() {
+            ingress.begin_drain();
+        }
+        let mut active = false;
+        if !draining {
+            loop {
+                match listener.accept() {
+                    Ok((s, _)) => {
+                        s.set_nonblocking(true)?;
+                        let _ = s.set_nodelay(true);
+                        ingress.stats.connections.fetch_add(1, Ordering::Relaxed);
+                        conns.push((s, Conn::new(next_id), false));
+                        next_id += 1;
+                        active = true;
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                    Err(e) => return Err(e.into()),
+                }
+            }
+        }
+        let now = t0.elapsed();
+        for (stream, conn, dead) in conns.iter_mut() {
+            // Read everything available (bounded per turn by buffer size).
+            loop {
+                match stream.read(&mut buf) {
+                    Ok(0) => {
+                        // Peer closed. In-flight receivers drop with the
+                        // Conn; the pool's replies to them go nowhere,
+                        // which is exactly a mid-batch disconnect.
+                        *dead = true;
+                        ingress.stats.disconnects.fetch_add(1, Ordering::Relaxed);
+                        break;
+                    }
+                    Ok(n) => {
+                        conn.feed(&ingress, &*backend, &buf[..n], now);
+                        active = true;
+                        if n < buf.len() {
+                            break;
+                        }
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                    Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                    Err(_) => {
+                        *dead = true;
+                        ingress.stats.disconnects.fetch_add(1, Ordering::Relaxed);
+                        break;
+                    }
+                }
+            }
+            if *dead {
+                continue;
+            }
+            if conn.poll(&ingress, now) > 0 {
+                active = true;
+            }
+            // A slow reader may have paused parsing; retry now that the
+            // output buffer may have drained.
+            conn.pump(&ingress, &*backend, now);
+            while conn.pending_output() > 0 {
+                match stream.write(conn.output()) {
+                    Ok(0) => break,
+                    Ok(n) => {
+                        conn.consume_output(n);
+                        active = true;
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                    Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                    Err(_) => {
+                        *dead = true;
+                        ingress.stats.disconnects.fetch_add(1, Ordering::Relaxed);
+                        break;
+                    }
+                }
+            }
+        }
+        conns.retain(|(_, _, dead)| !dead);
+        if draining && conns.iter().all(|(_, c, _)| c.idle()) {
+            // Every accepted row replied and every reply written: close.
+            return Ok(next_id);
+        }
+        if !active {
+            std::thread::sleep(IDLE_PARK);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Blocking frame client (CLI self-driver, benches, tests)
+// ---------------------------------------------------------------------------
+
+/// A simple blocking client for the framed protocol.
+pub struct FrameClient {
+    stream: TcpStream,
+    rx: Vec<u8>,
+    pending: std::collections::VecDeque<Response>,
+}
+
+impl FrameClient {
+    pub fn connect<A: ToSocketAddrs>(addr: A) -> anyhow::Result<FrameClient> {
+        let stream = TcpStream::connect(addr)?;
+        let _ = stream.set_nodelay(true);
+        Ok(FrameClient { stream, rx: Vec::new(), pending: std::collections::VecDeque::new() })
+    }
+
+    /// The underlying stream (clone it to split send/receive across
+    /// threads for open-loop driving).
+    pub fn stream(&self) -> &TcpStream {
+        &self.stream
+    }
+
+    pub fn send(&mut self, req_id: u64, tenant: u16, features: &[u16]) -> anyhow::Result<()> {
+        let mut frame = Vec::with_capacity(4 + SUBMIT_HEADER + 2 * features.len());
+        encode_submit(&mut frame, req_id, tenant, features);
+        self.stream.write_all(&frame)?;
+        Ok(())
+    }
+
+    /// Send raw bytes (tests use this for malformed frames).
+    pub fn send_raw(&mut self, bytes: &[u8]) -> anyhow::Result<()> {
+        self.stream.write_all(bytes)?;
+        Ok(())
+    }
+
+    /// Block until one response frame arrives.
+    pub fn recv(&mut self) -> anyhow::Result<Response> {
+        loop {
+            if let Some(r) = self.pending.pop_front() {
+                return Ok(r);
+            }
+            let mut buf = [0u8; 4096];
+            let n = self.stream.read(&mut buf)?;
+            anyhow::ensure!(n > 0, "server closed the connection");
+            self.rx.extend_from_slice(&buf[..n]);
+            self.pending.extend(decode_responses(&mut self.rx)?);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// /metrics side listener
+// ---------------------------------------------------------------------------
+
+/// A minimal HTTP/1.1 side listener serving `GET /metrics` with whatever
+/// `render` produces (Prometheus text exposition,
+/// [`super::metrics::prometheus_text`]). One short-lived blocking
+/// connection at a time — scrape traffic, not serving traffic.
+pub struct MetricsServer {
+    stop: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+    pub addr: SocketAddr,
+}
+
+impl MetricsServer {
+    pub fn spawn(
+        addr: &str,
+        render: Arc<dyn Fn() -> String + Send + Sync>,
+    ) -> anyhow::Result<MetricsServer> {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop_t = Arc::clone(&stop);
+        let handle = std::thread::spawn(move || {
+            while !stop_t.load(Ordering::Relaxed) {
+                match listener.accept() {
+                    Ok((mut s, _)) => {
+                        let _ = serve_scrape(&mut s, &*render);
+                    }
+                    Err(_) => std::thread::sleep(Duration::from_millis(5)),
+                }
+            }
+        });
+        Ok(MetricsServer { stop, handle: Some(handle), addr: local })
+    }
+
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn serve_scrape(s: &mut TcpStream, render: &dyn Fn() -> String) -> std::io::Result<()> {
+    s.set_nonblocking(false)?;
+    s.set_read_timeout(Some(Duration::from_millis(500)))?;
+    let mut req = [0u8; 1024];
+    let mut got = 0usize;
+    while got < req.len() {
+        let n = s.read(&mut req[got..])?;
+        if n == 0 {
+            break;
+        }
+        got += n;
+        if req[..got].windows(4).any(|w| w == b"\r\n\r\n") {
+            break;
+        }
+    }
+    let line = std::str::from_utf8(&req[..got]).unwrap_or("").lines().next().unwrap_or("");
+    let (status, body) = if line.starts_with("GET /metrics") {
+        ("200 OK", render())
+    } else {
+        ("404 Not Found", "not found\n".to_string())
+    };
+    write!(
+        s,
+        "HTTP/1.1 {status}\r\nContent-Type: text/plain; version=0.0.4; charset=utf-8\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n{}",
+        body.len(),
+        body
+    )?;
+    s.flush()
+}
+
+/// Blocking one-shot scrape of a [`MetricsServer`] (the CLI's end-of-run
+/// self-check; avoids shelling out to curl).
+pub fn scrape_metrics(addr: &str) -> anyhow::Result<String> {
+    let mut s = TcpStream::connect(addr)?;
+    s.set_read_timeout(Some(Duration::from_secs(2)))?;
+    write!(s, "GET /metrics HTTP/1.1\r\nHost: {addr}\r\nConnection: close\r\n\r\n")?;
+    let mut text = String::new();
+    s.read_to_string(&mut text)?;
+    anyhow::ensure!(text.starts_with("HTTP/1.1 200"), "metrics scrape failed: {text:.40}");
+    let body = text
+        .split_once("\r\n\r\n")
+        .map(|(_, b)| b.to_string())
+        .unwrap_or_default();
+    Ok(body)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Replies instantly: class = tenant + Σ features.
+    struct Echo;
+    impl IngressBackend for Echo {
+        fn submit_tenant_row(
+            &self,
+            tenant: u16,
+            features: &[u16],
+        ) -> anyhow::Result<mpsc::Receiver<anyhow::Result<Reply>>> {
+            let (tx, rx) = mpsc::channel();
+            let sum: u32 = features.iter().map(|&f| f as u32).sum();
+            tx.send(Ok(Reply {
+                class: tenant as u32 + sum,
+                latency: Duration::from_micros(5),
+            }))
+            .unwrap();
+            Ok(rx)
+        }
+    }
+
+    /// Refuses everything with a typed pool-admission error.
+    struct Full;
+    impl IngressBackend for Full {
+        fn submit_tenant_row(
+            &self,
+            _tenant: u16,
+            _features: &[u16],
+        ) -> anyhow::Result<mpsc::Receiver<anyhow::Result<Reply>>> {
+            Err(anyhow::Error::new(SubmitError::QueueFull { shard: 0 }))
+        }
+    }
+
+    fn frame(req_id: u64, tenant: u16, features: &[u16]) -> Vec<u8> {
+        let mut f = Vec::new();
+        encode_submit(&mut f, req_id, tenant, features);
+        f
+    }
+
+    fn drain_responses(conn: &mut Conn) -> Vec<Response> {
+        let mut bytes = conn.take_output(usize::MAX);
+        decode_responses(&mut bytes).unwrap()
+    }
+
+    #[test]
+    fn submit_roundtrip_with_partial_reads() {
+        let ing = Ingress::new(AdmissionConfig::default());
+        let mut conn = Conn::new(0);
+        let f = frame(42, 3, &[10, 20, 30]);
+        // One byte at a time: reassembly must be bit-exact.
+        for b in &f {
+            conn.feed(&ing, &Echo, std::slice::from_ref(b), Duration::ZERO);
+        }
+        assert_eq!(conn.inflight(), 1);
+        assert_eq!(conn.poll(&ing, Duration::ZERO), 1);
+        let rs = drain_responses(&mut conn);
+        assert_eq!(
+            rs,
+            vec![Response::Reply { req_id: 42, class: 63, latency_us: 5 }]
+        );
+        assert!(conn.idle());
+        assert_eq!(ing.stats.accepted.load(Ordering::Relaxed), 1);
+        assert_eq!(ing.stats.replied.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn malformed_and_oversized_frames_nack_without_killing_the_conn() {
+        let ing = Ingress::new(AdmissionConfig::default());
+        let mut conn = Conn::new(0);
+        // Unknown kind, with a parsable request id.
+        let mut bad = Vec::new();
+        bad.extend_from_slice(&9u32.to_le_bytes());
+        bad.push(99);
+        bad.extend_from_slice(&7u64.to_le_bytes());
+        conn.feed(&ing, &Echo, &bad, Duration::ZERO);
+        // Oversized declared length: payload must be discarded, not
+        // buffered, and the next frame must parse.
+        let mut over = Vec::new();
+        over.extend_from_slice(&((MAX_FRAME + 1) as u32).to_le_bytes());
+        over.extend_from_slice(&vec![0u8; MAX_FRAME + 1]);
+        conn.feed(&ing, &Echo, &over, Duration::ZERO);
+        // Truncated submit: declares 4 features, carries 1.
+        let mut trunc = Vec::new();
+        trunc.extend_from_slice(&((SUBMIT_HEADER + 2) as u32).to_le_bytes());
+        trunc.push(FRAME_SUBMIT);
+        trunc.extend_from_slice(&8u64.to_le_bytes());
+        trunc.extend_from_slice(&0u16.to_le_bytes());
+        trunc.extend_from_slice(&4u16.to_le_bytes());
+        trunc.extend_from_slice(&5u16.to_le_bytes());
+        conn.feed(&ing, &Echo, &trunc, Duration::ZERO);
+        // The connection still serves a good frame.
+        conn.feed(&ing, &Echo, &frame(9, 0, &[1]), Duration::ZERO);
+        conn.poll(&ing, Duration::ZERO);
+        let rs = drain_responses(&mut conn);
+        assert_eq!(rs.len(), 4);
+        assert!(
+            matches!(rs[0], Response::Nack { req_id: 7, code: NackCode::Malformed, .. }),
+            "{:?}",
+            rs[0]
+        );
+        assert!(matches!(rs[1], Response::Nack { code: NackCode::Malformed, .. }));
+        assert!(matches!(rs[2], Response::Nack { req_id: 8, code: NackCode::Malformed, .. }));
+        assert_eq!(rs[3], Response::Reply { req_id: 9, class: 1, latency_us: 5 });
+        assert_eq!(ing.stats.malformed.load(Ordering::Relaxed), 3);
+    }
+
+    #[test]
+    fn token_bucket_throttles_per_tenant_and_refills_deterministically() {
+        let ing = Ingress::new(AdmissionConfig {
+            tenant_rps: 10.0, // one token per 100 ms
+            tenant_burst: 2.0,
+            conn_inflight: usize::MAX,
+        });
+        let mut conn = Conn::new(0);
+        let t = Duration::ZERO;
+        // Burst of 2 passes, third throttles.
+        for req in 0..3u64 {
+            conn.feed(&ing, &Echo, &frame(req, 1, &[1]), t);
+        }
+        // A different tenant has its own bucket.
+        conn.feed(&ing, &Echo, &frame(3, 2, &[1]), t);
+        // 100 ms later tenant 1 has exactly one token again.
+        let t2 = Duration::from_millis(100);
+        conn.feed(&ing, &Echo, &frame(4, 1, &[1]), t2);
+        conn.feed(&ing, &Echo, &frame(5, 1, &[1]), t2);
+        conn.poll(&ing, t2);
+        let rs = drain_responses(&mut conn);
+        let codes: Vec<Option<NackCode>> = rs
+            .iter()
+            .map(|r| match r {
+                Response::Nack { code, .. } => Some(*code),
+                Response::Reply { .. } => None,
+            })
+            .collect();
+        // req 2 and req 5 throttled; everything else served.
+        assert_eq!(ing.stats.throttled.load(Ordering::Relaxed), 2);
+        let nacked: Vec<u64> = rs
+            .iter()
+            .filter(|r| matches!(r, Response::Nack { .. }))
+            .map(|r| r.req_id())
+            .collect();
+        assert_eq!(nacked, vec![2, 5], "codes={codes:?}");
+    }
+
+    #[test]
+    fn inflight_cap_nacks_until_replies_are_polled() {
+        // A backend that never replies until we let it.
+        struct Held(Mutex<Vec<mpsc::Sender<anyhow::Result<Reply>>>>);
+        impl IngressBackend for Held {
+            fn submit_tenant_row(
+                &self,
+                _tenant: u16,
+                _features: &[u16],
+            ) -> anyhow::Result<mpsc::Receiver<anyhow::Result<Reply>>> {
+                let (tx, rx) = mpsc::channel();
+                self.0.lock().unwrap().push(tx);
+                Ok(rx)
+            }
+        }
+        let held = Held(Mutex::new(Vec::new()));
+        let ing = Ingress::new(AdmissionConfig { conn_inflight: 2, ..Default::default() });
+        let mut conn = Conn::new(0);
+        for req in 0..3u64 {
+            conn.feed(&ing, &held, &frame(req, 0, &[1]), Duration::ZERO);
+        }
+        assert_eq!(conn.inflight(), 2);
+        assert_eq!(ing.stats.inflight_capped.load(Ordering::Relaxed), 1);
+        let rs = drain_responses(&mut conn);
+        assert!(matches!(
+            rs[0],
+            Response::Nack { req_id: 2, code: NackCode::InflightCap, .. }
+        ));
+        // Release one reply; capacity returns.
+        for tx in held.0.lock().unwrap().drain(..1) {
+            tx.send(Ok(Reply { class: 0, latency: Duration::ZERO })).unwrap();
+        }
+        conn.poll(&ing, Duration::ZERO);
+        conn.feed(&ing, &held, &frame(3, 0, &[1]), Duration::ZERO);
+        assert_eq!(conn.inflight(), 2);
+        assert_eq!(ing.stats.inflight_capped.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn pool_overload_and_drain_gate_are_typed_nacks() {
+        let ing = Ingress::new(AdmissionConfig::default());
+        let mut conn = Conn::new(0);
+        conn.feed(&ing, &Full, &frame(1, 0, &[1]), Duration::ZERO);
+        ing.begin_drain();
+        conn.feed(&ing, &Full, &frame(2, 0, &[1]), Duration::ZERO);
+        let rs = drain_responses(&mut conn);
+        assert!(matches!(
+            rs[0],
+            Response::Nack { req_id: 1, code: NackCode::Overloaded, .. }
+        ));
+        assert!(matches!(
+            rs[1],
+            Response::Nack { req_id: 2, code: NackCode::Draining, .. }
+        ));
+        assert_eq!(ing.stats.overloaded.load(Ordering::Relaxed), 1);
+        assert_eq!(ing.stats.drain_rejects.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn slow_reader_watermark_pauses_parsing_until_output_drains() {
+        // `Full` NACKs every frame at parse time, so pending output grows
+        // during pump and the watermark engages mid-buffer.
+        let ing = Ingress::new(AdmissionConfig::default());
+        let mut conn = Conn::new(0);
+        conn.out_watermark = 32; // smaller than two minimum NACK frames
+        let mut bytes = Vec::new();
+        for req in 0..3u64 {
+            encode_submit(&mut bytes, req, 0, &[1]);
+        }
+        conn.feed(&ing, &Full, &bytes, Duration::ZERO);
+        // Backpressure: not all three frames may be parsed while the
+        // client reads nothing.
+        assert!(
+            ing.stats.frames.load(Ordering::Relaxed) < 3,
+            "watermark must pause parsing"
+        );
+        // Reading in tiny chunks drains output and resumes parsing;
+        // nothing is lost and the tail frames still get their NACKs.
+        let mut client = Vec::new();
+        let mut rs = Vec::new();
+        let mut turns = 0;
+        while rs.len() < 3 {
+            turns += 1;
+            assert!(turns < 200, "slow reader never drained: {rs:?}");
+            client.extend(conn.take_output(8)); // slow reader: 8 B reads
+            conn.pump(&ing, &Full, Duration::ZERO);
+            rs.extend(decode_responses(&mut client).unwrap());
+        }
+        let ids: Vec<u64> = rs.iter().map(Response::req_id).collect();
+        assert_eq!(ids, vec![0, 1, 2]);
+        assert!(rs
+            .iter()
+            .all(|r| matches!(r, Response::Nack { code: NackCode::Overloaded, .. })));
+        client.extend(conn.take_output(usize::MAX));
+        assert!(client.is_empty() && conn.idle());
+    }
+
+    #[test]
+    fn nack_code_mapping_covers_typed_errors() {
+        let e = anyhow::Error::new(RegistryError::UnknownModel { model: 9 });
+        assert_eq!(nack_code_for(&e), NackCode::UnknownModel);
+        let e = anyhow::Error::new(RegistryError::WidthMismatch { model: 0, got: 1, want: 2 });
+        assert_eq!(nack_code_for(&e), NackCode::WidthMismatch);
+        let e = anyhow::Error::new(SubmitError::WidthMismatch { got: 1, want: 2 });
+        assert_eq!(nack_code_for(&e), NackCode::WidthMismatch);
+        for se in [
+            SubmitError::QueueFull { shard: 0 },
+            SubmitError::Shed { shard: 0 },
+            SubmitError::AllShardsDead,
+            SubmitError::ShutDown,
+        ] {
+            assert_eq!(nack_code_for(&anyhow::Error::new(se)), NackCode::Overloaded);
+        }
+        assert_eq!(nack_code_for(&anyhow::anyhow!("anything else")), NackCode::Overloaded);
+    }
+
+    #[test]
+    fn nack_detail_truncates_on_char_boundary() {
+        let mut out = Vec::new();
+        let long = "é".repeat(150); // 300 bytes of 2-byte chars
+        encode_nack(&mut out, 1, NackCode::Malformed, &long);
+        let rs = decode_responses(&mut out).unwrap();
+        match &rs[0] {
+            Response::Nack { detail, .. } => assert_eq!(detail.len(), 200),
+            r => panic!("{r:?}"),
+        }
+    }
+}

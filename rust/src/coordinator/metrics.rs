@@ -1,7 +1,10 @@
 //! Serving metrics: latency distribution + throughput report, produced by
-//! load generators (examples/serve.rs, benches/serving_throughput.rs).
+//! load generators (examples/serve.rs, benches/serving_throughput.rs), and
+//! the Prometheus text rendering served on `/metrics`
+//! ([`prometheus_text`], [`super::ingress::MetricsServer`]).
 
-use super::{DispatchPolicy, NetlistMeta};
+use super::ingress::IngressStats;
+use super::{DispatchPolicy, NetlistMeta, ServerStats};
 use crate::util::Summary;
 
 /// Lane-coalescing counters of a `--coalesce` run
@@ -260,9 +263,116 @@ impl ServingReport {
     }
 }
 
+/// Escape a Prometheus label value (backslash, quote, newline).
+fn escape_label(v: &str) -> String {
+    v.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
+}
+
+fn prom_counter(out: &mut String, name: &str, help: &str, v: u64) {
+    use std::fmt::Write as _;
+    let _ = writeln!(out, "# HELP {name} {help}");
+    let _ = writeln!(out, "# TYPE {name} counter");
+    let _ = writeln!(out, "{name} {v}");
+}
+
+fn prom_gauge(out: &mut String, name: &str, help: &str, v: f64) {
+    use std::fmt::Write as _;
+    let _ = writeln!(out, "# HELP {name} {help}");
+    let _ = writeln!(out, "# TYPE {name} gauge");
+    let _ = writeln!(out, "{name} {v}");
+}
+
+/// Render the serving pool's counters — plus the ingress ladder, per-model
+/// lines, and an optional latency summary — in the Prometheus text
+/// exposition format. Pure function of its snapshot arguments; the
+/// `/metrics` side listener calls it per scrape.
+pub fn prometheus_text(
+    stats: &ServerStats,
+    shards: usize,
+    live_shards: usize,
+    ingress: Option<&IngressStats>,
+    models: &[ModelLine],
+    latency: Option<&Summary>,
+) -> String {
+    use std::fmt::Write as _;
+    use std::sync::atomic::Ordering::Relaxed;
+    let mut s = String::with_capacity(4096);
+    prom_counter(&mut s, "treelut_requests_total", "Rows accepted by the pool.", stats.requests.load(Relaxed));
+    prom_counter(&mut s, "treelut_rejected_total", "Rows rejected or failed by the pool.", stats.rejected.load(Relaxed));
+    prom_counter(&mut s, "treelut_sheds_total", "Rows shed by admission control.", stats.sheds.load(Relaxed));
+    prom_counter(&mut s, "treelut_queue_full_total", "At-capacity queue encounters.", stats.queue_full.load(Relaxed));
+    prom_counter(&mut s, "treelut_redirects_total", "Shed-new submissions absorbed by a sibling shard.", stats.redirects.load(Relaxed));
+    prom_counter(&mut s, "treelut_batches_total", "Executed batches (words on coalescing pools).", stats.batches.load(Relaxed));
+    prom_counter(&mut s, "treelut_rows_executed_total", "Rows executed.", stats.rows_executed.load(Relaxed));
+    prom_counter(&mut s, "treelut_steals_total", "Work-steal events.", stats.steals.load(Relaxed));
+    prom_counter(&mut s, "treelut_stolen_jobs_total", "Jobs moved by steals.", stats.stolen_jobs.load(Relaxed));
+    prom_counter(&mut s, "treelut_redispatched_total", "Jobs moved off dying shards.", stats.redispatched.load(Relaxed));
+    prom_counter(&mut s, "treelut_coalesced_words_total", "Lane-coalesced words issued.", stats.coalesced_words.load(Relaxed));
+    prom_counter(&mut s, "treelut_pipeline_flushes_total", "Coalescer pipeline flushes.", stats.pipeline_flushes.load(Relaxed));
+    prom_counter(&mut s, "treelut_exec_nanos_total", "Nanoseconds spent inside executors.", stats.exec_nanos.load(Relaxed));
+    prom_gauge(&mut s, "treelut_peak_queue_depth", "Deepest shard queue observed.", stats.peak_depth.load(Relaxed) as f64);
+    prom_gauge(&mut s, "treelut_peak_inflight_words", "Deepest pipelined word overlap observed.", stats.peak_inflight_words.load(Relaxed) as f64);
+    prom_gauge(&mut s, "treelut_mean_batch_rows", "Mean rows per executed batch.", stats.mean_batch());
+    prom_gauge(&mut s, "treelut_shards", "Configured worker shards.", shards as f64);
+    prom_gauge(&mut s, "treelut_live_shards", "Shards currently alive.", live_shards as f64);
+    if let Some(ing) = ingress {
+        prom_counter(&mut s, "treelut_ingress_connections_total", "Connections accepted.", ing.connections.load(Relaxed));
+        prom_counter(&mut s, "treelut_ingress_frames_total", "Complete frames handled.", ing.frames.load(Relaxed));
+        prom_counter(&mut s, "treelut_ingress_accepted_total", "Submit frames admitted to the pool.", ing.accepted.load(Relaxed));
+        prom_counter(&mut s, "treelut_ingress_replies_total", "Replies delivered to clients.", ing.replied.load(Relaxed));
+        prom_counter(&mut s, "treelut_ingress_disconnects_total", "Connections closed or errored away.", ing.disconnects.load(Relaxed));
+        let _ = writeln!(s, "# HELP treelut_ingress_nacks_total NACK frames sent, by cause.");
+        let _ = writeln!(s, "# TYPE treelut_ingress_nacks_total counter");
+        for (code, v) in [
+            ("malformed", ing.malformed.load(Relaxed)),
+            ("throttled", ing.throttled.load(Relaxed)),
+            ("inflight_cap", ing.inflight_capped.load(Relaxed)),
+            ("overloaded", ing.overloaded.load(Relaxed)),
+            ("draining", ing.drain_rejects.load(Relaxed)),
+        ] {
+            let _ = writeln!(s, "treelut_ingress_nacks_total{{code=\"{code}\"}} {v}");
+        }
+    }
+    if !models.is_empty() {
+        let _ = writeln!(s, "# HELP treelut_model_requests_total Requests tagged per model.");
+        let _ = writeln!(s, "# TYPE treelut_model_requests_total counter");
+        for m in models {
+            let _ = writeln!(s, "treelut_model_requests_total{{model=\"{}\"}} {}", escape_label(&m.name), m.requests);
+        }
+        let _ = writeln!(s, "# TYPE treelut_model_rows_total counter");
+        for m in models {
+            let _ = writeln!(s, "treelut_model_rows_total{{model=\"{}\"}} {}", escape_label(&m.name), m.rows);
+        }
+        let _ = writeln!(s, "# TYPE treelut_model_rejected_total counter");
+        for m in models {
+            let _ = writeln!(s, "treelut_model_rejected_total{{model=\"{}\"}} {}", escape_label(&m.name), m.rejected);
+        }
+        let _ = writeln!(s, "# TYPE treelut_model_version gauge");
+        for m in models {
+            let _ = writeln!(s, "treelut_model_version{{model=\"{}\"}} {}", escape_label(&m.name), m.version);
+        }
+        let _ = writeln!(s, "# TYPE treelut_model_p99_seconds gauge");
+        for m in models {
+            if let Some(p99_us) = m.p99_us {
+                let _ = writeln!(s, "treelut_model_p99_seconds{{model=\"{}\"}} {}", escape_label(&m.name), p99_us * 1e-6);
+            }
+        }
+    }
+    if let Some(lat) = latency {
+        let _ = writeln!(s, "# HELP treelut_latency_seconds Request latency quantiles (nearest-rank).");
+        let _ = writeln!(s, "# TYPE treelut_latency_seconds summary");
+        let _ = writeln!(s, "treelut_latency_seconds{{quantile=\"0.5\"}} {}", lat.p50);
+        let _ = writeln!(s, "treelut_latency_seconds{{quantile=\"0.9\"}} {}", lat.p90);
+        let _ = writeln!(s, "treelut_latency_seconds{{quantile=\"0.99\"}} {}", lat.p99);
+        let _ = writeln!(s, "treelut_latency_seconds_count {}", lat.count);
+    }
+    s
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::sync::atomic::Ordering::Relaxed;
 
     #[test]
     fn report_math() {
@@ -426,5 +536,62 @@ mod tests {
         let rr = ServingReport::from_latencies(&[0.001; 10], 1.0, 2.0, None)
             .with_dispatch(DispatchPolicy::RoundRobin);
         assert!(rr.render().contains("dispatch=round-robin"));
+    }
+
+    #[test]
+    fn prometheus_text_renders_pool_ingress_and_model_series() {
+        let stats = ServerStats::default();
+        stats.requests.store(120, Relaxed);
+        stats.batches.store(10, Relaxed);
+        stats.rows_executed.store(110, Relaxed);
+        let ing = IngressStats::default();
+        ing.connections.store(2, Relaxed);
+        ing.accepted.store(100, Relaxed);
+        ing.throttled.store(7, Relaxed);
+        let models = vec![ModelLine {
+            name: "jsc\"v2\"".into(),
+            version: 4,
+            requests: 60,
+            rows: 58,
+            rejected: 1,
+            p99_us: Some(250.0),
+        }];
+        let lat = Summary::of(&[0.001; 100]);
+        let text = prometheus_text(&stats, 4, 3, Some(&ing), &models, Some(&lat));
+        assert!(text.contains("# TYPE treelut_requests_total counter"), "{text}");
+        assert!(text.contains("treelut_requests_total 120"), "{text}");
+        assert!(text.contains("treelut_rows_executed_total 110"), "{text}");
+        assert!(text.contains("treelut_mean_batch_rows 11"), "{text}");
+        assert!(text.contains("treelut_shards 4"), "{text}");
+        assert!(text.contains("treelut_live_shards 3"), "{text}");
+        assert!(text.contains("treelut_ingress_connections_total 2"), "{text}");
+        assert!(text.contains("treelut_ingress_accepted_total 100"), "{text}");
+        assert!(text.contains("treelut_ingress_nacks_total{code=\"throttled\"} 7"), "{text}");
+        assert!(text.contains("treelut_ingress_nacks_total{code=\"malformed\"} 0"), "{text}");
+        // Label values are escaped, so quoted model names stay parseable.
+        assert!(
+            text.contains("treelut_model_requests_total{model=\"jsc\\\"v2\\\"\"} 60"),
+            "{text}"
+        );
+        assert!(text.contains("treelut_model_p99_seconds{model=\"jsc\\\"v2\\\"\"} 0.00025"), "{text}");
+        assert!(text.contains("treelut_latency_seconds{quantile=\"0.99\"} 0.001"), "{text}");
+        assert!(text.contains("treelut_latency_seconds_count 100"), "{text}");
+        // Every series line is exposition-format shaped: `name{...} value`
+        // or `name value`, no stray tokens.
+        for line in text.lines().filter(|l| !l.starts_with('#')) {
+            let (series, value) = line.rsplit_once(' ').expect(line);
+            assert!(series.starts_with("treelut_"), "{line}");
+            assert!(value.parse::<f64>().is_ok(), "{line}");
+        }
+    }
+
+    #[test]
+    fn prometheus_text_without_optional_sections_is_pool_only() {
+        let stats = ServerStats::default();
+        let text = prometheus_text(&stats, 1, 1, None, &[], None);
+        assert!(text.contains("treelut_requests_total 0"), "{text}");
+        assert!(!text.contains("treelut_ingress_"), "{text}");
+        assert!(!text.contains("treelut_model_"), "{text}");
+        assert!(!text.contains("treelut_latency_seconds"), "{text}");
     }
 }

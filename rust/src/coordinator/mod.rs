@@ -23,6 +23,12 @@
 //! hot swap gated by the static equivalence checker, elastic
 //! [`Server::resize`]).
 //!
+//! The network front door is [`ingress`]: a non-blocking length-prefixed
+//! TCP listener that decodes framed rows into the same submit path, with
+//! a per-tenant admission ladder (token bucket, in-flight caps) whose
+//! refusals are typed NACK frames, a zero-loss drain protocol, and a
+//! Prometheus `/metrics` side listener (DESIGN.md §12).
+//!
 //! The coordinator is generic over [`BatchExecutor`] so unit tests run
 //! against a deterministic mock and the serving path runs against
 //! [`FlatExecutor`] (the flat-forest CPU engine), [`NetlistExecutor`]
@@ -33,6 +39,7 @@
 //! a virtual clock so overload and chaos scenarios are deterministic.
 
 pub mod batcher;
+pub mod ingress;
 pub mod metrics;
 pub mod netlist_exec;
 pub mod registry;
@@ -42,6 +49,10 @@ pub mod testing;
 pub use batcher::{
     AutoScaler, BatchPolicy, Clock, DispatchPolicy, OverloadPolicy, Reply, ScalePolicy, Server,
     ServerStats, SubmitError, WallClock,
+};
+pub use ingress::{
+    AdmissionConfig, Conn, FrameClient, Ingress, IngressBackend, IngressStats, MetricsServer,
+    NackCode, Response,
 };
 pub use metrics::{CoalesceReport, ModelLine, ServingReport};
 pub use netlist_exec::{

@@ -30,7 +30,10 @@
 //! (grow = spawn fresh labeled queues, shrink = close + drain + re-dispatch
 //! stragglers), optionally driven by [`super::batcher::AutoScaler`].
 
-use super::batcher::{rlock, wlock, BatchPolicy, Clock, DispatchPolicy, Reply, Server, ServerStats, WallClock};
+use super::batcher::{
+    recv_reply, rlock, wlock, BatchPolicy, Clock, DispatchPolicy, Reply, Server, ServerStats,
+    WallClock,
+};
 use super::metrics::ModelLine;
 use super::netlist_exec::{CompiledNetlist, LaneStats};
 use super::BatchExecutor;
@@ -273,10 +276,14 @@ impl ModelRegistry {
         let slot = self.slot(model)?;
         if row.len() != slot.n_features || 1 + slot.n_features > width {
             slot.stats.rejected.fetch_add(1, Ordering::Relaxed);
+            // `want` is the model's true feature contract. Clamping it to
+            // the observed pool width (as this once did) made the error
+            // report a number the model never asked for — exactly the
+            // figure the caller needs to fix their row.
             return Err(RegistryError::WidthMismatch {
                 model,
                 got: row.len(),
-                want: slot.n_features.min(width.saturating_sub(1)),
+                want: slot.n_features,
             });
         }
         slot.stats.requests.fetch_add(1, Ordering::Relaxed);
@@ -499,10 +506,11 @@ impl RegistryServer {
         self.server.submit(tagged)
     }
 
-    /// Blocking convenience: submit and wait for the reply.
+    /// Blocking convenience: submit and wait for the reply. A pool torn
+    /// down between submit and reply surfaces as the typed
+    /// [`super::batcher::SubmitError::ShutDown`].
     pub fn classify(&self, model: ModelId, row: &[u16]) -> anyhow::Result<Reply> {
-        let rx = self.submit(model, row)?;
-        rx.recv().map_err(|_| anyhow::anyhow!("server dropped the reply channel"))?
+        recv_reply(&self.submit(model, row)?)
     }
 
     /// Hot-swap `model` to `new` under live traffic (see
@@ -627,6 +635,9 @@ mod tests {
         let err = reg.tagged_row(0, &[0], 3).unwrap_err();
         assert_eq!(err, RegistryError::WidthMismatch { model: 0, got: 1, want: 2 });
         assert_eq!(reg.stats(0).unwrap().rejected.load(Ordering::Relaxed), 1);
+        // The rendered message must quote the model's true contract — the
+        // number the caller needs to fix their row.
+        assert_eq!(err.to_string(), "model 0: row has 1 features, model expects 2");
         // Swap cannot change the feature contract.
         struct Mono;
         impl ArtifactEngine for Mono {
@@ -644,6 +655,33 @@ mod tests {
             *err.downcast_ref::<RegistryError>().expect("typed error"),
             RegistryError::SwapWidthMismatch { model: 0, got: 1, want: 2 }
         );
+    }
+
+    #[test]
+    fn width_mismatch_reports_the_models_contract_not_the_clamped_width() {
+        // Regression: `want` was clamped to `width - 1`, so a pool row
+        // width *narrower* than the model's contract made the error quote
+        // the pool's width instead of the feature count the model expects.
+        let reg = ModelRegistry::new();
+        struct Wide;
+        impl ArtifactEngine for Wide {
+            fn n_features(&self) -> usize {
+                5
+            }
+            fn predict_batch(&self, rows: &[&[u16]]) -> anyhow::Result<Vec<u32>> {
+                Ok(vec![0; rows.len()])
+            }
+        }
+        reg.register("wide", ModelArtifact::Engine(Arc::new(Wide))).unwrap();
+        // Correct row, but a width that cannot hold tag + 5 features: the
+        // clamped report would have claimed "model expects 2".
+        let err = reg.tagged_row(0, &[1, 2, 3, 4, 5], 3).unwrap_err();
+        assert_eq!(err, RegistryError::WidthMismatch { model: 0, got: 5, want: 5 });
+        assert_eq!(err.to_string(), "model 0: row has 5 features, model expects 5");
+        // Too-narrow row against an adequate width: same true contract.
+        let err = reg.tagged_row(0, &[1, 2], 6).unwrap_err();
+        assert_eq!(err, RegistryError::WidthMismatch { model: 0, got: 2, want: 5 });
+        assert_eq!(err.to_string(), "model 0: row has 2 features, model expects 5");
     }
 
     #[test]

@@ -30,6 +30,7 @@
 use super::batcher::{
     BatchPolicy, Clock, DispatchPolicy, Job, OverloadPolicy, Reply, Server, SubmitError,
 };
+use super::ingress;
 use super::registry::{ModelArtifact, ModelId, ModelRegistry, RegistryExecutor, SwapCheck};
 use super::{BatchExecutor, LaneExecutor};
 use crate::util::Rng;
@@ -505,13 +506,15 @@ impl LoadOutcome {
         self.ok.iter().map(|(_, r)| r.latency).collect()
     }
 
-    /// Nearest-rank p99 of served-job latency.
+    /// Nearest-rank p99 of served-job latency — the same definition the
+    /// metrics layer quotes ([`crate::util::stats::nearest_rank_index`]),
+    /// so a harness assertion and a `ServingReport` agree on the figure.
     pub fn p99_latency(&self) -> Duration {
         let mut lats = self.latencies();
         lats.sort_unstable();
-        match lats.len() {
-            0 => Duration::ZERO,
-            n => lats[((n as f64 - 1.0) * 0.99).round() as usize],
+        match crate::util::stats::nearest_rank_index(lats.len(), 0.99) {
+            None => Duration::ZERO,
+            Some(idx) => lats[idx],
         }
     }
 
@@ -959,6 +962,133 @@ impl Harness {
     }
 }
 
+/// The harness is an [`ingress::IngressBackend`], so the ingress protocol
+/// state machine can be driven on virtual time: registry pools route the
+/// frame's tenant as a model id, plain pools accept only tenant 0 (the
+/// same contract as the real TCP backends). Submission goes through
+/// [`Harness::submit_row`]/[`Harness::submit_model`], keeping the
+/// driver-side quiescence discipline.
+impl ingress::IngressBackend for Harness {
+    fn submit_tenant_row(
+        &self,
+        tenant: u16,
+        features: &[u16],
+    ) -> anyhow::Result<mpsc::Receiver<anyhow::Result<Reply>>> {
+        match &self.registry {
+            Some(_) => self.submit_model(tenant as usize, features),
+            None => {
+                if tenant != 0 {
+                    return Err(anyhow::Error::new(super::registry::RegistryError::UnknownModel {
+                        model: tenant as usize,
+                    }));
+                }
+                self.submit_row(features.to_vec())
+            }
+        }
+    }
+}
+
+/// The deterministic connection model for ingress scenarios: one scripted
+/// client plus its server-side [`ingress::Conn`] state machine, driven on
+/// the harness's virtual clock. Frame arrivals (including partial ones),
+/// client reads (including slow-reader windows), and disconnects are
+/// explicit script steps, so every byte-level interleaving — reassembly,
+/// backpressure, mid-batch disconnect — replays identically.
+pub struct SimConn {
+    pub conn: ingress::Conn,
+    /// Wire bytes the simulated client has read but not yet decoded.
+    client_rx: Vec<u8>,
+    /// Responses decoded by the client, in wire order.
+    pub responses: Vec<ingress::Response>,
+    /// Bytes the client reads per [`SimConn::turn`] — shrink to model a
+    /// slow reader.
+    pub read_window: usize,
+}
+
+impl SimConn {
+    pub fn new(id: u64) -> SimConn {
+        SimConn {
+            conn: ingress::Conn::new(id),
+            client_rx: Vec::new(),
+            responses: Vec::new(),
+            read_window: usize::MAX,
+        }
+    }
+
+    /// Client sends raw bytes at the current virtual time (any framing:
+    /// a partial frame just accumulates server-side).
+    pub fn send(&mut self, h: &Harness, ing: &ingress::Ingress, bytes: &[u8]) {
+        self.conn.feed(ing, h, bytes, h.clock.now());
+    }
+
+    /// Client sends one complete submit frame.
+    pub fn send_frame(
+        &mut self,
+        h: &Harness,
+        ing: &ingress::Ingress,
+        req_id: u64,
+        tenant: u16,
+        features: &[u16],
+    ) {
+        let mut f = Vec::new();
+        ingress::encode_submit(&mut f, req_id, tenant, features);
+        self.send(h, ing, &f);
+    }
+
+    /// One transport turn at the current virtual time: collect finished
+    /// replies, resume any watermark-paused parsing, then read up to
+    /// [`SimConn::read_window`] output bytes and decode them client-side.
+    pub fn turn(&mut self, h: &Harness, ing: &ingress::Ingress) {
+        let now = h.clock.now();
+        self.conn.poll(ing, now);
+        self.conn.pump(ing, h, now);
+        let chunk = self.conn.take_output(self.read_window);
+        self.client_rx.extend(chunk);
+        self.responses
+            .extend(ingress::decode_responses(&mut self.client_rx).expect("wire corruption"));
+    }
+
+    /// Advance virtual time (1 ms hops) and take transport turns until the
+    /// client holds at least `want` responses. Panics if they never come.
+    pub fn settle(&mut self, h: &Harness, ing: &ingress::Ingress, want: usize) {
+        for _ in 0..10_000 {
+            self.turn(h, ing);
+            if self.responses.len() >= want {
+                return;
+            }
+            h.advance(Duration::from_millis(1));
+        }
+        panic!(
+            "connection never settled: {} of {want} responses by virtual {:?} ({:?})",
+            self.responses.len(),
+            h.clock.now(),
+            self.responses
+        );
+    }
+
+    /// `(req_id, class)` of every reply decoded so far.
+    pub fn replies(&self) -> Vec<(u64, u32)> {
+        self.responses
+            .iter()
+            .filter_map(|r| match r {
+                ingress::Response::Reply { req_id, class, .. } => Some((*req_id, *class)),
+                ingress::Response::Nack { .. } => None,
+            })
+            .collect()
+    }
+
+    /// `(req_id, code)` of every NACK decoded so far.
+    pub fn nacks(&self) -> Vec<(u64, ingress::NackCode)> {
+        self.responses
+            .iter()
+            .filter_map(|r| match r {
+                ingress::Response::Nack { req_id, code, .. } => Some((*req_id, *code)),
+                ingress::Response::Reply { .. } => None,
+            })
+            .collect()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1045,6 +1175,36 @@ mod tests {
         assert_eq!(out.reply(1).unwrap().latency, Duration::ZERO);
         let log = h.shutdown_draining();
         assert!(log.iter().any(|b| b.shard == 0 && b.done == Duration::from_millis(7)));
+    }
+
+    #[test]
+    fn harness_p99_matches_metrics_layer_definition() {
+        // Both layers must quote the same nearest-rank element for the
+        // same sample — including the sizes where the old per-site
+        // formulas could disagree (n = 1, 2, 100, 101).
+        for n in [1usize, 2, 100, 101] {
+            let out = LoadOutcome {
+                ok: (0..n)
+                    .map(|i| {
+                        let r = Reply {
+                            class: 0,
+                            latency: Duration::from_micros(i as u64 + 1),
+                        };
+                        (i as u16, r)
+                    })
+                    .collect(),
+                ..LoadOutcome::default()
+            };
+            let secs: Vec<f64> =
+                out.latencies().iter().map(|d| d.as_secs_f64()).collect();
+            let summary = crate::util::Summary::of(&secs);
+            assert!(
+                (out.p99_latency().as_secs_f64() - summary.p99).abs() < 1e-12,
+                "n={n}: harness p99 {:?} != metrics p99 {:?}",
+                out.p99_latency(),
+                summary.p99
+            );
+        }
     }
 
     #[test]

@@ -65,6 +65,10 @@
 
 use std::path::PathBuf;
 
+use treelut::coordinator::ingress::{
+    self, AdmissionConfig, FrameClient, Ingress, MetricsServer, Response,
+};
+use treelut::coordinator::metrics::prometheus_text;
 use treelut::coordinator::{
     BatchPolicy, CompiledNetlist, DispatchPolicy, FlatExecutor, LaneStats, ModelArtifact,
     ModelRegistry, NetlistMeta, OverloadPolicy, RegistryServer, Server, ServingReport,
@@ -89,6 +93,7 @@ const USAGE: &str = "usage: treelut <flow|train|datasets|serve|lint|equiv> [opti
   datasets
   serve     [--config jsc] [--requests N] [--rps R] [--rows N] [--max-wait-us U] [--shards S] [--dispatch round-robin|p2c] [--executor auto|flat|netlist] [--coalesce] [--verify] [--no-optimize] [--queue-cap C] [--overload block|shed-new|shed-oldest]
             [--models a.txt,b.txt [--swap-mid FILE [--check-equiv]] [--resize-mid S]]
+            [--listen ADDR (requires --models)] [--metrics-addr ADDR] [--tenant-rps R] [--tenant-burst B] [--conn-inflight N]
   lint      [--fixtures] [--equiv] [--config <mnist|jsc|nid> [--variant I|II] [--rows N] [--seed S]]
   equiv";
 
@@ -379,7 +384,24 @@ fn cmd_serve(mut args: Args) -> anyhow::Result<()> {
     let swap_mid = args.opt("swap-mid");
     let check_equiv = args.flag("check-equiv");
     let resize_mid = args.get_as::<usize>("resize-mid", 0);
+    let listen = args.opt("listen");
+    let metrics_addr = args.opt("metrics-addr");
+    // 0 = unlimited, matching the library's "throttling off" sentinels.
+    let tenant_rps = match args.get_as::<f64>("tenant-rps", 0.0) {
+        r if r <= 0.0 => f64::INFINITY,
+        r => r,
+    };
+    let tenant_burst = args.get_as::<f64>("tenant-burst", 256.0);
+    let conn_inflight = match args.get_as::<usize>("conn-inflight", 0) {
+        0 => usize::MAX,
+        n => n,
+    };
+    let admission = AdmissionConfig { tenant_rps, tenant_burst, conn_inflight };
     args.finish()?;
+    anyhow::ensure!(
+        listen.is_none() || models.is_some(),
+        "--listen serves the multi-tenant registry pool; pass --models"
+    );
     anyhow::ensure!(
         models.is_none() || executor == "auto",
         "--models serves registry artifacts through its own executor; drop --executor"
@@ -414,6 +436,9 @@ fn cmd_serve(mut args: Args) -> anyhow::Result<()> {
             policy,
             shards,
             dispatch,
+            listen.as_deref(),
+            metrics_addr.as_deref(),
+            admission,
         );
     }
 
@@ -533,6 +558,21 @@ fn cmd_serve(mut args: Args) -> anyhow::Result<()> {
         },
     };
 
+    // Optional Prometheus side listener: live pool counters per scrape.
+    let metrics = match metrics_addr.as_deref() {
+        Some(addr) => {
+            let stats = server.stats_handle();
+            let (n, live) = (server.n_shards(), server.live_shards());
+            let ms = MetricsServer::spawn(
+                addr,
+                std::sync::Arc::new(move || prometheus_text(&stats, n, live, None, &[], None)),
+            )?;
+            eprintln!("metrics: http://{}/metrics", ms.addr);
+            Some(ms)
+        }
+        None => None,
+    };
+
     let mut rng = Rng::new(3);
     let t0 = Timer::start();
     let mut pending = Vec::with_capacity(n_requests);
@@ -593,6 +633,9 @@ fn cmd_serve(mut args: Args) -> anyhow::Result<()> {
         });
     }
     println!("{}", report.render());
+    if let Some(ms) = metrics {
+        ms.shutdown();
+    }
     server.shutdown();
     Ok(())
 }
@@ -609,18 +652,22 @@ fn load_flat_artifact(path: &str) -> anyhow::Result<(String, ModelArtifact)> {
     Ok((name, ModelArtifact::Flat(std::sync::Arc::new(forest))))
 }
 
-/// Nearest-rank p99 in microseconds over per-reply latencies (seconds).
+/// Nearest-rank p99 in microseconds over per-reply latencies (seconds) —
+/// the same `⌈q·n⌉` rank the metrics-layer `Summary` and the harness
+/// quote, via the one shared helper.
 fn p99_us(lats: &mut [f64]) -> Option<f64> {
     if lats.is_empty() {
         return None;
     }
-    lats.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
-    Some(lats[((lats.len() as f64 - 1.0) * 0.99).round() as usize] * 1e6)
+    lats.sort_unstable_by(f64::total_cmp);
+    Some(treelut::util::stats::percentile_sorted(lats, 0.99) * 1e6)
 }
 
 /// `serve --models a.txt,b.txt`: mixed-tenant load over a multi-model
 /// registry, with optional mid-run hot swap (`--swap-mid`, gated by
-/// `--check-equiv`) and elastic resize (`--resize-mid`).
+/// `--check-equiv`) and elastic resize (`--resize-mid`). With `--listen`,
+/// the load runs over real loopback TCP through the framed ingress
+/// instead of in-process submits.
 #[allow(clippy::too_many_arguments)]
 fn serve_registry(
     models: &str,
@@ -632,6 +679,9 @@ fn serve_registry(
     policy: BatchPolicy,
     shards: usize,
     dispatch: DispatchPolicy,
+    listen: Option<&str>,
+    metrics_addr: Option<&str>,
+    admission: AdmissionConfig,
 ) -> anyhow::Result<()> {
     let registry = std::sync::Arc::new(ModelRegistry::new());
     for path in models.split(',').filter(|p| !p.is_empty()) {
@@ -644,6 +694,40 @@ fn serve_registry(
     }
     let server = RegistryServer::start(std::sync::Arc::clone(&registry), policy, shards, dispatch)?;
     let n_models = registry.len();
+
+    if let Some(addr) = listen {
+        anyhow::ensure!(
+            swap_mid.is_none() && resize_mid == 0,
+            "--listen does not combine with --swap-mid/--resize-mid (mid-run dynamics are \
+             exercised by the in-process path)"
+        );
+        return serve_listen(
+            &registry,
+            server,
+            addr,
+            metrics_addr,
+            admission,
+            n_requests,
+            offered_rps,
+        );
+    }
+
+    let metrics = match metrics_addr {
+        Some(addr) => {
+            let stats = server.server().stats_handle();
+            let (n, live) = (server.server().n_shards(), server.server().live_shards());
+            let reg = std::sync::Arc::clone(&registry);
+            let ms = MetricsServer::spawn(
+                addr,
+                std::sync::Arc::new(move || {
+                    prometheus_text(&stats, n, live, None, &reg.model_lines(), None)
+                }),
+            )?;
+            eprintln!("metrics: http://{}/metrics", ms.addr);
+            Some(ms)
+        }
+        None => None,
+    };
 
     let mut rng = Rng::new(3);
     let t0 = Timer::start();
@@ -719,6 +803,190 @@ fn serve_registry(
     )
     .with_models(lines);
     println!("{}", report.render());
+    if let Some(ms) = metrics {
+        ms.shutdown();
+    }
     server.shutdown();
     Ok(())
+}
+
+/// `serve --models ... --listen ADDR`: the registry pool behind the real
+/// TCP ingress, driven by loopback self-clients — one framed connection
+/// per tenant, open-loop Poisson arrivals — then a graceful drain, a
+/// bit-exactness spot check of TCP replies against in-process
+/// classification, and (with `--metrics-addr`) a `/metrics` self-scrape.
+fn serve_listen(
+    registry: &std::sync::Arc<ModelRegistry>,
+    server: RegistryServer,
+    addr: &str,
+    metrics_addr: Option<&str>,
+    admission: AdmissionConfig,
+    n_requests: usize,
+    offered_rps: f64,
+) -> anyhow::Result<()> {
+    use std::io::Write as _;
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::sync::Arc;
+
+    let listener = std::net::TcpListener::bind(addr)?;
+    let local = listener.local_addr()?;
+    let n_models = registry.len();
+    let ing = Arc::new(Ingress::new(admission));
+    let backend = Arc::new(server);
+    let stats = backend.server().stats_handle();
+    let (n_shards, dispatch) = (backend.server().n_shards(), backend.server().dispatch());
+
+    let metrics = match metrics_addr {
+        Some(maddr) => {
+            let (stats, ing_stats) = (Arc::clone(&stats), Arc::clone(&ing.stats));
+            let reg = Arc::clone(registry);
+            let live = backend.server().live_shards();
+            let ms = MetricsServer::spawn(
+                maddr,
+                Arc::new(move || {
+                    prometheus_text(
+                        &stats,
+                        n_shards,
+                        live,
+                        Some(&ing_stats),
+                        &reg.model_lines(),
+                        None,
+                    )
+                }),
+            )?;
+            eprintln!("metrics: http://{}/metrics", ms.addr);
+            Some(ms)
+        }
+        None => None,
+    };
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let lt = {
+        let (backend, ing, stop) =
+            (Arc::clone(&backend) as Arc<dyn ingress::IngressBackend>, Arc::clone(&ing), Arc::clone(&stop));
+        std::thread::spawn(move || ingress::run_listener(listener, backend, ing, stop))
+    };
+    eprintln!("listening on {local} ({n_models} tenants)");
+
+    // One self-client per tenant: a writer thread streams framed rows at
+    // the tenant's Poisson rate over a cloned socket while the reader
+    // collects every reply/NACK — real bytes over real loopback TCP.
+    let per_tenant = n_requests / n_models.max(1);
+    let tenant_rps = offered_rps / n_models.max(1) as f64;
+    let t0 = Timer::start();
+    let mut clients = Vec::new();
+    for tenant in 0..n_models {
+        let nf = registry.n_features(tenant).unwrap_or(0);
+        let mut rng = Rng::new(11 + tenant as u64);
+        let rows: Vec<Vec<u16>> = (0..per_tenant)
+            .map(|_| (0..nf).map(|_| (rng.next_u64() & 0xf) as u16).collect())
+            .collect();
+        clients.push(std::thread::spawn(move || -> anyhow::Result<ClientOutcome> {
+            let mut client = FrameClient::connect(local)?;
+            let mut wstream = client.stream().try_clone()?;
+            let rows_w = rows.clone();
+            let writer = std::thread::spawn(move || -> anyhow::Result<()> {
+                let mut rng = Rng::new(101 + tenant as u64);
+                let mut frame = Vec::new();
+                for (i, row) in rows_w.iter().enumerate() {
+                    std::thread::sleep(std::time::Duration::from_secs_f64(rng.exp(tenant_rps)));
+                    frame.clear();
+                    ingress::encode_submit(&mut frame, i as u64, tenant as u16, row);
+                    wstream.write_all(&frame)?;
+                }
+                Ok(())
+            });
+            let mut out = ClientOutcome { rows, ..ClientOutcome::default() };
+            for _ in 0..per_tenant {
+                match client.recv()? {
+                    Response::Reply { req_id, class, latency_us } => {
+                        out.lat_secs.push(latency_us as f64 * 1e-6);
+                        out.classes.push((req_id, class));
+                    }
+                    Response::Nack { .. } => out.nacks += 1,
+                }
+            }
+            writer.join().expect("writer panicked")?;
+            Ok(out)
+        }));
+    }
+    let outcomes: Vec<ClientOutcome> = clients
+        .into_iter()
+        .map(|h| h.join().expect("client panicked"))
+        .collect::<anyhow::Result<_>>()?;
+    let wall = t0.secs();
+
+    // Graceful drain: stop accepting, flush accepted rows, reply, close.
+    stop.store(true, Ordering::Relaxed);
+    let served = lt.join().expect("listener panicked")?;
+
+    // Bit-exactness spot check: TCP replies must match what the pool
+    // answers in-process for the same rows (the ingress is still alive —
+    // only its drain gate is shut; in-process submits bypass it).
+    let mut checked = 0usize;
+    for (tenant, out) in outcomes.iter().enumerate() {
+        for &(req_id, class) in out.classes.iter().take(32) {
+            let again = backend.classify(tenant, &out.rows[req_id as usize])?;
+            anyhow::ensure!(
+                again.class == class,
+                "tenant {tenant} req {req_id}: TCP reply class {class} != in-process {}",
+                again.class
+            );
+            checked += 1;
+        }
+    }
+
+    let mut lats: Vec<f64> = Vec::new();
+    let mut per_model: Vec<Vec<f64>> = vec![Vec::new(); n_models];
+    let mut nacks = 0u64;
+    for (tenant, out) in outcomes.iter().enumerate() {
+        lats.extend_from_slice(&out.lat_secs);
+        per_model[tenant].extend_from_slice(&out.lat_secs);
+        nacks += out.nacks;
+    }
+    let mut lines = registry.model_lines();
+    for (id, line) in lines.iter_mut().enumerate() {
+        line.p99_us = p99_us(&mut per_model[id]);
+    }
+    let report = ServingReport::from_latencies(&lats, wall, stats.mean_batch(), Some(offered_rps))
+        .with_shards(n_shards)
+        .with_dispatch(dispatch)
+        .with_executor("registry+tcp")
+        .with_admission(
+            stats.sheds.load(Ordering::Relaxed),
+            stats.queue_full.load(Ordering::Relaxed),
+            stats.redirects.load(Ordering::Relaxed),
+        )
+        .with_models(lines);
+    println!("{}", report.render());
+    println!(
+        "ingress: conns={served} frames={} accepted={} replied={} nacked={nacks} \
+         bitexact=ok ({checked} checked)",
+        ing.stats.frames.load(Ordering::Relaxed),
+        ing.stats.accepted.load(Ordering::Relaxed),
+        ing.stats.replied.load(Ordering::Relaxed),
+    );
+
+    if let Some(ms) = metrics {
+        let maddr = ms.addr.to_string();
+        let body = ingress::scrape_metrics(&maddr)?;
+        println!(
+            "metrics: {} series at http://{maddr}/metrics",
+            body.lines().filter(|l| !l.starts_with('#') && !l.is_empty()).count()
+        );
+        ms.shutdown();
+    }
+    let server = Arc::try_unwrap(backend)
+        .map_err(|_| anyhow::anyhow!("listener still holds the pool"))?;
+    server.shutdown();
+    Ok(())
+}
+
+/// What one tenant's loopback self-client observed.
+#[derive(Default)]
+struct ClientOutcome {
+    rows: Vec<Vec<u16>>,
+    lat_secs: Vec<f64>,
+    classes: Vec<(u64, u32)>,
+    nacks: u64,
 }

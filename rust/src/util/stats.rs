@@ -56,13 +56,28 @@ impl Summary {
     }
 }
 
+/// The one nearest-rank definition every layer quotes (`Summary`, the
+/// harness's `LoadOutcome::p99_latency`, the CLI's per-model p99): for a
+/// sorted sample of `n` elements, the `q`-quantile is the element of rank
+/// `⌈q·n⌉` (1-indexed) — the smallest value with at least a `q` fraction
+/// of the sample at or below it. Returns the 0-based index, or `None` for
+/// an empty sample. Keeping a single index function (rather than one
+/// formula per call site) is what stops the harness and `ServingReport`
+/// from drifting to different p99s for the same latencies.
+pub fn nearest_rank_index(n: usize, q: f64) -> Option<usize> {
+    if n == 0 {
+        return None;
+    }
+    let rank = (q * n as f64).ceil() as usize;
+    Some(rank.clamp(1, n) - 1)
+}
+
 /// Nearest-rank percentile on pre-sorted data, `q` in `[0, 1]`.
 pub fn percentile_sorted(sorted: &[f64], q: f64) -> f64 {
-    if sorted.is_empty() {
-        return 0.0;
+    match nearest_rank_index(sorted.len(), q) {
+        None => 0.0,
+        Some(idx) => sorted[idx],
     }
-    let idx = ((sorted.len() as f64 - 1.0) * q).round() as usize;
-    sorted[idx.min(sorted.len() - 1)]
 }
 
 /// Geometric mean of positive values (used for area-delay ratio summaries).
@@ -124,5 +139,36 @@ mod tests {
     #[test]
     fn percentile_single() {
         assert_eq!(percentile_sorted(&[7.0], 0.99), 7.0);
+    }
+
+    #[test]
+    fn nearest_rank_pinned_at_boundary_sizes() {
+        // n = 1: every quantile is the only element.
+        assert_eq!(nearest_rank_index(1, 0.5), Some(0));
+        assert_eq!(nearest_rank_index(1, 0.99), Some(0));
+        // n = 2: rank ⌈0.99·2⌉ = 2 → the larger element; the median is
+        // rank ⌈0.5·2⌉ = 1 → the smaller.
+        assert_eq!(nearest_rank_index(2, 0.99), Some(1));
+        assert_eq!(nearest_rank_index(2, 0.5), Some(0));
+        // n = 100: p99 is rank 99 (index 98) — NOT the max.
+        assert_eq!(nearest_rank_index(100, 0.99), Some(98));
+        assert_eq!(nearest_rank_index(100, 0.5), Some(49));
+        // n = 101: rank ⌈99.99⌉ = 100 (index 99) — still not the max.
+        assert_eq!(nearest_rank_index(101, 0.99), Some(99));
+        // Degenerate quantiles stay in range.
+        assert_eq!(nearest_rank_index(10, 0.0), Some(0));
+        assert_eq!(nearest_rank_index(10, 1.0), Some(9));
+        assert_eq!(nearest_rank_index(0, 0.99), None);
+    }
+
+    #[test]
+    fn percentile_sorted_matches_index_helper() {
+        for n in [1usize, 2, 100, 101] {
+            let data: Vec<f64> = (1..=n).map(|i| i as f64).collect();
+            for q in [0.5, 0.9, 0.99] {
+                let want = data[nearest_rank_index(n, q).unwrap()];
+                assert_eq!(percentile_sorted(&data, q), want, "n={n} q={q}");
+            }
+        }
     }
 }

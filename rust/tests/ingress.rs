@@ -1,0 +1,538 @@
+//! Network-ingress integration tests.
+//!
+//! The `conn_model_*` scenarios drive the protocol state machine
+//! (`coordinator::ingress::Conn`) through the deterministic connection
+//! model (`coordinator::testing::SimConn`) on the virtual clock: scripted
+//! frame arrivals, byte-level partial reads, slow-reader windows,
+//! admission rejects, drain, and mid-batch disconnects replay
+//! identically on every run — no sockets, no wall-clock races.
+//!
+//! The `loopback_*` scenarios then run the identical protocol over real
+//! TCP: `run_listener` serving a multi-tenant registry pool, framed
+//! clients on 127.0.0.1, bit-exactness of TCP replies against in-process
+//! submission, NACK behavior on malformed frames and admission rejects,
+//! and the zero-accepted-row-loss drain.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use treelut::coordinator::ingress::{
+    self, AdmissionConfig, FrameClient, Ingress, NackCode, Response,
+};
+use treelut::coordinator::testing::{
+    scripted_class, ChaosPlan, Harness, HarnessConfig, ServiceModel, SimConn,
+};
+use treelut::coordinator::{
+    ArtifactEngine, BatchPolicy, DispatchPolicy, ModelArtifact, ModelRegistry, OverloadPolicy,
+    RegistryServer,
+};
+
+const MS: Duration = Duration::from_millis(1);
+
+fn default_ingress() -> Ingress {
+    Ingress::new(AdmissionConfig::default())
+}
+
+// ---------------------------------------------------------------------------
+// Virtual-clock connection model
+// ---------------------------------------------------------------------------
+
+#[test]
+fn conn_model_partial_frame_reassembly_is_bit_exact() {
+    let h = Harness::start(HarnessConfig::default());
+    let ing = default_ingress();
+    let mut c = SimConn::new(0);
+
+    // Ten frames concatenated, then delivered in 7-byte slivers across
+    // virtual time — every length prefix and payload straddles a read.
+    let rows: Vec<Vec<u16>> = (0..10u16).map(|i| vec![i, 2 * i]).collect();
+    let mut wire = Vec::new();
+    for (i, row) in rows.iter().enumerate() {
+        ingress::encode_submit(&mut wire, i as u64, 0, row);
+    }
+    for chunk in wire.chunks(7) {
+        c.send(&h, &ing, chunk);
+        h.advance(MS);
+    }
+    c.settle(&h, &ing, 10);
+
+    assert_eq!(c.nacks(), vec![]);
+    let mut replies = c.replies();
+    replies.sort_unstable();
+    // Bit-exact against both the scripted contract and a fresh in-process
+    // submit of the same rows.
+    for (req_id, class) in replies {
+        let row = &rows[req_id as usize];
+        assert_eq!(class, scripted_class(row), "req {req_id}");
+        let rx = h.submit_row(row.clone()).unwrap();
+        assert_eq!(h.recv(&rx).unwrap().class, class, "req {req_id} vs in-process");
+    }
+    assert_eq!(ing.stats.accepted.load(Ordering::Relaxed), 10);
+    assert_eq!(ing.stats.replied.load(Ordering::Relaxed), 10);
+    h.shutdown_draining();
+}
+
+#[test]
+fn conn_model_malformed_frames_nack_without_killing_the_connection() {
+    let h = Harness::start(HarnessConfig::default());
+    let ing = default_ingress();
+    let mut c = SimConn::new(0);
+
+    // Unknown frame kind with a recoverable request id.
+    let mut bad = Vec::new();
+    bad.extend_from_slice(&9u32.to_le_bytes());
+    bad.push(42);
+    bad.extend_from_slice(&77u64.to_le_bytes());
+    c.send(&h, &ing, &bad);
+    // Oversized declared length: discarded by resync, never buffered.
+    let huge = ingress::MAX_FRAME + 9;
+    let mut over = Vec::new();
+    over.extend_from_slice(&(huge as u32).to_le_bytes());
+    over.extend_from_slice(&vec![0xab; huge]);
+    c.send(&h, &ing, &over);
+    // Wrong tenant on a single-model pool, wrong width on tenant 0.
+    c.send_frame(&h, &ing, 78, 5, &[1, 2]);
+    c.send_frame(&h, &ing, 79, 0, &[1, 2, 3]);
+    // The connection still serves.
+    c.send_frame(&h, &ing, 80, 0, &[3, 4]);
+    c.settle(&h, &ing, 5);
+
+    assert_eq!(
+        c.nacks(),
+        vec![
+            (77, NackCode::Malformed),
+            (0, NackCode::Malformed),
+            (78, NackCode::UnknownModel),
+            (79, NackCode::WidthMismatch),
+        ]
+    );
+    assert_eq!(c.replies(), vec![(80, scripted_class(&[3, 4]))]);
+    h.shutdown_draining();
+}
+
+#[test]
+fn conn_model_token_bucket_and_inflight_cap_nack_on_admission_reject() {
+    let h = Harness::start(HarnessConfig::default());
+
+    // Per-tenant token bucket: burst 2, one token per virtual ms.
+    let ing = Ingress::new(AdmissionConfig {
+        tenant_rps: 1_000.0,
+        tenant_burst: 2.0,
+        conn_inflight: usize::MAX,
+    });
+    let mut c = SimConn::new(0);
+    for req in 0..3u64 {
+        c.send_frame(&h, &ing, req, 0, &[1, 1]);
+    }
+    h.advance(MS); // refills exactly one token
+    c.send_frame(&h, &ing, 3, 0, &[1, 1]);
+    c.send_frame(&h, &ing, 4, 0, &[1, 1]);
+    c.settle(&h, &ing, 5);
+    assert_eq!(c.nacks(), vec![(2, NackCode::Throttled), (4, NackCode::Throttled)]);
+    assert_eq!(c.replies().len(), 3);
+    assert_eq!(ing.stats.throttled.load(Ordering::Relaxed), 2);
+
+    // Per-connection in-flight cap: a second frame before the first
+    // reply is refused, and capacity returns once replies are read.
+    let ing2 = Ingress::new(AdmissionConfig { conn_inflight: 1, ..AdmissionConfig::default() });
+    let mut c2 = SimConn::new(1);
+    c2.send_frame(&h, &ing2, 10, 0, &[2, 2]);
+    c2.send_frame(&h, &ing2, 11, 0, &[2, 2]);
+    c2.settle(&h, &ing2, 2);
+    assert_eq!(c2.nacks(), vec![(11, NackCode::InflightCap)]);
+    c2.send_frame(&h, &ing2, 12, 0, &[2, 2]);
+    c2.settle(&h, &ing2, 3);
+    assert_eq!(c2.replies().len(), 2);
+    h.shutdown_draining();
+}
+
+#[test]
+fn conn_model_pool_overload_surfaces_as_typed_overloaded_nack() {
+    // One shard, one-row batches, queue capped at 1, shed-new: with one
+    // batch in service and one queued, the third frame is refused by the
+    // pool itself — the ingress must relay it as an Overloaded NACK.
+    let h = Harness::start(HarnessConfig {
+        n_shards: 1,
+        policy: BatchPolicy {
+            max_batch: 1,
+            max_wait: MS,
+            queue_cap: 1,
+            overload: OverloadPolicy::ShedNew,
+        },
+        dispatch: DispatchPolicy::RoundRobin,
+        service: ServiceModel::Fixed(Duration::from_millis(5)),
+        chaos: ChaosPlan::none(),
+    });
+    let ing = default_ingress();
+    let mut c = SimConn::new(0);
+    for req in 0..3u64 {
+        c.send_frame(&h, &ing, req, 0, &[req as u16, 0]);
+    }
+    c.settle(&h, &ing, 3);
+    assert_eq!(c.nacks(), vec![(2, NackCode::Overloaded)]);
+    let detail = c
+        .responses
+        .iter()
+        .find_map(|r| match r {
+            Response::Nack { req_id: 2, detail, .. } => Some(detail.clone()),
+            _ => None,
+        })
+        .unwrap();
+    assert!(detail.contains("shed"), "detail should carry the pool's message: {detail}");
+    // Both accepted rows still replied — overload shed work, lost none.
+    assert_eq!(c.replies().len(), 2);
+    assert_eq!(ing.stats.overloaded.load(Ordering::Relaxed), 1);
+    h.shutdown_draining();
+}
+
+#[test]
+fn conn_model_drain_rejects_new_frames_and_loses_zero_accepted_rows() {
+    let h = Harness::start(HarnessConfig {
+        service: ServiceModel::Fixed(Duration::from_millis(2)),
+        ..HarnessConfig::default()
+    });
+    let ing = default_ingress();
+    let mut c = SimConn::new(0);
+    for req in 0..5u64 {
+        c.send_frame(&h, &ing, req, 0, &[req as u16, 1]);
+    }
+    assert_eq!(ing.stats.accepted.load(Ordering::Relaxed), 5);
+
+    // Drain begins with five rows in flight: they must all reply; the
+    // frame arriving after the gate closes must NACK Draining.
+    ing.begin_drain();
+    c.send_frame(&h, &ing, 9, 0, &[9, 1]);
+    c.settle(&h, &ing, 6);
+
+    assert_eq!(c.nacks(), vec![(9, NackCode::Draining)]);
+    let mut replies = c.replies();
+    replies.sort_unstable();
+    let want: Vec<(u64, u32)> =
+        (0..5u64).map(|i| (i, scripted_class(&[i as u16, 1]))).collect();
+    assert_eq!(replies, want, "every accepted row replies, bit-exactly");
+    assert_eq!(ing.stats.replied.load(Ordering::Relaxed), 5);
+    assert_eq!(ing.stats.drain_rejects.load(Ordering::Relaxed), 1);
+    assert!(c.conn.idle(), "drained connection is idle");
+    h.shutdown_draining();
+}
+
+#[test]
+fn conn_model_mid_batch_disconnect_is_contained() {
+    let h = Harness::start(HarnessConfig {
+        service: ServiceModel::Fixed(Duration::from_millis(3)),
+        ..HarnessConfig::default()
+    });
+    let ing = default_ingress();
+
+    // Two connections share the pool; the first vanishes with requests
+    // in flight (its reply receivers drop mid-batch).
+    let mut gone = SimConn::new(0);
+    for req in 0..3u64 {
+        gone.send_frame(&h, &ing, req, 0, &[req as u16, 7]);
+    }
+    assert_eq!(gone.conn.inflight(), 3);
+    drop(gone);
+
+    let mut alive = SimConn::new(1);
+    for req in 0..3u64 {
+        alive.send_frame(&h, &ing, 100 + req, 0, &[req as u16, 8]);
+    }
+    // The pool executes the orphaned batches too; replies to dropped
+    // receivers must disappear harmlessly, not panic a worker.
+    alive.settle(&h, &ing, 3);
+    h.advance(Duration::from_millis(20));
+
+    assert_eq!(alive.nacks(), vec![]);
+    let mut replies = alive.replies();
+    replies.sort_unstable();
+    let want: Vec<(u64, u32)> =
+        (0..3u64).map(|i| (100 + i, scripted_class(&[i as u16, 8]))).collect();
+    assert_eq!(replies, want);
+    // All six rows were accepted and executed; the survivor lost nothing.
+    assert_eq!(ing.stats.accepted.load(Ordering::Relaxed), 6);
+    assert_eq!(
+        h.server.stats().rows_executed.load(Ordering::Relaxed),
+        6,
+        "orphaned rows still execute"
+    );
+    h.shutdown_draining();
+}
+
+/// Two-tenant engines for registry scenarios: distinct widths and
+/// distinct, trivially recomputable class functions.
+struct SumEngine;
+impl ArtifactEngine for SumEngine {
+    fn n_features(&self) -> usize {
+        2
+    }
+    fn predict_batch(&self, rows: &[&[u16]]) -> anyhow::Result<Vec<u32>> {
+        Ok(rows.iter().map(|r| (r[0] + r[1]) as u32).collect())
+    }
+}
+
+struct ProductEngine;
+impl ArtifactEngine for ProductEngine {
+    fn n_features(&self) -> usize {
+        3
+    }
+    fn predict_batch(&self, rows: &[&[u16]]) -> anyhow::Result<Vec<u32>> {
+        Ok(rows.iter().map(|r| (r[0] as u32) * (r[1] as u32) + r[2] as u32).collect())
+    }
+}
+
+fn two_tenant_registry() -> Arc<ModelRegistry> {
+    let reg = Arc::new(ModelRegistry::new());
+    assert_eq!(reg.register("sum", ModelArtifact::Engine(Arc::new(SumEngine))).unwrap(), 0);
+    assert_eq!(
+        reg.register("product", ModelArtifact::Engine(Arc::new(ProductEngine))).unwrap(),
+        1
+    );
+    reg
+}
+
+#[test]
+fn conn_model_slow_reader_backpressure_on_a_two_tenant_registry() {
+    let reg = two_tenant_registry();
+    let h = Harness::start_registry(
+        reg,
+        1,
+        BatchPolicy::default(),
+        DispatchPolicy::RoundRobin,
+        ChaosPlan::none(),
+    );
+    let ing = default_ingress();
+    let mut c = SimConn::new(0);
+    // A reader that takes 8 bytes per turn, against a tiny watermark:
+    // parsing must pause and resume without losing or reordering frames.
+    c.read_window = 8;
+    c.conn.out_watermark = 48;
+    for i in 0..6u64 {
+        let tenant = (i % 2) as u16;
+        match tenant {
+            0 => c.send_frame(&h, &ing, i, 0, &[i as u16, 5]),
+            _ => c.send_frame(&h, &ing, i, 1, &[i as u16, 2, 9]),
+        }
+        h.advance(MS);
+    }
+    c.settle(&h, &ing, 6);
+    assert_eq!(c.nacks(), vec![]);
+    let mut replies = c.replies();
+    replies.sort_unstable();
+    let want: Vec<(u64, u32)> = (0..6u64)
+        .map(|i| {
+            let class = if i % 2 == 0 { i as u32 + 5 } else { (i as u32) * 2 + 9 };
+            (i, class)
+        })
+        .collect();
+    assert_eq!(replies, want, "slow reader sees every reply, bit-exactly");
+    h.shutdown_draining();
+}
+
+// ---------------------------------------------------------------------------
+// Real loopback TCP
+// ---------------------------------------------------------------------------
+
+struct TcpFixture {
+    server: Arc<RegistryServer>,
+    ing: Arc<Ingress>,
+    stop: Arc<AtomicBool>,
+    listener: std::thread::JoinHandle<anyhow::Result<u64>>,
+    addr: std::net::SocketAddr,
+}
+
+/// Registry pool + real ingress listener on an ephemeral loopback port.
+fn tcp_fixture(admission: AdmissionConfig) -> TcpFixture {
+    let reg = two_tenant_registry();
+    let policy = BatchPolicy {
+        max_batch: 8,
+        max_wait: Duration::from_micros(200),
+        queue_cap: usize::MAX,
+        overload: OverloadPolicy::Block,
+    };
+    let server =
+        Arc::new(RegistryServer::start(reg, policy, 2, DispatchPolicy::P2c).unwrap());
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let ing = Arc::new(Ingress::new(admission));
+    let stop = Arc::new(AtomicBool::new(false));
+    let handle = {
+        let (backend, ing, stop) = (
+            Arc::clone(&server) as Arc<dyn ingress::IngressBackend>,
+            Arc::clone(&ing),
+            Arc::clone(&stop),
+        );
+        std::thread::spawn(move || ingress::run_listener(listener, backend, ing, stop))
+    };
+    TcpFixture { server, ing, stop, listener: handle, addr }
+}
+
+impl TcpFixture {
+    fn shutdown(self) {
+        self.stop.store(true, Ordering::Relaxed);
+        self.listener.join().unwrap().unwrap();
+        Arc::try_unwrap(self.server)
+            .unwrap_or_else(|_| panic!("listener still holds the pool"))
+            .shutdown();
+    }
+}
+
+#[test]
+fn loopback_two_tenants_are_bit_exact_vs_in_process_submit() {
+    let fx = tcp_fixture(AdmissionConfig::default());
+    let mut clients: Vec<FrameClient> =
+        (0..2).map(|_| FrameClient::connect(fx.addr).unwrap()).collect();
+
+    // Interleave 40 rows per tenant over real sockets.
+    let row_of = |tenant: u16, i: u16| -> Vec<u16> {
+        match tenant {
+            0 => vec![i % 13, i % 7],
+            _ => vec![i % 5, i % 3, i % 11],
+        }
+    };
+    for i in 0..40u16 {
+        for (tenant, client) in clients.iter_mut().enumerate() {
+            client.send(i as u64, tenant as u16, &row_of(tenant as u16, i)).unwrap();
+        }
+    }
+    for (tenant, client) in clients.iter_mut().enumerate() {
+        for _ in 0..40 {
+            match client.recv().unwrap() {
+                Response::Reply { req_id, class, .. } => {
+                    let row = row_of(tenant as u16, req_id as u16);
+                    // The acceptance bar: a TCP reply equals an
+                    // in-process submit of the same row, bit for bit.
+                    let inproc = fx.server.classify(tenant, &row).unwrap();
+                    assert_eq!(class, inproc.class, "tenant {tenant} req {req_id}");
+                }
+                nack => panic!("unexpected NACK: {nack:?}"),
+            }
+        }
+    }
+    assert_eq!(fx.ing.stats.accepted.load(Ordering::Relaxed), 80);
+    assert_eq!(fx.ing.stats.replied.load(Ordering::Relaxed), 80);
+    fx.shutdown();
+}
+
+#[test]
+fn loopback_malformed_frame_nacks_and_connection_survives() {
+    let fx = tcp_fixture(AdmissionConfig::default());
+    let mut client = FrameClient::connect(fx.addr).unwrap();
+
+    let mut bad = Vec::new();
+    bad.extend_from_slice(&9u32.to_le_bytes());
+    bad.push(200);
+    bad.extend_from_slice(&31u64.to_le_bytes());
+    client.send_raw(&bad).unwrap();
+    match client.recv().unwrap() {
+        Response::Nack { req_id: 31, code: NackCode::Malformed, .. } => {}
+        r => panic!("want Malformed NACK, got {r:?}"),
+    }
+    // Same socket, next frame: served normally.
+    client.send(32, 0, &[4, 9]).unwrap();
+    match client.recv().unwrap() {
+        Response::Reply { req_id: 32, class, .. } => assert_eq!(class, 13),
+        r => panic!("want reply, got {r:?}"),
+    }
+    fx.shutdown();
+}
+
+#[test]
+fn loopback_admission_reject_is_a_throttled_nack() {
+    // One token, effectively no refill at wall-clock test speed.
+    let fx = tcp_fixture(AdmissionConfig {
+        tenant_rps: 1e-6,
+        tenant_burst: 1.0,
+        conn_inflight: usize::MAX,
+    });
+    let mut client = FrameClient::connect(fx.addr).unwrap();
+    client.send(1, 0, &[1, 2]).unwrap();
+    client.send(2, 0, &[3, 4]).unwrap();
+    let mut got = vec![client.recv().unwrap(), client.recv().unwrap()];
+    got.sort_by_key(Response::req_id);
+    assert!(matches!(got[0], Response::Reply { req_id: 1, class: 3, .. }), "{:?}", got[0]);
+    assert!(
+        matches!(got[1], Response::Nack { req_id: 2, code: NackCode::Throttled, .. }),
+        "{:?}",
+        got[1]
+    );
+    fx.shutdown();
+}
+
+/// A [`SumEngine`] whose batches park until `go` flips — holds accepted
+/// rows in flight so the drain below provably starts with a full pool.
+struct GatedEngine {
+    go: Arc<AtomicBool>,
+}
+impl ArtifactEngine for GatedEngine {
+    fn n_features(&self) -> usize {
+        2
+    }
+    fn predict_batch(&self, rows: &[&[u16]]) -> anyhow::Result<Vec<u32>> {
+        while !self.go.load(Ordering::Relaxed) {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        Ok(rows.iter().map(|r| (r[0] + r[1]) as u32).collect())
+    }
+}
+
+#[test]
+fn loopback_drain_loses_zero_accepted_rows() {
+    let go = Arc::new(AtomicBool::new(false));
+    let reg = Arc::new(ModelRegistry::new());
+    reg.register("gated", ModelArtifact::Engine(Arc::new(GatedEngine { go: Arc::clone(&go) })))
+        .unwrap();
+    let policy = BatchPolicy {
+        max_batch: 8,
+        max_wait: Duration::from_micros(200),
+        queue_cap: usize::MAX,
+        overload: OverloadPolicy::Block,
+    };
+    let server =
+        Arc::new(RegistryServer::start(reg, policy, 2, DispatchPolicy::P2c).unwrap());
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let ing = Arc::new(Ingress::new(AdmissionConfig::default()));
+    let stop = Arc::new(AtomicBool::new(false));
+    let lt = {
+        let (backend, ing, stop) = (
+            Arc::clone(&server) as Arc<dyn ingress::IngressBackend>,
+            Arc::clone(&ing),
+            Arc::clone(&stop),
+        );
+        std::thread::spawn(move || ingress::run_listener(listener, backend, ing, stop))
+    };
+
+    let mut client = FrameClient::connect(addr).unwrap();
+    let total = 30u64;
+    for i in 0..total {
+        client.send(i, 0, &[2, i as u16]).unwrap();
+    }
+    // Every row is accepted but none can reply: the engine is gated, so
+    // the pool holds all 30 in flight.
+    let mut spins = 0;
+    while ing.stats.accepted.load(Ordering::Relaxed) < total {
+        std::thread::sleep(Duration::from_millis(1));
+        spins += 1;
+        assert!(spins < 10_000, "ingress never accepted the batch");
+    }
+    // Drain with a full pool, then release the engine: every accepted row
+    // must flush to a bit-exact reply before the socket closes.
+    stop.store(true, Ordering::Relaxed);
+    go.store(true, Ordering::Relaxed);
+    let mut replied = 0u64;
+    loop {
+        match client.recv() {
+            Ok(Response::Reply { req_id, class, .. }) => {
+                assert_eq!(class, 2 + req_id as u32, "drained reply stays bit-exact");
+                replied += 1;
+            }
+            Ok(r) => panic!("unexpected response during drain: {r:?}"),
+            Err(_) => break, // server finished the drain and closed
+        }
+    }
+    assert_eq!(replied, total, "zero accepted-row loss across drain");
+    assert_eq!(ing.stats.replied.load(Ordering::Relaxed), total);
+    lt.join().unwrap().unwrap();
+    Arc::try_unwrap(server).unwrap_or_else(|_| panic!("pool still shared")).shutdown();
+}
